@@ -1,0 +1,32 @@
+"""The paper's benchmark workloads (§5.1): convolution layers from AlexNet,
+VGG-16 and GoogLeNet, as ConvShape specs."""
+from repro.core.memory_model import ConvShape
+
+# AlexNet (Krizhevsky et al. 2012)
+ALEXNET = [
+    ConvShape("alexnet.conv1", 1, 227, 227, 3, 96, 11, 11, stride=4),
+    ConvShape("alexnet.conv2", 1, 27, 27, 96, 256, 5, 5, pad=2),
+    ConvShape("alexnet.conv3", 1, 13, 13, 256, 384, 3, 3, pad=1),
+    ConvShape("alexnet.conv4", 1, 13, 13, 384, 384, 3, 3, pad=1),
+    ConvShape("alexnet.conv5", 1, 13, 13, 384, 256, 3, 3, pad=1),
+]
+
+# VGG-16 (Simonyan & Zisserman 2014) — first conv of each stage
+VGG = [
+    ConvShape("vgg.conv1_1", 1, 224, 224, 3, 64, 3, 3, pad=1),
+    ConvShape("vgg.conv2_1", 1, 112, 112, 64, 128, 3, 3, pad=1),
+    ConvShape("vgg.conv3_1", 1, 56, 56, 128, 256, 3, 3, pad=1),
+    ConvShape("vgg.conv4_1", 1, 28, 28, 256, 512, 3, 3, pad=1),
+    ConvShape("vgg.conv5_1", 1, 14, 14, 512, 512, 3, 3, pad=1),
+]
+
+# GoogLeNet (Szegedy et al. 2015) — stem + representative inception branches
+GOOGLENET = [
+    ConvShape("googlenet.conv1", 1, 224, 224, 3, 64, 7, 7, stride=2, pad=3),
+    ConvShape("googlenet.conv2", 1, 56, 56, 64, 192, 3, 3, pad=1),
+    ConvShape("googlenet.i3a.3x3", 1, 28, 28, 96, 128, 3, 3, pad=1),
+    ConvShape("googlenet.i4a.3x3", 1, 14, 14, 96, 208, 3, 3, pad=1),
+    ConvShape("googlenet.i5b.1x1", 1, 7, 7, 832, 384, 1, 1),
+]
+
+ZOO = ALEXNET + VGG + GOOGLENET

@@ -1,0 +1,84 @@
+"""Paper Fig. 1 + Fig. 4: direct convolution vs im2col+GEMM vs FFT across the
+CNN-layer zoo, plus the packing-overhead split (im2col time vs GEMM time).
+
+Caveat (documented in EXPERIMENTS.md): the container CPU executes XLA's CPU
+backend for every algorithm, so absolute numbers are not the paper's
+hand-tuned SIMD kernels; what reproduces is the *structure* — packing costs
+real time (Fig. 1), direct avoids it entirely with identical math, FFT's
+competitiveness depends on kernel size (Fig. 4).  Memory overheads (the
+headline claim) are exact, from compiled buffer analysis in memory_table.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import conv_baselines as B
+from repro.core import direct_conv as D
+from repro.core.memory_model import ConvShape
+
+from .cnn_zoo import ZOO, ALEXNET
+from .timing import time_fn
+
+
+def _inputs(s: ConvShape, dtype=jnp.float32):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(s.n, s.hi, s.wi, s.ci)), dtype)
+    w = jnp.asarray(rng.normal(size=(s.hf, s.wf, s.ci, s.co)), dtype)
+    return x, w
+
+
+def bench_fig4(shapes=None, iters=3):
+    """-> rows: per-layer seconds for direct / im2col+GEMM / FFT / lax."""
+    rows = []
+    for s in shapes or ZOO:
+        x, w = _inputs(s)
+        pad = s.pad
+        t_direct = time_fn(lambda x, w: D.direct_conv_nhwc(x, w, s.stride, pad),
+                           x, w, iters=iters)
+        t_im2col = time_fn(lambda x, w: B.conv_im2col(x, w, s.stride, pad),
+                           x, w, iters=iters)
+        t_fft = time_fn(lambda x, w: B.conv_fft(x, w, s.stride, pad),
+                        x, w, iters=iters)
+        t_lax = time_fn(lambda x, w: B.conv_lax(x, w, s.stride, pad),
+                        x, w, iters=iters)
+        gf = s.flops() / 1e9
+        rows.append({
+            "layer": s.name, "gflop": round(gf, 3),
+            "direct_us": t_direct * 1e6, "im2col_us": t_im2col * 1e6,
+            "fft_us": t_fft * 1e6, "lax_us": t_lax * 1e6,
+            "direct_vs_im2col": t_im2col / t_direct,
+            "direct_gflops": gf / t_direct,
+        })
+    return rows
+
+
+def bench_fig1_packing_split(shapes=None, iters=3):
+    """Fig. 1: how much of im2col+GEMM is pure packing overhead."""
+    rows = []
+    for s in shapes or ALEXNET:
+        x, w = _inputs(s)
+        xp = B.pad_input(x, s.pad, s.hf, s.wf)
+        packed = jax.jit(lambda x: B.im2col(x, s.hf, s.wf, s.stride))(xp)
+        t_pack = time_fn(lambda x: B.im2col(x, s.hf, s.wf, s.stride), xp,
+                         iters=iters)
+        k = packed.shape[-1]
+        wmat = w.reshape(k, s.co)
+        t_gemm = time_fn(
+            lambda p, wm: (p.reshape(-1, k) @ wm), packed, wmat, iters=iters)
+        t_total = time_fn(lambda x, w: B.conv_im2col(x, w, s.stride, s.pad),
+                          x, w, iters=iters)
+        t_direct = time_fn(lambda x, w: D.direct_conv_nhwc(x, w, s.stride,
+                                                           s.pad),
+                           x, w, iters=iters)
+        rows.append({
+            "layer": s.name,
+            "pack_us": t_pack * 1e6, "gemm_us": t_gemm * 1e6,
+            "im2col_total_us": t_total * 1e6, "direct_us": t_direct * 1e6,
+            "packing_fraction": t_pack / max(t_total, 1e-12),
+            "direct_vs_gemm_only": t_gemm / t_direct,
+        })
+    return rows

@@ -1,0 +1,68 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.gen_report [artifacts/dryrun]
+Prints markdown to stdout (pasted/refreshed into EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import sys
+
+from .roofline import analyze, load_artifacts
+
+
+def dryrun_table(outdir: str) -> str:
+    rows = ["| arch | shape | mesh | status | compile s | HBM/chip GiB | "
+            "collective ops (scanned) |",
+            "|---|---|---|---|---|---|---|"]
+    for tag in ("pod16x16", "pod2x16x16"):
+        for r in load_artifacts(outdir, tag):
+            if r.get("skipped"):
+                rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                            f"SKIP ({r['reason'][:42]}…) | — | — | — |")
+                continue
+            if "error" in r:
+                rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                            f"**FAIL** {r['error'][:60]} | — | — | — |")
+                continue
+            ma = r["memory_analysis"]
+            hbm = (ma["temp_bytes"] + ma["argument_bytes"]) / 2**30
+            coll = r["collectives"]
+            kinds = ", ".join(f"{k.split('.')[0]}×{v}"
+                              for k, v in sorted(coll.items())
+                              if k.endswith(".count"))
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | "
+                        f"{r['compile_s']:.0f} | {hbm:.1f} | {kinds} |")
+    return "\n".join(rows)
+
+
+def roofline_md(outdir: str) -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant "
+            "| frac | MODEL/HLO | HBM GiB | one-line advice |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for rec in load_artifacts(outdir, "pod16x16"):
+        r = analyze(rec)
+        if r is None:
+            continue
+        if r.get("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip | "
+                        f"— | — | — | {r['reason'][:60]} |")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | | |")
+            continue
+        hbm = f"{r['hbm_per_chip_gib']:.1f}" if r.get("hbm_per_chip_gib") \
+            is not None else "—"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
+            f"{r['useful_ratio']:.2f} | {hbm} | {r['advice'][:64]} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    print("### Dry-run matrix\n")
+    print(dryrun_table(outdir))
+    print("\n### Roofline (single pod, per chip)\n")
+    print(roofline_md(outdir))

@@ -1,0 +1,133 @@
+"""Deliverable (g): the three-term roofline per (arch × shape), from the
+dry-run artifacts (launch/dryrun.py must have run first).
+
+  compute   = HLO_FLOPs / peak_FLOPs            (per chip; unrolled module)
+  memory    = HLO_bytes / HBM_bw                (per chip)
+  collective= wire_bytes / ICI_link_bw          (per chip; all-reduce ~2x its
+                                                 payload on a ring, others ~1x)
+
+plus MODEL_FLOPS (6·N_active·D for train, 2·N_active·D for inference) and the
+usefulness ratio MODEL/HLO that exposes remat/padding/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.core.blocking import TPU_V5E
+
+WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0,
+               "ragged-all-to-all": 1.0}
+
+ADVICE = {
+    "compute": "raise MXU utilization: larger per-chip tiles, fewer remat "
+               "recomputes, bf16 everywhere on the matmul path",
+    "memory": "cut HBM traffic: fuse/eliminate large intermediates (logits, "
+              "attention scores), chunked loss, narrower accumulators",
+    "collective": "restructure comms: reduce-scatter+all-gather instead of "
+                  "all-reduce, bf16 collectives, overlap with compute, "
+                  "shard activations so TP psums shrink",
+}
+
+
+def wire_bytes(coll: Dict[str, float]) -> float:
+    total = 0.0
+    for kind, factor in WIRE_FACTOR.items():
+        total += coll.get(kind, 0.0) * factor
+    return total
+
+
+def model_flops_per_chip(rec: dict, n_chips: int) -> float:
+    n_act = rec["n_active_params"]
+    if rec["kind"] == "train":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        total = 6.0 * n_act * tokens
+    elif rec["kind"] == "prefill":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        total = 2.0 * n_act * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_act * rec["global_batch"]
+    return total / n_chips
+
+
+def analyze(rec: dict, hw=TPU_V5E, n_chips: int = 256) -> Optional[dict]:
+    if rec.get("skipped"):
+        return {"arch": rec["arch"], "shape": rec["shape"], "skipped": True,
+                "reason": rec.get("reason", "")}
+    if "error" in rec:
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "error": rec["error"]}
+    src = rec.get("unrolled") or rec
+    ca = src.get("cost_analysis", {})
+    flops = ca.get("flops", 0.0)
+    byts = ca.get("bytes accessed", 0.0)
+    coll = src.get("collectives", {})
+
+    t_c = flops / hw.peak_flops
+    t_m = byts / hw.hbm_bw
+    t_x = wire_bytes(coll) / hw.ici_bw
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops_per_chip(rec, n_chips)
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "kind": rec["kind"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "roofline_fraction": (t_c / bound) if bound > 0 else 0.0,
+        "model_flops_per_chip": mf,
+        "hlo_flops_per_chip": flops,
+        "useful_ratio": (mf / flops) if flops else 0.0,
+        "hbm_per_chip_gib": rec["memory_analysis"]["temp_bytes"] / 2**30
+        if "memory_analysis" in rec else None,
+        "advice": ADVICE[dom],
+    }
+    return out
+
+
+def load_artifacts(outdir: str, mesh_tag: str = "pod16x16") -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(outdir, f"*__{mesh_tag}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def roofline_table(outdir: str = "artifacts/dryrun") -> List[dict]:
+    return [analyze(r) for r in load_artifacts(outdir)]
+
+
+def to_markdown(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "roofline frac | MODEL/HLO flops | HBM GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r is None:
+            continue
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['roofline_fraction']:.2f} | {r['useful_ratio']:.2f} | "
+            f"{r['hbm_per_chip_gib']:.1f} |" if r.get("hbm_per_chip_gib")
+            is not None else
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['roofline_fraction']:.2f} | {r['useful_ratio']:.2f} | — |")
+    return hdr + "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    print(to_markdown(roofline_table(outdir)))

@@ -1,0 +1,20 @@
+"""Wall-clock micro-benchmark helper (jit + warmup + median-of-k)."""
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["time_fn"]
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median seconds per call of a jitted function."""
+    jfn = jax.jit(fn)
+    for _ in range(warmup):
+        jax.block_until_ready(jfn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

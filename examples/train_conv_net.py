@@ -1,0 +1,90 @@
+"""Paper-native example: train a small CNN classifier whose convolutions run
+through the zero-memory-overhead direct path (blocked layouts end to end —
+layers chain without repacking, exactly the paper's §4 design point).
+
+Synthetic 16x16 'digit' task (translated blob patterns, 8 classes).
+
+Usage:  PYTHONPATH=src python examples/train_conv_net.py --steps 150
+"""
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import layout as L
+from repro.core.direct_conv import direct_conv_blocked
+from repro.nn.module import ParamSpec, init_tree
+from repro.train.optimizer import AdamW, cosine_schedule
+
+CB = 8   # channel pencil for this toy net (lane=128 on real TPU)
+
+
+def specs():
+    return {
+        "c1": ParamSpec((3, 3, 8, 16), (None, None, None, None), scale=1.4),
+        "c2": ParamSpec((3, 3, 16, 32), (None, None, None, None), scale=1.4),
+        "head": ParamSpec((512, 8), (None, None)),
+    }
+
+
+def model(p, x_nhwc):
+    """Two direct-conv stages in blocked layout, GAP head."""
+    xb = L.nhwc_to_blocked(jnp.pad(x_nhwc, ((0, 0), (1, 1), (1, 1), (0, 0))),
+                           cb=1 if x_nhwc.shape[-1] == 1 else CB)
+    w1 = L.hwio_to_blocked(p["c1"], cib=x_nhwc.shape[-1], cob=CB)
+    h = direct_conv_blocked(xb, w1)                 # stays in blocked layout
+    h = jax.nn.relu(h)
+    h = jnp.pad(h, ((0, 0), (0, 0), (1, 1), (1, 1), (0, 0)))
+    w2 = L.hwio_to_blocked(p["c2"], cib=CB, cob=CB)
+    h = direct_conv_blocked(h, w2)                  # no repack between layers
+    h = jax.nn.relu(h)
+    # strided spatial pooling (keeps position info — the classes are
+    # position-coded), then flatten: [B, 4, 4, 4, 8] -> [B, 512]
+    feat = h[:, :, ::5, ::5, :].reshape(h.shape[0], -1)
+    return feat @ p["head"]
+
+
+def make_batch(rng, n=64):
+    """Blobs at class-dependent positions + noise."""
+    ys = rng.integers(0, 8, n)
+    xs = rng.normal(0, 0.3, (n, 16, 16, 1)).astype(np.float32)
+    for i, y in enumerate(ys):
+        r, c = 2 + (y % 4) * 3, 2 + (y // 4) * 8
+        xs[i, r:r + 3, c:c + 3, 0] += 2.0
+    return jnp.asarray(xs.repeat(8, axis=-1)), jnp.asarray(ys)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args()
+
+    p = init_tree(specs(), jax.random.PRNGKey(0))
+    opt = AdamW(lr=cosine_schedule(3e-3, 10, args.steps), weight_decay=0.0)
+    st = opt.init(p)
+
+    @jax.jit
+    def step(p, st, x, y):
+        def loss_fn(p):
+            logits = model(p, x)
+            ll = jax.nn.log_softmax(logits)
+            loss = -jnp.take_along_axis(ll, y[:, None], 1).mean()
+            acc = (logits.argmax(-1) == y).mean()
+            return loss, acc
+        (loss, acc), g = jax.value_and_grad(loss_fn, has_aux=True)(p)
+        p, st, _ = opt.update(g, st, p)
+        return p, st, loss, acc
+
+    rng = np.random.default_rng(0)
+    for s in range(args.steps):
+        x, y = make_batch(rng)
+        p, st, loss, acc = step(p, st, x, y)
+        if (s + 1) % 25 == 0:
+            print(f"step {s + 1}: loss={float(loss):.3f} acc={float(acc):.2f}")
+    assert float(acc) > 0.9, "conv net failed to learn"
+    print("direct-conv CNN learned the task (acc > 0.9)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""End-to-end training driver: a real LM trained with the full substrate —
+AdamW + cosine schedule, grad accumulation, remat, atomic async checkpoints,
+resume-on-restart, straggler monitoring.
+
+Defaults train a ~10M-param llama-style model for 300 steps on the synthetic
+sticky-markov stream (loss drops from ~ln(V) to well below — actual
+learning).  ``--preset 100m`` trains the ~100M variant (slower on CPU; this
+is the deliverable-scale config and the one to use on a real accelerator).
+
+Usage:
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+  PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 500
+  # kill it mid-run and re-run: it resumes from the last checkpoint.
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.nn.models import build_model
+from repro.nn.module import Parallelism
+from repro.train.data import SyntheticLM
+from repro.train.optimizer import AdamW, cosine_schedule
+from repro.train.runtime import TrainLoopConfig, run_training
+from repro.train.trainstep import TrainSettings, make_train_step
+
+PRESETS = {
+    "10m": dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+                head_dim=32, d_ff=1024, vocab_size=8192),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 head_dim=64, d_ff=3072, vocab_size=32000),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="10m", choices=PRESETS)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="artifacts/train_lm_ckpt")
+    ap.add_argument("--accum", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name=f"example-{args.preset}", family="dense",
+                      dtype="float32", **PRESETS[args.preset])
+    px = Parallelism(mesh=None)
+    model = build_model(cfg, px)
+    print(f"model: {cfg.n_params() / 1e6:.1f}M params")
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=cosine_schedule(args.lr, args.steps // 10, args.steps),
+                weight_decay=0.01)
+    state = opt.init(params)
+    step_fn = jax.jit(make_train_step(
+        model, cfg, opt, TrainSettings(remat="full",
+                                       accum_steps=args.accum)))
+    data = SyntheticLM(vocab=cfg.vocab_size, batch=args.batch, seq=args.seq,
+                      seed=0)
+    out = run_training(step_fn, params, state, data,
+                       TrainLoopConfig(total_steps=args.steps,
+                                       ckpt_dir=args.ckpt_dir,
+                                       ckpt_every=50, log_every=10))
+    print(f"final loss: {float(out['metrics']['nll']):.4f} "
+          f"(uniform = {float(jax.numpy.log(cfg.vocab_size)):.4f})")
+
+
+if __name__ == "__main__":
+    main()

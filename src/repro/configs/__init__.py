@@ -1,0 +1,3 @@
+"""Architecture configs (the 10 assigned archs) + input-shape grid."""
+from .base import ModelConfig, MoEConfig, SSMConfig, EncoderConfig  # noqa: F401
+from .registry import get_config, list_archs  # noqa: F401

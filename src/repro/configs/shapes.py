@@ -1,0 +1,57 @@
+"""The assigned input-shape grid and applicability rules.
+
+  train_4k     seq 4096,    global_batch 256  -> train_step
+  prefill_32k  seq 32768,   global_batch 32   -> prefill_step
+  decode_32k   seq 32768,   global_batch 128  -> serve_step (1 token, KV=32k)
+  long_500k    seq 524288,  global_batch 1    -> serve_step (sub-quadratic only)
+
+``long_500k`` runs for SSM/hybrid archs (state-space decode) and SWA archs
+(ring caches bounded by the window; gemma2's global layers keep the full
+500k cache — it fits sharded, see DESIGN.md).  It is skipped for pure
+full-attention archs per the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from .base import ModelConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "applicable", "cell_grid"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.name == "long_500k":
+        if cfg.ssm is not None:
+            return True, "ssm/hybrid: O(1)-state decode"
+        if cfg.window is not None:
+            return True, "SWA: ring cache bounded by window"
+        return False, ("skip: pure full-attention arch — 500k-token decode "
+                       "has no sub-quadratic evaluation (per assignment)")
+    return True, ""
+
+
+def cell_grid(archs, shapes=None):
+    from .registry import get_config
+    shapes = shapes or list(SHAPES)
+    for arch in archs:
+        cfg = get_config(arch)
+        for sname in shapes:
+            ok, why = applicable(cfg, SHAPES[sname])
+            yield arch, sname, ok, why

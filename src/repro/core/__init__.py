@@ -1,0 +1,11 @@
+"""Core contribution: zero-memory-overhead direct convolution (ICML'18).
+
+- ``layout``        — the paper's §4 convolution-friendly data layouts
+- ``blocking``      — the §3.1 analytical blocking model, TPU-adapted
+- ``direct_conv``   — the direct algorithm (Algorithm 3) in JAX
+- ``conv_baselines``— the §2 baselines (im2col+GEMM, FFT, lax oracle)
+- ``memory_model``  — per-algorithm memory-overhead accounting
+"""
+from . import layout, blocking, direct_conv, conv_baselines, memory_model  # noqa: F401
+from .blocking import Blocking, MachineModel, TPU_V5E, CPU_HASWELL, choose_blocking  # noqa: F401
+from .direct_conv import direct_conv_blocked, direct_conv_nhwc, direct_conv1d_depthwise  # noqa: F401

@@ -1,0 +1,134 @@
+"""Analytical blocking model (paper §3.1), and its TPU adaptation.
+
+The paper derives the loop blocking from two inequalities:
+
+  Eq. 1:  E >= N_vec * N_fma * L_fma     (enough independent outputs in flight)
+  Eq. 2:  E <= N_reg * N_vec             (outputs must fit the register file)
+
+with ``E = C_o,b * W_o,b`` the register-resident output tile.  On TPU the
+"registers" are VMEM-resident accumulator tiles feeding the 128x128 MXU, so:
+
+  * ``N_vec``  -> lane width 128 (C_o,b is the lane dim, exactly the paper's
+                  "C_o,b is a multiple of the vector length").
+  * ``N_fma * L_fma`` -> keeping the systolic array full: the M-dimension of
+                  each per-offset matmul ([rows x Cib] @ [Cib x Cob]) should be
+                  >= the sublane granule (8) and ideally >= 128 (one MXU pass).
+  * ``N_reg``  -> VMEM capacity shared by the accumulator tile, the input
+                  window and the weight tile.
+
+``choose_blocking`` returns block sizes satisfying both adapted inequalities
+plus the VMEM budget, preferring hardware-aligned shapes.  The pure-CPU model
+(``cpu_min_tile_elems``) is kept verbatim for fidelity tests of Eq. 1/2.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .layout import largest_divisor_leq
+
+__all__ = [
+    "MachineModel", "TPU_V5E", "CPU_HASWELL", "Blocking",
+    "cpu_min_tile_elems", "cpu_max_tile_elems", "choose_blocking",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineModel:
+    name: str
+    n_vec: int          # SIMD/lane width in elements (f32)
+    n_fma: int          # FMA units (CPU) / MXU passes overlapped (TPU: 1)
+    l_fma: int          # FMA latency (CPU) / min sublane granule (TPU: 8)
+    n_reg: int          # registers (CPU) / VMEM budget in lane-rows (TPU)
+    vmem_bytes: int = 0          # 0 for CPU models
+    mxu: int = 128               # systolic dim (TPU)
+    peak_flops: float = 0.0      # per-chip peak (bf16 for TPU)
+    hbm_bw: float = 0.0          # bytes/s
+    ici_bw: float = 0.0          # bytes/s per link
+
+
+# TPU v5e — the roofline constants used across benchmarks/ and EXPERIMENTS.md.
+TPU_V5E = MachineModel(
+    name="tpu_v5e", n_vec=128, n_fma=1, l_fma=8, n_reg=512,
+    vmem_bytes=64 * 2**20, mxu=128,
+    peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9,
+)
+
+# Paper Table 1, Intel i7-4770K (Haswell): AVX2 (8 f32 lanes), 2 FMA units,
+# latency 5, 16 logical ymm registers.
+CPU_HASWELL = MachineModel(name="haswell", n_vec=8, n_fma=2, l_fma=5, n_reg=16)
+
+
+def cpu_min_tile_elems(m: MachineModel) -> int:
+    """Paper Eq. 1:  E >= N_vec * N_fma * L_fma."""
+    return m.n_vec * m.n_fma * m.l_fma
+
+
+def cpu_max_tile_elems(m: MachineModel) -> int:
+    """Paper Eq. 2:  E <= N_reg * N_vec."""
+    return m.n_reg * m.n_vec
+
+
+@dataclasses.dataclass(frozen=True)
+class Blocking:
+    """Blocking parameters for Algorithm 3 (paper) / the Pallas grid (ours)."""
+    cob: int    # output-channel pencil  (lane dim)
+    cib: int    # input-channel block    (contraction depth per grid step)
+    hob: int    # output rows per tile   (with wob, the matmul M dim)
+    wob: int    # output cols per tile
+
+    @property
+    def tile_elems(self) -> int:
+        return self.cob * self.hob * self.wob
+
+
+def choose_blocking(
+    hi: int, wi: int, ci: int, co: int, hf: int, wf: int,
+    stride: int = 1, machine: MachineModel = TPU_V5E,
+    in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
+) -> Blocking:
+    """Pick (Cob, Cib, Hob, Wob) per the adapted Eq. 1/2 + VMEM budget.
+
+    The Pallas kernel holds, per grid step:
+      input window   hi*wi*cib           (one input-channel block, full map)
+      weight tile    hf*wf*cib*cob
+      acc tile       hob*wob*cob         (f32)
+    All three must fit the VMEM budget; the output tile must satisfy the
+    adapted Eq. 1 (>= one MXU pass of rows when possible).
+    """
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+    if ho <= 0 or wo <= 0:
+        raise ValueError(f"empty output for input {hi}x{wi}, filter {hf}x{wf}")
+
+    cob = largest_divisor_leq(co, machine.n_vec)          # lane dim
+    cib = largest_divisor_leq(ci, machine.n_vec)          # contraction depth
+
+    # Adapted Eq.1: rows per matmul (hob*wob) >= l_fma granule, target mxu.
+    min_rows = machine.l_fma
+    # Full output map per tile is the default (the kernel slides the window
+    # over the whole map — zero halo traffic); shrink rows only under VMEM
+    # pressure.
+    hob, wob = ho, wo
+
+    if machine.vmem_bytes:
+        def fits(cib_, hob_, wob_):
+            win = hi * wi * cib_ * in_dtype_bytes
+            wgt = hf * wf * cib_ * cob * in_dtype_bytes
+            acc = hob_ * wob_ * cob * acc_dtype_bytes
+            # double-buffered inputs: 2x (win + wgt)
+            return 2 * (win + wgt) + acc <= machine.vmem_bytes
+        while hob > 1 and not fits(cib, hob, wob):
+            hob = max(1, hob // 2)
+        # huge maps: shallower contraction blocks (the paper's cache-level
+        # Ci blocking) until the resident window fits VMEM
+        while cib > 1 and not fits(cib, hob, wob):
+            nxt = largest_divisor_leq(ci, cib // 2)
+            if nxt == cib:
+                break
+            cib = nxt
+        if not fits(cib, hob, wob):
+            raise ValueError("conv tile cannot fit VMEM even at cib=1; "
+                             "use the halo-DMA variant")
+    if hob * wob < min_rows and hob * wob != ho * wo:
+        hob = min(ho, max(hob, (min_rows + wob - 1) // wob))
+    return Blocking(cob=cob, cib=cib, hob=hob, wob=wob)

@@ -1,0 +1,125 @@
+"""The paper's §2 baselines: im2col+GEMM and FFT convolution, plus the
+``lax.conv_general_dilated`` oracle every implementation is tested against.
+
+These are *faithful* baselines: ``conv_im2col`` really materializes the
+packed ``[N*Ho*Wo, Hf*Wf*Ci]`` matrix (the memory overhead the paper
+eliminates), and ``conv_fft`` really pads the kernel to the image size
+(the overhead of §2.1).  ``core.memory_model`` accounts for both.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "normalize_padding", "pad_input", "out_size",
+    "conv_lax", "im2col", "conv_im2col", "conv_fft",
+]
+
+Padding = Union[str, int, Sequence[Tuple[int, int]]]
+
+
+def normalize_padding(padding: Padding, hf: int, wf: int) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+    if isinstance(padding, str):
+        p = padding.upper()
+        if p == "VALID":
+            return (0, 0), (0, 0)
+        if p == "SAME":
+            # SAME for stride handled by caller via explicit pads on both sides
+            ph, pw = hf - 1, wf - 1
+            return (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2)
+        raise ValueError(f"unknown padding {padding!r}")
+    if isinstance(padding, int):
+        return (padding, padding), (padding, padding)
+    (ph0, ph1), (pw0, pw1) = padding
+    return (ph0, ph1), (pw0, pw1)
+
+
+def pad_input(x: jnp.ndarray, padding: Padding, hf: int, wf: int) -> jnp.ndarray:
+    (ph0, ph1), (pw0, pw1) = normalize_padding(padding, hf, wf)
+    if ph0 == ph1 == pw0 == pw1 == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
+
+
+def out_size(hi: int, hf: int, stride: int) -> int:
+    return (hi - hf) // stride + 1
+
+
+def conv_lax(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+             padding: Padding = "VALID") -> jnp.ndarray:
+    """Oracle: XLA's own convolution.  x: NHWC, w: HWIO."""
+    (ph, pw) = normalize_padding(padding, w.shape[0], w.shape[1])
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=(ph, pw),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+# ---------------------------------------------------------------------------
+# im2col + GEMM (paper §2.2) — the memory-overhead-ful baseline
+# ---------------------------------------------------------------------------
+
+def im2col(x: jnp.ndarray, hf: int, wf: int, stride: int = 1) -> jnp.ndarray:
+    """Materialize the packed matrix: ``[N, Ho, Wo, Hf*Wf*Ci]``.
+
+    Input must already be padded.  Element order of the last dim is
+    (hf, wf, ci) — matching ``w.reshape(hf*wf*ci, co)``.
+    """
+    n, hi, wi, ci = x.shape
+    ho, wo = out_size(hi, hf, stride), out_size(wi, wf, stride)
+    cols = []
+    for dh in range(hf):
+        for dw in range(wf):
+            patch = jax.lax.slice(
+                x, (0, dh, dw, 0),
+                (n, dh + (ho - 1) * stride + 1, dw + (wo - 1) * stride + 1, ci),
+                (1, stride, stride, 1))
+            cols.append(patch)
+    # [Hf*Wf, N, Ho, Wo, Ci] -> [N, Ho, Wo, Hf*Wf*Ci]
+    packed = jnp.stack(cols, axis=0)
+    packed = packed.transpose(1, 2, 3, 0, 4)
+    return packed.reshape(n, ho, wo, hf * wf * ci)
+
+
+def conv_im2col(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                padding: Padding = "VALID") -> jnp.ndarray:
+    """Packing + GEMM: the Caffe-style baseline the paper measures against."""
+    hf, wf, ci, co = w.shape
+    x = pad_input(x, padding, hf, wf)
+    packed = im2col(x, hf, wf, stride)                       # the overhead
+    n, ho, wo, k = packed.shape
+    gemm = packed.reshape(n * ho * wo, k) @ w.reshape(k, co)  # the GEMM
+    return gemm.reshape(n, ho, wo, co)
+
+
+# ---------------------------------------------------------------------------
+# FFT convolution (paper §2.1) — kernel padded to image size
+# ---------------------------------------------------------------------------
+
+def conv_fft(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+             padding: Padding = "VALID") -> jnp.ndarray:
+    """Frequency-domain cross-correlation.
+
+    Pads the kernel to the (padded) image size — the §2.1 memory overhead —
+    then evaluates the valid region.  Circular wrap never contaminates valid
+    outputs because the kernel support is Hf x Wf.
+    """
+    hf, wf, ci, co = w.shape
+    x = pad_input(x, padding, hf, wf)
+    n, hi, wi, _ = x.shape
+    ho, wo = out_size(hi, hf, stride), out_size(wi, wf, stride)
+
+    dtype = x.dtype
+    xf = jnp.fft.rfftn(x.astype(jnp.float32), axes=(1, 2))          # [N,Hi,Wi',Ci]
+    wpad = jnp.zeros((hi, wi, ci, co), jnp.float32).at[:hf, :wf].set(
+        w.astype(jnp.float32))
+    kf = jnp.conj(jnp.fft.rfftn(wpad, axes=(0, 1)))                  # correlation
+    of = jnp.einsum("nhwc,hwco->nhwo", xf, kf)
+    out_full = jnp.fft.irfftn(of, s=(hi, wi), axes=(1, 2))
+    out = jax.lax.slice(
+        out_full, (0, 0, 0, 0),
+        (n, (ho - 1) * stride + 1, (wo - 1) * stride + 1, co),
+        (1, stride, stride, 1))
+    return out.astype(dtype)

@@ -1,0 +1,99 @@
+"""Zero-memory-overhead direct convolution (paper §3), JAX formulation.
+
+``direct_conv_blocked`` computes convolution on the paper's blocked layout
+without ever forming an im2col matrix: for each kernel offset ``(hf, wf)``
+it takes a *strided view* of the input map and contracts it against the
+``[Cib, Cob]`` weight pencil on the MXU, accumulating into the output tile.
+This is Algorithm 3 with the register tile replaced by an MXU tile — the
+loop structure (l, n, m, i, k, j) survives as
+
+    offsets (n, m)  ->  unrolled python loop (Hf*Wf small)
+    i (Ci blocks)   ->  contraction/scan dimension
+    (k, j) tile     ->  the [Ho*Wo, Cob] matmul output
+
+The Pallas kernel in ``repro.kernels.direct_conv2d`` is the hand-tiled
+version of exactly this computation; this module is its semantics (and the
+path used on non-TPU backends).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import layout as L
+from .conv_baselines import Padding, normalize_padding, out_size
+
+__all__ = ["direct_conv_blocked", "direct_conv_nhwc", "direct_conv1d_depthwise"]
+
+
+def _shifted_window(x: jnp.ndarray, dh: int, dw: int, ho: int, wo: int,
+                    stride: int) -> jnp.ndarray:
+    """Strided view of blocked input [N, Cib_blocks, Hi, Wi, Cib] at offset."""
+    n, cblk, hi, wi, cb = x.shape
+    return jax.lax.slice(
+        x, (0, 0, dh, dw, 0),
+        (n, cblk, dh + (ho - 1) * stride + 1, dw + (wo - 1) * stride + 1, cb),
+        (1, 1, stride, stride, 1))
+
+
+@partial(jax.jit, static_argnames=("stride",))
+def direct_conv_blocked(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """Direct convolution on blocked layouts (input must be pre-padded).
+
+    x: [N, Ci/Cib, Hi, Wi, Cib]      (paper input layout)
+    w: [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob]  (paper kernel layout)
+    -> [N, Co/Cob, Ho, Wo, Cob]      (same layout as input: layers chain)
+    """
+    n, ciblk, hi, wi, cib = x.shape
+    coblk, ciblk2, hf, wf, cib2, cob = w.shape
+    assert (ciblk, cib) == (ciblk2, cib2), (x.shape, w.shape)
+    ho, wo = out_size(hi, hf, stride), out_size(wi, wf, stride)
+
+    acc = jnp.zeros((n, coblk, ho, wo, cob), jnp.float32)
+    for dh in range(hf):
+        for dw in range(wf):
+            win = _shifted_window(x, dh, dw, ho, wo, stride)
+            # [N, ci, Ho, Wo, Cib] x [Co, ci, Cib, Cob] -> [N, Co, Ho, Wo, Cob]
+            acc = acc + jnp.einsum(
+                "nchwb,ocbk->nohwk", win, w[:, :, dh, dw],
+                preferred_element_type=jnp.float32)
+    return acc.astype(x.dtype)
+
+
+def direct_conv_nhwc(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                     padding: Padding = "VALID") -> jnp.ndarray:
+    """Convenience wrapper: NHWC/HWIO in, NHWC out, via the blocked layouts."""
+    hf, wf, ci, co = w.shape
+    (ph, pw) = normalize_padding(padding, hf, wf)
+    if any(ph) or any(pw):
+        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+    lay = L.BlockedConvLayout.choose(ci, co)
+    xb = L.nhwc_to_blocked(x, lay.cb_in)
+    wb = L.hwio_to_blocked(w, lay.cb_in, lay.cb_out)
+    yb = direct_conv_blocked(xb, wb, stride)
+    return L.blocked_to_nhwc(yb)
+
+
+@partial(jax.jit, static_argnames=("causal",))
+def direct_conv1d_depthwise(x: jnp.ndarray, w: jnp.ndarray,
+                            bias: jnp.ndarray | None = None,
+                            causal: bool = True) -> jnp.ndarray:
+    """Causal depthwise conv1d (the Mamba/Jamba short conv), direct form.
+
+    x: [B, L, D], w: [K, D].  out[b, l, d] = sum_k w[k, d] * x[b, l - K + 1 + k, d].
+    Zero memory overhead: K shifted adds, no patch matrix.
+    """
+    b, l, d = x.shape
+    k = w.shape[0]
+    if causal:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.pad(x, ((0, 0), ((k - 1) // 2, k - 1 - (k - 1) // 2), (0, 0)))
+    acc = jnp.zeros((b, l, d), jnp.float32)
+    for i in range(k):
+        acc = acc + xp[:, i:i + l, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    return acc.astype(x.dtype)

@@ -1,0 +1,137 @@
+"""Convolution-friendly data layouts (paper §4), adapted to TPU tiling.
+
+The paper stores input/output feature maps as ``[C/Cb][H][W][Cb]`` — row-major
+H×W matrices of channel "pencils" of length ``Cb`` — and kernel weights as
+``[Co/Cob][Ci/Cib][Hf][Wf][Cib][Cob]`` (slowest → fastest).  Both layouts use
+*exactly* the same number of elements as the un-blocked tensors: zero memory
+overhead.  On TPU we pick ``Cb`` so the pencil is the 128-wide lane dimension,
+which makes every load/store in the direct-convolution kernel unit-stride in
+lanes — the TPU analogue of the paper's unit-stride SIMD loads.
+
+All functions here are pure reshape/transpose: XLA lowers them to (at most)
+a single copy, and inside a fused program usually to a layout assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "BlockedConvLayout",
+    "nhwc_to_blocked",
+    "blocked_to_nhwc",
+    "hwio_to_blocked",
+    "blocked_to_hwio",
+    "bld_to_blocked",
+    "blocked_to_bld",
+    "kd_to_blocked",
+    "largest_divisor_leq",
+]
+
+
+def largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is ``<= cap`` (>=1)."""
+    if n <= 0:
+        raise ValueError(f"need positive dim, got {n}")
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockedConvLayout:
+    """Block sizes for the paper's layouts (§4), TPU-aligned.
+
+    cb_in / cb_out: channel pencil lengths for input/output feature maps
+    (paper's ``C_i,b`` / ``C_o,b``).  Target 128 (TPU lane width); smaller
+    divisors are used for narrow layers (e.g. the first conv, Ci=3 — the paper
+    likewise keeps the first layer in its original layout).
+    """
+
+    cb_in: int
+    cb_out: int
+
+    @staticmethod
+    def choose(ci: int, co: int, lane: int = 128) -> "BlockedConvLayout":
+        return BlockedConvLayout(
+            cb_in=largest_divisor_leq(ci, lane),
+            cb_out=largest_divisor_leq(co, lane),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input / output feature maps:  NHWC  <->  [N, C/Cb, H, W, Cb]
+# ---------------------------------------------------------------------------
+
+def nhwc_to_blocked(x: jnp.ndarray, cb: int) -> jnp.ndarray:
+    """``[N,H,W,C] -> [N, C/Cb, H, W, Cb]`` (paper Fig. 3 left, plus batch)."""
+    n, h, w, c = x.shape
+    if c % cb:
+        raise ValueError(f"C={c} not divisible by block {cb}")
+    x = x.reshape(n, h, w, c // cb, cb)
+    return x.transpose(0, 3, 1, 2, 4)
+
+
+def blocked_to_nhwc(x: jnp.ndarray) -> jnp.ndarray:
+    n, cblk, h, w, cb = x.shape
+    return x.transpose(0, 2, 3, 1, 4).reshape(n, h, w, cblk * cb)
+
+
+# ---------------------------------------------------------------------------
+# Kernel weights:  HWIO  <->  [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob]
+# ---------------------------------------------------------------------------
+
+def hwio_to_blocked(w: jnp.ndarray, cib: int, cob: int) -> jnp.ndarray:
+    """``[Hf,Wf,Ci,Co] -> [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob]`` (Fig. 3 right)."""
+    hf, wf, ci, co = w.shape
+    if ci % cib or co % cob:
+        raise ValueError(f"Ci={ci}/Co={co} not divisible by blocks {cib}/{cob}")
+    w = w.reshape(hf, wf, ci // cib, cib, co // cob, cob)
+    #            0    1    2         3     4         5
+    return w.transpose(4, 2, 0, 1, 3, 5)
+
+
+def blocked_to_hwio(w: jnp.ndarray) -> jnp.ndarray:
+    coblk, ciblk, hf, wf, cib, cob = w.shape
+    w = w.transpose(2, 3, 1, 4, 0, 5)  # hf, wf, ciblk, cib, coblk, cob
+    return w.reshape(hf, wf, ciblk * cib, coblk * cob)
+
+
+# ---------------------------------------------------------------------------
+# 1-D sequences (Mamba conv):  [B,L,D]  <->  [B, D/Db, L, Db]
+# ---------------------------------------------------------------------------
+
+def bld_to_blocked(x: jnp.ndarray, db: int) -> jnp.ndarray:
+    b, l, d = x.shape
+    if d % db:
+        raise ValueError(f"D={d} not divisible by block {db}")
+    x = x.reshape(b, l, d // db, db)
+    return x.transpose(0, 2, 1, 3)
+
+
+def blocked_to_bld(x: jnp.ndarray) -> jnp.ndarray:
+    b, dblk, l, db = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, l, dblk * db)
+
+
+def kd_to_blocked(w: jnp.ndarray, db: int) -> jnp.ndarray:
+    """Depthwise taps ``[K, D] -> [K, D/Db, Db]``."""
+    k, d = w.shape
+    if d % db:
+        raise ValueError(f"D={d} not divisible by block {db}")
+    return w.reshape(k, d // db, db)
+
+
+def blocked_shapes(n: int, h: int, w: int, c: int, cb: int) -> Tuple[int, ...]:
+    return (n, c // cb, h, w, cb)
+
+
+def assert_zero_overhead(orig_shape, blocked_shape) -> None:
+    """The paper's headline invariant: blocking never changes element count."""
+    if int(np.prod(orig_shape)) != int(np.prod(blocked_shape)):
+        raise AssertionError(
+            f"layout changed element count: {orig_shape} -> {blocked_shape}")

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- ``direct_conv2d``     — zero-memory-overhead direct conv2d (paper Alg. 3)
+- ``conv1d_depthwise``  — causal depthwise conv1d (Mamba/Jamba short conv)
+
+``ops`` holds the jit'd dispatch wrappers, ``ref`` the pure-jnp oracles.
+Kernels run compiled on TPU and in interpret mode on CPU (validation).
+"""
+from .ops import direct_conv2d, conv1d_depthwise  # noqa: F401
+from .flash_attention import flash_attention_pallas  # noqa: F401

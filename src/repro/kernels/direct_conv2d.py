@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: zero-memory-overhead direct convolution (paper Alg. 3).
+
+TPU mapping of the paper's schedule (see DESIGN.md §2):
+
+  grid = (N, Co/Cob, Ci/Cib)          # j' (parallel), i' (reduction, innermost)
+  x block   [1, 1, Hi, Wi, Cib]       # one input-channel pencil plane, VMEM
+  w block   [1, 1, Hf, Wf, Cib, Cob]  # paper kernel layout, VMEM
+  out block [1, 1, Ho, Wo, Cob]       # the "register" tile (lane dim = Cob)
+
+Inside the kernel, the (l, n, m, k, j) loops become:
+  for (dh, dw) in Hf x Wf:            # n, m — unrolled (small)
+      window = strided VMEM view of x at offset (dh, dw)   # never copied to HBM
+      acc   += [Ho*Wo, Cib] @ [Cib, Cob] on the MXU        # k, j tile
+
+The im2col matrix is never materialized — not in HBM (the paper's claim) and
+not even in VMEM (windows are views into the already-resident input block).
+Accumulation over input-channel blocks (grid dim 2) runs in a float32 VMEM
+scratch accumulator; the output block is written once on the last step.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["direct_conv2d_blocked_pallas"]
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, hf, wf, ho, wo, stride, n_ci):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0, 0]                      # (Hi, Wi, Cib)
+    cib = x.shape[-1]
+    acc = acc_ref[...]
+    for dh in range(hf):
+        for dw in range(wf):
+            win = jax.lax.slice(
+                x, (dh, dw, 0),
+                (dh + (ho - 1) * stride + 1, dw + (wo - 1) * stride + 1, cib),
+                (stride, stride, 1))                       # (Ho, Wo, Cib) view
+            acc = acc + jnp.dot(
+                win.reshape(ho * wo, cib), w_ref[0, 0, dh, dw],
+                preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(ci == n_ci - 1)
+    def _flush():
+        o_ref[0, 0] = acc.reshape(ho, wo, o_ref.shape[-1]).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("stride", "interpret"))
+def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
+                                 stride: int = 1,
+                                 interpret: bool = False) -> jnp.ndarray:
+    """x: [N, Ci/Cib, Hi, Wi, Cib]; w: [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob]."""
+    n, ciblk, hi, wi, cib = x.shape
+    coblk, ciblk2, hf, wf, cib2, cob = w.shape
+    assert (ciblk, cib) == (ciblk2, cib2), (x.shape, w.shape)
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+
+    grid = (n, coblk, ciblk)
+    return pl.pallas_call(
+        partial(_kernel, hf=hf, wf=wf, ho=ho, wo=wo, stride=stride, n_ci=ciblk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, hi, wi, cib), lambda b, co, ci: (b, ci, 0, 0, 0)),
+            pl.BlockSpec((1, 1, hf, wf, cib, cob),
+                         lambda b, co, ci: (co, ci, 0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, ho, wo, cob),
+                               lambda b, co, ci: (b, co, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, coblk, ho, wo, cob), x.dtype),
+        scratch_shapes=[pltpu.VMEM((ho * wo, cob), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

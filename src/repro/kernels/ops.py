@@ -1,0 +1,72 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas kernels run compiled; everywhere
+else (this container: CPU) they run in ``interpret=True`` mode, which executes
+the same kernel body for correctness validation.  ``use_pallas=False`` falls
+back to the pure-JAX direct formulation in ``repro.core.direct_conv`` — same
+math, XLA-scheduled; this is also what the LM models use under ``vmap``/
+``scan`` where a fixed kernel grid would fight the batching transform.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layout as L
+from repro.core.conv_baselines import Padding, normalize_padding
+from repro.core.direct_conv import direct_conv_blocked, direct_conv1d_depthwise
+from .conv1d_depthwise import conv1d_depthwise_blocked_pallas
+from .direct_conv2d import direct_conv2d_blocked_pallas
+
+__all__ = ["direct_conv2d", "conv1d_depthwise"]
+
+
+def _interpret_default(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def direct_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                  padding: Padding = "VALID", *, use_pallas: bool = True,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Direct convolution, NHWC/HWIO interface, zero memory overhead inside.
+
+    x: [N, Hi, Wi, Ci]; w: [Hf, Wf, Ci, Co] -> [N, Ho, Wo, Co]
+    """
+    hf, wf, ci, co = w.shape
+    ph, pw = normalize_padding(padding, hf, wf)
+    if any(ph) or any(pw):
+        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+    lay = L.BlockedConvLayout.choose(ci, co)
+    xb = L.nhwc_to_blocked(x, lay.cb_in)
+    wb = L.hwio_to_blocked(w, lay.cb_in, lay.cb_out)
+    if use_pallas:
+        yb = direct_conv2d_blocked_pallas(
+            xb, wb, stride=stride, interpret=_interpret_default(interpret))
+    else:
+        yb = direct_conv_blocked(xb, wb, stride=stride)
+    return L.blocked_to_nhwc(yb)
+
+
+def conv1d_depthwise(x: jnp.ndarray, w: jnp.ndarray,
+                     bias: Optional[jnp.ndarray] = None, *,
+                     use_pallas: bool = True, lb: int = 512,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Causal depthwise conv1d.  x: [B, L, D]; w: [K, D] -> [B, L, D]."""
+    b, l, d = x.shape
+    k = w.shape[0]
+    db = L.largest_divisor_leq(d, 128)
+    lb = L.largest_divisor_leq(l, lb)
+    if not use_pallas or lb < k - 1:
+        return direct_conv1d_depthwise(x, w, bias, causal=True)
+    xb = L.bld_to_blocked(x, db)
+    wb = L.kd_to_blocked(w, db)
+    yb = conv1d_depthwise_blocked_pallas(
+        xb, wb, lb=lb, interpret=_interpret_default(interpret))
+    y = L.blocked_to_bld(yb)
+    if bias is not None:
+        y = (y.astype(jnp.float32) + bias.astype(jnp.float32)).astype(y.dtype)
+    return y

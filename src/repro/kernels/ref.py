@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Deliberately *independent* implementations: the conv2d oracle routes through
+XLA's ``conv_general_dilated`` on the un-blocked layout, the conv1d oracle is
+a direct jnp shift-and-add.  Kernel tests assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layout as L
+
+__all__ = ["direct_conv2d_ref", "conv1d_depthwise_ref"]
+
+
+def direct_conv2d_ref(xb: jnp.ndarray, wb: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """Oracle on blocked layouts via lax.conv on the un-blocked ones.
+
+    xb: [N, Ci/Cib, Hi, Wi, Cib]; wb: [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob]
+    -> [N, Co/Cob, Ho, Wo, Cob]
+    """
+    x = L.blocked_to_nhwc(xb)
+    w = L.blocked_to_hwio(wb)
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    cob = wb.shape[-1]
+    return L.nhwc_to_blocked(y.astype(xb.dtype), cob)
+
+
+def conv1d_depthwise_ref(x: jnp.ndarray, w: jnp.ndarray,
+                         bias: jnp.ndarray | None = None,
+                         causal: bool = True) -> jnp.ndarray:
+    """x: [B, L, D]; w: [K, D] -> [B, L, D] (causal left-pad)."""
+    b, l, d = x.shape
+    k = w.shape[0]
+    pad = (k - 1, 0) if causal else ((k - 1) // 2, k - 1 - (k - 1) // 2)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), pad, (0, 0)))
+    out = jnp.zeros((b, l, d), jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i:i + l, :] * w[i].astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)

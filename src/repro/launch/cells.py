@@ -1,0 +1,129 @@
+"""Build one dry-run cell: (arch × shape × mesh) -> jit-able fn + structs +
+shardings.  Used by launch/dryrun.py, benchmarks/roofline.py and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import get_config
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable
+from repro.nn.models import EncDec, build_model, struct_tree
+from repro.nn.module import Parallelism
+from repro.serve.decode import make_serve_step
+from repro.train.optimizer import AdamW, OptState, cosine_schedule, zero1_shardings
+from repro.train.trainstep import TrainSettings, make_prefill_step, make_train_step
+
+__all__ = ["Cell", "build_cell"]
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    fn: Any                       # the jit-wrapped step
+    args: Tuple[Any, ...]         # ShapeDtypeStruct pytrees
+    model: Any
+    px: Parallelism
+    skipped: Optional[str] = None
+
+    def lower(self):
+        return self.fn.lower(*self.args)
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec) if mesh is not None else None
+
+
+def _shard_tree(px, pspec_tree):
+    return jax.tree.map(
+        lambda p: NamedSharding(px.mesh, p), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_structs(cfg: ModelConfig, shape: ShapeSpec, px: Parallelism,
+                   with_targets: bool):
+    b, s = shape.global_batch, shape.seq_len
+    bspec = px.pspec(("batch", None), (b, s))
+    structs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    shards = {"tokens": _ns(px.mesh, bspec)}
+    if with_targets:
+        structs["targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        shards["targets"] = _ns(px.mesh, bspec)
+    if cfg.family == "vlm":
+        shp = (b, cfg.n_img_tokens, cfg.d_model)
+        structs["img_embed"] = jax.ShapeDtypeStruct(shp, jnp.bfloat16)
+        shards["img_embed"] = _ns(px.mesh, px.pspec(("batch", None, None), shp))
+    if cfg.family == "audio":
+        shp = (b, cfg.encoder.max_frames, cfg.d_model)
+        structs["frames"] = jax.ShapeDtypeStruct(shp, jnp.bfloat16)
+        shards["frames"] = _ns(px.mesh, px.pspec(("batch", None, None), shp))
+    return structs, shards
+
+
+def build_cell(arch: str, shape_name: str, px: Parallelism,
+               settings: TrainSettings = None, unroll: bool = False) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        return Cell(arch, shape, cfg, None, (), None, px, skipped=why)
+    if settings is None:
+        # accum=8: the production microbatching knob that keeps train_4k
+        # activation memory under the 16 GB HBM budget (see EXPERIMENTS.md)
+        settings = TrainSettings(remat="full", chunk=2048,
+                                 accum_steps=8 if shape.kind == "train" else 1,
+                                 unroll=unroll)
+
+    model = build_model(cfg, px)
+    specs = model.specs()
+    params_struct = struct_tree(specs)
+    param_sh = px.param_shardings(specs)
+
+    if shape.kind == "train":
+        opt = AdamW(lr=cosine_schedule(3e-4, 2000, 100000))
+        step = make_train_step(model, cfg, opt, settings)
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        opt_sh = OptState(step=_ns(px.mesh, P()),
+                          mu=zero1_shardings(specs, px),
+                          nu=zero1_shardings(specs, px))
+        batch_struct, batch_sh = _batch_structs(cfg, shape, px, True)
+        fn = jax.jit(step,
+                     in_shardings=(param_sh, opt_sh, batch_sh),
+                     out_shardings=(param_sh, opt_sh, None),
+                     donate_argnums=(0, 1))
+        return Cell(arch, shape, cfg, fn, (params_struct, opt_struct,
+                                           batch_struct), model, px)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(model, cfg, settings)
+        batch_struct, batch_sh = _batch_structs(cfg, shape, px, False)
+        fn = jax.jit(step, in_shardings=(param_sh, batch_sh))
+        return Cell(arch, shape, cfg, fn, (params_struct, batch_struct),
+                    model, px)
+
+    # decode
+    lm = model.decoder if isinstance(model, EncDec) else model
+    b = shape.global_batch
+    cache_struct = jax.eval_shape(
+        lambda: lm.init_cache(b, shape.seq_len, dtype=jnp.bfloat16))
+    cache_sh = _shard_tree(px, lm.cache_pspecs(b, shape.seq_len)) \
+        if px.mesh is not None else None
+    serve = make_serve_step(model, unroll=settings.unroll)
+    tok_struct = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = jax.jit(serve,
+                 in_shardings=(param_sh, cache_sh,
+                               _ns(px.mesh, px.pspec(("batch", None), (b, 1))),
+                               _ns(px.mesh, P())),
+                 out_shardings=(None, cache_sh),
+                 donate_argnums=(1,))
+    return Cell(arch, shape, cfg, fn,
+                (params_struct, cache_struct, tok_struct, pos_struct),
+                model, px)

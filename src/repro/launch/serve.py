@@ -1,0 +1,52 @@
+"""Production serving CLI: continuous batching over the batched decode step.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b --reduced \
+      --requests 6 --batch 2
+"""
+import argparse
+
+import numpy as np
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    from repro.configs.reduced import reduced_config
+    from repro.configs.registry import get_config
+    from repro.nn.models import build_model
+    from repro.nn.module import Parallelism
+    from repro.serve.scheduler import ContinuousBatcher, Request
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    if cfg.family == "audio":
+        raise SystemExit("whisper serving needs frames; see tests/"
+                         "test_decode_consistency.py::test_whisper_decode")
+    model = build_model(cfg, Parallelism(mesh=None))
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"[serve] {cfg.name}: {cfg.n_params() / 1e6:.1f}M params")
+
+    rng = np.random.default_rng(0)
+    b = ContinuousBatcher(model, params, batch=args.batch,
+                          cache_len=args.cache_len)
+    for i in range(args.requests):
+        plen = int(rng.integers(3, 12))
+        b.submit(Request(rid=i,
+                         prompt=rng.integers(0, cfg.vocab_size, (plen,),
+                                             dtype=np.int32),
+                         max_new_tokens=args.max_new))
+    done = b.run()
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"req {r.rid}: {list(r.prompt)} -> {r.out_tokens}")
+    print(f"[serve] completed {len(done)} requests")
+
+
+if __name__ == "__main__":
+    main()

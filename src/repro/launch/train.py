@@ -1,0 +1,101 @@
+"""Production training CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m --reduced \
+      --steps 50 --ckpt-dir /tmp/ckpt
+
+On a real TPU fleet the same entrypoint runs the full config on the
+production mesh (--mesh single|multi); on this CPU container use --reduced.
+Fault tolerance: resume-from-latest is automatic; SIGTERM checkpoints and
+exits cleanly (see train/runtime.py).
+"""
+import argparse
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="none", choices=["none", "single", "multi"])
+    args = ap.parse_args()
+
+    from repro.configs.reduced import reduced_config
+    from repro.configs.registry import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.nn.models import build_model
+    from repro.nn.module import Parallelism
+    from repro.train.data import SyntheticLM
+    from repro.train.optimizer import AdamW, cosine_schedule, zero1_shardings
+    from repro.train.runtime import TrainLoopConfig, run_training
+    from repro.train.trainstep import TrainSettings, make_train_step
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    mesh = None if args.mesh == "none" else make_production_mesh(
+        multi_pod=(args.mesh == "multi"))
+    px = Parallelism(mesh=mesh)
+    model = build_model(cfg, px)
+    print(f"[train] {cfg.name}: {cfg.n_params() / 1e6:.1f}M params "
+          f"({cfg.n_active_params() / 1e6:.1f}M active), mesh={args.mesh}")
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=cosine_schedule(args.lr, max(args.steps // 10, 1),
+                                   args.steps))
+    state = opt.init(params)
+    settings = TrainSettings(remat=args.remat, accum_steps=args.accum)
+    step = make_train_step(model, cfg, opt, settings)
+    if mesh is not None:
+        specs = model.specs()
+        psh = px.param_shardings(specs)
+        from repro.train.optimizer import OptState
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        osh = OptState(step=NamedSharding(mesh, P()),
+                       mu=zero1_shardings(specs, px),
+                       nu=zero1_shardings(specs, px))
+        step = jax.jit(step, in_shardings=(psh, osh, None),
+                       out_shardings=(psh, osh, None))
+        params = jax.tree.map(jax.device_put, params, psh)
+        state_leaves = jax.tree.map(jax.device_put, state, osh)
+        state = state_leaves
+    else:
+        step = jax.jit(step)
+
+    class _Data:
+        def __init__(self):
+            self._d = SyntheticLM(vocab=cfg.vocab_size, batch=args.batch,
+                                  seq=args.seq, seed=0)
+
+        def batch_at(self, s):
+            b = self._d.batch_at(s)
+            if cfg.family == "vlm":
+                rng = np.random.default_rng(s)
+                b["img_embed"] = rng.normal(
+                    size=(args.batch, cfg.n_img_tokens, cfg.d_model)
+                ).astype(np.float32) * 0.02
+            if cfg.family == "audio":
+                rng = np.random.default_rng(s)
+                b["frames"] = rng.normal(
+                    size=(args.batch, cfg.encoder.max_frames, cfg.d_model)
+                ).astype(np.float32) * 0.02
+            return b
+
+    out = run_training(step, params, state, _Data(),
+                       TrainLoopConfig(total_steps=args.steps,
+                                       ckpt_dir=args.ckpt_dir,
+                                       ckpt_every=args.ckpt_every,
+                                       log_every=10))
+    print(f"[train] done; final loss {float(out['metrics']['nll']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

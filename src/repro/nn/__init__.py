@@ -1,0 +1,3 @@
+"""Pure-JAX neural substrate: module system, layers, attention, MoE, SSM."""
+from .module import ParamSpec, Parallelism, init_tree, axes_tree, count_params  # noqa: F401
+from .models import LM, EncDec, build_model  # noqa: F401

@@ -1,0 +1,208 @@
+"""Transformer / Mamba / hybrid layer blocks composed per ModelConfig."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerKind, ModelConfig
+from .attention import Attention, KVCache, init_kv_cache
+from .layers import MLP, LayerNorm, RMSNorm
+from .module import ParamSpec, Parallelism
+from .moe import MoE
+from .ssm import Mamba2, MambaCache
+
+__all__ = ["DecoderLayer", "EncoderLayer"]
+
+
+def _norm(cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return LayerNorm(cfg.d_model, cfg.norm_eps)
+    return RMSNorm(cfg.d_model, cfg.norm_eps,
+                   zero_centered=(cfg.post_norm))   # gemma2 stores (1+w)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecoderLayer:
+    cfg: ModelConfig
+    kind: LayerKind
+    padded_heads: int
+    moe_layout: Tuple[int, int] = (1, 1)       # (ep, tp) from Parallelism
+
+    # -- sublayer builders ---------------------------------------------
+    def _attn(self, cross=False) -> Attention:
+        c = self.cfg
+        return Attention(
+            d_model=c.d_model, n_heads=c.n_heads, n_kv_heads=c.n_kv_heads,
+            head_dim=c.head_dim, padded_heads=self.padded_heads,
+            rope_theta=c.rope_theta, use_rope=c.use_rope, qk_norm=c.qk_norm,
+            use_bias=c.use_bias, scale=c.attn_scale, cross=cross,
+            norm_eps=c.norm_eps)
+
+    def _mamba(self) -> Mamba2:
+        return Mamba2(self.cfg.d_model, self.cfg.ssm, self.cfg.norm_eps)
+
+    def _moe(self) -> MoE:
+        ep, tp = self.moe_layout
+        return MoE(self.cfg.d_model, self.cfg.moe, ep=ep, tp=tp)
+
+    def _mlp(self) -> MLP:
+        c = self.cfg
+        return MLP(c.d_model, c.d_ff, act=c.mlp_act, use_bias=c.use_bias)
+
+    # -- specs -----------------------------------------------------------
+    def specs(self):
+        c = self.cfg
+        s: dict = {"norm1": _norm(c).specs()}
+        if self.kind.mixer == "mamba":
+            s["mamba"] = self._mamba().specs()
+        else:
+            s["attn"] = self._attn(cross=(self.kind.mixer == "cross_attn")).specs()
+            if self.kind.mixer == "cross_attn":
+                s["xgate_attn"] = ParamSpec((1,), (None,), init="zeros")
+                s["xgate_mlp"] = ParamSpec((1,), (None,), init="zeros")
+        if c.post_norm:
+            s["post_norm1"] = _norm(c).specs()
+        if self.kind.mlp != "none":
+            s["norm2"] = _norm(c).specs()
+            s["mlp"] = (self._moe() if self.kind.mlp == "moe" else self._mlp()).specs()
+            if c.post_norm:
+                s["post_norm2"] = _norm(c).specs()
+        return s
+
+    # -- mixer dispatch ----------------------------------------------------
+    def _mix(self, p, h, *, positions, px, cross_kv, chunk, unroll=False):
+        c = self.cfg
+        if self.kind.mixer == "mamba":
+            return self._mamba()(p["mamba"], h, px), None
+        if self.kind.mixer == "cross_attn":
+            # cross_kv here is the modality memory [B, n_mem, D]; the layer
+            # projects its own K/V from it.
+            y = self._attn(cross=True)(p["attn"], h, positions=positions,
+                                       px=px, kv=cross_kv, unroll=unroll)
+            return y, None
+        attn = self._attn()
+        y = attn(p["attn"], h, positions=positions, px=px, causal=True,
+                 window=self.kind.window, cap=c.attn_softcap, chunk=chunk,
+                 unroll=unroll)
+        return y, None
+
+    # -- forward (train / prefill) -----------------------------------------
+    def __call__(self, p, x, *, positions, px: Parallelism, train: bool = True,
+                 cross_kv=None, chunk: int = 2048, unroll: bool = False):
+        c = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        h = _norm(c)(p["norm1"], x)
+        y, _ = self._mix(p, h, positions=positions, px=px,
+                         cross_kv=cross_kv, chunk=chunk, unroll=unroll)
+        if px.rules.get("wire_bf16"):
+            # pin the row-parallel projection output at its storage dtype so
+            # XLA cannot promote the TP all-reduce to f32 by fusing the
+            # downstream norm's upcast into it (halves wire bytes)
+            (y,) = jax.lax.optimization_barrier((y,))
+        if c.post_norm:
+            y = _norm(c)(p["post_norm1"], y)
+        if self.kind.mixer == "cross_attn":
+            y = jnp.tanh(p["xgate_attn"].astype(jnp.float32)).astype(y.dtype) * y
+        x = x + y
+        if self.kind.mlp != "none":
+            h = _norm(c)(p["norm2"], x)
+            if self.kind.mlp == "moe":
+                y, a = self._moe()(p["mlp"], h, px, train=train)
+                aux = aux + a
+            else:
+                y = self._mlp()(p["mlp"], h, px)
+            if px.rules.get("wire_bf16"):
+                (y,) = jax.lax.optimization_barrier((y,))
+            if c.post_norm:
+                y = _norm(c)(p["post_norm2"], y)
+            if self.kind.mixer == "cross_attn":
+                y = jnp.tanh(p["xgate_mlp"].astype(jnp.float32)).astype(y.dtype) * y
+            x = x + y
+        return x, aux
+
+    # -- decode --------------------------------------------------------------
+    def init_cache(self, batch: int, window: int, px: Parallelism,
+                   dtype=jnp.bfloat16):
+        c = self.cfg
+        if self.kind.mixer == "mamba":
+            return self._mamba().init_cache(batch, dtype)
+        if self.kind.mixer == "cross_attn":
+            # filled at prefill from the image/audio memory; static afterwards
+            z = jnp.zeros((batch, c.n_img_tokens, c.n_kv_heads,
+                           c.head_dim), dtype)
+            return (z, z)
+        w = min(window, self.kind.window) if self.kind.window else window
+        return init_kv_cache(batch, w, c.n_kv_heads, c.head_dim, dtype)
+
+    def decode(self, p, x, cache, pos, *, px: Parallelism):
+        """x: [B,1,D] one token; returns (x, new_cache)."""
+        c = self.cfg
+        h = _norm(c)(p["norm1"], x)
+        if self.kind.mixer == "mamba":
+            y, cache = self._mamba().decode(p["mamba"], h, cache, px)
+        elif self.kind.mixer == "cross_attn":
+            k, v = cache
+            attn = self._attn(cross=True)
+            y = attn.from_kv(p["attn"], h, k, v,
+                             positions=jnp.full((x.shape[0], 1), pos, jnp.int32),
+                             px=px)
+        else:
+            attn = self._attn()
+            y, cache = attn.decode(p["attn"], h, cache, pos, px=px,
+                                   window=self.kind.window, cap=c.attn_softcap)
+        if c.post_norm:
+            y = _norm(c)(p["post_norm1"], y)
+        if self.kind.mixer == "cross_attn":
+            y = jnp.tanh(p["xgate_attn"].astype(jnp.float32)).astype(y.dtype) * y
+        x = x + y
+        if self.kind.mlp != "none":
+            h = _norm(c)(p["norm2"], x)
+            if self.kind.mlp == "moe":
+                y, _ = self._moe()(p["mlp"], h, px, train=False)
+            else:
+                y = self._mlp()(p["mlp"], h, px)
+            if c.post_norm:
+                y = _norm(c)(p["post_norm2"], y)
+            if self.kind.mixer == "cross_attn":
+                y = jnp.tanh(p["xgate_mlp"].astype(jnp.float32)).astype(y.dtype) * y
+            x = x + y
+        return x, cache
+
+    def fill_cross_cache(self, p, memory, px: Parallelism):
+        """Precompute cross K/V from image/audio memory at prefill."""
+        attn = self._attn(cross=True)
+        k = attn._project(p["attn"], memory, "k", self.cfg.n_kv_heads)
+        v = attn._project(p["attn"], memory, "v", self.cfg.n_kv_heads)
+        return (k, v)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderLayer:
+    """Bidirectional transformer layer (whisper encoder)."""
+    cfg: ModelConfig
+    padded_heads: int
+
+    def _attn(self) -> Attention:
+        c = self.cfg
+        return Attention(d_model=c.d_model, n_heads=c.n_heads,
+                         n_kv_heads=c.n_kv_heads, head_dim=c.head_dim,
+                         padded_heads=self.padded_heads, use_rope=False,
+                         use_bias=c.use_bias, norm_eps=c.norm_eps)
+
+    def _mlp(self) -> MLP:
+        c = self.cfg
+        return MLP(c.d_model, c.d_ff, act=c.mlp_act, use_bias=c.use_bias)
+
+    def specs(self):
+        return {"norm1": _norm(self.cfg).specs(), "attn": self._attn().specs(),
+                "norm2": _norm(self.cfg).specs(), "mlp": self._mlp().specs()}
+
+    def __call__(self, p, x, *, positions, px: Parallelism):
+        h = _norm(self.cfg)(p["norm1"], x)
+        x = x + self._attn()(p["attn"], h, positions=positions, px=px,
+                             causal=False)
+        h = _norm(self.cfg)(p["norm2"], x)
+        return x + self._mlp()(p["mlp"], h, px)

@@ -1,0 +1,169 @@
+"""Basic layers: projections, embeddings, norms, MLPs, positional encodings."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .module import Axis, ParamSpec, Parallelism
+
+__all__ = ["Linear", "Embedding", "RMSNorm", "LayerNorm", "MLP",
+           "rope", "sinusoidal_positions", "softcap"]
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class Linear:
+    d_in: int
+    d_out: int
+    axes: Tuple[Axis, Axis] = ("embed", "mlp")
+    use_bias: bool = False
+    init_scale: float = 1.0
+
+    def specs(self):
+        s = {"w": ParamSpec((self.d_in, self.d_out), self.axes,
+                            init="fan_in", scale=self.init_scale)}
+        if self.use_bias:
+            s["b"] = ParamSpec((self.d_out,), (self.axes[1],), init="zeros")
+        return s
+
+    def __call__(self, p, x: jnp.ndarray) -> jnp.ndarray:
+        y = x @ p["w"].astype(x.dtype)
+        if self.use_bias:
+            y = y + p["b"].astype(x.dtype)
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class Embedding:
+    vocab: int
+    d: int
+    padded_vocab: Optional[int] = None    # rounded up for vocab sharding
+
+    @property
+    def rows(self) -> int:
+        return self.padded_vocab or self.vocab
+
+    tied: bool = True      # tied tables also serve logits -> keep "vocab"
+
+    def specs(self):
+        ax = "vocab" if self.tied else "vocab_in"
+        return {"w": ParamSpec((self.rows, self.d), (ax, "embed"),
+                               init="normal", scale=0.02)}
+
+    def __call__(self, p, tokens: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+        return p["w"].astype(dtype)[tokens]
+
+    def attend(self, p, x: jnp.ndarray) -> jnp.ndarray:
+        """Tied-logits head: [..., d] @ [d, vocab_padded]."""
+        return x @ p["w"].astype(x.dtype).T
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSNorm:
+    d: int
+    eps: float = 1e-5
+    zero_centered: bool = False          # gemma2 stores (1 + w)
+
+    def specs(self):
+        init = "zeros" if self.zero_centered else "ones"
+        return {"w": ParamSpec((self.d,), ("embed",), init=init)}
+
+    def __call__(self, p, x: jnp.ndarray) -> jnp.ndarray:
+        dtype = x.dtype
+        x = x.astype(jnp.float32)
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        x = x * jax.lax.rsqrt(var + self.eps)
+        w = p["w"].astype(jnp.float32)
+        if self.zero_centered:
+            w = 1.0 + w
+        return (x * w).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNorm:
+    d: int
+    eps: float = 1e-5
+
+    def specs(self):
+        return {"w": ParamSpec((self.d,), ("embed",), init="ones"),
+                "b": ParamSpec((self.d,), ("embed",), init="zeros")}
+
+    def __call__(self, p, x: jnp.ndarray) -> jnp.ndarray:
+        dtype = x.dtype
+        x = x.astype(jnp.float32)
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + self.eps)
+        return (x * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLP:
+    """SwiGLU (llama-family) or GELU (whisper) feed-forward, column/row TP."""
+    d_model: int
+    d_ff: int
+    act: str = "swiglu"
+    use_bias: bool = False
+
+    def specs(self):
+        if self.act == "swiglu":
+            return {
+                "gate": Linear(self.d_model, self.d_ff, ("embed", "mlp")).specs(),
+                "up": Linear(self.d_model, self.d_ff, ("embed", "mlp")).specs(),
+                "down": Linear(self.d_ff, self.d_model, ("mlp", "embed")).specs(),
+            }
+        s = {"fc1": Linear(self.d_model, self.d_ff, ("embed", "mlp"),
+                           use_bias=self.use_bias).specs(),
+             "fc2": Linear(self.d_ff, self.d_model, ("mlp", "embed"),
+                           use_bias=self.use_bias).specs()}
+        return s
+
+    def __call__(self, p, x: jnp.ndarray, px: Parallelism) -> jnp.ndarray:
+        if self.act == "swiglu":
+            gate = Linear(self.d_model, self.d_ff)(p["gate"], x)
+            up = Linear(self.d_model, self.d_ff)(p["up"], x)
+            h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+            h = px.constrain(h, "batch", None, "mlp")
+            return px.constrain(Linear(self.d_ff, self.d_model)(p["down"], h),
+                                "batch", "act_seq", "embed")
+        fc1 = Linear(self.d_model, self.d_ff, use_bias=self.use_bias)
+        fc2 = Linear(self.d_ff, self.d_model, use_bias=self.use_bias)
+        h = jax.nn.gelu(fc1(p["fc1"], x).astype(jnp.float32)).astype(x.dtype)
+        h = px.constrain(h, "batch", None, "mlp")
+        return px.constrain(fc2(p["fc2"], h), "batch", "act_seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: [B, S, H, D_h], positions: [B, S] (int)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]                                # [B, S, 1, half]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal table [n, d]."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / max(half - 1, 1))
+    ang = jnp.arange(n, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

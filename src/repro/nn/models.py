@@ -1,0 +1,345 @@
+"""Model assembly: decoder-only LMs (dense/MoE/SSM/hybrid/VLM) and the
+whisper-style encoder–decoder, with a uniform train/prefill/decode API.
+
+Layers are stacked period-wise under ``lax.scan`` (the heterogeneous layer
+pattern — jamba's 1:7 attn:mamba interleave, gemma2's local/global
+alternation, llama-vision's every-5th cross-attention — forms the scan body),
+so compile time is O(period), not O(depth).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .attention import KVCache
+from .blocks import DecoderLayer, EncoderLayer
+from .layers import Embedding, LayerNorm, RMSNorm, sinusoidal_positions, softcap
+from .module import ParamSpec, Parallelism, axes_tree, init_tree, with_layers_axis
+from .moe import MoE
+
+__all__ = ["LM", "EncDec", "build_model"]
+
+
+def _positions(b: int, s: int) -> jnp.ndarray:
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+def _final_norm(cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return LayerNorm(cfg.d_model, cfg.norm_eps)
+    return RMSNorm(cfg.d_model, cfg.norm_eps, zero_centered=cfg.post_norm)
+
+
+def cast_float_specs(specs, dtype):
+    """Apply the config's param_dtype to every floating-point ParamSpec."""
+    if isinstance(specs, ParamSpec):
+        if jnp.issubdtype(jnp.dtype(specs.dtype), jnp.floating):
+            return dataclasses.replace(specs, dtype=jnp.dtype(dtype))
+        return specs
+    return {k: cast_float_specs(v, dtype) for k, v in specs.items()}
+
+
+def struct_tree(specs):
+    """ParamSpec tree -> ShapeDtypeStruct tree (no allocation)."""
+    if isinstance(specs, ParamSpec):
+        return jax.ShapeDtypeStruct(specs.shape, jnp.dtype(specs.dtype))
+    return {k: struct_tree(v) for k, v in specs.items()}
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    policy = {"full": None,
+              "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+              }[mode if mode != "full" else "full"]
+    if policy is None:
+        return jax.checkpoint(fn)
+    return jax.checkpoint(fn, policy=policy)
+
+
+@dataclasses.dataclass
+class LM:
+    """Decoder-only LM.  Also serves as the decoder half of EncDec."""
+    cfg: ModelConfig
+    px: Parallelism
+    with_cross: bool = False           # whisper decoder: cross-attn every layer
+
+    def __post_init__(self):
+        c, px = self.cfg, self.px
+        self.padded_heads = px.pad_to_axis(c.n_heads, "heads")
+        unit = 128 * max(1, px.axis_size("model"))
+        self.padded_vocab = -(-c.vocab_size // unit) * unit
+        moe = MoE.create(c.d_model, c.moe, px) if c.moe else None
+        layout = (moe.ep, moe.tp) if moe else (1, 1)
+        self.layers = [DecoderLayer(c, k, self.padded_heads, layout)
+                       for k in c.layer_kinds()]
+        self.n_periods = c.n_layers // c.period
+        self.embed = Embedding(c.vocab_size, c.d_model,
+                               padded_vocab=self.padded_vocab,
+                               tied=c.tie_embeddings)
+
+    # -- specs / init -------------------------------------------------------
+    def _layer_specs(self, layer: DecoderLayer):
+        s = layer.specs()
+        if self.with_cross and layer.kind.mixer == "attn":
+            s["norm_cross"] = _final_norm(self.cfg).specs()
+            s["cross"] = layer._attn(cross=True).specs()
+        return s
+
+    def specs(self):
+        c = self.cfg
+        period = {f"b{i}": self._layer_specs(l) for i, l in enumerate(self.layers)}
+        s = {"embed": self.embed.specs(),
+             "layers": with_layers_axis(period, self.n_periods),
+             "final_norm": _final_norm(c).specs()}
+        if c.learned_pos:
+            s["pos"] = ParamSpec((c.max_seq_len, c.d_model), (None, "embed"),
+                                 init="normal", scale=0.02)
+        if not c.tie_embeddings:
+            s["lm_head"] = ParamSpec((c.d_model, self.padded_vocab),
+                                     ("embed", "vocab"))
+        return cast_float_specs(s, c.param_dtype)
+
+    def init(self, key):
+        return init_tree(self.specs(), key)
+
+    # -- one period of layers ------------------------------------------------
+    def _period(self, lp, x, aux, *, positions, memory, train, chunk,
+                unroll=False):
+        for i, layer in enumerate(self.layers):
+            p = lp[f"b{i}"]
+            cross_kv = memory if layer.kind.mixer == "cross_attn" else None
+            x, a = layer(p, x, positions=positions, px=self.px, train=train,
+                         cross_kv=cross_kv, chunk=chunk, unroll=unroll)
+            if a is not None:
+                aux = aux + a
+            if self.with_cross and layer.kind.mixer == "attn":
+                h = _final_norm(self.cfg)(p["norm_cross"], x)
+                x = x + layer._attn(cross=True).from_kv(
+                    p["cross"], h,
+                    k=layer._attn(cross=True)._project(p["cross"], memory, "k",
+                                                       self.cfg.n_kv_heads),
+                    v=layer._attn(cross=True)._project(p["cross"], memory, "v",
+                                                       self.cfg.n_kv_heads),
+                    positions=positions, px=self.px)
+        return x, aux
+
+    # -- forward -------------------------------------------------------------
+    def __call__(self, params, tokens, *, memory=None, train=True,
+                 remat: str = "full", chunk: int = 2048,
+                 positions: Optional[jnp.ndarray] = None,
+                 unroll: bool = False, return_hidden: bool = False):
+        c = self.cfg
+        b, s = tokens.shape
+        dtype = jnp.dtype(c.dtype)
+        x = self.embed(params["embed"], tokens, dtype=dtype)
+        if self.px.rules.get("wire_bf16"):
+            (x,) = jax.lax.optimization_barrier((x,))
+        if c.embed_scale:
+            x = (x.astype(jnp.float32) * math.sqrt(c.d_model)).astype(dtype)
+        if positions is None:
+            positions = _positions(b, s)
+        if c.learned_pos:
+            x = x + params["pos"].astype(dtype)[positions]
+        x = self.px.constrain(x, "batch", "act_seq", "embed")
+
+        def body(carry, lp):
+            xc, aux = carry
+            xc, aux = self._period(lp, xc, aux, positions=positions,
+                                   memory=memory, train=train, chunk=chunk,
+                                   unroll=unroll)
+            return (xc, aux), ()
+
+        if unroll:
+            # python-loop over periods: identical math to the scan; used by
+            # the dry-run cost extraction (XLA cost_analysis does not
+            # multiply while-loop bodies by trip count).
+            carry = (x, jnp.zeros((), jnp.float32))
+            rb = _remat(body, remat)
+            for i in range(self.n_periods):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                carry, _ = rb(carry, lp)
+            x, aux = carry
+        else:
+            (x, aux), _ = jax.lax.scan(_remat(body, remat),
+                                       (x, jnp.zeros((), jnp.float32)),
+                                       params["layers"])
+        x = _final_norm(c)(params["final_norm"], x)
+        if return_hidden:
+            return self.px.constrain(x, "batch", None, "embed"), aux
+        x = self.px.constrain(x, "batch", None, "embed")
+        if c.tie_embeddings:
+            logits = self.embed.attend(params["embed"], x)
+        else:
+            logits = x @ params["lm_head"].astype(x.dtype)
+        logits = softcap(logits.astype(jnp.float32), c.final_softcap)
+        logits = self.px.constrain(logits, "batch", None, "vocab")
+        return logits, aux
+
+    # -- serving -------------------------------------------------------------
+    def cache_window(self, cache_len: int) -> int:
+        return cache_len
+
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16):
+        """Stacked-over-periods decode cache pytree."""
+        def one_period():
+            out = {}
+            for i, layer in enumerate(self.layers):
+                entry: Dict[str, Any] = {"mix": layer.init_cache(
+                    batch, cache_len, self.px, dtype)}
+                if self.with_cross and layer.kind.mixer == "attn":
+                    c = self.cfg
+                    z = jnp.zeros((batch, c.encoder.max_frames,
+                                   c.n_kv_heads, c.head_dim), dtype)
+                    entry["cross"] = (z, z)
+                out[f"b{i}"] = entry
+            return out
+        period = one_period()
+        return jax.tree.map(
+            lambda a: jnp.zeros((self.n_periods,) + a.shape, a.dtype), period)
+
+    def cache_pspecs(self, batch: int, cache_len: int):
+        """PartitionSpec tree matching init_cache (incl. leading periods dim).
+
+        KV caches shard the sequence dim over "model" (flash-decode);
+        SSM/conv states shard their channel dims; non-divisible dims fall
+        back to replicated via Parallelism.pspec.
+        """
+        from jax.sharding import PartitionSpec as P
+        px, c = self.px, self.cfg
+        pre = lambda spec: P(*((None,) + tuple(spec)))
+
+        out = {}
+        for i, layer in enumerate(self.layers):
+            if layer.kind.mixer == "mamba":
+                m = layer._mamba()
+                conv_shape = (batch, c.ssm.d_conv - 1, m.conv_dim)
+                ssm_shape = (batch, m.n_heads, c.ssm.head_dim, c.ssm.d_state)
+                from .ssm import MambaCache
+                mix = MambaCache(
+                    conv=pre(px.pspec(("batch", None, "mlp"), conv_shape)),
+                    ssm=pre(px.pspec(("batch", "ssm_heads", None, None),
+                                     ssm_shape)))
+            elif layer.kind.mixer == "cross_attn":
+                shp = (batch, c.n_img_tokens, c.n_kv_heads, c.head_dim)
+                pk = pre(px.pspec(("batch", None, "kv_heads", None), shp))
+                mix = (pk, pk)
+            else:
+                w = min(layer.kind.window, cache_len) if layer.kind.window \
+                    else cache_len
+                shp = (batch, w, c.n_kv_heads, c.head_dim)
+                pk = pre(px.pspec(("batch", "kv_seq", None, None), shp))
+                mix = KVCache(k=pk, v=pk)
+            entry = {"mix": mix}
+            if self.with_cross and layer.kind.mixer == "attn":
+                shp = (batch, c.encoder.max_frames, c.n_kv_heads, c.head_dim)
+                pk = pre(px.pspec(("batch", None, "kv_heads", None), shp))
+                entry["cross"] = (pk, pk)
+            out[f"b{i}"] = entry
+        return out
+
+    def decode_step(self, params, cache, tokens, pos, unroll: bool = False):
+        """tokens: [B, 1]; pos: scalar int32 -> (logits [B,1,V], cache)."""
+        c = self.cfg
+        b = tokens.shape[0]
+        dtype = jnp.dtype(c.dtype)
+        x = self.embed(params["embed"], tokens, dtype=dtype)
+        if c.embed_scale:
+            x = (x.astype(jnp.float32) * math.sqrt(c.d_model)).astype(dtype)
+        if c.learned_pos:
+            x = x + params["pos"].astype(dtype)[pos][None, None]
+
+        def body(xc, inp):
+            lp, cslice = inp
+            new_slice = {}
+            for i, layer in enumerate(self.layers):
+                p, entry = lp[f"b{i}"], cslice[f"b{i}"]
+                xc, newc = layer.decode(p, xc, entry["mix"], pos, px=self.px)
+                new_entry = {"mix": newc}
+                if self.with_cross and layer.kind.mixer == "attn":
+                    k, v = entry["cross"]
+                    h = _final_norm(c)(p["norm_cross"], xc)
+                    xc = xc + layer._attn(cross=True).from_kv(
+                        p["cross"], h, k, v,
+                        positions=jnp.full((b, 1), pos, jnp.int32), px=self.px)
+                    new_entry["cross"] = entry["cross"]
+                new_slice[f"b{i}"] = new_entry
+            return xc, new_slice
+
+        if unroll:
+            news = []
+            for i in range(self.n_periods):
+                sl = jax.tree.map(lambda a: a[i], (params["layers"], cache))
+                x, ns = body(x, sl)
+                news.append(ns)
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *news)
+        else:
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x = _final_norm(c)(params["final_norm"], x)
+        if c.tie_embeddings:
+            logits = self.embed.attend(params["embed"], x)
+        else:
+            logits = x @ params["lm_head"].astype(x.dtype)
+        logits = softcap(logits.astype(jnp.float32), c.final_softcap)
+        return self.px.constrain(logits, "batch", None, "vocab"), new_cache
+
+
+@dataclasses.dataclass
+class EncDec:
+    """Whisper-style encoder–decoder over a stubbed modality frontend."""
+    cfg: ModelConfig
+    px: Parallelism
+
+    def __post_init__(self):
+        self.decoder = LM(self.cfg, self.px, with_cross=True)
+        self.enc_layer = EncoderLayer(self.cfg, self.decoder.padded_heads)
+        self.n_enc = self.cfg.encoder.n_layers
+
+    def specs(self):
+        s = {"decoder": self.decoder.specs(),
+             "enc_layers": cast_float_specs(
+                 with_layers_axis(self.enc_layer.specs(), self.n_enc),
+                 self.cfg.param_dtype),
+             "enc_norm": cast_float_specs(_final_norm(self.cfg).specs(),
+                                          self.cfg.param_dtype)}
+        return s
+
+    def init(self, key):
+        return init_tree(self.specs(), key)
+
+    def encode(self, params, frames: jnp.ndarray,
+               unroll: bool = False) -> jnp.ndarray:
+        """frames: [B, S_enc, D] stubbed frame embeddings -> memory."""
+        b, s, _ = frames.shape
+        x = frames + sinusoidal_positions(s, self.cfg.d_model).astype(frames.dtype)
+        positions = _positions(b, s)
+
+        def body(xc, lp):
+            return self.enc_layer(lp, xc, positions=positions, px=self.px), ()
+
+        if unroll:
+            rb = jax.checkpoint(body)
+            for i in range(self.n_enc):
+                x, _ = rb(x, jax.tree.map(lambda a: a[i], params["enc_layers"]))
+        else:
+            x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_layers"])
+        return _final_norm(self.cfg)(params["enc_norm"], x)
+
+    def __call__(self, params, tokens, frames, *, train=True, remat="full",
+                 chunk: int = 2048, unroll: bool = False,
+                 return_hidden: bool = False):
+        memory = self.encode(params, frames, unroll=unroll)
+        return self.decoder(params["decoder"], tokens, memory=memory,
+                            train=train, remat=remat, chunk=chunk,
+                            unroll=unroll, return_hidden=return_hidden)
+
+
+def build_model(cfg: ModelConfig, px: Parallelism):
+    if cfg.encoder is not None:
+        return EncDec(cfg, px)
+    return LM(cfg, px)

@@ -1,0 +1,259 @@
+"""Mamba-2 (SSD, state-space duality) mixer — used by mamba2-780m and jamba.
+
+The chunked SSD algorithm (Dao & Gu 2024) computes the selective-SSM
+recurrence
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T ;   y_t = C_t h_t + D x_t
+
+as chunk-local attention-like matmuls plus a cross-chunk state scan — MXU
+friendly.  ``ssd_naive`` is the step-by-step recurrence oracle the chunked
+path is tested against.
+
+The causal depthwise conv1d in front of (x, B, C) is the paper's direct
+convolution (repro.kernels.conv1d_depthwise / core.direct_conv1d_depthwise):
+channel-blocked layout, K shifted multiply-adds, zero memory overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.core.direct_conv import direct_conv1d_depthwise
+from .module import ParamSpec, Parallelism
+
+__all__ = ["ssd_chunked", "ssd_naive", "Mamba2", "MambaCache"]
+
+
+class MambaCache(NamedTuple):
+    """Decode state: conv ring (last K-1 inputs) + SSM state."""
+    conv: jnp.ndarray       # [B, K-1, conv_dim]
+    ssm: jnp.ndarray        # [B, H, P, N] float32
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+def ssd_naive(x, dt, a, b, c, d_skip=None):
+    """Step-recurrence oracle.  x:[Bt,L,H,P] dt:[Bt,L,H] a:[H] b,c:[Bt,L,G,N]."""
+    bt, l, h, p = x.shape
+    g = b.shape[2]
+    rep = h // g
+    bf = jnp.repeat(b, rep, axis=2).astype(jnp.float32)      # [Bt,L,H,N]
+    cf = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+
+    def step(hstate, inp):
+        xt, dtt, bt_, ct = inp                                # [Bt,H,P],[Bt,H],[Bt,H,N]
+        decay = jnp.exp(dtt * a)[..., None, None]             # [Bt,H,1,1]
+        upd = jnp.einsum("bhp,bhn->bhpn", xt * dtt[..., None], bt_)
+        hstate = decay * hstate + upd
+        y = jnp.einsum("bhpn,bhn->bhp", hstate, ct)
+        return hstate, y
+
+    h0 = jnp.zeros((bt, h, p, b.shape[-1]), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (xf.transpose(1, 0, 2, 3),
+                                    dtf.transpose(1, 0, 2),
+                                    bf.transpose(1, 0, 2, 3),
+                                    cf.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3)
+    if d_skip is not None:
+        y = y + d_skip.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype)
+
+
+def ssd_chunked(x, dt, a, b, c, d_skip=None, chunk: int = 256,
+                compact: bool = False):
+    """Chunked SSD.  Same shapes as ``ssd_naive``; O(L/Q) sequential steps.
+
+    ``compact``: store the O(Q^2) intra-chunk tensors (decay matrix, C·B
+    products) in bf16 — they are the dominant activation buffers; softmax-free
+    math keeps the error at a bf16 ulp of well-conditioned products.  f32
+    accumulation everywhere (preferred_element_type).
+    """
+    bt, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    q = min(chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+    rep = h // g
+
+    # Group-aware formulation: B/C stay [.., G, N] — heads appear only as the
+    # reshaped (G, rep) split of the H axis, so the C·B Gram matrix is
+    # computed once per *group* (not per head: G=1 in mamba2 => 48x fewer
+    # Gram FLOPs) and `jnp.repeat` copies never materialize.
+    xf = x.astype(jnp.float32).reshape(bt, nc, q, g, rep, p)
+    dtf = dt.astype(jnp.float32).reshape(bt, nc, q, g, rep)
+    bf = b.astype(jnp.float32).reshape(bt, nc, q, g, n)
+    cf = c.astype(jnp.float32).reshape(bt, nc, q, g, n)
+
+    da = dtf * a.reshape(g, rep)[None, None, None]            # log-decay
+    cs = jnp.cumsum(da, axis=2)                               # [Bt,nc,Q,G,R]
+    seg = cs[:, :, :, None] - cs[:, :, None, :]               # cs_i - cs_j
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    ldecay = jnp.where(mask[None, None, :, :, None, None], jnp.exp(seg), 0.0)
+
+    xb = xf * dtf[..., None]                                  # dt-scaled input
+    qdt = jnp.bfloat16 if compact else jnp.float32
+    ldecay = ldecay.astype(qdt)
+    # intra-chunk: Y1[i] = sum_{j<=i} (C_i . B_j) exp(cs_i - cs_j) xb_j
+    cb = jnp.einsum("bzign,bzjgn->bzijg", cf.astype(qdt), bf.astype(qdt),
+                    preferred_element_type=qdt)               # [Bt,nc,Q,Q,G]
+    y1 = jnp.einsum("bzijg,bzijgr,bzjgrp->bzigrp", cb, ldecay,
+                    xb.astype(qdt), preferred_element_type=jnp.float32)
+
+    # chunk states: S_z = sum_j exp(cs_last - cs_j) B_j ⊗ xb_j [Bt,nc,G,R,N,P]
+    tail = jnp.exp(cs[:, :, -1:] - cs)                        # [Bt,nc,Q,G,R]
+    s_z = jnp.einsum("bzjgr,bzjgn,bzjgrp->bzgrnp", tail, bf, xb)
+    total = jnp.exp(cs[:, :, -1])                             # [Bt,nc,G,R]
+
+    def scan_state(hprev, inp):
+        s_chunk, tot = inp                                    # [Bt,G,R,N,P]
+        hnext = tot[..., None, None] * hprev + s_chunk
+        return hnext, hprev
+
+    h0 = jnp.zeros((bt, g, rep, n, p), jnp.float32)
+    _, hprevs = jax.lax.scan(
+        scan_state, h0,
+        (s_z.transpose(1, 0, 2, 3, 4, 5), total.transpose(1, 0, 2, 3)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4, 5)               # [Bt,nc,G,R,N,P]
+
+    # inter-chunk: Y2[i] = exp(cs_i) * C_i . h_prev(chunk)
+    y2 = jnp.einsum("bzigr,bzign,bzgrnp->bzigrp", jnp.exp(cs), cf, hprevs)
+
+    y = (y1 + y2).reshape(bt, l, h, p)
+    if d_skip is not None:
+        y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(hstate, xt, dtt, a, bt_, ct, d_skip=None):
+    """One-token recurrence.  hstate: [B,H,P,N] f32 -> (y [B,H,P], hstate)."""
+    xf = xt.astype(jnp.float32)
+    dtf = dtt.astype(jnp.float32)
+    decay = jnp.exp(dtf * a)[..., None, None]
+    upd = jnp.einsum("bhp,bhn->bhpn", xf * dtf[..., None], bt_.astype(jnp.float32))
+    hstate = decay * hstate + upd
+    y = jnp.einsum("bhpn,bhn->bhp", hstate, ct.astype(jnp.float32))
+    if d_skip is not None:
+        y = y + d_skip.astype(jnp.float32)[None, :, None] * xf
+    return y, hstate
+
+
+# ---------------------------------------------------------------------------
+# The Mamba2 block
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2:
+    d_model: int
+    cfg: SSMConfig
+    norm_eps: float = 1e-5
+
+    @property
+    def d_inner(self) -> int:
+        return self.cfg.d_inner(self.d_model)
+
+    @property
+    def n_heads(self) -> int:
+        return self.cfg.n_heads(self.d_model)
+
+    @property
+    def conv_dim(self) -> int:
+        return self.cfg.conv_dim(self.d_model)
+
+    def specs(self):
+        d, di, cd = self.d_model, self.d_inner, self.conv_dim
+        h, gn = self.n_heads, self.cfg.n_groups * self.cfg.d_state
+        return {
+            # in_proj -> [z (di), x (di), B (gn), C (gn), dt (h)]
+            "in_proj": {"w": ParamSpec((d, 2 * di + 2 * gn + h), ("embed", "mlp"))},
+            "conv_w": ParamSpec((self.cfg.d_conv, cd), ("conv_k", "mlp")),
+            "conv_b": ParamSpec((cd,), ("mlp",), init="zeros"),
+            "a_log": ParamSpec((h,), ("ssm_heads",), init="zeros"),     # A = -exp(a_log)
+            "dt_bias": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+            "d_skip": ParamSpec((h,), ("ssm_heads",), init="ones"),
+            "norm": {"w": ParamSpec((di,), ("mlp",), init="ones")},
+            "out_proj": {"w": ParamSpec((di, d), ("mlp", "embed"))},
+        }
+
+    def _split(self, zxbcdt):
+        di, gn, h = self.d_inner, self.cfg.n_groups * self.cfg.d_state, self.n_heads
+        z = zxbcdt[..., :di]
+        xbc = zxbcdt[..., di:di + di + 2 * gn]
+        dt = zxbcdt[..., di + di + 2 * gn:]
+        assert dt.shape[-1] == h
+        return z, xbc, dt
+
+    def _post(self, p, y, z):
+        """Gated RMSNorm + out_proj.  y,z: [B, L, d_inner]."""
+        yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+        var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+        yf = yf * jax.lax.rsqrt(var + self.norm_eps) * p["norm"]["w"].astype(jnp.float32)
+        return yf.astype(z.dtype) @ p["out_proj"]["w"].astype(z.dtype)
+
+    def __call__(self, p, x: jnp.ndarray, px: Parallelism,
+                 chunk: Optional[int] = None) -> jnp.ndarray:
+        """x: [B, L, D] -> [B, L, D] (training / prefill)."""
+        bsz, l, _ = x.shape
+        s = self.cfg
+        zxbcdt = x @ p["in_proj"]["w"].astype(x.dtype)
+        z, xbc, dt = self._split(zxbcdt)
+        # direct depthwise causal conv (the paper's kernel), then SiLU
+        xbc = direct_conv1d_depthwise(xbc, p["conv_w"], p["conv_b"], causal=True)
+        xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+        xbc = px.constrain(xbc, "batch", None, "mlp")
+        di, gn = self.d_inner, s.n_groups * s.d_state
+        xi = xbc[..., :di].reshape(bsz, l, self.n_heads, s.head_dim)
+        b = xbc[..., di:di + gn].reshape(bsz, l, s.n_groups, s.d_state)
+        c = xbc[..., di + gn:].reshape(bsz, l, s.n_groups, s.d_state)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+        a = -jnp.exp(p["a_log"].astype(jnp.float32))
+        rules = px.rules
+        y = ssd_chunked(xi, dt, a, b, c, d_skip=p["d_skip"],
+                        chunk=chunk or int(rules.get("ssd_chunk") or s.chunk),
+                        compact=bool(rules.get("ssd_compact")))
+        y = y.reshape(bsz, l, di)
+        y = px.constrain(y, "batch", None, "mlp")
+        return self._post(p, y, z)
+
+    # -- decode --------------------------------------------------------
+    def init_cache(self, batch: int, dtype=jnp.bfloat16) -> MambaCache:
+        return MambaCache(
+            conv=jnp.zeros((batch, self.cfg.d_conv - 1, self.conv_dim), dtype),
+            ssm=jnp.zeros((batch, self.n_heads, self.cfg.head_dim,
+                           self.cfg.d_state), jnp.float32))
+
+    def decode(self, p, x: jnp.ndarray, cache: MambaCache,
+               px: Parallelism) -> Tuple[jnp.ndarray, MambaCache]:
+        """x: [B, 1, D] -> ([B, 1, D], cache).  O(1) per token."""
+        bsz = x.shape[0]
+        s = self.cfg
+        zxbcdt = x[:, 0] @ p["in_proj"]["w"].astype(x.dtype)
+        z, xbc, dt = self._split(zxbcdt)
+        # conv ring: window = [cache.conv, xbc]
+        win = jnp.concatenate([cache.conv, xbc[:, None]], axis=1)  # [B,K,cd]
+        conv_out = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                              p["conv_w"].astype(jnp.float32))
+        conv_out = conv_out + p["conv_b"].astype(jnp.float32)
+        xbc_c = jax.nn.silu(conv_out).astype(x.dtype)
+        new_conv = win[:, 1:]
+
+        di, gn = self.d_inner, s.n_groups * s.d_state
+        xi = xbc_c[..., :di].reshape(bsz, self.n_heads, s.head_dim)
+        b = xbc_c[..., di:di + gn].reshape(bsz, s.n_groups, s.d_state)
+        c = xbc_c[..., di + gn:].reshape(bsz, s.n_groups, s.d_state)
+        rep = self.n_heads // s.n_groups
+        bh = jnp.repeat(b, rep, axis=1)
+        ch = jnp.repeat(c, rep, axis=1)
+        dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+        a = -jnp.exp(p["a_log"].astype(jnp.float32))
+        y, hstate = ssd_decode_step(cache.ssm, xi, dtv, a, bh, ch,
+                                    d_skip=p["d_skip"])
+        y = y.reshape(bsz, 1, di).astype(x.dtype)
+        out = self._post(p, y, z[:, None])
+        return out, MambaCache(conv=new_conv, ssm=hstate)

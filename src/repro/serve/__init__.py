@@ -1,0 +1,3 @@
+"""Serving substrate: decode steps, KV caches, continuous batching."""
+from .decode import make_serve_step, make_prefill, greedy, sample_topk  # noqa: F401
+from .scheduler import ContinuousBatcher, Request  # noqa: F401

@@ -1,0 +1,69 @@
+"""Serving steps: prefill + single-token decode, and sampling helpers."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.models import EncDec, LM
+
+__all__ = ["make_serve_step", "make_prefill", "greedy", "sample_topk"]
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+
+def sample_topk(logits: jnp.ndarray, key, k: int = 40,
+                temp: float = 1.0) -> jnp.ndarray:
+    lf = logits[:, -1].astype(jnp.float32) / max(temp, 1e-6)
+    vals, idx = jax.lax.top_k(lf, k)
+    choice = jax.random.categorical(key, vals)
+    return jnp.take_along_axis(idx, choice[:, None], axis=1)[:, 0].astype(jnp.int32)
+
+
+def make_serve_step(model, unroll: bool = False):
+    """serve_step(params, cache, tokens [B,1], pos) -> (logits, cache).
+
+    This is the function the decode_* dry-run shapes lower: one new token
+    against a seq_len-deep (possibly ring/sequence-sharded) KV cache.
+    """
+    lm = model.decoder if isinstance(model, EncDec) else model
+
+    def serve_step(params, cache, tokens, pos):
+        p = params["decoder"] if isinstance(model, EncDec) else params
+        return lm.decode_step(p, cache, tokens, pos, unroll=unroll)
+
+    return serve_step
+
+
+def make_prefill(model, cache_len: int):
+    """Sequential prefill via the decode path (exactness oracle + simple
+    serving).  Returns (logits_last, cache, next_pos).
+
+    A fused full-sequence prefill exists as prefill_step (train/trainstep) for
+    throughput; this decode-loop variant doubles as the decode==forward
+    consistency oracle in tests.
+    """
+    lm = model.decoder if isinstance(model, EncDec) else model
+    serve_step = make_serve_step(model)
+
+    def prefill(params, tokens, cache=None):
+        b, s = tokens.shape
+        if cache is None:
+            cache = lm.init_cache(b, cache_len)
+
+        def body(carry, t):
+            cache, _ = carry
+            tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+            logits, cache = serve_step(params, cache, tok, t)
+            return (cache, logits), ()
+
+        (cache, logits), _ = jax.lax.scan(
+            body, (cache, jnp.zeros((b, 1, lm.padded_vocab), jnp.float32)),
+            jnp.arange(s))
+        return logits, cache, s
+
+    return prefill

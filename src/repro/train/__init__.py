@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, losses, data, checkpointing, runtime."""
+from .optimizer import AdamW, OptState, cosine_schedule, zero1_shardings  # noqa: F401
+from .trainstep import TrainSettings, make_train_step, make_prefill_step, forward  # noqa: F401
+from .losses import cross_entropy  # noqa: F401

@@ -1,0 +1,89 @@
+"""Losses.  The padded-vocab-aware cross entropy masks logit columns beyond
+the true vocabulary (vocab is padded to a lane-aligned multiple of the model
+axis for sharding — Megatron-style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cross_entropy", "fused_cross_entropy"]
+
+
+def fused_cross_entropy(hidden, head_w, targets, vocab: int, *,
+                        transpose_head: bool = False, cap=None,
+                        chunks: int = 8, px=None, unroll: bool = False):
+    """Sequence-chunked softmax cross entropy from the final hidden states.
+
+    Never materializes the full [B, S, Vp] logits (f32): each chunk's logits
+    live only inside a remat'd chunk step — the paper's zero-packed-
+    intermediate discipline applied to the loss.  head_w: [D, Vp] (or
+    [Vp, D] with transpose_head=True, the tied-embedding case).
+
+    -> (mean_nll, metrics) identical to ``cross_entropy`` on full logits.
+    """
+    b, s, d = hidden.shape
+    vp = head_w.shape[0] if transpose_head else head_w.shape[-1]
+    chunks = min(chunks, s)
+    while s % chunks:
+        chunks -= 1
+    cs = s // chunks
+    hc = hidden.reshape(b, chunks, cs, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, chunks, cs).transpose(1, 0, 2)
+
+    def chunk_stats(h, t):
+        w = head_w.astype(h.dtype)
+        logits = jnp.einsum("bsd,vd->bsv", h, w) if transpose_head \
+            else jnp.einsum("bsd,dv->bsv", h, w)
+        logits = logits.astype(jnp.float32)
+        if cap is not None:
+            logits = cap * jnp.tanh(logits / cap)
+        if px is not None:
+            logits = px.constrain(logits, "batch", None, "vocab")
+        if vp != vocab:
+            col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, vp), 2)
+            logits = jnp.where(col < vocab, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        hit = (logits.argmax(-1) == t).astype(jnp.float32)
+        return jnp.sum(lse - ll), jnp.sum(hit)
+
+    chunk_stats = jax.checkpoint(chunk_stats)
+
+    if unroll:
+        nll_sum = jnp.zeros((), jnp.float32)
+        hit_sum = jnp.zeros((), jnp.float32)
+        for i in range(chunks):
+            a, c = chunk_stats(hc[i], tc[i])
+            nll_sum, hit_sum = nll_sum + a, hit_sum + c
+    else:
+        def body(carry, inp):
+            nll_sum, hit_sum = carry
+            a, c = chunk_stats(*inp)
+            return (nll_sum + a, hit_sum + c), ()
+        (nll_sum, hit_sum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (hc, tc))
+
+    tot = float(b * s)
+    loss = nll_sum / tot
+    return loss, {"nll": loss, "accuracy": hit_sum / tot,
+                  "tokens": jnp.asarray(tot, jnp.float32)}
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray, vocab: int,
+                  mask=None):
+    """logits: [B, S, Vp] f32; targets: [B, S] int32 -> (mean_nll, metrics)."""
+    vp = logits.shape[-1]
+    if vp != vocab:
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, vp), 2)
+        logits = jnp.where(col < vocab, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    tot = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / tot
+    acc = ((logits.argmax(-1) == targets) * mask).sum() / tot
+    return loss, {"nll": loss, "accuracy": acc, "tokens": tot}

@@ -1,0 +1,139 @@
+"""AdamW + learning-rate schedules + ZeRO-1 optimizer-state sharding.
+
+Pure-JAX (no optax in this environment).  The optimizer is a pytree-in,
+pytree-out transformation so it composes with pjit; ``zero1_shardings``
+returns NamedShardings that additionally shard the first-moment/second-moment
+trees over the data axis (ZeRO stage 1): XLA then reduce-scatters gradients
+into the sharded state update and all-gathers the fresh params — the
+standard comm-optimal DP schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.module import ParamSpec, Parallelism
+
+__all__ = ["AdamW", "OptState", "cosine_schedule", "linear_warmup",
+           "zero1_shardings", "global_norm"]
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(math.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def linear_warmup(peak: float, warmup: int) -> Callable:
+    return lambda step: peak * jnp.minimum(step.astype(jnp.float32) + 1,
+                                           warmup) / warmup
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+
+    def init(self, params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(zeros, params),
+                        nu=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: OptState, params):
+        step = state.step + 1
+        if self.grad_clip is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gn = global_norm(grads)
+
+        b1, b2 = self.b1, self.b2
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        lr = self.lr(step)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return newp, m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        newp = tdef.unflatten([o[0] for o in out])
+        newm = tdef.unflatten([o[1] for o in out])
+        newv = tdef.unflatten([o[2] for o in out])
+        return newp, OptState(step=step, mu=newm, nu=newv), {
+            "grad_norm": gn, "lr": lr}
+
+
+def zero1_shardings(specs, px: Parallelism):
+    """ZeRO-1: moment trees additionally sharded over the data axis.
+
+    For each param we shard the largest dimension that the param sharding
+    leaves unsharded (and that divides by the data-axis extent); small params
+    stay replicated.  Returns a NamedSharding tree shaped like mu/nu.
+    """
+    if px.mesh is None or "data" not in px.mesh.shape:
+        return px.param_shardings(specs)
+    dsize = px.axis_size("data")
+
+    def one(spec: ParamSpec):
+        pspec = px.pspec(spec.axes, spec.shape)
+        parts = list(pspec) + [None] * (len(spec.shape) - len(pspec))
+        if int(np.prod(spec.shape)) >= 2 ** 16:
+            # largest unsharded dim divisible by data size
+            cands = [(dim, i) for i, (dim, part) in
+                     enumerate(zip(spec.shape, parts))
+                     if part is None and dim % dsize == 0]
+            if cands:
+                _, i = max(cands)
+                parts[i] = "data"
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return NamedSharding(px.mesh, P(*parts))
+
+    def walk(s):
+        if isinstance(s, ParamSpec):
+            return one(s)
+        return {k: walk(v) for k, v in s.items()}
+
+    return walk(specs)

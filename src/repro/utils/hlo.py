@@ -1,0 +1,69 @@
+"""Compiled-HLO analysis: collective-traffic accounting for the roofline.
+
+``collective_bytes`` parses an (optimized) HLO module text and sums the
+operand bytes of every cross-device collective, bucketed by op kind.
+cost_analysis() does not expose this — the collective roofline term comes
+from here (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+__all__ = ["collective_bytes", "parse_shape_bytes", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """'f32[128,256]' -> byte count; tuples handled by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+# matches:  %name = TYPE all-reduce(...), or fused tuple types
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")\b", re.M)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes per collective kind over an HLO module.
+
+    Output shape equals the per-device payload for all-gather (output is the
+    gathered buffer), all-reduce and all-to-all; for reduce-scatter the input
+    is output*group — we count the output (bytes that cross the wire scale
+    with it up to the (G-1)/G ring factor, applied in the roofline model).
+    Counts are per-partition (SPMD module), i.e. per-chip traffic.
+    """
+    out: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = parse_shape_bytes(shape_str)
+        out[kind] += b
+        counts[kind + ".count"] += 1
+    total = sum(v for k, v in out.items() if not k.endswith(".count"))
+    result = dict(out)
+    result.update(counts)
+    result["total"] = total
+    return result

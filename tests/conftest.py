@@ -1,0 +1,26 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 device by design;
+multi-device sharding tests run in subprocesses (tests/test_sharding.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def batch_for(cfg, rng, b=2, s=16):
+    """Synthetic batch matching a ModelConfig's family."""
+    import jax.numpy as jnp
+    toks = rng.integers(0, cfg.vocab_size, (b, s + 1), dtype=np.int32)
+    out = {"tokens": jnp.asarray(toks[:, :-1]),
+           "targets": jnp.asarray(toks[:, 1:])}
+    if cfg.family == "vlm":
+        out["img_embed"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_img_tokens, cfg.d_model))
+            .astype(np.float32) * 0.02)
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder.max_frames, cfg.d_model))
+            .astype(np.float32) * 0.02)
+    return out

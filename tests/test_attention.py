@@ -1,0 +1,121 @@
+"""Attention unit tests: chunked==dense reference, masks, GQA, softcap,
+head-padding exactness, flash-decode == dense decode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.nn.attention import Attention, attend, flash_decode, init_kv_cache
+from repro.nn.module import Parallelism, init_tree
+
+PX = Parallelism(mesh=None)
+
+
+def _ref_attention(q, k, v, scale, causal, window, cap, qpos, kpos):
+    """Straightforward masked softmax in numpy (no chunking)."""
+    b, sq, nkv, g, dh = q.shape
+    skv = k.shape[1]
+    s = np.einsum("bskgd,bckd->bskgc", q, k) * scale
+    if cap:
+        s = cap * np.tanh(s / cap)
+    valid = np.ones((b, sq, skv), bool)
+    if causal:
+        valid &= kpos[:, None, :] <= qpos[:, :, None]
+    if window:
+        valid &= kpos[:, None, :] > qpos[:, :, None] - window
+    s = np.where(valid[:, :, None, None, :], s, -1e30)
+    s = s - s.max(-1, keepdims=True)
+    p = np.exp(s)
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bskgc,bckd->bskgd", p, v)
+
+
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, None, None), (True, 5, None), (False, None, None),
+    (True, None, 30.0), (True, 7, 50.0),
+])
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+def test_attend_matches_reference(causal, window, cap, chunk):
+    rng = np.random.default_rng(0)
+    b, sq, nkv, g, dh = 2, 12, 2, 3, 8
+    q = rng.normal(size=(b, sq, nkv, g, dh)).astype(np.float32)
+    k = rng.normal(size=(b, sq, nkv, dh)).astype(np.float32)
+    v = rng.normal(size=(b, sq, nkv, dh)).astype(np.float32)
+    pos = np.broadcast_to(np.arange(sq, dtype=np.int32), (b, sq)).copy()
+    got = attend(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                 q_positions=jnp.asarray(pos), kv_positions=jnp.asarray(pos),
+                 causal=causal, window=window, cap=cap, scale=dh ** -0.5,
+                 chunk=chunk)
+    want = _ref_attention(q, k, v, dh ** -0.5, causal, window, cap, pos, pos)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_head_padding_exactness():
+    """Padded q-head slots (deepseek 56->64 style) change nothing: build a
+    padded module whose real-slot weights equal an unpadded module's."""
+    rng = np.random.default_rng(1)
+    d, h, kv, dh = 32, 6, 2, 8
+    a_un = Attention(d_model=d, n_heads=h, n_kv_heads=kv, head_dim=dh,
+                     padded_heads=h)
+    a_pad = Attention(d_model=d, n_heads=h, n_kv_heads=kv, head_dim=dh,
+                      padded_heads=8)         # 4 slots per kv group, 3 real
+    p_un = init_tree(a_un.specs(), jax.random.PRNGKey(0))
+    p_pad = init_tree(a_pad.specs(), jax.random.PRNGKey(1))
+    # copy real head weights group-major: group g slots [g*4, g*4+3) <- [g*3,)
+    qw = np.asarray(p_pad["q"]["w"]).copy()
+    ow = np.asarray(p_pad["o"]["w"]).copy()
+    for g in range(kv):
+        qw[:, g * 4:g * 4 + 3] = np.asarray(p_un["q"]["w"])[:, g * 3:(g + 1) * 3]
+        ow[g * 4:g * 4 + 3] = np.asarray(p_un["o"]["w"])[g * 3:(g + 1) * 3]
+    p_pad["q"]["w"] = jnp.asarray(qw)
+    p_pad["o"]["w"] = jnp.asarray(ow)
+    p_pad["k"], p_pad["v"] = p_un["k"], p_un["v"]
+    x = jnp.asarray(rng.normal(size=(2, 10, d)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(10, dtype=jnp.int32), (2, 10))
+    y_un = a_un(p_un, x, positions=pos, px=PX)
+    y_pad = a_pad(p_pad, x, positions=pos, px=PX)
+    np.testing.assert_allclose(np.asarray(y_pad), np.asarray(y_un),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_decode_ring_semantics():
+    """Writing past the window wraps the ring and masks stale entries."""
+    rng = np.random.default_rng(2)
+    b, w, kv, g, dh = 1, 4, 1, 2, 8
+    cache = init_kv_cache(b, w, kv, dh, dtype=jnp.float32)
+    keys = rng.normal(size=(10, b, kv, dh)).astype(np.float32)
+    vals = rng.normal(size=(10, b, kv, dh)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(b, kv, g, dh)).astype(np.float32))
+    outs = []
+    for t in range(10):
+        out, cache = flash_decode(q, jnp.asarray(keys[t]), jnp.asarray(vals[t]),
+                                  cache, jnp.int32(t), window=w, cap=None,
+                                  scale=dh ** -0.5, px=PX)
+        outs.append(np.asarray(out))
+    # at t=9 only keys 6..9 are visible
+    vis = slice(6, 10)
+    s = np.einsum("bkgd,tbkd->bkgt", np.asarray(q), keys[vis]) * dh ** -0.5
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    want = np.einsum("bkgt,tbkd->bkgd", p, vals[vis])
+    np.testing.assert_allclose(outs[-1], want, rtol=1e-4, atol=1e-4)
+
+
+def test_cross_attention_no_mask():
+    """Cross attention attends to every memory slot regardless of position."""
+    rng = np.random.default_rng(3)
+    d, h, kv, dh = 32, 4, 4, 8
+    attn = Attention(d_model=d, n_heads=h, n_kv_heads=kv, head_dim=dh,
+                     padded_heads=h, cross=True, use_rope=False)
+    p = init_tree(attn.specs(), jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(1, 5, d)).astype(np.float32))
+    mem = jnp.asarray(rng.normal(size=(1, 7, d)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(5, dtype=jnp.int32), (1, 5))
+    y = attn(p, x, positions=pos, px=PX, kv=mem)
+    assert y.shape == (1, 5, d)
+    assert np.all(np.isfinite(np.asarray(y)))
+    # permuting memory slots must not change the output (set function)
+    perm = jnp.asarray(np.random.default_rng(0).permutation(7))
+    y2 = attn(p, x, positions=pos, px=PX, kv=mem[:, perm])
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,47 @@
+"""The analytical blocking model: paper Eq. 1/2 verbatim + TPU adaptation."""
+import pytest
+
+from repro.core.blocking import (CPU_HASWELL, TPU_V5E, Blocking,
+                                 choose_blocking, cpu_max_tile_elems,
+                                 cpu_min_tile_elems)
+from repro.core.memory_model import ConvShape, bytes_overhead, overhead_table
+
+
+def test_paper_eq1_eq2_haswell():
+    # Paper §3.1.2: E >= N_vec * N_fma * L_fma ; E <= N_reg * N_vec
+    assert cpu_min_tile_elems(CPU_HASWELL) == 8 * 2 * 5 == 80
+    assert cpu_max_tile_elems(CPU_HASWELL) == 16 * 8 == 128
+    # feasible: the register tile exists (min <= max) — the paper's premise
+    assert cpu_min_tile_elems(CPU_HASWELL) <= cpu_max_tile_elems(CPU_HASWELL)
+
+
+def test_tpu_blocking_lane_alignment():
+    b = choose_blocking(hi=58, wi=58, ci=256, co=256, hf=3, wf=3)
+    assert b.cob == 128                      # full lane width
+    assert b.cib == 128
+    assert b.tile_elems >= TPU_V5E.l_fma * TPU_V5E.n_vec  # adapted Eq. 1
+
+
+def test_blocking_narrow_channels():
+    b = choose_blocking(hi=224, wi=224, ci=3, co=64, hf=7, wf=7, stride=2)
+    assert b.cib == 3                        # first conv layer: tiny Ci
+    assert 64 % b.cob == 0
+
+
+def test_blocking_vmem_pressure():
+    # huge map: full-height tiles cannot fit; hob must shrink
+    b = choose_blocking(hi=1024, wi=1024, ci=128, co=128, hf=3, wf=3)
+    win_bytes = 1024 * 1024 * b.cib * 4
+    assert 2 * win_bytes < TPU_V5E.vmem_bytes or b.hob < 1022
+
+
+def test_overhead_table_alexnet():
+    """Paper-workload accounting: im2col overhead >> 0, direct == 0."""
+    conv2 = ConvShape("alexnet-conv2", n=1, hi=27, wi=27, ci=96, co=256,
+                      hf=5, wf=5, pad=2)
+    assert bytes_overhead(conv2, "direct") == 0
+    im2col = bytes_overhead(conv2, "im2col")
+    assert im2col == 27 * 27 * 5 * 5 * 96 * 4          # (Ho*Wo)x(Hf*Wf*Ci)
+    assert bytes_overhead(conv2, "mec") < im2col
+    rows = overhead_table([conv2])
+    assert rows[0]["im2col_vs_base"] > 1.0             # overhead exceeds base

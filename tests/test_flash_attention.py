@@ -1,0 +1,77 @@
+"""Flash-attention Pallas kernel vs dense-softmax oracle (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _oracle(q, k, v, scale, causal, cap=None):
+    b, h, sq, dh = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    kr = np.repeat(k, g, axis=1)
+    vr = np.repeat(v, g, axis=1)
+    s = np.einsum("bhqd,bhkd->bhqk", q, kr).astype(np.float32) * scale
+    if cap is not None:
+        s = cap * np.tanh(s / cap)
+    if causal:
+        mask = np.tril(np.ones((sq, k.shape[2]), bool))
+        s = np.where(mask, s, -1e30)
+    s -= s.max(-1, keepdims=True)
+    p = np.exp(s)
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("bhqk,bhkd->bhqd", p, vr)
+
+
+CASES = [
+    # b, h, kv, s, dh, bq, bk, causal
+    (1, 4, 2, 32, 16, 8, 8, True),
+    (2, 4, 4, 16, 8, 16, 4, True),
+    (1, 6, 2, 24, 16, 8, 12, False),
+    (1, 8, 1, 32, 32, 32, 16, True),      # MQA
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_vs_oracle(case, dtype):
+    b, h, kv, s, dh, bq, bk, causal = case
+    rng = np.random.default_rng(hash(case) % 2**32)
+    q = rng.normal(size=(b, h, s, dh)).astype(np.float32)
+    k = rng.normal(size=(b, kv, s, dh)).astype(np.float32)
+    v = rng.normal(size=(b, kv, s, dh)).astype(np.float32)
+    got = flash_attention_pallas(
+        jnp.asarray(q, dtype), jnp.asarray(k, dtype), jnp.asarray(v, dtype),
+        scale=dh ** -0.5, causal=causal, bq=bq, bk=bk, interpret=True)
+    want = _oracle(q, k, v, dh ** -0.5, causal)
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                               rtol=tol, atol=tol)
+
+
+def test_flash_softcap():
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(1, 2, 16, 8)).astype(np.float32)
+    k = rng.normal(size=(1, 2, 16, 8)).astype(np.float32)
+    v = rng.normal(size=(1, 2, 16, 8)).astype(np.float32)
+    got = flash_attention_pallas(jnp.asarray(q), jnp.asarray(k),
+                                 jnp.asarray(v), scale=0.35, causal=True,
+                                 bq=8, bk=8, cap=20.0, interpret=True)
+    want = _oracle(q, k, v, 0.35, True, cap=20.0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_block_invariance():
+    """Result independent of block sizes (online softmax correctness)."""
+    rng = np.random.default_rng(1)
+    q = rng.normal(size=(1, 2, 32, 8)).astype(np.float32)
+    k = rng.normal(size=(1, 2, 32, 8)).astype(np.float32)
+    v = rng.normal(size=(1, 2, 32, 8)).astype(np.float32)
+    outs = [np.asarray(flash_attention_pallas(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), scale=0.3,
+        causal=True, bq=bq, bk=bk, interpret=True))
+        for bq, bk in ((32, 32), (8, 8), (16, 4), (4, 16))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)

@@ -1,0 +1,63 @@
+"""Property tests for the paper's §4 data layouts: round-trips + the
+zero-memory-overhead invariant (element count never changes)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layout as L
+
+dims = st.integers(1, 6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 3), h=dims, w=dims,
+       cblk=st.integers(1, 4), cb=st.sampled_from([1, 2, 4, 8]))
+def test_nhwc_roundtrip(n, h, w, cblk, cb):
+    c = cblk * cb
+    x = np.arange(n * h * w * c, dtype=np.float32).reshape(n, h, w, c)
+    xb = L.nhwc_to_blocked(jnp.asarray(x), cb)
+    assert xb.shape == (n, c // cb, h, w, cb)
+    L.assert_zero_overhead(x.shape, xb.shape)           # the paper's claim
+    back = np.asarray(L.blocked_to_nhwc(xb))
+    np.testing.assert_array_equal(back, x)
+
+
+@settings(max_examples=25, deadline=None)
+@given(hf=st.integers(1, 4), wf=st.integers(1, 4),
+       ciblk=st.integers(1, 3), cib=st.sampled_from([1, 2, 4]),
+       coblk=st.integers(1, 3), cob=st.sampled_from([1, 2, 4]))
+def test_kernel_roundtrip(hf, wf, ciblk, cib, coblk, cob):
+    ci, co = ciblk * cib, coblk * cob
+    w = np.arange(hf * wf * ci * co, dtype=np.float32).reshape(hf, wf, ci, co)
+    wb = L.hwio_to_blocked(jnp.asarray(w), cib, cob)
+    assert wb.shape == (co // cob, ci // cib, hf, wf, cib, cob)
+    L.assert_zero_overhead(w.shape, wb.shape)
+    back = np.asarray(L.blocked_to_hwio(wb))
+    np.testing.assert_array_equal(back, w)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 3), l=dims, dblk=st.integers(1, 3),
+       db=st.sampled_from([1, 2, 4]))
+def test_bld_roundtrip(b, l, dblk, db):
+    d = dblk * db
+    x = np.arange(b * l * d, dtype=np.float32).reshape(b, l, d)
+    xb = L.bld_to_blocked(jnp.asarray(x), db)
+    L.assert_zero_overhead(x.shape, xb.shape)
+    np.testing.assert_array_equal(np.asarray(L.blocked_to_bld(xb)), x)
+
+
+def test_pencils_are_unit_stride():
+    """Paper §4: channel pencils of length Cb must be contiguous in memory."""
+    x = np.arange(2 * 3 * 4 * 8, dtype=np.float32).reshape(2, 3, 4, 8)
+    xb = np.asarray(L.nhwc_to_blocked(jnp.asarray(x), 4))
+    flat = xb.reshape(-1)
+    # first pencil = channels 0..3 of pixel (0,0)
+    np.testing.assert_array_equal(flat[:4], x[0, 0, 0, :4])
+
+
+def test_largest_divisor():
+    assert L.largest_divisor_leq(256, 128) == 128
+    assert L.largest_divisor_leq(96, 128) == 96
+    assert L.largest_divisor_leq(3, 128) == 3
+    assert L.largest_divisor_leq(50280, 128) == 120

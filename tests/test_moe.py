@@ -1,0 +1,118 @@
+"""MoE unit tests: router semantics, capacity dispatch vs dense oracle,
+expert-layout conversions."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.nn.moe import (MoE, canonical_experts, convert_expert_layout,
+                          router_topk, stored_from_canonical)
+from repro.nn.module import Parallelism, init_tree
+
+PX0 = Parallelism(mesh=None)
+
+
+def test_router_topk_softmax_semantics(rng):
+    cfg = MoEConfig(n_experts=8, top_k=2, d_ff=4, router_norm="topk_softmax")
+    logits = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    w, idx, aux = router_topk(logits, cfg)
+    assert w.shape == (16, 2) and idx.shape == (16, 2)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    # idx are the argmax-2
+    order = np.argsort(-np.asarray(logits), axis=-1)[:, :2]
+    np.testing.assert_array_equal(np.sort(np.asarray(idx), -1),
+                                  np.sort(order, -1))
+    assert float(aux) > 0
+
+
+def test_router_softmax_topk_semantics(rng):
+    cfg = MoEConfig(n_experts=8, top_k=3, d_ff=4, router_norm="softmax_topk")
+    logits = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    w, idx, aux = router_topk(logits, cfg)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_balanced_router_minimizes_aux():
+    """Uniform routing gives aux == aux_weight (the Switch-loss floor)."""
+    cfg = MoEConfig(n_experts=4, top_k=1, d_ff=4, aux_loss_weight=1.0,
+                    z_loss_weight=0.0)
+    # logits that route tokens perfectly uniformly
+    eye = jnp.asarray(np.tile(np.eye(4, dtype=np.float32) * 10, (4, 1)))
+    _, _, aux_bal = router_topk(eye, cfg)
+    ones = jnp.asarray(np.zeros((16, 4), np.float32))
+    ones = ones.at[:, 0].set(10.0)                     # all to expert 0
+    _, _, aux_skew = router_topk(ones, cfg)
+    assert float(aux_bal) < float(aux_skew)
+    np.testing.assert_allclose(float(aux_bal), 1.0, atol=0.05)
+
+
+def test_expert_layout_roundtrip(rng):
+    e, d, f = 8, 6, 12
+    canon = jnp.asarray(rng.normal(size=(e, d, f)).astype(np.float32))
+    for ep, tp in ((8, 1), (4, 2), (2, 4), (8, 2)):
+        stored = stored_from_canonical(canon, ep, tp, "gate")
+        back = canonical_experts(stored, e, f, "gate")
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(canon))
+    canon_d = jnp.asarray(rng.normal(size=(e, f, d)).astype(np.float32))
+    stored = stored_from_canonical(canon_d, 4, 2, "down")
+    back = canonical_experts(stored, e, f, "down")
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(canon_d))
+
+
+def test_convert_with_leading_layers_dim(rng):
+    e, d, f = 4, 6, 8
+    x = jnp.asarray(rng.normal(size=(3, 1, e, d, f)).astype(np.float32))
+    y = convert_expert_layout(x, "gate", e, f, dst_ep=4, dst_tp=1)
+    assert y.shape == (3, 4, 1, d, f)
+    z = convert_expert_layout(y, "gate", e, f, dst_ep=1, dst_tp=1)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(x), rtol=1e-6)
+
+
+def test_dense_oracle_token_drop_free(rng):
+    """Dense path: output is the exact top-k weighted mixture."""
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff=16)
+    moe = MoE(8, cfg)
+    p = init_tree(moe.specs(), jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(2, 4, 8)).astype(np.float32))
+    y, aux = moe(p, x, PX0)
+    assert y.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(y)))
+
+    # manual recompute
+    gate = canonical_experts(p["gate"]["w"], 4, 16, "gate")
+    up = canonical_experts(p["up"]["w"], 4, 16, "up")
+    down = canonical_experts(p["down"]["w"], 4, 16, "down")
+    x2 = np.asarray(x).reshape(-1, 8)
+    logits = x2 @ np.asarray(p["router"]["w"])
+    w, idx, _ = router_topk(jnp.asarray(logits), cfg)
+    w, idx = np.asarray(w), np.asarray(idx)
+    want = np.zeros_like(x2)
+    for t in range(x2.shape[0]):
+        for j in range(2):
+            e = idx[t, j]
+            h = x2[t] @ np.asarray(gate)[e], x2[t] @ np.asarray(up)[e]
+            act = (h[0] / (1 + np.exp(-h[0]))) * h[1]
+            want[t] += w[t, j] * (act @ np.asarray(down)[e])
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, 8), want,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_capacity_semantics():
+    """_expert_block drops tokens beyond capacity with slot-0 priority."""
+    cfg = MoEConfig(n_experts=2, top_k=1, d_ff=4)
+    moe = MoE(4, cfg)
+    t, d = 6, 4
+    x2 = jnp.asarray(np.eye(t, d, dtype=np.float32))
+    # all six tokens routed to expert 0
+    weights = jnp.ones((t, 1), jnp.float32)
+    idx = jnp.zeros((t, 1), jnp.int32)
+    gate = jnp.ones((2, d, 4), jnp.float32)
+    up = jnp.ones((2, d, 4), jnp.float32)
+    down = jnp.ones((2, 4, d), jnp.float32)
+    y = moe._expert_block(x2, weights, idx, gate, up, down,
+                          e_lo=jnp.int32(0), le=2, capacity=4)
+    y = np.asarray(y)
+    # first 4 tokens processed, last 2 dropped (zero output)
+    assert np.all(np.abs(y[:4]).sum(-1) > 0)
+    np.testing.assert_array_equal(y[4:], 0.0)

@@ -1,0 +1,102 @@
+"""End-to-end behaviour: training actually learns; the continuous-batching
+server completes requests; HLO collective accounting parses real modules."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.nn.models import build_model
+from repro.nn.module import Parallelism
+from repro.serve.scheduler import ContinuousBatcher, Request
+from repro.train.data import SyntheticLM
+from repro.train.optimizer import AdamW, cosine_schedule
+from repro.train.trainstep import TrainSettings, make_train_step
+from repro.utils.hlo import collective_bytes, parse_shape_bytes
+
+PX = Parallelism(mesh=None)
+CFG = ModelConfig(name="sys", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=64, dtype="float32")
+
+
+def test_training_learns():
+    """Loss on the sticky-markov stream drops well below uniform."""
+    model = build_model(CFG, PX)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=cosine_schedule(1e-2, 20, 400), weight_decay=0.01)
+    step = jax.jit(make_train_step(model, CFG, opt,
+                                   TrainSettings(remat="none")))
+    state = opt.init(params)
+    data = SyntheticLM(vocab=64, batch=8, seq=32, seed=0)
+    first = last = None
+    for s in range(120):
+        params, state, m = step(params, state, data.batch_at(s))
+        if s == 0:
+            first = float(m["nll"])
+        last = float(m["nll"])
+    assert first > 3.5                     # ~ln(64)=4.16 at init
+    assert last < first - 1.0, (first, last)
+
+
+def test_continuous_batching_serves_requests():
+    model = build_model(CFG, PX)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batcher = ContinuousBatcher(model, params, batch=2, cache_len=32)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 64, (4 + i,),
+                                               dtype=np.int32),
+                    max_new_tokens=5) for i in range(5)]
+    for r in reqs:
+        batcher.submit(r)
+    done = batcher.run(max_steps=500)
+    assert len(done) == 5
+    for r in done:
+        assert len(r.out_tokens) == 5
+        assert all(0 <= t < model.padded_vocab for t in r.out_tokens)
+
+
+def test_batched_vs_sequential_generation():
+    """Slots don't leak state: batched outputs == one-request-at-a-time."""
+    model = build_model(CFG, PX)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 64, (5,), dtype=np.int32) for _ in range(3)]
+
+    def gen(batch):
+        b = ContinuousBatcher(model, params, batch=batch, cache_len=32)
+        for i, p in enumerate(prompts):
+            b.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+        return {r.rid: r.out_tokens for r in b.run(max_steps=500)}
+
+    seq = gen(1)
+    bat = gen(3)
+    assert seq == bat
+
+
+def test_hlo_parse_synthetic():
+    txt = """
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %x), replica_groups={}
+  ROOT %ag = bf16[512]{0} all-gather(bf16[256]{0} %y), dimensions={0}
+  %nothing = f32[4]{0} add(f32[4]{0} %a, f32[4]{0} %b)
+"""
+    got = collective_bytes(txt)
+    assert got["all-reduce"] == 128 * 256 * 4
+    assert got["all-gather"] == 512 * 2
+    assert got["total"] == 128 * 256 * 4 + 1024
+    assert got["all-reduce.count"] == 1
+
+
+def test_hlo_parse_real_module():
+    """The parser must not crash on a real compiled module."""
+    f = jax.jit(lambda x: (x @ x.T).sum())
+    comp = f.lower(jnp.ones((8, 8))).compile()
+    out = collective_bytes(comp.as_text())
+    assert out["total"] == 0
+
+
+def test_parse_shape_bytes():
+    assert parse_shape_bytes("f32[128,256]") == 131072
+    assert parse_shape_bytes("bf16[2,2]") == 8
+    assert parse_shape_bytes("(f32[4], s32[2])") == 24
+    assert parse_shape_bytes("pred[]") == 1
