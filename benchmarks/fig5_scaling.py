@@ -31,10 +31,11 @@ _SCRIPT = textwrap.dedent("""
     from repro.core import layout as L
     from repro.core.direct_conv import direct_conv_blocked
     from repro.utils.hlo import collective_bytes
+    from repro.utils.compat import cost_analysis_dict
 
     n = %(n)d
-    mesh = jax.make_mesh((n,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto((n,), ("model",))
     s = dict(hi=30, wi=30, ci=128, co=256, hf=3, wf=3)
     ho = wo = s["hi"] - s["hf"] + 1
 
@@ -52,7 +53,7 @@ _SCRIPT = textwrap.dedent("""
     comp = f.lower(xb, wb).compile()
     direct = {
         "collectives": collective_bytes(comp.as_text()),
-        "flops": float((comp.cost_analysis() or {}).get("flops", 0.0)),
+        "flops": float(cost_analysis_dict(comp).get("flops", 0.0)),
     }
 
     # --- im2col+GEMM with the GEMM sharded over K (BLAS-internal style)
@@ -66,7 +67,7 @@ _SCRIPT = textwrap.dedent("""
     comp2 = g.lower(packed, wmat).compile()
     gemm = {
         "collectives": collective_bytes(comp2.as_text()),
-        "flops": float((comp2.cost_analysis() or {}).get("flops", 0.0)),
+        "flops": float(cost_analysis_dict(comp2).get("flops", 0.0)),
     }
     print(json.dumps({"n": n, "direct": direct, "gemm_k_sharded": gemm}))
 """)

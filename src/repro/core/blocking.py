@@ -85,43 +85,62 @@ def choose_blocking(
     hi: int, wi: int, ci: int, co: int, hf: int, wf: int,
     stride: int = 1, machine: MachineModel = TPU_V5E,
     in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
+    cob: int | None = None, cib: int | None = None,
 ) -> Blocking:
     """Pick (Cob, Cib, Hob, Wob) per the adapted Eq. 1/2 + VMEM budget.
 
-    The Pallas kernel holds, per grid step:
-      input window   hi*wi*cib           (one input-channel block, full map)
+    The Pallas kernel holds, per grid step (DESIGN.md §4):
+      input window   hib*wi*cib          (hib = (hob-1)*stride + hf: the
+                                          halo'd rows feeding one output tile)
       weight tile    hf*wf*cib*cob
       acc tile       hob*wob*cob         (f32)
-    All three must fit the VMEM budget; the output tile must satisfy the
+    All three must fit the VMEM budget; the output tile should satisfy the
     adapted Eq. 1 (>= one MXU pass of rows when possible).
+
+    ``hob`` is always a divisor of ``ho``: the kernel's overlapping input
+    windows then never index past the input plane (the last tile's window
+    ends exactly at row ``(ho-1)*stride + hf - 1 <= hi - 1``), so no
+    out-of-bounds padding semantics are ever relied on.
+
+    ``cob``/``cib`` pin the channel blocks to the caller's *actual* operand
+    layout (the Pallas wrapper passes the pencil sizes baked into its
+    arrays); the VMEM fit is then evaluated against the real block sizes,
+    and a pinned ``cib`` is never shrunk (the kernel cannot re-block its
+    operands).
     """
     ho = (hi - hf) // stride + 1
     wo = (wi - wf) // stride + 1
     if ho <= 0 or wo <= 0:
         raise ValueError(f"empty output for input {hi}x{wi}, filter {hf}x{wf}")
 
-    cob = largest_divisor_leq(co, machine.n_vec)          # lane dim
-    cib = largest_divisor_leq(ci, machine.n_vec)          # contraction depth
+    cib_pinned = cib is not None
+    if cob is None:
+        cob = largest_divisor_leq(co, machine.n_vec)      # lane dim
+    if cib is None:
+        cib = largest_divisor_leq(ci, machine.n_vec)      # contraction depth
 
     # Adapted Eq.1: rows per matmul (hob*wob) >= l_fma granule, target mxu.
     min_rows = machine.l_fma
-    # Full output map per tile is the default (the kernel slides the window
-    # over the whole map — zero halo traffic); shrink rows only under VMEM
-    # pressure.
+    # Full output map per tile is the default (one window slide covers the
+    # whole map — zero halo traffic); shrink rows only under VMEM pressure.
     hob, wob = ho, wo
 
     if machine.vmem_bytes:
         def fits(cib_, hob_, wob_):
-            win = hi * wi * cib_ * in_dtype_bytes
+            hib = (hob_ - 1) * stride + hf                # halo'd input rows
+            win = hib * wi * cib_ * in_dtype_bytes
             wgt = hf * wf * cib_ * cob * in_dtype_bytes
             acc = hob_ * wob_ * cob * acc_dtype_bytes
             # double-buffered inputs: 2x (win + wgt)
             return 2 * (win + wgt) + acc <= machine.vmem_bytes
         while hob > 1 and not fits(cib, hob, wob):
-            hob = max(1, hob // 2)
+            nxt = largest_divisor_leq(ho, max(1, hob // 2))
+            if nxt == hob:
+                break
+            hob = nxt
         # huge maps: shallower contraction blocks (the paper's cache-level
         # Ci blocking) until the resident window fits VMEM
-        while cib > 1 and not fits(cib, hob, wob):
+        while not cib_pinned and cib > 1 and not fits(cib, hob, wob):
             nxt = largest_divisor_leq(ci, cib // 2)
             if nxt == cib:
                 break
@@ -129,6 +148,12 @@ def choose_blocking(
         if not fits(cib, hob, wob):
             raise ValueError("conv tile cannot fit VMEM even at cib=1; "
                              "use the halo-DMA variant")
-    if hob * wob < min_rows and hob * wob != ho * wo:
-        hob = min(ho, max(hob, (min_rows + wob - 1) // wob))
+        # Eq. 1 floor: grow hob back to the smallest divisor of ho that
+        # still fits VMEM and yields >= min_rows matmul rows.
+        if hob * wob < min_rows:
+            for cand in sorted(d for d in range(1, ho + 1) if ho % d == 0):
+                if cand >= hob and cand * wob >= min_rows and \
+                        fits(cib, cand, wob):
+                    hob = cand
+                    break
     return Blocking(cob=cob, cib=cib, hob=hob, wob=wob)

@@ -21,15 +21,29 @@ __all__ = [
 Padding = Union[str, int, Sequence[Tuple[int, int]]]
 
 
-def normalize_padding(padding: Padding, hf: int, wf: int) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+def _same_pads(size: int | None, f: int, stride: int) -> Tuple[int, int]:
+    """TF-style stride-aware SAME: output = ceil(size / stride).
+
+    Without the input size (legacy callers), falls back to the stride-1
+    formula ``f - 1`` — identical to TF for stride == 1.
+    """
+    if size is None or stride == 1:
+        total = f - 1
+    else:
+        out = -(-size // stride)
+        total = max((out - 1) * stride + f - size, 0)
+    return (total // 2, total - total // 2)
+
+
+def normalize_padding(padding: Padding, hf: int, wf: int, stride: int = 1,
+                      hi: int | None = None, wi: int | None = None,
+                      ) -> Tuple[Tuple[int, int], Tuple[int, int]]:
     if isinstance(padding, str):
         p = padding.upper()
         if p == "VALID":
             return (0, 0), (0, 0)
         if p == "SAME":
-            # SAME for stride handled by caller via explicit pads on both sides
-            ph, pw = hf - 1, wf - 1
-            return (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2)
+            return _same_pads(hi, hf, stride), _same_pads(wi, wf, stride)
         raise ValueError(f"unknown padding {padding!r}")
     if isinstance(padding, int):
         return (padding, padding), (padding, padding)
@@ -37,8 +51,10 @@ def normalize_padding(padding: Padding, hf: int, wf: int) -> Tuple[Tuple[int, in
     return (ph0, ph1), (pw0, pw1)
 
 
-def pad_input(x: jnp.ndarray, padding: Padding, hf: int, wf: int) -> jnp.ndarray:
-    (ph0, ph1), (pw0, pw1) = normalize_padding(padding, hf, wf)
+def pad_input(x: jnp.ndarray, padding: Padding, hf: int, wf: int,
+              stride: int = 1) -> jnp.ndarray:
+    (ph0, ph1), (pw0, pw1) = normalize_padding(
+        padding, hf, wf, stride, x.shape[1], x.shape[2])
     if ph0 == ph1 == pw0 == pw1 == 0:
         return x
     return jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
@@ -51,7 +67,8 @@ def out_size(hi: int, hf: int, stride: int) -> int:
 def conv_lax(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
              padding: Padding = "VALID") -> jnp.ndarray:
     """Oracle: XLA's own convolution.  x: NHWC, w: HWIO."""
-    (ph, pw) = normalize_padding(padding, w.shape[0], w.shape[1])
+    (ph, pw) = normalize_padding(padding, w.shape[0], w.shape[1], stride,
+                                 x.shape[1], x.shape[2])
     return jax.lax.conv_general_dilated(
         x, w, window_strides=(stride, stride), padding=(ph, pw),
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
@@ -87,7 +104,7 @@ def conv_im2col(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
                 padding: Padding = "VALID") -> jnp.ndarray:
     """Packing + GEMM: the Caffe-style baseline the paper measures against."""
     hf, wf, ci, co = w.shape
-    x = pad_input(x, padding, hf, wf)
+    x = pad_input(x, padding, hf, wf, stride)
     packed = im2col(x, hf, wf, stride)                       # the overhead
     n, ho, wo, k = packed.shape
     gemm = packed.reshape(n * ho * wo, k) @ w.reshape(k, co)  # the GEMM
@@ -107,7 +124,7 @@ def conv_fft(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
     outputs because the kernel support is Hf x Wf.
     """
     hf, wf, ci, co = w.shape
-    x = pad_input(x, padding, hf, wf)
+    x = pad_input(x, padding, hf, wf, stride)
     n, hi, wi, _ = x.shape
     ho, wo = out_size(hi, hf, stride), out_size(wi, wf, stride)
 

@@ -13,11 +13,15 @@ loop structure (l, n, m, i, k, j) survives as
 
 The Pallas kernel in ``repro.kernels.direct_conv2d`` is the hand-tiled
 version of exactly this computation; this module is its semantics (and the
-path used on non-TPU backends).
+path used on non-TPU backends).  Both share the same fused epilogue
+(bias + activation applied once, on the final input-channel block) so that
+stacked layers chain in the blocked layout with nothing in between —
+see DESIGN.md §5.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +29,34 @@ import jax.numpy as jnp
 from . import layout as L
 from .conv_baselines import Padding, normalize_padding, out_size
 
-__all__ = ["direct_conv_blocked", "direct_conv_nhwc", "direct_conv1d_depthwise"]
+__all__ = [
+    "apply_activation", "pad_blocked",
+    "direct_conv_blocked", "direct_conv_nhwc", "direct_conv1d_depthwise",
+]
+
+# Epilogue activations fused into the conv (both the jnp oracle and the
+# Pallas kernel body call this on the f32 accumulator).
+_ACTIVATIONS = {
+    None: lambda x: x,
+    "linear": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": jax.nn.gelu,
+}
+
+
+def apply_activation(x: jnp.ndarray, name: Optional[str]) -> jnp.ndarray:
+    try:
+        return _ACTIVATIONS[name](x)
+    except KeyError:
+        raise ValueError(f"unknown activation {name!r}; "
+                         f"have {sorted(k for k in _ACTIVATIONS if k)}")
+
+
+def pad_blocked(x: jnp.ndarray, ph, pw) -> jnp.ndarray:
+    """Zero-pad the spatial dims of a blocked map [N, C/Cb, H, W, Cb]."""
+    if not (any(ph) or any(pw)):
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), tuple(ph), tuple(pw), (0, 0)))
 
 
 def _shifted_window(x: jnp.ndarray, dh: int, dw: int, ho: int, wo: int,
@@ -38,17 +69,28 @@ def _shifted_window(x: jnp.ndarray, dh: int, dw: int, ho: int, wo: int,
         (1, 1, stride, stride, 1))
 
 
-@partial(jax.jit, static_argnames=("stride",))
-def direct_conv_blocked(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
-    """Direct convolution on blocked layouts (input must be pre-padded).
+@partial(jax.jit, static_argnames=("stride", "padding", "activation"))
+def direct_conv_blocked(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                        padding: Padding = "VALID",
+                        bias: Optional[jnp.ndarray] = None,
+                        activation: Optional[str] = None) -> jnp.ndarray:
+    """Direct convolution on blocked layouts, fused bias + activation.
 
     x: [N, Ci/Cib, Hi, Wi, Cib]      (paper input layout)
     w: [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob]  (paper kernel layout)
+    bias: [Co/Cob, Cob] or None      (blocked channel pencils)
     -> [N, Co/Cob, Ho, Wo, Cob]      (same layout as input: layers chain)
+
+    ``padding`` is stride-aware (TF SAME semantics).  The epilogue
+    (bias add + activation) runs on the f32 accumulator before the final
+    downcast — identical semantics to the Pallas kernel's fused flush.
     """
     n, ciblk, hi, wi, cib = x.shape
     coblk, ciblk2, hf, wf, cib2, cob = w.shape
     assert (ciblk, cib) == (ciblk2, cib2), (x.shape, w.shape)
+    ph, pw = normalize_padding(padding, hf, wf, stride, hi, wi)
+    x = pad_blocked(x, ph, pw)
+    hi, wi = x.shape[2], x.shape[3]
     ho, wo = out_size(hi, hf, stride), out_size(wi, wf, stride)
 
     acc = jnp.zeros((n, coblk, ho, wo, cob), jnp.float32)
@@ -59,20 +101,27 @@ def direct_conv_blocked(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.
             acc = acc + jnp.einsum(
                 "nchwb,ocbk->nohwk", win, w[:, :, dh, dw],
                 preferred_element_type=jnp.float32)
-    return acc.astype(x.dtype)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)[None, :, None, None, :]
+    return apply_activation(acc, activation).astype(x.dtype)
 
 
 def direct_conv_nhwc(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
-                     padding: Padding = "VALID") -> jnp.ndarray:
-    """Convenience wrapper: NHWC/HWIO in, NHWC out, via the blocked layouts."""
+                     padding: Padding = "VALID",
+                     bias: Optional[jnp.ndarray] = None,
+                     activation: Optional[str] = None) -> jnp.ndarray:
+    """Convenience wrapper: NHWC/HWIO in, NHWC out, via the blocked layouts.
+
+    ``bias`` is a flat [Co] vector (NHWC convention); it is reblocked into
+    channel pencils before the fused epilogue.
+    """
     hf, wf, ci, co = w.shape
-    (ph, pw) = normalize_padding(padding, hf, wf)
-    if any(ph) or any(pw):
-        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
     lay = L.BlockedConvLayout.choose(ci, co)
+    ph, pw = normalize_padding(padding, hf, wf, stride, x.shape[1], x.shape[2])
     xb = L.nhwc_to_blocked(x, lay.cb_in)
     wb = L.hwio_to_blocked(w, lay.cb_in, lay.cb_out)
-    yb = direct_conv_blocked(xb, wb, stride)
+    bb = None if bias is None else bias.reshape(co // lay.cb_out, lay.cb_out)
+    yb = direct_conv_blocked(xb, wb, stride, (ph, pw), bb, activation)
     return L.blocked_to_nhwc(yb)
 
 

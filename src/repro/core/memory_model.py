@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["ConvShape", "bytes_overhead", "overhead_table"]
+__all__ = ["ConvShape", "bytes_overhead", "overhead_table",
+           "bytes_repack_boundary", "chain_repack_bytes"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +67,24 @@ def bytes_overhead(s: ConvShape, algorithm: str, dtype_bytes: int = 4) -> int:
         spec = 2 * dtype_bytes * hi * (wi // 2 + 1) * (s.n * s.ci + s.ci * s.co)
         return kpad + spec
     raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+def bytes_repack_boundary(prev: ConvShape, nxt: ConvShape,
+                          dtype_bytes: int = 4) -> int:
+    """Pack/unpack bytes a *chained* blocked layout eliminates at one layer
+    boundary: the NHWC path unpacks the producer's output
+    (``blocked_to_nhwc``) and re-packs the consumer's input
+    (``nhwc_to_blocked``) — two full activation copies that simply do not
+    exist when layers stay in ``[N, C/Cb, H, W, Cb]`` (paper §4)."""
+    unpack = prev.n * prev.ho * prev.wo * prev.co
+    pack = nxt.n * nxt.hi * nxt.wi * nxt.ci
+    return (unpack + pack) * dtype_bytes
+
+
+def chain_repack_bytes(shapes, dtype_bytes: int = 4) -> int:
+    """Total eliminated pack/unpack bytes over a chain's interior boundaries."""
+    return sum(bytes_repack_boundary(a, b, dtype_bytes)
+               for a, b in zip(shapes, shapes[1:]))
 
 
 def overhead_table(shapes, dtype_bytes: int = 4):

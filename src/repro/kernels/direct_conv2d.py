@@ -1,83 +1,143 @@
 """Pallas TPU kernel: zero-memory-overhead direct convolution (paper Alg. 3).
 
-TPU mapping of the paper's schedule (see DESIGN.md §2):
+TPU mapping of the paper's schedule (see DESIGN.md §2–§5):
 
-  grid = (N, Co/Cob, Ci/Cib)          # j' (parallel), i' (reduction, innermost)
-  x block   [1, 1, Hi, Wi, Cib]       # one input-channel pencil plane, VMEM
+  grid = (N, Co/Cob, Ho/Hob, Ci/Cib)  # j' (parallel), spatial tile, i' (red.)
+  x block   [1, 1, Hib, Wi, Cib]      # halo'd input rows for one output tile,
+                                      #   Hib = (Hob-1)*stride + Hf  (VMEM)
   w block   [1, 1, Hf, Wf, Cib, Cob]  # paper kernel layout, VMEM
-  out block [1, 1, Ho, Wo, Cob]       # the "register" tile (lane dim = Cob)
+  b block   [1, Cob]                  # bias pencil (optional), VMEM
+  out block [1, 1, Hob, Wo, Cob]      # the "register" tile (lane dim = Cob)
+
+Spatial tiling: output rows are tiled by ``Hob`` (chosen by
+``core.blocking.choose_blocking`` to fit the VMEM budget).  Adjacent input
+windows overlap by the ``Hf - stride`` halo, which plain Blocked indexing
+cannot express; the input BlockSpec therefore uses *element-offset*
+(``pl.Unblocked``) indexing.  Because ``Hob`` always divides ``Ho``, the last
+window ends exactly at row ``(Ho-1)*stride + Hf - 1 <= Hi - 1`` — no window
+ever reads out of bounds, so no OOB-padding semantics are relied on.
 
 Inside the kernel, the (l, n, m, k, j) loops become:
   for (dh, dw) in Hf x Wf:            # n, m — unrolled (small)
-      window = strided VMEM view of x at offset (dh, dw)   # never copied to HBM
-      acc   += [Ho*Wo, Cib] @ [Cib, Cob] on the MXU        # k, j tile
+      window = strided VMEM view of x at offset (dh, dw)   # never copied
+      acc   += [Hob*Wo, Cib] @ [Cib, Cob] on the MXU       # k, j tile
 
 The im2col matrix is never materialized — not in HBM (the paper's claim) and
-not even in VMEM (windows are views into the already-resident input block).
-Accumulation over input-channel blocks (grid dim 2) runs in a float32 VMEM
-scratch accumulator; the output block is written once on the last step.
+not even in VMEM (windows are views into the already-resident input rows).
+Accumulation over input-channel blocks (innermost grid dim) runs in a float32
+VMEM scratch; on the last step the fused epilogue (bias + activation) is
+applied and the output tile is written once — stacked layers chain in the
+blocked layout with no NHWC round-trip and no separate bias/activation pass.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.blocking import choose_blocking
+from repro.core.conv_baselines import Padding, normalize_padding
+from repro.core.direct_conv import apply_activation, pad_blocked
+
 __all__ = ["direct_conv2d_blocked_pallas"]
 
 
-def _kernel(x_ref, w_ref, o_ref, acc_ref, *, hf, wf, ho, wo, stride, n_ci):
-    ci = pl.program_id(2)
+def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, hf, wf, hob, wo, stride,
+            n_ci, activation, has_bias):
+    ci = pl.program_id(3)
 
     @pl.when(ci == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[0, 0]                      # (Hi, Wi, Cib)
+    x = x_ref[0, 0]                      # (Hib, Wi, Cib)
     cib = x.shape[-1]
     acc = acc_ref[...]
     for dh in range(hf):
         for dw in range(wf):
             win = jax.lax.slice(
                 x, (dh, dw, 0),
-                (dh + (ho - 1) * stride + 1, dw + (wo - 1) * stride + 1, cib),
-                (stride, stride, 1))                       # (Ho, Wo, Cib) view
+                (dh + (hob - 1) * stride + 1, dw + (wo - 1) * stride + 1, cib),
+                (stride, stride, 1))                       # (Hob, Wo, Cib) view
             acc = acc + jnp.dot(
-                win.reshape(ho * wo, cib), w_ref[0, 0, dh, dw],
+                win.reshape(hob * wo, cib), w_ref[0, 0, dh, dw],
                 preferred_element_type=jnp.float32)
     acc_ref[...] = acc
 
     @pl.when(ci == n_ci - 1)
     def _flush():
-        o_ref[0, 0] = acc.reshape(ho, wo, o_ref.shape[-1]).astype(o_ref.dtype)
+        out = acc
+        if has_bias:
+            out = out + b_ref[...].astype(jnp.float32)     # (1, Cob) bcast
+        out = apply_activation(out, activation)
+        o_ref[0, 0] = out.reshape(hob, wo, o_ref.shape[-1]).astype(o_ref.dtype)
 
 
-@partial(jax.jit, static_argnames=("stride", "interpret"))
+@partial(jax.jit,
+         static_argnames=("stride", "padding", "activation", "hob",
+                          "interpret"))
 def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
+                                 bias: Optional[jnp.ndarray] = None,
                                  stride: int = 1,
+                                 padding: Padding = "VALID",
+                                 activation: Optional[str] = None,
+                                 hob: Optional[int] = None,
                                  interpret: bool = False) -> jnp.ndarray:
-    """x: [N, Ci/Cib, Hi, Wi, Cib]; w: [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob]."""
+    """Tiled + fused direct convolution on the paper's blocked layouts.
+
+    x: [N, Ci/Cib, Hi, Wi, Cib]; w: [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob];
+    bias: [Co/Cob, Cob] or None -> [N, Co/Cob, Ho, Wo, Cob].
+
+    ``padding`` is stride-aware (TF SAME semantics); ``hob`` (output rows per
+    spatial tile) defaults to the analytical blocking model's choice and must
+    divide Ho.
+    """
     n, ciblk, hi, wi, cib = x.shape
     coblk, ciblk2, hf, wf, cib2, cob = w.shape
     assert (ciblk, cib) == (ciblk2, cib2), (x.shape, w.shape)
+    ph, pw = normalize_padding(padding, hf, wf, stride, hi, wi)
+    x = pad_blocked(x, ph, pw)
+    hi, wi = x.shape[2], x.shape[3]
     ho = (hi - hf) // stride + 1
     wo = (wi - wf) // stride + 1
 
-    grid = (n, coblk, ciblk)
+    if hob is None:
+        # pin cob/cib to this call's actual pencil sizes so the VMEM fit is
+        # evaluated against the blocks the kernel will really hold
+        hob = choose_blocking(hi, wi, ciblk * cib, coblk * cob, hf, wf,
+                              stride, cob=cob, cib=cib,
+                              in_dtype_bytes=x.dtype.itemsize).hob
+    if ho % hob:
+        raise ValueError(f"hob={hob} must divide Ho={ho}")
+    hib = (hob - 1) * stride + hf        # halo'd input rows per output tile
+    n_ho = ho // hob
+
+    has_bias = bias is not None
+    if not has_bias:
+        # dummy operand keeps one kernel signature; never read (has_bias=False)
+        bias = jnp.zeros((coblk, cob), x.dtype)
+
+    grid = (n, coblk, n_ho, ciblk)
     return pl.pallas_call(
-        partial(_kernel, hf=hf, wf=wf, ho=ho, wo=wo, stride=stride, n_ci=ciblk),
+        partial(_kernel, hf=hf, wf=wf, hob=hob, wo=wo, stride=stride,
+                n_ci=ciblk, activation=activation, has_bias=has_bias),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, hi, wi, cib), lambda b, co, ci: (b, ci, 0, 0, 0)),
+            # Overlapping halo windows -> element-offset (Unblocked) indexing.
+            pl.BlockSpec((1, 1, hib, wi, cib),
+                         lambda b, co, t, ci: (b, ci, t * hob * stride, 0, 0),
+                         indexing_mode=pl.Unblocked()),
             pl.BlockSpec((1, 1, hf, wf, cib, cob),
-                         lambda b, co, ci: (co, ci, 0, 0, 0, 0)),
+                         lambda b, co, t, ci: (co, ci, 0, 0, 0, 0)),
+            pl.BlockSpec((1, cob), lambda b, co, t, ci: (co, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, ho, wo, cob),
-                               lambda b, co, ci: (b, co, 0, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, hob, wo, cob),
+                               lambda b, co, t, ci: (b, co, t, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, coblk, ho, wo, cob), x.dtype),
-        scratch_shapes=[pltpu.VMEM((ho * wo, cob), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hob * wo, cob), jnp.float32)],
         interpret=interpret,
-    )(x, w)
+    )(x, w, bias)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import layout as L
 from repro.core.conv_baselines import Padding, normalize_padding
-from repro.core.direct_conv import direct_conv_blocked, direct_conv1d_depthwise
+from repro.core.direct_conv import direct_conv_nhwc, direct_conv1d_depthwise
 from .conv1d_depthwise import conv1d_depthwise_blocked_pallas
 from .direct_conv2d import direct_conv2d_blocked_pallas
 
@@ -30,24 +30,29 @@ def _interpret_default(interpret: Optional[bool]) -> bool:
 
 
 def direct_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
-                  padding: Padding = "VALID", *, use_pallas: bool = True,
+                  padding: Padding = "VALID", *,
+                  bias: Optional[jnp.ndarray] = None,
+                  activation: Optional[str] = None,
+                  use_pallas: bool = True,
                   interpret: Optional[bool] = None) -> jnp.ndarray:
     """Direct convolution, NHWC/HWIO interface, zero memory overhead inside.
 
-    x: [N, Hi, Wi, Ci]; w: [Hf, Wf, Ci, Co] -> [N, Ho, Wo, Co]
+    x: [N, Hi, Wi, Ci]; w: [Hf, Wf, Ci, Co]; bias: [Co] -> [N, Ho, Wo, Co]
+
+    Padding is stride-aware (TF SAME semantics); bias + activation are fused
+    into the kernel epilogue (applied once, on the final Ci block's flush).
     """
+    if not use_pallas:
+        return direct_conv_nhwc(x, w, stride, padding, bias, activation)
     hf, wf, ci, co = w.shape
-    ph, pw = normalize_padding(padding, hf, wf)
-    if any(ph) or any(pw):
-        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+    ph, pw = normalize_padding(padding, hf, wf, stride, x.shape[1], x.shape[2])
     lay = L.BlockedConvLayout.choose(ci, co)
     xb = L.nhwc_to_blocked(x, lay.cb_in)
     wb = L.hwio_to_blocked(w, lay.cb_in, lay.cb_out)
-    if use_pallas:
-        yb = direct_conv2d_blocked_pallas(
-            xb, wb, stride=stride, interpret=_interpret_default(interpret))
-    else:
-        yb = direct_conv_blocked(xb, wb, stride=stride)
+    bb = None if bias is None else bias.reshape(co // lay.cb_out, lay.cb_out)
+    yb = direct_conv2d_blocked_pallas(
+        xb, wb, bb, stride=stride, padding=(ph, pw), activation=activation,
+        interpret=_interpret_default(interpret))
     return L.blocked_to_nhwc(yb)
 
 

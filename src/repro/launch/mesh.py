@@ -14,18 +14,32 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_test_mesh"]
+__all__ = ["make_mesh_auto", "make_production_mesh", "make_test_mesh"]
+
+
+def make_mesh_auto(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the API supports them.
+
+    ``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg) only exist on
+    jax >= 0.5; on older pins (0.4.x) every mesh axis is implicitly Auto, so
+    plain ``Mesh`` construction is the exact equivalent.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 4):
     """Small mesh for CI-grade sharding tests (8 host-platform devices)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_auto((data, model), ("data", "model"))

@@ -1,0 +1,128 @@
+"""Blocked-layout convolution layers: the paper's §4 design point as an API.
+
+``BlockedConv2D`` keeps its input *and* output in the paper layout
+``[N, C/Cb, H, W, Cb]``; stacking layers therefore chains convolutions with
+zero NHWC round-trips — no ``nhwc_to_blocked``/``blocked_to_nhwc`` between
+layers, which is exactly the "layers compose in the blocked layout without
+repacking" claim.  Weights are *stored* in the paper's kernel layout
+``[Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob]`` (no transform at call time), and bias
+as channel pencils ``[Co/Cob, Cob]``.  Bias + activation are fused into the
+convolution epilogue (DESIGN.md §5).
+
+Two execution paths share one semantics:
+  * ``use_pallas=False`` (default): the pure-JAX direct formulation — fully
+    differentiable, used for training;
+  * ``use_pallas=True``: the tiled Pallas kernel (interpret mode off-TPU) —
+    the inference path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv_baselines import Padding
+from repro.core.direct_conv import direct_conv_blocked
+from repro.core.layout import BlockedConvLayout, nhwc_to_blocked
+from .module import ParamSpec
+
+__all__ = ["BlockedConv2D", "BlockedCNN", "blocked_global_avg_pool"]
+
+
+def blocked_global_avg_pool(xb: jnp.ndarray) -> jnp.ndarray:
+    """GAP on the blocked layout: [N, C/Cb, H, W, Cb] -> [N, C].
+
+    Reduces spatial dims in f32 and flattens the (block, pencil) pair back to
+    the channel axis — a reshape, not a layout round-trip (the spatial dims
+    are already gone, so there is nothing left to "unpack").
+    """
+    n, cblk, _, _, cb = xb.shape
+    pooled = jnp.mean(xb.astype(jnp.float32), axis=(2, 3))   # [N, C/Cb, Cb]
+    return pooled.reshape(n, cblk * cb).astype(xb.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockedConv2D:
+    """Conv2D whose inputs, outputs, weights and bias all live in the paper's
+    blocked layouts.  In: [N, Ci/Cib, H, W, Cib] -> out: [N, Co/Cob, Ho, Wo,
+    Cob] — same family of layout, so layers chain with no repacking."""
+
+    ci: int
+    co: int
+    hf: int = 3
+    wf: int = 3
+    stride: int = 1
+    padding: Padding = "SAME"
+    activation: Optional[str] = "relu"
+    use_bias: bool = True
+    lane: int = 128                      # channel pencil target (TPU: 128)
+
+    @property
+    def layout(self) -> BlockedConvLayout:
+        return BlockedConvLayout.choose(self.ci, self.co, self.lane)
+
+    def specs(self):
+        lay = self.layout
+        fan_in = self.hf * self.wf * self.ci
+        s = {"w": ParamSpec(
+            (self.co // lay.cb_out, self.ci // lay.cb_in, self.hf, self.wf,
+             lay.cb_in, lay.cb_out),
+            (None,) * 6, init="normal", scale=1.0 / math.sqrt(fan_in))}
+        if self.use_bias:
+            s["b"] = ParamSpec((self.co // lay.cb_out, lay.cb_out),
+                               (None, None), init="zeros")
+        return s
+
+    def __call__(self, p, xb: jnp.ndarray, *, use_pallas: bool = False,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
+        bias = p["b"] if self.use_bias else None
+        if use_pallas:
+            from repro.kernels.direct_conv2d import direct_conv2d_blocked_pallas
+            if interpret is None:
+                interpret = jax.default_backend() != "tpu"
+            return direct_conv2d_blocked_pallas(
+                xb, p["w"], bias, stride=self.stride, padding=self.padding,
+                activation=self.activation, interpret=interpret)
+        return direct_conv_blocked(xb, p["w"], self.stride, self.padding,
+                                   bias, self.activation)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockedCNN:
+    """conv -> ... -> conv -> GAP -> linear head, chained in blocked layout.
+
+    NHWC images are blocked exactly once at entry; every layer boundary after
+    that stays in ``[N, C/Cb, H, W, Cb]`` — zero pack/unpack traffic between
+    layers (``benchmarks/cnn_zoo.py`` accounts the eliminated bytes).
+    """
+
+    convs: Tuple[BlockedConv2D, ...]
+    n_classes: int
+
+    def __post_init__(self):
+        for a, b in zip(self.convs, self.convs[1:]):
+            if a.co != b.ci:
+                raise ValueError(f"conv chain breaks: co={a.co} -> ci={b.ci}")
+            if a.layout.cb_out != b.layout.cb_in:
+                raise ValueError(
+                    f"pencil mismatch: {a.layout.cb_out} -> {b.layout.cb_in}; "
+                    "layers must agree on the channel block to chain")
+
+    def specs(self):
+        s = {f"conv{i}": c.specs() for i, c in enumerate(self.convs)}
+        s["head"] = ParamSpec((self.convs[-1].co, self.n_classes),
+                              (None, None))
+        return s
+
+    def __call__(self, p, x_nhwc: jnp.ndarray, *, use_pallas: bool = False,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
+        # the single layout transform of the whole forward pass
+        h = nhwc_to_blocked(x_nhwc, self.convs[0].layout.cb_in)
+        for i, conv in enumerate(self.convs):
+            h = conv(p[f"conv{i}"], h, use_pallas=use_pallas,
+                     interpret=interpret)
+        feat = blocked_global_avg_pool(h)
+        return feat @ p["head"].astype(feat.dtype)

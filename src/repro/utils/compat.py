@@ -1,0 +1,36 @@
+"""Version compatibility shims for the pinned jax (0.4.x) vs current APIs.
+
+The repo targets the jax installed in the container (0.4.37) but is written
+against the modern surface where possible; everything that moved between
+0.4 and 0.5+ funnels through here so call sites stay clean.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "cost_analysis_dict"]
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on jax >= 0.5 but a
+    single-element list of dicts on 0.4.x; normalize to a dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` (jax >= 0.5, ``check_vma``) with fallback to
+    ``jax.experimental.shard_map.shard_map`` (jax 0.4.x, ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check)
+        except TypeError:
+            # 0.5.x-0.6.x band: public jax.shard_map still takes check_rep
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check)

@@ -1,7 +1,21 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 device by design;
 multi-device sharding tests run in subprocesses (tests/test_sharding.py)."""
+import importlib.util
+
 import numpy as np
 import pytest
+
+# Optional dev dependency check: the property-test modules guard their own
+# hypothesis import with pytest.importorskip; this banner just makes the
+# resulting skips impossible to miss in the terminal summary.
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+
+def pytest_report_header(config):
+    if not HAVE_HYPOTHESIS:
+        return ("hypothesis not installed — property-test modules will be "
+                "skipped; install the dev extra: pip install -e '.[dev]'")
+    return None
 
 
 @pytest.fixture

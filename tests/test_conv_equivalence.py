@@ -3,6 +3,9 @@ XLA oracle — property-tested across shapes, strides, paddings."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; install the dev extra: pip install -e '.[dev]'")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import conv_baselines as B

@@ -2,6 +2,11 @@
 zero-memory-overhead invariant (element count never changes)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; install the dev extra: pip install -e '.[dev]'")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import layout as L

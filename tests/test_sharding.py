@@ -21,8 +21,8 @@ def run_probe(body: str) -> str:
         from repro.nn.models import build_model
         from repro.nn.moe import remap_expert_tree, MoE
         from repro.train.trainstep import TrainSettings, make_loss_fn
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_auto
+        mesh = make_mesh_auto((2, 4), ("data", "model"))
         px = Parallelism(mesh=mesh)
         px0 = Parallelism(mesh=None)
         rng = np.random.default_rng(2)
@@ -138,8 +138,7 @@ st = OptState(step=st.step, mu=jax.tree.map(jax.device_put, st.mu, zsh),
 with tempfile.TemporaryDirectory() as d:
     C.save(d, 1, {"p": p1, "mu": st.mu})
     # restore onto a different mesh layout (4x2)
-    mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = make_mesh_auto((4, 2), ("data", "model"))
     px2 = Parallelism(mesh=mesh2)
     m2 = build_model(cfg, px2)
     tgt = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),

@@ -4,6 +4,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; install the dev extra: pip install -e '.[dev]'")
 from hypothesis import given, settings, strategies as st
 
 from repro.nn.ssm import ssd_chunked, ssd_decode_step, ssd_naive
