@@ -16,6 +16,7 @@ producer's output and the consumer's input are counted even where an
 (also blocked-layout) pooling stage sits between them.  The live chain check
 below, by contrast, is exact.
 """
+from repro.core.blocking import TPU_V5E, choose_blocking, resident_bytes
 from repro.core.memory_model import (ConvShape, bytes_repack_boundary,
                                      chain_repack_bytes)
 
@@ -72,6 +73,36 @@ def bench_chain_repack(chains=None, dtype_bytes: int = 4):
     return rows
 
 
+def bench_zoo_blocking(shapes=None, machine=TPU_V5E, dtype_bytes: int = 4):
+    """-> rows: the 2-D spatial tiling the analytical model picks per zoo
+    layer (paper Alg. 3's H_o,b x W_o,b on TPU), with the VMEM bytes the
+    Pallas kernel holds resident per grid step.  For machines with a VMEM
+    budget, ``choose_blocking`` itself enforces the §3 inequality (it raises
+    rather than return a misfit), so producing this table at all *is* the
+    fit check; the rows report the remaining headroom (None for budget-less
+    CPU models, where no fitting happens)."""
+    rows = []
+    for s in shapes or ZOO:
+        blk = choose_blocking(s.padded_hi, s.padded_wi, s.ci, s.co,
+                              s.hf, s.wf, s.stride, machine=machine,
+                              in_dtype_bytes=dtype_bytes)
+        resident = resident_bytes(blk.hob, blk.wob, blk.cob, blk.cib,
+                                  s.hf, s.wf, s.stride,
+                                  in_dtype_bytes=dtype_bytes)
+        rows.append({
+            "layer": s.name,
+            "cob": blk.cob, "cib": blk.cib,
+            "tile": f"{blk.hob}x{blk.wob}",
+            "out": f"{s.ho}x{s.wo}",
+            "resident_KiB": resident / 2**10,
+            # CPU machine models have no VMEM budget (vmem_bytes == 0):
+            # choose_blocking skips fitting there and headroom is undefined
+            "vmem_headroom": (1.0 - resident / machine.vmem_bytes
+                              if machine.vmem_bytes else None),
+        })
+    return rows
+
+
 def check_live_chain():
     """A real 3-layer blocked chain agrees bit-for-bit with the NHWC
     round-trip path (and performs zero interior repacks)."""
@@ -114,5 +145,16 @@ if __name__ == "__main__":
     for row in bench_chain_repack():
         print(f"{row['chain']:10s} {row['boundary']:42s} "
               f"{row['eliminated_MiB']:14.2f}")
+
+    print(f"\n{'layer':20s} {'cob':>4s} {'cib':>4s} {'tile':>9s} "
+          f"{'out':>9s} {'res KiB':>9s} {'headroom':>9s}")
+    # choose_blocking raises on any misfit, so completing this loop proves
+    # every zoo layer gets a tile satisfying the VMEM inequality
+    for row in bench_zoo_blocking():
+        print(f"{row['layer']:20s} {row['cob']:4d} {row['cib']:4d} "
+              f"{row['tile']:>9s} {row['out']:>9s} "
+              f"{row['resident_KiB']:9.1f} {row['vmem_headroom']:8.1%}")
+    print("all zoo tiles satisfy the VMEM inequality: OK")
+
     print("\nlive 3-layer chain == NHWC round-trip path:",
           "OK" if check_live_chain() else "FAIL")

@@ -56,6 +56,24 @@ _SCRIPT = textwrap.dedent("""
         "flops": float(cost_analysis_dict(comp).get("flops", 0.0)),
     }
 
+    # --- direct conv, batch sharded via shard_map (the serving arrangement:
+    #     repro.launch.conv_serve) — per-shard blocked layouts, and the
+    #     forward pass must contain ZERO collectives
+    from repro.utils.compat import shard_map
+    mesh_d = make_mesh_auto((n,), ("data",))
+    xb_n = jax.ShapeDtypeStruct((n, s["ci"] // 128, s["hi"], s["wi"], 128),
+                                jnp.float32)
+    wb_full = jax.ShapeDtypeStruct((s["co"] // 128, s["ci"] // 128, s["hf"],
+                                    s["wf"], 128, 128), jnp.float32)
+    fb = jax.jit(shard_map(lambda x, w: direct_conv_blocked(x, w, 1),
+                           mesh_d, in_specs=(P("data"), P()),
+                           out_specs=P("data")))
+    comp_b = fb.lower(xb_n, wb_full).compile()
+    batch_sharded = {
+        "collectives": collective_bytes(comp_b.as_text()),
+        "flops": float(cost_analysis_dict(comp_b).get("flops", 0.0)),
+    }
+
     # --- im2col+GEMM with the GEMM sharded over K (BLAS-internal style)
     k = s["hf"] * s["wf"] * s["ci"]
     packed = jax.ShapeDtypeStruct((ho * wo, k), jnp.float32)
@@ -69,7 +87,9 @@ _SCRIPT = textwrap.dedent("""
         "collectives": collective_bytes(comp2.as_text()),
         "flops": float(cost_analysis_dict(comp2).get("flops", 0.0)),
     }
-    print(json.dumps({"n": n, "direct": direct, "gemm_k_sharded": gemm}))
+    print(json.dumps({"n": n, "direct": direct,
+                      "direct_batch_sharded": batch_sharded,
+                      "gemm_k_sharded": gemm}))
 """)
 
 
@@ -87,8 +107,11 @@ def bench_fig5(widths=(1, 2, 4, 8, 16)):
         rows.append({
             "n": n,
             "direct_coll_bytes_per_chip": r["direct"]["collectives"]["total"],
+            "batch_sharded_coll_bytes_per_chip":
+                r["direct_batch_sharded"]["collectives"]["total"],
             "gemm_coll_bytes_per_chip": r["gemm_k_sharded"]["collectives"]["total"],
             "direct_flops_per_chip": r["direct"]["flops"],
+            "batch_sharded_flops_per_chip": r["direct_batch_sharded"]["flops"],
             "gemm_flops_per_chip": r["gemm_k_sharded"]["flops"],
         })
     return rows

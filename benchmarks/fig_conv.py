@@ -61,7 +61,7 @@ def bench_fig1_packing_split(shapes=None, iters=3):
     rows = []
     for s in shapes or ALEXNET:
         x, w = _inputs(s)
-        xp = B.pad_input(x, s.pad, s.hf, s.wf)
+        xp = B.pad_input(x, s.pad, s.hf, s.wf, s.stride)
         packed = jax.jit(lambda x: B.im2col(x, s.hf, s.wf, s.stride))(xp)
         t_pack = time_fn(lambda x: B.im2col(x, s.hf, s.wf, s.stride), xp,
                          iters=iters)

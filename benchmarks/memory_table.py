@@ -1,6 +1,21 @@
 """The zero-memory-overhead claim, measured: analytical overhead table per
-algorithm + empirical peak-buffer check from XLA's compiled memory analysis
-(the im2col buffer shows up in temp bytes; the direct path has none)."""
+algorithm + empirical peak-buffer check from XLA's compiled memory analysis.
+The im2col path's temp bytes must carry the packed matrix (asserted).  The
+direct path's temp bytes are *reported*, not asserted to zero: the claim is
+exact for the Pallas kernel (windows are VMEM views — nothing to measure
+from host), while the XLA-scheduled jnp formulation measured here is free
+to materialize window copies if its cost model likes them, so its column is
+transparency, not the invariant.
+
+Every row's analytical output shape is first asserted against the *real*
+``conv_lax`` output shape (via ``jax.eval_shape`` — no compile), so the
+accounting can never drift from what the convolutions actually produce
+(TF-SAME's asymmetric pads for even filters / stride > 1 included).
+
+Runnable:  PYTHONPATH=src python -m benchmarks.memory_table [--smoke]
+(the ``-m`` form is required — the module uses relative imports).
+``--smoke`` uses tiny shapes (CI-sized compiles, CPU interpret-friendly).
+"""
 from __future__ import annotations
 
 import jax
@@ -12,6 +27,27 @@ from repro.core import direct_conv as D
 from repro.core.memory_model import ConvShape, bytes_overhead, overhead_table
 
 from .cnn_zoo import ZOO
+
+# Tiny shapes for the CI smoke run: even filters and stride > 1 included so
+# the asymmetric-SAME accounting stays exercised.
+SMOKE_SHAPES = [
+    ConvShape("smoke.3x3", 1, 12, 12, 4, 8, 3, 3, pad=1),
+    ConvShape("smoke.2x2.same", 1, 11, 10, 3, 4, 2, 2, stride=2, pad="SAME"),
+    ConvShape("smoke.4x4.s3", 1, 13, 13, 4, 4, 4, 4, stride=3, pad="SAME"),
+    ConvShape("smoke.1x1", 1, 8, 8, 8, 16, 1, 1),
+]
+
+
+def check_output_shape(s: ConvShape) -> None:
+    """Assert the analytical ho/wo against the real conv_lax output shape."""
+    x = jax.ShapeDtypeStruct((s.n, s.hi, s.wi, s.ci), jnp.float32)
+    w = jax.ShapeDtypeStruct((s.hf, s.wf, s.ci, s.co), jnp.float32)
+    out = jax.eval_shape(
+        lambda x, w: B.conv_lax(x, w, s.stride, s.pad), x, w)
+    if out.shape != (s.n, s.ho, s.wo, s.co):
+        raise AssertionError(
+            f"{s.name}: ConvShape says {(s.n, s.ho, s.wo, s.co)} but "
+            f"conv_lax produces {out.shape}")
 
 
 def empirical_temp_bytes(s: ConvShape) -> dict:
@@ -29,6 +65,8 @@ def empirical_temp_bytes(s: ConvShape) -> dict:
 
 def bench_memory(shapes=None, empirical: bool = True):
     shapes = shapes or ZOO
+    for s in shapes:
+        check_output_shape(s)
     rows = overhead_table(shapes)
     if empirical:
         for s, row in zip(shapes, rows):
@@ -36,6 +74,31 @@ def bench_memory(shapes=None, empirical: bool = True):
             row["direct_temp_MiB"] = emp["direct"] / 2**20
             row["im2col_temp_MiB"] = emp["im2col"] / 2**20
             packed = bytes_overhead(s, "im2col")
-            # the compiled im2col path must carry (at least) the packed matrix
-            row["im2col_temp_covers_packed"] = emp["im2col"] >= packed * 0.99
+            # the compiled im2col path must carry (at least) the packed
+            # matrix — except 1x1 filters, where packing is a pure reshape
+            # XLA aliases to the input (no distinct buffer exists)
+            row["im2col_temp_covers_packed"] = (
+                s.hf * s.wf == 1 or emp["im2col"] >= packed * 0.99)
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI: fast compiles, same checks")
+    args = ap.parse_args()
+    shapes = SMOKE_SHAPES if args.smoke else ZOO
+    rows = bench_memory(shapes, empirical=True)
+    print(f"{'layer':22s} {'base MiB':>9s} {'im2col MiB':>11s} "
+          f"{'direct tmp':>11s} {'im2col tmp':>11s} {'covers':>7s}")
+    ok = True
+    for row in rows:
+        covers = row.get("im2col_temp_covers_packed", True)
+        ok = ok and covers
+        print(f"{row['layer']:22s} {row['base_MiB']:9.3f} "
+              f"{row['im2col_MiB']:11.3f} {row['direct_temp_MiB']:11.3f} "
+              f"{row['im2col_temp_MiB']:11.3f} {str(covers):>7s}")
+    print("output shapes match conv_lax; im2col temp covers packed matrix:",
+          "OK" if ok else "FAIL")
+    raise SystemExit(0 if ok else 1)

@@ -60,6 +60,7 @@ def main() -> None:
                 continue
             emit(f"fig5.width{row['n']}", 0.0,
                  f"direct_coll={row['direct_coll_bytes_per_chip']}"
+                 f";batch_sharded_coll={row['batch_sharded_coll_bytes_per_chip']}"
                  f";gemm_coll={row['gemm_coll_bytes_per_chip']}")
 
     if os.path.isdir(args.artifacts):

@@ -41,7 +41,7 @@ def main():
 
     print(f"== {s.name}: {s.hi}x{s.wi}x{s.ci} -> {s.ho}x{s.wo}x{s.co}, "
           f"{s.flops() / 1e9:.2f} GFLOP")
-    blk = choose_blocking(s.hi + 2 * s.pad, s.wi + 2 * s.pad, s.ci, s.co,
+    blk = choose_blocking(s.padded_hi, s.padded_wi, s.ci, s.co,
                           s.hf, s.wf, s.stride)
     print(f"analytical blocking (TPU v5e): Cob={blk.cob} Cib={blk.cib} "
           f"tile={blk.hob}x{blk.wob}")

@@ -24,11 +24,12 @@ from __future__ import annotations
 
 import dataclasses
 
-from .layout import largest_divisor_leq
+from .layout import choose_pencil, divisors, largest_divisor_leq
 
 __all__ = [
     "MachineModel", "TPU_V5E", "CPU_HASWELL", "Blocking",
-    "cpu_min_tile_elems", "cpu_max_tile_elems", "choose_blocking",
+    "cpu_min_tile_elems", "cpu_max_tile_elems", "resident_bytes",
+    "choose_blocking",
 ]
 
 
@@ -81,32 +82,61 @@ class Blocking:
         return self.cob * self.hob * self.wob
 
 
+def resident_bytes(hob: int, wob: int, cob: int, cib: int, hf: int, wf: int,
+                   stride: int = 1, in_dtype_bytes: int = 4,
+                   acc_dtype_bytes: int = 4) -> int:
+    """VMEM bytes one Pallas grid step holds resident (DESIGN.md §7):
+    double-buffered halo'd input window, weight tile and output tile
+    (Pallas pipelines all operand blocks), plus the persistent f32
+    accumulator scratch.  The single source of the inequality
+    ``choose_blocking`` fits against — benchmarks and tests must use this,
+    not a copy."""
+    hib = (hob - 1) * stride + hf                         # halo'd input rows
+    wib = (wob - 1) * stride + wf                         # halo'd input cols
+    win = hib * wib * cib * in_dtype_bytes
+    wgt = hf * wf * cib * cob * in_dtype_bytes
+    out = hob * wob * cob * in_dtype_bytes                # output block
+    acc = hob * wob * cob * acc_dtype_bytes               # scratch (single)
+    return 2 * (win + wgt + out) + acc
+
+
 def choose_blocking(
     hi: int, wi: int, ci: int, co: int, hf: int, wf: int,
     stride: int = 1, machine: MachineModel = TPU_V5E,
     in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
     cob: int | None = None, cib: int | None = None,
+    hob: int | None = None, wob: int | None = None,
 ) -> Blocking:
     """Pick (Cob, Cib, Hob, Wob) per the adapted Eq. 1/2 + VMEM budget.
 
-    The Pallas kernel holds, per grid step (DESIGN.md §4):
-      input window   hib*wi*cib          (hib = (hob-1)*stride + hf: the
-                                          halo'd rows feeding one output tile)
+    The Pallas kernel holds, per grid step (DESIGN.md §4/§7):
+      input window   hib*wib*cib         (hib = (hob-1)*stride + hf,
+                                          wib = (wob-1)*stride + wf: the
+                                          halo'd patch feeding one tile)
       weight tile    hf*wf*cib*cob
       acc tile       hob*wob*cob         (f32)
     All three must fit the VMEM budget; the output tile should satisfy the
     adapted Eq. 1 (>= one MXU pass of rows when possible).
 
-    ``hob`` is always a divisor of ``ho``: the kernel's overlapping input
-    windows then never index past the input plane (the last tile's window
-    ends exactly at row ``(ho-1)*stride + hf - 1 <= hi - 1``), so no
-    out-of-bounds padding semantics are ever relied on.
+    ``hob``/``wob`` are always divisors of ``ho``/``wo``: the kernel's
+    overlapping input windows then never index past the input plane (the
+    last tile's window ends exactly at ``(ho-1)*stride + hf - 1 <= hi - 1``
+    and likewise in W), so no out-of-bounds padding semantics are ever
+    relied on.
+
+    Under VMEM pressure the model shrinks ``hob`` first (row tiling), then
+    ``wob`` (the paper's W_o,b — column tiling, what makes the kernel
+    shape-robust for wide maps), and only then falls back to shallower
+    ``cib`` (the paper's cache-level Ci blocking).
 
     ``cob``/``cib`` pin the channel blocks to the caller's *actual* operand
     layout (the Pallas wrapper passes the pencil sizes baked into its
     arrays); the VMEM fit is then evaluated against the real block sizes,
     and a pinned ``cib`` is never shrunk (the kernel cannot re-block its
-    operands).
+    operands).  ``hob``/``wob`` likewise pin an explicitly-requested spatial
+    tile (must divide Ho/Wo): the free dim is then chosen *under* that
+    constraint, so a caller fixing one dim still gets a fitting pair — or
+    the model's clear error instead of a downstream VMEM allocation failure.
     """
     ho = (hi - hf) // stride + 1
     wo = (wi - wf) // stride + 1
@@ -114,31 +144,46 @@ def choose_blocking(
         raise ValueError(f"empty output for input {hi}x{wi}, filter {hf}x{wf}")
 
     cib_pinned = cib is not None
+    hob_pinned = hob is not None
+    wob_pinned = wob is not None
     if cob is None:
-        cob = largest_divisor_leq(co, machine.n_vec)      # lane dim
+        cob = choose_pencil(co, machine.n_vec)            # lane dim
     if cib is None:
-        cib = largest_divisor_leq(ci, machine.n_vec)      # contraction depth
+        cib = choose_pencil(ci, machine.n_vec)            # contraction depth
+    if hob_pinned and (hob < 1 or ho % hob):
+        raise ValueError(f"hob={hob} must divide Ho={ho}")
+    if wob_pinned and (wob < 1 or wo % wob):
+        raise ValueError(f"wob={wob} must divide Wo={wo}")
 
     # Adapted Eq.1: rows per matmul (hob*wob) >= l_fma granule, target mxu.
     min_rows = machine.l_fma
     # Full output map per tile is the default (one window slide covers the
-    # whole map — zero halo traffic); shrink rows only under VMEM pressure.
-    hob, wob = ho, wo
+    # whole map — zero halo traffic); shrink the tile only under VMEM
+    # pressure.
+    if not hob_pinned:
+        hob = ho
+    if not wob_pinned:
+        wob = wo
 
     if machine.vmem_bytes:
         def fits(cib_, hob_, wob_):
-            hib = (hob_ - 1) * stride + hf                # halo'd input rows
-            win = hib * wi * cib_ * in_dtype_bytes
-            wgt = hf * wf * cib_ * cob * in_dtype_bytes
-            acc = hob_ * wob_ * cob * acc_dtype_bytes
-            # double-buffered inputs: 2x (win + wgt)
-            return 2 * (win + wgt) + acc <= machine.vmem_bytes
-        while hob > 1 and not fits(cib, hob, wob):
+            return resident_bytes(hob_, wob_, cob, cib_, hf, wf, stride,
+                                  in_dtype_bytes,
+                                  acc_dtype_bytes) <= machine.vmem_bytes
+
+        while not hob_pinned and hob > 1 and not fits(cib, hob, wob):
             nxt = largest_divisor_leq(ho, max(1, hob // 2))
             if nxt == hob:
                 break
             hob = nxt
-        # huge maps: shallower contraction blocks (the paper's cache-level
+        # wide maps: tile columns too (2-D spatial blocking, paper Alg. 3's
+        # W_o,b) before touching the contraction depth
+        while not wob_pinned and wob > 1 and not fits(cib, hob, wob):
+            nxt = largest_divisor_leq(wo, max(1, wob // 2))
+            if nxt == wob:
+                break
+            wob = nxt
+        # huge channel blocks: shallower contraction (the paper's cache-level
         # Ci blocking) until the resident window fits VMEM
         while not cib_pinned and cib > 1 and not fits(cib, hob, wob):
             nxt = largest_divisor_leq(ci, cib // 2)
@@ -146,14 +191,23 @@ def choose_blocking(
                 break
             cib = nxt
         if not fits(cib, hob, wob):
-            raise ValueError("conv tile cannot fit VMEM even at cib=1; "
-                             "use the halo-DMA variant")
-        # Eq. 1 floor: grow hob back to the smallest divisor of ho that
+            raise ValueError(
+                f"conv tile does not fit VMEM at hob={hob}, wob={wob}, "
+                f"cib={cib} (pinned dims included): filter {hf}x{wf} with "
+                f"cob={cob} needs more than {machine.vmem_bytes} bytes "
+                f"resident")
+        # Eq. 1 floor: grow the tile back to the smallest divisor pair that
         # still fits VMEM and yields >= min_rows matmul rows.
-        if hob * wob < min_rows:
-            for cand in sorted(d for d in range(1, ho + 1) if ho % d == 0):
+        if not hob_pinned and hob * wob < min_rows:
+            for cand in divisors(ho):
                 if cand >= hob and cand * wob >= min_rows and \
                         fits(cib, cand, wob):
                     hob = cand
+                    break
+        if not wob_pinned and hob * wob < min_rows:
+            for cand in divisors(wo):
+                if cand >= wob and hob * cand >= min_rows and \
+                        fits(cib, hob, cand):
+                    wob = cand
                     break
     return Blocking(cob=cob, cib=cib, hob=hob, wob=wob)

@@ -8,47 +8,15 @@ eliminates), and ``conv_fft`` really pads the kernel to the image size
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple, Union
-
 import jax
 import jax.numpy as jnp
 
+from .padding import Padding, normalize_padding, out_size  # noqa: F401 (re-export)
+
 __all__ = [
-    "normalize_padding", "pad_input", "out_size",
+    "Padding", "normalize_padding", "pad_input", "out_size",
     "conv_lax", "im2col", "conv_im2col", "conv_fft",
 ]
-
-Padding = Union[str, int, Sequence[Tuple[int, int]]]
-
-
-def _same_pads(size: int | None, f: int, stride: int) -> Tuple[int, int]:
-    """TF-style stride-aware SAME: output = ceil(size / stride).
-
-    Without the input size (legacy callers), falls back to the stride-1
-    formula ``f - 1`` — identical to TF for stride == 1.
-    """
-    if size is None or stride == 1:
-        total = f - 1
-    else:
-        out = -(-size // stride)
-        total = max((out - 1) * stride + f - size, 0)
-    return (total // 2, total - total // 2)
-
-
-def normalize_padding(padding: Padding, hf: int, wf: int, stride: int = 1,
-                      hi: int | None = None, wi: int | None = None,
-                      ) -> Tuple[Tuple[int, int], Tuple[int, int]]:
-    if isinstance(padding, str):
-        p = padding.upper()
-        if p == "VALID":
-            return (0, 0), (0, 0)
-        if p == "SAME":
-            return _same_pads(hi, hf, stride), _same_pads(wi, wf, stride)
-        raise ValueError(f"unknown padding {padding!r}")
-    if isinstance(padding, int):
-        return (padding, padding), (padding, padding)
-    (ph0, ph1), (pw0, pw1) = padding
-    return (ph0, ph1), (pw0, pw1)
 
 
 def pad_input(x: jnp.ndarray, padding: Padding, hf: int, wf: int,
@@ -58,10 +26,6 @@ def pad_input(x: jnp.ndarray, padding: Padding, hf: int, wf: int,
     if ph0 == ph1 == pw0 == pw1 == 0:
         return x
     return jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
-
-
-def out_size(hi: int, hf: int, stride: int) -> int:
-    return (hi - hf) // stride + 1
 
 
 def conv_lax(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,

@@ -69,11 +69,12 @@ def _shifted_window(x: jnp.ndarray, dh: int, dw: int, ho: int, wo: int,
         (1, 1, stride, stride, 1))
 
 
-@partial(jax.jit, static_argnames=("stride", "padding", "activation"))
 def direct_conv_blocked(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
                         padding: Padding = "VALID",
                         bias: Optional[jnp.ndarray] = None,
-                        activation: Optional[str] = None) -> jnp.ndarray:
+                        activation: Optional[str] = None,
+                        hob: Optional[int] = None,
+                        wob: Optional[int] = None) -> jnp.ndarray:
     """Direct convolution on blocked layouts, fused bias + activation.
 
     x: [N, Ci/Cib, Hi, Wi, Cib]      (paper input layout)
@@ -84,7 +85,32 @@ def direct_conv_blocked(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
     ``padding`` is stride-aware (TF SAME semantics).  The epilogue
     (bias add + activation) runs on the f32 accumulator before the final
     downcast — identical semantics to the Pallas kernel's fused flush.
+
+    ``hob``/``wob`` mirror the Pallas kernel's spatial-tile knobs so one
+    layer config drives either path: this XLA-scheduled formulation is
+    tile-agnostic (same math for any tiling), so they are *validated* here
+    in the unjitted wrapper — must divide Ho/Wo, exactly the kernel's
+    constraint — but never reach the jitted core (identical programs must
+    not recompile per tile setting).
     """
+    hi, wi = x.shape[2], x.shape[3]
+    hf, wf = w.shape[2], w.shape[3]
+    if hob is not None or wob is not None:
+        ph, pw = normalize_padding(padding, hf, wf, stride, hi, wi)
+        ho = out_size(hi + ph[0] + ph[1], hf, stride)
+        wo = out_size(wi + pw[0] + pw[1], wf, stride)
+        if hob is not None and (hob < 1 or ho % hob):
+            raise ValueError(f"hob={hob} must divide Ho={ho}")
+        if wob is not None and (wob < 1 or wo % wob):
+            raise ValueError(f"wob={wob} must divide Wo={wo}")
+    return _direct_conv_blocked_jit(x, w, stride, padding, bias, activation)
+
+
+@partial(jax.jit, static_argnames=("stride", "padding", "activation"))
+def _direct_conv_blocked_jit(x: jnp.ndarray, w: jnp.ndarray, stride: int,
+                             padding: Padding,
+                             bias: Optional[jnp.ndarray],
+                             activation: Optional[str]) -> jnp.ndarray:
     n, ciblk, hi, wi, cib = x.shape
     coblk, ciblk2, hf, wf, cib2, cob = w.shape
     assert (ciblk, cib) == (ciblk2, cib2), (x.shape, w.shape)

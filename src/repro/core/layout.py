@@ -14,6 +14,7 @@ a single copy, and inside a fused program usually to a layout assignment.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Tuple
 
 import jax.numpy as jnp
@@ -29,17 +30,76 @@ __all__ = [
     "blocked_to_bld",
     "kd_to_blocked",
     "largest_divisor_leq",
+    "divisors",
+    "choose_pencil",
 ]
+
+
+def divisors(n: int) -> list[int]:
+    """All divisors of ``n``, ascending, from the prime factorization.
+
+    O(sqrt(n) + d(n) log d(n)) — the descending trial scan this replaces was
+    O(n) per call, which matters once blocking models probe large spatial
+    extents (Ho, Wo up in the tens of thousands).
+    """
+    if n <= 0:
+        raise ValueError(f"need positive dim, got {n}")
+    factors: dict[int, int] = {}
+    m, p = n, 2
+    while p * p <= m:
+        while m % p == 0:
+            factors[p] = factors.get(p, 0) + 1
+            m //= p
+        p += 1 if p == 2 else 2
+    if m > 1:
+        factors[m] = factors.get(m, 0) + 1
+    divs = [1]
+    for prime, mult in factors.items():
+        divs = [d * prime ** e for d in divs for e in range(mult + 1)]
+    return sorted(divs)
 
 
 def largest_divisor_leq(n: int, cap: int) -> int:
     """Largest divisor of ``n`` that is ``<= cap`` (>=1)."""
     if n <= 0:
         raise ValueError(f"need positive dim, got {n}")
-    for d in range(min(n, cap), 0, -1):
-        if n % d == 0:
-            return d
-    return 1
+    if cap >= n:
+        return n
+    best = 1
+    for d in divisors(n):
+        if d > cap:
+            break
+        best = d
+    return best
+
+
+def choose_pencil(n: int, cap: int, *, min_util: float = 0.25,
+                  pad_to_block: bool = False) -> int:
+    """Channel pencil (block) size with a lane-utilization floor.
+
+    Returns the largest divisor of ``n`` that is ``<= cap``.  When that
+    divisor uses less than ``min_util`` of the achievable lane width
+    ``min(n, cap)`` — e.g. a prime channel count, whose only divisor under
+    the cap is 1 — the silent degradation would waste almost the entire
+    vector unit, so it is surfaced:
+
+      * default: a ``UserWarning`` naming the utilization and the escape
+        hatch;
+      * ``pad_to_block=True``: return ``min(n, cap)`` instead — the caller
+        must zero-pad the channel dim up to a multiple of the returned block
+        (trading the paper's zero-overhead invariant for lane utilization,
+        which is why it is explicit and never the default).
+    """
+    target = min(n, cap)
+    if pad_to_block:
+        return target
+    d = largest_divisor_leq(n, cap)
+    if d < min_util * target:
+        warnings.warn(
+            f"channel pencil {d} for C={n} (cap {cap}) fills {d}/{target} "
+            f"lanes; pass pad_to_block=True and zero-pad C to a multiple of "
+            f"{target} to restore utilization", UserWarning, stacklevel=2)
+    return d
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,10 +116,11 @@ class BlockedConvLayout:
     cb_out: int
 
     @staticmethod
-    def choose(ci: int, co: int, lane: int = 128) -> "BlockedConvLayout":
+    def choose(ci: int, co: int, lane: int = 128,
+               min_util: float = 0.25) -> "BlockedConvLayout":
         return BlockedConvLayout(
-            cb_in=largest_divisor_leq(ci, lane),
-            cb_out=largest_divisor_leq(co, lane),
+            cb_in=choose_pencil(ci, lane, min_util=min_util),
+            cb_out=choose_pencil(co, lane, min_util=min_util),
         )
 
 

@@ -15,12 +15,22 @@ from __future__ import annotations
 
 import dataclasses
 
+from .padding import Padding, normalize_padding, out_size
+
 __all__ = ["ConvShape", "bytes_overhead", "overhead_table",
            "bytes_repack_boundary", "chain_repack_bytes"]
 
 
 @dataclasses.dataclass(frozen=True)
 class ConvShape:
+    """One convolution layer's shape, with real padding semantics.
+
+    ``pad`` accepts anything :func:`normalize_padding` does — an int
+    (symmetric), "SAME"/"VALID", or explicit ``((lo,hi),(lo,hi))`` pairs —
+    so ``ho``/``wo`` always match what the convs actually produce (TF-SAME's
+    asymmetric split for even filters / stride > 1 included).
+    ``benchmarks/memory_table.py`` asserts them against ``conv_lax``.
+    """
     name: str
     n: int
     hi: int
@@ -30,15 +40,31 @@ class ConvShape:
     hf: int
     wf: int
     stride: int = 1
-    pad: int = 0
+    pad: Padding = 0
+
+    @property
+    def pads(self):
+        """Explicit per-edge pads ``((ph_lo, ph_hi), (pw_lo, pw_hi))``."""
+        return normalize_padding(self.pad, self.hf, self.wf, self.stride,
+                                 self.hi, self.wi)
+
+    @property
+    def padded_hi(self) -> int:
+        (lo, hi), _ = self.pads
+        return self.hi + lo + hi
+
+    @property
+    def padded_wi(self) -> int:
+        _, (lo, hi) = self.pads
+        return self.wi + lo + hi
 
     @property
     def ho(self) -> int:
-        return (self.hi + 2 * self.pad - self.hf) // self.stride + 1
+        return out_size(self.padded_hi, self.hf, self.stride)
 
     @property
     def wo(self) -> int:
-        return (self.wi + 2 * self.pad - self.wf) // self.stride + 1
+        return out_size(self.padded_wi, self.wf, self.stride)
 
     def flops(self) -> int:
         return 2 * self.n * self.ho * self.wo * self.co * self.hf * self.wf * self.ci
@@ -60,7 +86,7 @@ def bytes_overhead(s: ConvShape, algorithm: str, dtype_bytes: int = 4) -> int:
         # Cho & Brand 2017 report an average 3.2x reduction over im2col.
         return int(bytes_overhead(s, "im2col", dtype_bytes) / 3.2)
     if algorithm == "fft":
-        hi, wi = s.hi + 2 * s.pad, s.wi + 2 * s.pad
+        hi, wi = s.padded_hi, s.padded_wi
         # kernel zero-padded to image size, + rfft spectra of x and w
         # (complex64 = 2 words/elem, width hi*(wi//2+1)).
         kpad = hi * wi * s.ci * s.co * dtype_bytes

@@ -1,0 +1,61 @@
+"""Padding semantics shared by every convolution implementation.
+
+Pure Python (no jax import): the accounting layer (``core.memory_model``)
+and the analytical blocking model consume these helpers without dragging a
+backend in.  All implementations — ``conv_lax``, ``conv_im2col``,
+``conv_fft``, ``direct_conv_blocked`` and the Pallas kernel — normalize
+their padding through :func:`normalize_padding`, so TF-SAME semantics
+(``out = ceil(in / stride)``, *asymmetric* ``(lo, hi)`` split) are defined
+in exactly one place.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple, Union
+
+__all__ = ["Padding", "normalize_padding", "out_size"]
+
+Padding = Union[str, int, Sequence[Tuple[int, int]]]
+
+
+def _same_pads(size: int | None, f: int, stride: int) -> Tuple[int, int]:
+    """TF-style stride-aware SAME: output = ceil(size / stride).
+
+    The total pad depends on the input size whenever ``stride > 1``
+    (``(ceil(size/stride) - 1) * stride + f - size``); with no size to plug
+    in there is no correct answer, so that combination raises instead of
+    silently falling back to the stride-1 formula ``f - 1`` (which
+    over-pads and yields the wrong output shape).
+    """
+    if stride == 1:
+        total = f - 1
+    elif size is None:
+        raise ValueError(
+            "SAME padding with stride > 1 requires the input size: "
+            "pass hi/wi to normalize_padding (the stride-1 formula f-1 "
+            "is wrong for strided SAME)")
+    else:
+        out = -(-size // stride)
+        total = max((out - 1) * stride + f - size, 0)
+    return (total // 2, total - total // 2)
+
+
+def normalize_padding(padding: Padding, hf: int, wf: int, stride: int = 1,
+                      hi: int | None = None, wi: int | None = None,
+                      ) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+    """-> ``((ph_lo, ph_hi), (pw_lo, pw_hi))`` explicit per-edge pads."""
+    if isinstance(padding, str):
+        p = padding.upper()
+        if p == "VALID":
+            return (0, 0), (0, 0)
+        if p == "SAME":
+            return _same_pads(hi, hf, stride), _same_pads(wi, wf, stride)
+        raise ValueError(f"unknown padding {padding!r}")
+    if isinstance(padding, int):
+        return (padding, padding), (padding, padding)
+    (ph0, ph1), (pw0, pw1) = padding
+    return (ph0, ph1), (pw0, pw1)
+
+
+def out_size(hi: int, hf: int, stride: int) -> int:
+    """Output extent of a VALID convolution over an (already padded) input."""
+    return (hi - hf) // stride + 1

@@ -1,33 +1,39 @@
 """Pallas TPU kernel: zero-memory-overhead direct convolution (paper Alg. 3).
 
-TPU mapping of the paper's schedule (see DESIGN.md §2–§5):
+TPU mapping of the paper's schedule (see DESIGN.md §2–§5, §7):
 
-  grid = (N, Co/Cob, Ho/Hob, Ci/Cib)  # j' (parallel), spatial tile, i' (red.)
-  x block   [1, 1, Hib, Wi, Cib]      # halo'd input rows for one output tile,
-                                      #   Hib = (Hob-1)*stride + Hf  (VMEM)
+  grid = (N, Co/Cob, Ho/Hob, Wo/Wob, Ci/Cib)   # j', spatial tile, i' (red.)
+  x block   [1, 1, Hib, Wib, Cib]     # halo'd input patch for one output
+                                      #   tile: Hib = (Hob-1)*stride + Hf,
+                                      #         Wib = (Wob-1)*stride + Wf
   w block   [1, 1, Hf, Wf, Cib, Cob]  # paper kernel layout, VMEM
-  b block   [1, Cob]                  # bias pencil (optional), VMEM
-  out block [1, 1, Hob, Wo, Cob]      # the "register" tile (lane dim = Cob)
+  b block   [1, Cob]                  # bias pencil (only when bias given)
+  out block [1, 1, Hob, Wob, Cob]     # the "register" tile (lane dim = Cob)
 
-Spatial tiling: output rows are tiled by ``Hob`` (chosen by
-``core.blocking.choose_blocking`` to fit the VMEM budget).  Adjacent input
-windows overlap by the ``Hf - stride`` halo, which plain Blocked indexing
-cannot express; the input BlockSpec therefore uses *element-offset*
-(``pl.Unblocked``) indexing.  Because ``Hob`` always divides ``Ho``, the last
-window ends exactly at row ``(Ho-1)*stride + Hf - 1 <= Hi - 1`` — no window
-ever reads out of bounds, so no OOB-padding semantics are relied on.
+Spatial tiling is two-dimensional, exactly the paper's (H_o,b x W_o,b)
+register blocking: output rows are tiled by ``Hob`` and output columns by
+``Wob`` (both chosen by ``core.blocking.choose_blocking`` to fit the VMEM
+budget, both snapped to divisors of the output extents).  Adjacent input
+windows overlap by the ``Hf - stride`` / ``Wf - stride`` halos, which plain
+Blocked indexing cannot express; the input BlockSpec therefore uses
+*element-offset* (``pl.Unblocked``) indexing.  Because ``Hob | Ho`` and
+``Wob | Wo``, the last window ends exactly at ``(Ho-1)*stride + Hf - 1 <=
+Hi - 1`` (and likewise in W) — no window ever reads out of bounds, so no
+OOB-padding semantics are relied on.
 
 Inside the kernel, the (l, n, m, k, j) loops become:
   for (dh, dw) in Hf x Wf:            # n, m — unrolled (small)
       window = strided VMEM view of x at offset (dh, dw)   # never copied
-      acc   += [Hob*Wo, Cib] @ [Cib, Cob] on the MXU       # k, j tile
+      acc   += [Hob*Wob, Cib] @ [Cib, Cob] on the MXU      # k, j tile
 
 The im2col matrix is never materialized — not in HBM (the paper's claim) and
-not even in VMEM (windows are views into the already-resident input rows).
+not even in VMEM (windows are views into the already-resident input patch).
 Accumulation over input-channel blocks (innermost grid dim) runs in a float32
 VMEM scratch; on the last step the fused epilogue (bias + activation) is
 applied and the output tile is written once — stacked layers chain in the
 blocked layout with no NHWC round-trip and no separate bias/activation pass.
+When no bias is given the bias operand and its BlockSpec are dropped
+entirely — no dummy zeros are shipped to VMEM on every grid step.
 """
 from __future__ import annotations
 
@@ -39,32 +45,37 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.blocking import choose_blocking
+from repro.core.blocking import MachineModel, TPU_V5E, choose_blocking
 from repro.core.conv_baselines import Padding, normalize_padding
 from repro.core.direct_conv import apply_activation, pad_blocked
 
 __all__ = ["direct_conv2d_blocked_pallas"]
 
 
-def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, hf, wf, hob, wo, stride,
-            n_ci, activation, has_bias):
-    ci = pl.program_id(3)
+def _kernel(x_ref, w_ref, *rest, hf, wf, hob, wob, stride, n_ci, activation,
+            has_bias):
+    if has_bias:
+        b_ref, o_ref, acc_ref = rest
+    else:
+        o_ref, acc_ref = rest
+    ci = pl.program_id(4)
 
     @pl.when(ci == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[0, 0]                      # (Hib, Wi, Cib)
+    x = x_ref[0, 0]                      # (Hib, Wib, Cib)
     cib = x.shape[-1]
     acc = acc_ref[...]
     for dh in range(hf):
         for dw in range(wf):
             win = jax.lax.slice(
                 x, (dh, dw, 0),
-                (dh + (hob - 1) * stride + 1, dw + (wo - 1) * stride + 1, cib),
-                (stride, stride, 1))                       # (Hob, Wo, Cib) view
+                (dh + (hob - 1) * stride + 1, dw + (wob - 1) * stride + 1,
+                 cib),
+                (stride, stride, 1))                      # (Hob, Wob, Cib)
             acc = acc + jnp.dot(
-                win.reshape(hob * wo, cib), w_ref[0, 0, dh, dw],
+                win.reshape(hob * wob, cib), w_ref[0, 0, dh, dw],
                 preferred_element_type=jnp.float32)
     acc_ref[...] = acc
 
@@ -74,27 +85,30 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, hf, wf, hob, wo, stride,
         if has_bias:
             out = out + b_ref[...].astype(jnp.float32)     # (1, Cob) bcast
         out = apply_activation(out, activation)
-        o_ref[0, 0] = out.reshape(hob, wo, o_ref.shape[-1]).astype(o_ref.dtype)
+        o_ref[0, 0] = out.reshape(hob, wob,
+                                  o_ref.shape[-1]).astype(o_ref.dtype)
 
 
 @partial(jax.jit,
-         static_argnames=("stride", "padding", "activation", "hob",
-                          "interpret"))
+         static_argnames=("stride", "padding", "activation", "hob", "wob",
+                          "machine", "interpret"))
 def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
                                  bias: Optional[jnp.ndarray] = None,
                                  stride: int = 1,
                                  padding: Padding = "VALID",
                                  activation: Optional[str] = None,
                                  hob: Optional[int] = None,
+                                 wob: Optional[int] = None,
+                                 machine: MachineModel = TPU_V5E,
                                  interpret: bool = False) -> jnp.ndarray:
     """Tiled + fused direct convolution on the paper's blocked layouts.
 
     x: [N, Ci/Cib, Hi, Wi, Cib]; w: [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob];
     bias: [Co/Cob, Cob] or None -> [N, Co/Cob, Ho, Wo, Cob].
 
-    ``padding`` is stride-aware (TF SAME semantics); ``hob`` (output rows per
-    spatial tile) defaults to the analytical blocking model's choice and must
-    divide Ho.
+    ``padding`` is stride-aware (TF SAME semantics); ``hob``/``wob`` (output
+    rows/cols per spatial tile) default to the analytical blocking model's
+    choice for ``machine`` and must divide Ho/Wo.
     """
     n, ciblk, hi, wi, cib = x.shape
     coblk, ciblk2, hf, wf, cib2, cob = w.shape
@@ -105,39 +119,45 @@ def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
     ho = (hi - hf) // stride + 1
     wo = (wi - wf) // stride + 1
 
-    if hob is None:
-        # pin cob/cib to this call's actual pencil sizes so the VMEM fit is
-        # evaluated against the blocks the kernel will really hold
-        hob = choose_blocking(hi, wi, ciblk * cib, coblk * cob, hf, wf,
-                              stride, cob=cob, cib=cib,
-                              in_dtype_bytes=x.dtype.itemsize).hob
-    if ho % hob:
-        raise ValueError(f"hob={hob} must divide Ho={ho}")
+    # pin cob/cib to this call's actual pencil sizes (and any explicit
+    # hob/wob) so the VMEM fit is evaluated against the blocks the kernel
+    # will really hold; choose_blocking also validates pinned tiles (must
+    # divide Ho/Wo, must fit), so misuse gets the model's clear error here
+    # instead of an opaque VMEM allocation failure at kernel launch
+    blk = choose_blocking(hi, wi, ciblk * cib, coblk * cob, hf, wf,
+                          stride, machine=machine, cob=cob, cib=cib,
+                          hob=hob, wob=wob,
+                          in_dtype_bytes=x.dtype.itemsize)
+    hob, wob = blk.hob, blk.wob
     hib = (hob - 1) * stride + hf        # halo'd input rows per output tile
-    n_ho = ho // hob
+    wib = (wob - 1) * stride + wf        # halo'd input cols per output tile
+    n_ho, n_wo = ho // hob, wo // wob
 
     has_bias = bias is not None
-    if not has_bias:
-        # dummy operand keeps one kernel signature; never read (has_bias=False)
-        bias = jnp.zeros((coblk, cob), x.dtype)
+    operands = [x, w]
+    in_specs = [
+        # Overlapping halo windows -> element-offset (Unblocked) indexing.
+        pl.BlockSpec((1, 1, hib, wib, cib),
+                     lambda b, co, th, tw, ci: (b, ci, th * hob * stride,
+                                                tw * wob * stride, 0),
+                     indexing_mode=pl.Unblocked()),
+        pl.BlockSpec((1, 1, hf, wf, cib, cob),
+                     lambda b, co, th, tw, ci: (co, ci, 0, 0, 0, 0)),
+    ]
+    if has_bias:
+        operands.append(bias)
+        in_specs.append(
+            pl.BlockSpec((1, cob), lambda b, co, th, tw, ci: (co, 0)))
 
-    grid = (n, coblk, n_ho, ciblk)
+    grid = (n, coblk, n_ho, n_wo, ciblk)
     return pl.pallas_call(
-        partial(_kernel, hf=hf, wf=wf, hob=hob, wo=wo, stride=stride,
+        partial(_kernel, hf=hf, wf=wf, hob=hob, wob=wob, stride=stride,
                 n_ci=ciblk, activation=activation, has_bias=has_bias),
         grid=grid,
-        in_specs=[
-            # Overlapping halo windows -> element-offset (Unblocked) indexing.
-            pl.BlockSpec((1, 1, hib, wi, cib),
-                         lambda b, co, t, ci: (b, ci, t * hob * stride, 0, 0),
-                         indexing_mode=pl.Unblocked()),
-            pl.BlockSpec((1, 1, hf, wf, cib, cob),
-                         lambda b, co, t, ci: (co, ci, 0, 0, 0, 0)),
-            pl.BlockSpec((1, cob), lambda b, co, t, ci: (co, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, hob, wo, cob),
-                               lambda b, co, t, ci: (b, co, t, 0, 0)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, hob, wob, cob),
+                               lambda b, co, th, tw, ci: (b, co, th, tw, 0)),
         out_shape=jax.ShapeDtypeStruct((n, coblk, ho, wo, cob), x.dtype),
-        scratch_shapes=[pltpu.VMEM((hob * wo, cob), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hob * wob, cob), jnp.float32)],
         interpret=interpret,
-    )(x, w, bias)
+    )(*operands)

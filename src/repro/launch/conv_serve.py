@@ -1,0 +1,70 @@
+"""Data-parallel blocked-CNN inference: shard the batch, keep every shard in
+the paper's blocked layout end to end.
+
+The paper's §3.2 observation — output channels (and, trivially, batch
+entries) are embarrassingly parallel for direct convolution — means serving
+sharding is pure data parallelism: each device blocks its own sub-batch once
+at entry (``nhwc_to_blocked`` inside the model), chains every layer in
+``[n/D, C/Cb, H, W, Cb]`` with zero repacks, and emits its logits shard.  No
+collective appears anywhere in the forward pass (``benchmarks/fig5_scaling``
+verifies zero collective bytes for the batch-sharded direct conv).
+
+``shard_map`` (via the version-compat shim) rather than jit-with-shardings:
+the per-shard program is *exactly* the single-device program, so the Pallas
+kernel runs per shard with per-shard blocked layouts — no global-view
+resharding can be introduced behind the kernel's back.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.utils.compat import shard_map
+
+__all__ = ["make_sharded_cnn_forward", "sharded_cnn_predict"]
+
+
+@functools.lru_cache(maxsize=None)
+def make_sharded_cnn_forward(model, mesh, axis: str = "data", *,
+                             use_pallas: bool = False,
+                             interpret: Optional[bool] = None):
+    """-> jitted ``f(params, x_nhwc) -> logits`` sharding the batch over
+    ``axis`` of ``mesh`` (e.g. ``launch.mesh.make_test_mesh()``'s "data").
+
+    Params are replicated (``P()``); the batch dim must be divisible by the
+    axis size (use :func:`sharded_cnn_predict` for ragged batches).  Inside
+    the shard the forward pass is the unmodified single-device ``BlockedCNN``
+    call, so layouts, tiling and the fused epilogue are per-shard.
+
+    Memoized on ``(model, mesh, axis, ...)`` — ``BlockedCNN`` and ``Mesh``
+    are hashable — so a serving loop calling this (or
+    :func:`sharded_cnn_predict`) per batch reuses one jitted function and
+    hits the compile cache instead of retracing every request.
+    """
+    def fwd(p, x):
+        return model(p, x, use_pallas=use_pallas, interpret=interpret)
+
+    sharded = shard_map(fwd, mesh, in_specs=(P(), P(axis)),
+                        out_specs=P(axis))
+    return jax.jit(sharded)
+
+
+def sharded_cnn_predict(model, params, x_nhwc, mesh, axis: str = "data", *,
+                        use_pallas: bool = False,
+                        interpret: Optional[bool] = None):
+    """Serve one (possibly ragged) batch: pad N up to a multiple of the data
+    axis, run the sharded forward, slice the padding back off."""
+    n = x_nhwc.shape[0]
+    width = mesh.shape[axis]
+    pad = (-n) % width
+    if pad:
+        import jax.numpy as jnp
+        x_nhwc = jnp.concatenate(
+            [x_nhwc, jnp.zeros((pad,) + x_nhwc.shape[1:], x_nhwc.dtype)])
+    f = make_sharded_cnn_forward(model, mesh, axis, use_pallas=use_pallas,
+                                 interpret=interpret)
+    logits = f(params, x_nhwc)
+    return logits[:n]

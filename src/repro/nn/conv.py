@@ -59,6 +59,9 @@ class BlockedConv2D:
     activation: Optional[str] = "relu"
     use_bias: bool = True
     lane: int = 128                      # channel pencil target (TPU: 128)
+    hob: Optional[int] = None            # output rows per spatial tile
+    wob: Optional[int] = None            # output cols per spatial tile
+                                         # (None -> analytical blocking model)
 
     @property
     def layout(self) -> BlockedConvLayout:
@@ -85,9 +88,11 @@ class BlockedConv2D:
                 interpret = jax.default_backend() != "tpu"
             return direct_conv2d_blocked_pallas(
                 xb, p["w"], bias, stride=self.stride, padding=self.padding,
-                activation=self.activation, interpret=interpret)
+                activation=self.activation, hob=self.hob, wob=self.wob,
+                interpret=interpret)
         return direct_conv_blocked(xb, p["w"], self.stride, self.padding,
-                                   bias, self.activation)
+                                   bias, self.activation,
+                                   hob=self.hob, wob=self.wob)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -35,11 +35,11 @@ def _oracle(x, w, stride, padding, bias, activation):
 
 
 SWEEP = [
-    # hi, wi, ci, co, hf, wf, lane, hob  (hob=None -> choose_blocking default)
-    (11, 9, 4, 8, 3, 3, 4, 3),       # ho(VALID)=9 -> 3 overlapping tiles
-    (12, 12, 4, 8, 3, 3, 4, 2),      # SAME/stride2 -> ho=6, 3 tiles w/ halo
-    (10, 11, 8, 16, 3, 3, 8, None),  # analytical blocking path
-    (9, 8, 2, 4, 2, 3, 2, None),     # even filter, multiple ci blocks
+    # hi, wi, ci, co, hf, wf, lane, hob, wob  (None -> choose_blocking default)
+    (11, 9, 4, 8, 3, 3, 4, 3, 3),     # ho(VALID)=9 -> 3x3 overlapping tiles
+    (12, 12, 4, 8, 3, 3, 4, 2, 3),    # SAME/stride2 -> ho=6, halos both dims
+    (10, 11, 8, 16, 3, 3, 8, None, None),  # analytical blocking path
+    (9, 8, 2, 4, 2, 3, 2, None, 4),   # even filter, multiple ci + wob tiles
 ]
 
 
@@ -49,7 +49,7 @@ SWEEP = [
 @pytest.mark.parametrize("use_bias", [True, False])
 @pytest.mark.parametrize("activation", ["relu", None])
 def test_tiled_fused_pallas_vs_lax(case, stride, padding, use_bias, activation):
-    hi, wi, ci, co, hf, wf, lane, hob = case
+    hi, wi, ci, co, hf, wf, lane, hob, wob = case
     # crc32, not hash(): str hashes are per-process randomized (PYTHONHASHSEED)
     rng = np.random.default_rng(
         zlib.crc32(repr((case, stride, padding)).encode()))
@@ -64,29 +64,36 @@ def test_tiled_fused_pallas_vs_lax(case, stride, padding, use_bias, activation):
     bb = None if b is None else b.reshape(co // lay.cb_out, lay.cb_out)
 
     ho = -(-hi // stride) if padding == "SAME" else (hi - hf) // stride + 1
+    wo = -(-wi // stride) if padding == "SAME" else (wi - wf) // stride + 1
     if hob is not None and ho % hob:
         hob = None                   # explicit tile must divide this Ho
+    if wob is not None and wo % wob:
+        wob = None                   # explicit tile must divide this Wo
     got = direct_conv2d_blocked_pallas(
         xb, wb, bb, stride=stride, padding=padding, activation=activation,
-        hob=hob, interpret=True)
+        hob=hob, wob=wob, interpret=True)
     want = _oracle(x, w, stride, padding, b, activation)
     np.testing.assert_allclose(np.asarray(L.blocked_to_nhwc(got)),
                                np.asarray(want), rtol=2e-4, atol=2e-4)
 
-    # same semantics from the differentiable jnp formulation
-    got2 = direct_conv_blocked(xb, wb, stride, padding, bb, activation)
+    # same semantics from the differentiable jnp formulation (the tiling
+    # knobs are validated no-ops there — one layer config, two paths)
+    got2 = direct_conv_blocked(xb, wb, stride, padding, bb, activation,
+                               hob=hob, wob=wob)
     np.testing.assert_allclose(np.asarray(L.blocked_to_nhwc(got2)),
                                np.asarray(want), rtol=2e-4, atol=2e-4)
 
 
 def test_multiple_spatial_tiles_actually_used():
-    """The sweep's explicit hob really splits the output into several tiles,
-    and choose_blocking returns a divisor of Ho under VMEM pressure."""
+    """The sweep's explicit hob/wob really split the output into several
+    tiles, and choose_blocking returns divisors of Ho/Wo under pressure."""
     hi, wi, ci, co, hf, wf = 11, 9, 4, 8, 3, 3
     ho = hi - hf + 1
     assert ho // 3 > 1                                   # 3 tiles in SWEEP[0]
     b = choose_blocking(hi=1024, wi=1024, ci=128, co=128, hf=3, wf=3)
     assert b.hob < 1022 and (1022 % b.hob) == 0
+    # (wob shrink on genuinely wide maps is covered by
+    # test_blocking_wide_map_shrinks_wob and tests/test_conv_tiling2d.py)
 
 
 def test_two_layer_chain_bit_identical_to_roundtrip():

@@ -3,7 +3,7 @@ import pytest
 
 from repro.core.blocking import (CPU_HASWELL, TPU_V5E, Blocking,
                                  choose_blocking, cpu_max_tile_elems,
-                                 cpu_min_tile_elems)
+                                 cpu_min_tile_elems, resident_bytes)
 from repro.core.memory_model import ConvShape, bytes_overhead, overhead_table
 
 
@@ -33,6 +33,16 @@ def test_blocking_vmem_pressure():
     b = choose_blocking(hi=1024, wi=1024, ci=128, co=128, hf=3, wf=3)
     win_bytes = 1024 * 1024 * b.cib * 4
     assert 2 * win_bytes < TPU_V5E.vmem_bytes or b.hob < 1022
+
+
+def test_blocking_wide_map_shrinks_wob():
+    # single enormous row: hob bottoms out at 1, wob (2-D tiling) must engage
+    b = choose_blocking(hi=5, wi=2 ** 17, ci=256, co=256, hf=3, wf=3,
+                        cob=128, cib=128)
+    wo = 2 ** 17 - 2
+    assert b.wob < wo and wo % b.wob == 0
+    assert resident_bytes(b.hob, b.wob, b.cob, b.cib, 3, 3) \
+        <= TPU_V5E.vmem_bytes
 
 
 def test_overhead_table_alexnet():

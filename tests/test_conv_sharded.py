@@ -1,0 +1,72 @@
+"""Sharded blocked-CNN inference == single-device inference, bit for bit.
+
+Runs in a subprocess (the host-device-count env var must be set before jax
+initializes).  The per-shard program is the unmodified BlockedCNN forward,
+so each shard blocks its sub-batch once and chains layers in the blocked
+layout — the serving arrangement of ``repro.launch.conv_serve``.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_probe(body: str) -> str:
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch.conv_serve import (make_sharded_cnn_forward,
+                                             sharded_cnn_predict)
+        from repro.nn.conv import BlockedCNN, BlockedConv2D
+        from repro.nn.module import init_tree
+        model = BlockedCNN(convs=(
+            BlockedConv2D(ci=8, co=16, lane=8),
+            BlockedConv2D(ci=16, co=16, stride=2, lane=8, hob=3, wob=6),
+            BlockedConv2D(ci=16, co=32, lane=8)), n_classes=5)
+        p = init_tree(model.specs(), jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(4, 12, 12, 8)).astype(np.float32))
+        mesh = make_test_mesh(data=2, model=4)
+    """) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, env=env, cwd=REPO, timeout=420)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_cnn_matches_single_device_jnp_path():
+    run_probe("""
+f = make_sharded_cnn_forward(model, mesh, "data")
+got = np.asarray(f(p, x))
+want = np.asarray(model(p, x))
+np.testing.assert_array_equal(got, want)
+print("OK")
+""")
+
+
+def test_sharded_cnn_matches_single_device_pallas_path():
+    """The Pallas kernel runs inside each shard with per-shard blocked
+    layouts (interpret mode on CPU), including an explicit hob/wob layer."""
+    run_probe("""
+f = make_sharded_cnn_forward(model, mesh, "data", use_pallas=True,
+                             interpret=True)
+got = np.asarray(f(p, x))
+want = np.asarray(model(p, x, use_pallas=True, interpret=True))
+np.testing.assert_array_equal(got, want)
+print("OK")
+""")
+
+
+def test_sharded_cnn_ragged_batch_padded_and_sliced():
+    run_probe("""
+got = np.asarray(sharded_cnn_predict(model, p, x[:3], mesh))
+want = np.asarray(model(p, x[:3]))
+assert got.shape == (3, 5), got.shape
+np.testing.assert_array_equal(got, want)
+print("OK")
+""")

@@ -1,0 +1,192 @@
+"""2-D spatial tiling (ISSUE 2 tentpole) + the padding/blocking bugfix sweep:
+
+* even filters (2x2, 4x4) and stride in {1, 2, 3}, SAME/VALID, agree across
+  conv_lax / conv_im2col / conv_fft / direct_conv_blocked / the Pallas
+  kernel — including multi-``wob``-tile shapes;
+* shapes whose full-width row tile cannot fit VMEM (the old kernel's
+  ``"cannot fit VMEM even at cib=1"`` death) now run through column tiling:
+  end-to-end on a tiny MachineModel, model-only for the paper-scale maps;
+* stride-aware SAME without an input size raises instead of silently using
+  the stride-1 formula;
+* degenerate channel pencils (prime counts) warn with the pad-to-block
+  escape hatch instead of silently shipping 1-wide lanes.
+"""
+import warnings
+import zlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import conv_baselines as B
+from repro.core import layout as L
+from repro.core.blocking import (MachineModel, TPU_V5E, choose_blocking,
+                                 resident_bytes)
+from repro.core.direct_conv import direct_conv_blocked
+from repro.core.padding import normalize_padding
+from repro.kernels.direct_conv2d import direct_conv2d_blocked_pallas
+
+
+def _blocked_inputs(rng, hi, wi, ci, co, hf, wf, lane):
+    x = jnp.asarray(rng.normal(size=(2, hi, wi, ci)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(hf, wf, ci, co)).astype(np.float32))
+    lay = L.BlockedConvLayout.choose(ci, co, lane=lane)
+    xb = L.nhwc_to_blocked(x, lay.cb_in)
+    wb = L.hwio_to_blocked(w, lay.cb_in, lay.cb_out)
+    return x, w, xb, wb
+
+
+@pytest.mark.parametrize("hf,wf", [(2, 2), (4, 4), (2, 4)])
+@pytest.mark.parametrize("stride", [1, 2, 3])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_even_filters_all_algorithms_agree(hf, wf, stride, padding):
+    """TF-SAME's asymmetric split for even filters / stride > 1 is shared by
+    every implementation, so all five agree with the XLA oracle."""
+    hi, wi, ci, co, lane = 13, 14, 4, 8, 4
+    rng = np.random.default_rng(
+        zlib.crc32(repr((hf, wf, stride, padding)).encode()))
+    x, w, xb, wb = _blocked_inputs(rng, hi, wi, ci, co, hf, wf, lane)
+
+    want = np.asarray(B.conv_lax(x, w, stride, padding))
+    for name, got in (
+            ("im2col", B.conv_im2col(x, w, stride, padding)),
+            ("fft", B.conv_fft(x, w, stride, padding)),
+            ("direct_blocked", L.blocked_to_nhwc(
+                direct_conv_blocked(xb, wb, stride, padding))),
+            ("pallas", L.blocked_to_nhwc(direct_conv2d_blocked_pallas(
+                xb, wb, stride=stride, padding=padding, interpret=True)))):
+        got = np.asarray(got)
+        assert got.shape == want.shape, (name, got.shape, want.shape)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4,
+                                   err_msg=name)
+
+
+def test_2d_multi_tile_grid_matches_lax():
+    """Explicit hob/wob force a multi-tile grid in BOTH spatial dims; halo'd
+    column windows must reproduce the untiled result exactly."""
+    hi, wi, ci, co, hf, wf = 16, 20, 4, 8, 3, 3
+    rng = np.random.default_rng(7)
+    x, w, xb, wb = _blocked_inputs(rng, hi, wi, ci, co, hf, wf, 4)
+    want = np.asarray(B.conv_lax(x, w, 1, "SAME"))           # ho=16, wo=20
+    for hob, wob in [(4, 5), (8, 4), (2, 10), (16, 20)]:
+        got = L.blocked_to_nhwc(direct_conv2d_blocked_pallas(
+            xb, wb, stride=1, padding="SAME", hob=hob, wob=wob,
+            interpret=True))
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4,
+                                   atol=2e-4, err_msg=f"hob={hob} wob={wob}")
+
+
+def test_wob_not_dividing_wo_raises():
+    rng = np.random.default_rng(0)
+    _, _, xb, wb = _blocked_inputs(rng, 9, 9, 4, 8, 3, 3, 4)
+    with pytest.raises(ValueError, match="wob=4 must divide"):
+        direct_conv2d_blocked_pallas(xb, wb, stride=1, padding="VALID",
+                                     wob=4, interpret=True)   # wo=7, prime
+    with pytest.raises(ValueError, match="wob=4 must divide"):
+        direct_conv_blocked(xb, wb, 1, "VALID", wob=4)
+    # 0 is not "unset": it must raise the contract error, not divide-by-zero
+    with pytest.raises(ValueError, match="hob=0 must divide"):
+        direct_conv2d_blocked_pallas(xb, wb, stride=1, padding="VALID",
+                                     hob=0, wob=1, interpret=True)
+    with pytest.raises(ValueError, match="wob=0 must divide"):
+        direct_conv_blocked(xb, wb, 1, "VALID", wob=0)
+    with pytest.raises(ValueError, match="hob=0 must divide"):
+        choose_blocking(9, 9, 4, 8, 3, 3, hob=0)
+
+
+# A machine small enough that a full-width row tile (hob=1, wob=wo) does not
+# fit: before column tiling, choose_blocking raised "cannot fit VMEM even at
+# cib=1" for this configuration because cib is pinned by the operand layout.
+TINY = MachineModel(name="tiny", n_vec=8, n_fma=1, l_fma=8, n_reg=64,
+                    vmem_bytes=7000)
+
+
+def test_vmem_pressure_shrinks_wob_end_to_end():
+    """The previously-fatal shape runs through the kernel with wob < wo
+    tiles and matches conv_lax to f32 tolerance."""
+    hi = wi = 16
+    rng = np.random.default_rng(3)
+    x, w, xb, wb = _blocked_inputs(rng, hi, wi, 8, 8, 3, 3, 8)
+
+    blk = choose_blocking(18, 18, 8, 8, 3, 3, machine=TINY, cob=8, cib=8)
+    assert blk.wob < 16, blk                       # column tiling engaged
+    got = L.blocked_to_nhwc(direct_conv2d_blocked_pallas(
+        xb, wb, stride=1, padding="SAME", machine=TINY, interpret=True))
+    want = B.conv_lax(x, w, 1, "SAME")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_vmem_model_fits_paper_scale_maps():
+    """Model-only (no data): shapes that needed the dead halo-DMA error path
+    now get 2-D tiles satisfying the VMEM inequality, with pinned pencils."""
+    for hi, wi in [(514, 514), (1026, 1026), (10, 32768)]:
+        blk = choose_blocking(hi, wi, 256, 256, 3, 3, cob=128, cib=128)
+        resident = resident_bytes(blk.hob, blk.wob, blk.cob, blk.cib, 3, 3)
+        assert resident <= TPU_V5E.vmem_bytes, (hi, wi, blk)
+        assert ((hi - 3 + 1) % blk.hob) == 0
+        assert ((wi - 3 + 1) % blk.wob) == 0
+
+
+def test_pinned_hob_constrains_wob_choice():
+    """An explicit hob pins that dim in the model: the free wob is chosen
+    *under* the constraint (still fitting VMEM), and a pinned tile that
+    cannot fit raises the model's error instead of over-subscribing."""
+    blk = choose_blocking(514, 514, 256, 256, 3, 3, cob=128, cib=128,
+                          hob=512)
+    assert blk.hob == 512 and blk.wob < 512 and 512 % blk.wob == 0
+    assert resident_bytes(blk.hob, blk.wob, blk.cob, blk.cib, 3, 3) \
+        <= TPU_V5E.vmem_bytes
+    with pytest.raises(ValueError, match="does not fit VMEM"):
+        choose_blocking(18, 18, 8, 8, 3, 3, machine=TINY, cob=8, cib=8,
+                        hob=16, wob=16)
+    with pytest.raises(ValueError, match="hob=5 must divide"):
+        choose_blocking(18, 18, 8, 8, 3, 3, hob=5)
+    # the kernel wrapper runs the same fit check even with BOTH dims pinned:
+    # misuse gets the model's error, not a VMEM allocation failure at launch
+    rng = np.random.default_rng(5)
+    _, _, xb, wb = _blocked_inputs(rng, 16, 16, 8, 8, 3, 3, 8)
+    with pytest.raises(ValueError, match="does not fit VMEM"):
+        direct_conv2d_blocked_pallas(xb, wb, stride=1, padding="SAME",
+                                     machine=TINY, hob=16, wob=16,
+                                     interpret=True)
+
+
+def test_truly_unfittable_shape_still_raises():
+    """hob=wob=1 with a pinned deep pencil can genuinely exceed a small
+    budget — that (and only that) still raises."""
+    micro = MachineModel(name="micro", n_vec=8, n_fma=1, l_fma=1, n_reg=8,
+                         vmem_bytes=512)
+    with pytest.raises(ValueError, match="does not fit VMEM"):
+        choose_blocking(8, 8, 8, 8, 3, 3, machine=micro, cob=8, cib=8)
+
+
+def test_same_padding_stride2_requires_size():
+    with pytest.raises(ValueError, match="requires the input size"):
+        normalize_padding("SAME", 3, 3, stride=2)
+    # stride 1 keeps the sizeless legacy form (identical to TF)
+    assert normalize_padding("SAME", 3, 3) == ((1, 1), (1, 1))
+    # and the sized strided form matches TF: 11 wide, 2x2 filter, stride 2
+    assert normalize_padding("SAME", 2, 2, 2, 11, 11) == ((0, 1), (0, 1))
+
+
+def test_prime_pencil_warns_with_escape_hatch():
+    with pytest.warns(UserWarning, match="pad_to_block"):
+        assert L.choose_pencil(131, 128) == 1
+    assert L.choose_pencil(131, 128, pad_to_block=True) == 128
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")                 # no warning for these
+        assert L.choose_pencil(3, 128) == 3            # narrow first layer
+        assert L.choose_pencil(96, 128) == 96
+        assert L.choose_pencil(256, 128) == 128
+
+
+def test_divisors_factorization():
+    assert L.divisors(1) == [1]
+    assert L.divisors(12) == [1, 2, 3, 4, 6, 12]
+    assert L.divisors(127) == [1, 127]
+    for n in (1, 7, 36, 360, 1022, 50280):
+        assert L.divisors(n) == [d for d in range(1, n + 1) if n % d == 0]
+    assert L.largest_divisor_leq(50280, 128) == 120
+    assert L.largest_divisor_leq(2 ** 20, 128) == 128
