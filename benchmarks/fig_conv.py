@@ -7,6 +7,11 @@ hand-tuned SIMD kernels; what reproduces is the *structure* — packing costs
 real time (Fig. 1), direct avoids it entirely with identical math, FFT's
 competitiveness depends on kernel size (Fig. 4).  Memory overheads (the
 headline claim) are exact, from compiled buffer analysis in memory_table.py.
+
+Runnable:  PYTHONPATH=src python -m benchmarks.fig_conv [--backward] [--json f]
+(the ``-m`` form is required — the module uses relative imports).
+``--backward`` adds fwd+bwd training-step timings; ``--smoke`` uses tiny
+CI-sized shapes.
 """
 from __future__ import annotations
 
@@ -56,6 +61,38 @@ def bench_fig4(shapes=None, iters=3):
     return rows
 
 
+def bench_backward(shapes=None, iters=3):
+    """fwd vs fwd+bwd step timings for the direct path and the XLA oracle.
+
+    The backward of the direct formulation is itself a direct convolution
+    (transposed-window dgrad + per-tile wgrad — DESIGN.md §9), so the
+    fwd+bwd/fwd ratio should track the oracle's: one step is ~3 convs.
+    Rows land in the benchmark JSON via ``--backward --json``.
+    """
+    rows = []
+    for s in shapes or ZOO:
+        x, w = _inputs(s)
+        pad = s.pad
+        t_fwd = time_fn(lambda x, w: D.direct_conv_nhwc(x, w, s.stride, pad),
+                        x, w, iters=iters)
+        t_step = time_fn(lambda x, w: D.direct_conv_nhwc(x, w, s.stride, pad),
+                         x, w, iters=iters, backward=True)
+        t_lax_fwd = time_fn(lambda x, w: B.conv_lax(x, w, s.stride, pad),
+                            x, w, iters=iters)
+        t_lax_step = time_fn(lambda x, w: B.conv_lax(x, w, s.stride, pad),
+                             x, w, iters=iters, backward=True)
+        rows.append({
+            "layer": s.name,
+            "direct_fwd_us": t_fwd * 1e6,
+            "direct_fwdbwd_us": t_step * 1e6,
+            "lax_fwd_us": t_lax_fwd * 1e6,
+            "lax_fwdbwd_us": t_lax_step * 1e6,
+            "direct_bwd_over_fwd": t_step / max(t_fwd, 1e-12),
+            "direct_vs_lax_step": t_step / max(t_lax_step, 1e-12),
+        })
+    return rows
+
+
 def bench_fig1_packing_split(shapes=None, iters=3):
     """Fig. 1: how much of im2col+GEMM is pure packing overhead."""
     rows = []
@@ -82,3 +119,42 @@ def bench_fig1_packing_split(shapes=None, iters=3):
             "direct_vs_gemm_only": t_gemm / t_direct,
         })
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(
+        description="direct-conv timing benchmarks (fig1/fig4 + training "
+                    "steps)")
+    ap.add_argument("--backward", action="store_true",
+                    help="also time fwd+bwd training steps per layer")
+    ap.add_argument("--json", default=None,
+                    help="write all rows to this JSON file")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + few iters (CI-sized)")
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+
+    smoke_shapes = [
+        ConvShape("smoke.3x3", 1, 12, 12, 4, 8, 3, 3, pad=1),
+        ConvShape("smoke.s2", 1, 12, 12, 8, 8, 3, 3, stride=2, pad="SAME"),
+    ]
+    shapes = smoke_shapes if args.smoke else ZOO
+    iters = 2 if args.smoke else args.iters
+
+    report = {"fig4": bench_fig4(shapes, iters=iters)}
+    if args.backward:
+        report["backward"] = bench_backward(shapes, iters=iters)
+
+    for section, rows in report.items():
+        print(f"== {section} ==")
+        for row in rows:
+            print("  " + " ".join(
+                f"{k}={v:.1f}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in row.items()))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.json}")

@@ -2,14 +2,26 @@
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["time_fn"]
 
 
-def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
-    """Median seconds per call of a jitted function."""
-    jfn = jax.jit(fn)
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2,
+            backward: bool = False) -> float:
+    """Median seconds per call of a jitted function.
+
+    ``backward=True`` times a full fwd+bwd step instead: ``value_and_grad``
+    of ``sum(fn(*args))`` w.r.t. every array argument — what one training
+    step pays for this op (used by ``fig_conv --backward``)."""
+    if backward:
+        def scalar(*a):
+            return jnp.sum(fn(*a).astype(jnp.float32))
+        jfn = jax.jit(jax.value_and_grad(scalar,
+                                         argnums=tuple(range(len(args)))))
+    else:
+        jfn = jax.jit(fn)
     for _ in range(warmup):
         jax.block_until_ready(jfn(*args))
     ts = []

@@ -29,7 +29,8 @@ from .layout import choose_pencil, divisors, largest_divisor_leq
 __all__ = [
     "MachineModel", "TPU_V5E", "CPU_HASWELL", "Blocking",
     "cpu_min_tile_elems", "cpu_max_tile_elems", "resident_bytes",
-    "choose_blocking",
+    "choose_blocking", "dgrad_extents", "choose_dgrad_blocking",
+    "wgrad_resident_bytes", "choose_wgrad_blocking",
 ]
 
 
@@ -98,6 +99,21 @@ def resident_bytes(hob: int, wob: int, cob: int, cib: int, hf: int, wf: int,
     out = hob * wob * cob * in_dtype_bytes                # output block
     acc = hob * wob * cob * acc_dtype_bytes               # scratch (single)
     return 2 * (win + wgt + out) + acc
+
+
+def _shrink_to_fit(extent: int, cur: int, pinned: bool, fits) -> int:
+    """Halve ``cur`` along divisors of ``extent`` until ``fits(cur)`` (or 1).
+
+    The one shrink strategy every blocking model uses (forward and wgrad —
+    they differ only in the ``fits`` predicate): next candidate is the
+    largest divisor <= half the current tile, stopping at a fixed point.
+    Pinned dims are never shrunk."""
+    while not pinned and cur > 1 and not fits(cur):
+        nxt = largest_divisor_leq(extent, max(1, cur // 2))
+        if nxt == cur:
+            break
+        cur = nxt
+    return cur
 
 
 def choose_blocking(
@@ -171,25 +187,16 @@ def choose_blocking(
                                   in_dtype_bytes,
                                   acc_dtype_bytes) <= machine.vmem_bytes
 
-        while not hob_pinned and hob > 1 and not fits(cib, hob, wob):
-            nxt = largest_divisor_leq(ho, max(1, hob // 2))
-            if nxt == hob:
-                break
-            hob = nxt
+        hob = _shrink_to_fit(ho, hob, hob_pinned,
+                             lambda h: fits(cib, h, wob))
         # wide maps: tile columns too (2-D spatial blocking, paper Alg. 3's
         # W_o,b) before touching the contraction depth
-        while not wob_pinned and wob > 1 and not fits(cib, hob, wob):
-            nxt = largest_divisor_leq(wo, max(1, wob // 2))
-            if nxt == wob:
-                break
-            wob = nxt
+        wob = _shrink_to_fit(wo, wob, wob_pinned,
+                             lambda w: fits(cib, hob, w))
         # huge channel blocks: shallower contraction (the paper's cache-level
         # Ci blocking) until the resident window fits VMEM
-        while not cib_pinned and cib > 1 and not fits(cib, hob, wob):
-            nxt = largest_divisor_leq(ci, cib // 2)
-            if nxt == cib:
-                break
-            cib = nxt
+        cib = _shrink_to_fit(ci, cib, cib_pinned,
+                             lambda c: fits(c, hob, wob))
         if not fits(cib, hob, wob):
             raise ValueError(
                 f"conv tile does not fit VMEM at hob={hob}, wob={wob}, "
@@ -210,4 +217,121 @@ def choose_blocking(
                         fits(cib, hob, cand):
                     wob = cand
                     break
+    return Blocking(cob=cob, cib=cib, hob=hob, wob=wob)
+
+
+# ---------------------------------------------------------------------------
+# Backward-pass tile sizing (DESIGN.md §9).  Both kernels are parameterized
+# by the same Blocking vocabulary as the forward — the point of the shared
+# grid machinery — but the quantities the inequality fits are different:
+# dgrad convolves a *dilated, halo-padded cotangent* at stride 1 with the
+# channel pencils swapped, and wgrad holds a whole [Hf, Wf, Cib, Cob]
+# accumulator resident across its three reduction axes.
+# ---------------------------------------------------------------------------
+
+def dgrad_extents(ho: int, wo: int, hf: int, wf: int,
+                  stride: int = 1) -> tuple[int, int]:
+    """Spatial extents of the dgrad kernel's output: the input-gradient rows
+    a VALID forward conv ever touched, ``E = (out - 1) * stride + filter``
+    (trailing rows of the padded input beyond E have zero gradient)."""
+    return (ho - 1) * stride + hf, (wo - 1) * stride + wf
+
+
+def choose_dgrad_blocking(
+    ho: int, wo: int, ci: int, co: int, hf: int, wf: int,
+    stride: int = 1, machine: MachineModel = TPU_V5E,
+    in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
+    cib: int | None = None, cob: int | None = None,
+    hob: int | None = None, wob: int | None = None,
+) -> Blocking:
+    """Tile the transposed-window dgrad kernel (input gradient).
+
+    dgrad is itself a blocked direct convolution — of the stride-dilated,
+    ``(Hf-1)``-halo-padded cotangent against the 180°-mirrored filter, at
+    stride 1, with the channel roles swapped (``Cib`` becomes the lane/output
+    pencil, ``Cob`` the contraction depth).  So the §3 inequality applies
+    verbatim to the transposed problem; this wrapper just states the
+    transposition once:
+
+      * output extent per dim is ``E = (out-1)*stride + filter``
+        (:func:`dgrad_extents`) — the returned ``hob``/``wob`` divide E;
+      * the window the kernel holds is ``(hob + hf - 1) x (wob + wf - 1)``
+        of the *dilated* cotangent (stride-1 halo);
+      * ``cob``/``cib`` of the returned Blocking are the input-channel /
+        output-channel pencils respectively (swapped vs forward).
+
+    ``cib``/``cob`` pin the pencils baked into the caller's operand layouts
+    (x's channel block / w's output pencil).
+    """
+    eh, ew = dgrad_extents(ho, wo, hf, wf, stride)
+    return choose_blocking(
+        eh + hf - 1, ew + wf - 1, co, ci, hf, wf, stride=1,
+        machine=machine, in_dtype_bytes=in_dtype_bytes,
+        acc_dtype_bytes=acc_dtype_bytes,
+        cob=cib, cib=cob, hob=hob, wob=wob)
+
+
+def wgrad_resident_bytes(hob: int, wob: int, cob: int, cib: int,
+                         hf: int, wf: int, stride: int = 1,
+                         in_dtype_bytes: int = 4,
+                         acc_dtype_bytes: int = 4) -> int:
+    """VMEM bytes one wgrad grid step holds resident (DESIGN.md §9).
+
+    Same double-buffered operand accounting as :func:`resident_bytes`, but
+    the output block is the full ``[Hf, Wf, Cib, Cob]`` weight-gradient tile
+    and the persistent f32 accumulator matches it — ``Hf*Wf`` times larger
+    than the forward's ``[hob*wob, Cob]`` scratch, which is what changes the
+    inequality."""
+    hib = (hob - 1) * stride + hf
+    wib = (wob - 1) * stride + wf
+    win = hib * wib * cib * in_dtype_bytes                # x window (halo'd)
+    cot = hob * wob * cob * in_dtype_bytes                # cotangent tile
+    wgt = hf * wf * cib * cob * in_dtype_bytes            # dw output block
+    acc = hf * wf * cib * cob * acc_dtype_bytes           # scratch (single)
+    return 2 * (win + cot + wgt) + acc
+
+
+def choose_wgrad_blocking(
+    ho: int, wo: int, hf: int, wf: int, stride: int = 1,
+    machine: MachineModel = TPU_V5E,
+    cob: int = 128, cib: int = 128,
+    in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
+    hob: int | None = None, wob: int | None = None,
+) -> Blocking:
+    """Tile the per-tile accumulating wgrad kernel (weight gradient).
+
+    wgrad reduces over the ``(N, Ho/Hob, Wo/Wob)`` grid axes into one
+    resident ``[Hf, Wf, Cib, Cob]`` accumulator per ``(Co, Ci)`` block pair,
+    so only the spatial tile is free: ``cob``/``cib`` are always pinned by
+    the operand layouts (there is nothing to shrink — the accumulator *is*
+    the output block).  Under VMEM pressure the model shrinks ``hob`` then
+    ``wob`` (divisors of Ho/Wo, exactly the forward's constraint, since the
+    cotangent tile and the halo'd x window tile the same output grid); a
+    configuration that misfits even at ``hob = wob = 1`` raises.
+    """
+    if ho <= 0 or wo <= 0:
+        raise ValueError(f"empty cotangent {ho}x{wo}")
+    hob_pinned, wob_pinned = hob is not None, wob is not None
+    if hob_pinned and (hob < 1 or ho % hob):
+        raise ValueError(f"hob={hob} must divide Ho={ho}")
+    if wob_pinned and (wob < 1 or wo % wob):
+        raise ValueError(f"wob={wob} must divide Wo={wo}")
+    if not hob_pinned:
+        hob = ho
+    if not wob_pinned:
+        wob = wo
+
+    if machine.vmem_bytes:
+        def fits(hob_, wob_):
+            return wgrad_resident_bytes(
+                hob_, wob_, cob, cib, hf, wf, stride,
+                in_dtype_bytes, acc_dtype_bytes) <= machine.vmem_bytes
+
+        hob = _shrink_to_fit(ho, hob, hob_pinned, lambda h: fits(h, wob))
+        wob = _shrink_to_fit(wo, wob, wob_pinned, lambda w: fits(hob, w))
+        if not fits(hob, wob):
+            raise ValueError(
+                f"wgrad tile does not fit VMEM at hob={hob}, wob={wob}: "
+                f"the [{hf}x{wf}x{cib}x{cob}] accumulator plus windows needs "
+                f"more than {machine.vmem_bytes} bytes resident")
     return Blocking(cob=cob, cib=cib, hob=hob, wob=wob)

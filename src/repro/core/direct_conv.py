@@ -30,7 +30,7 @@ from . import layout as L
 from .conv_baselines import Padding, normalize_padding, out_size
 
 __all__ = [
-    "apply_activation", "pad_blocked",
+    "apply_activation", "pad_blocked", "bias_to_blocked",
     "direct_conv_blocked", "direct_conv_nhwc", "direct_conv1d_depthwise",
 ]
 
@@ -132,23 +132,45 @@ def _direct_conv_blocked_jit(x: jnp.ndarray, w: jnp.ndarray, stride: int,
     return apply_activation(acc, activation).astype(x.dtype)
 
 
+def bias_to_blocked(bias: jnp.ndarray, cb_out: int) -> jnp.ndarray:
+    """Flat NHWC bias ``[Co] -> [Co/Cb, Cb]`` channel pencils, zero-padding
+    Co up to a pencil multiple when needed (matching pad-to-block maps)."""
+    co = bias.shape[0]
+    if co % cb_out:
+        bias = jnp.pad(bias, (0, -co % cb_out))
+    return bias.reshape(-1, cb_out)
+
+
 def direct_conv_nhwc(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
                      padding: Padding = "VALID",
                      bias: Optional[jnp.ndarray] = None,
-                     activation: Optional[str] = None) -> jnp.ndarray:
+                     activation: Optional[str] = None,
+                     pad_to_block: bool = False,
+                     lane: int = 128) -> jnp.ndarray:
     """Convenience wrapper: NHWC/HWIO in, NHWC out, via the blocked layouts.
 
-    ``bias`` is a flat [Co] vector (NHWC convention); it is reblocked into
-    channel pencils before the fused epilogue.
+    A pure layout sandwich around :func:`direct_conv_blocked` — permute in,
+    convolve, permute out — with **no per-call re-derivation**: padding is
+    normalized exactly once (inside ``direct_conv_blocked``, whose blocked
+    input keeps the same H/W), the pencils come from the shared
+    :func:`layout.choose_pencil`, and ``bias`` is reblocked by
+    :func:`bias_to_blocked`.  Because everything around the blocked core is
+    a permutation, ``jax.grad`` through this wrapper is the blocked path's
+    gradient bit for bit — it is the oracle the custom-VJP tests diff
+    against.
+
+    ``pad_to_block=True`` engages the first-class channel-padding layout op
+    for non-divisible channel counts (zero-pad in, strip out; the traded
+    bytes are ``memory_model.bytes_channel_pad``).
     """
     hf, wf, ci, co = w.shape
-    lay = L.BlockedConvLayout.choose(ci, co)
-    ph, pw = normalize_padding(padding, hf, wf, stride, x.shape[1], x.shape[2])
-    xb = L.nhwc_to_blocked(x, lay.cb_in)
-    wb = L.hwio_to_blocked(w, lay.cb_in, lay.cb_out)
-    bb = None if bias is None else bias.reshape(co // lay.cb_out, lay.cb_out)
-    yb = direct_conv_blocked(xb, wb, stride, (ph, pw), bb, activation)
-    return L.blocked_to_nhwc(yb)
+    cb_in = L.choose_pencil(ci, lane, pad_to_block=pad_to_block)
+    cb_out = L.choose_pencil(co, lane, pad_to_block=pad_to_block)
+    xb = L.nhwc_to_blocked(x, cb_in, pad_to_block=pad_to_block)
+    wb = L.hwio_to_blocked(w, cb_in, cb_out, pad_to_block=pad_to_block)
+    bb = None if bias is None else bias_to_blocked(bias, cb_out)
+    yb = direct_conv_blocked(xb, wb, stride, padding, bb, activation)
+    return L.blocked_to_nhwc(yb, co)
 
 
 @partial(jax.jit, static_argnames=("causal",))

@@ -128,29 +128,60 @@ class BlockedConvLayout:
 # Input / output feature maps:  NHWC  <->  [N, C/Cb, H, W, Cb]
 # ---------------------------------------------------------------------------
 
-def nhwc_to_blocked(x: jnp.ndarray, cb: int) -> jnp.ndarray:
-    """``[N,H,W,C] -> [N, C/Cb, H, W, Cb]`` (paper Fig. 3 left, plus batch)."""
+def nhwc_to_blocked(x: jnp.ndarray, cb: int, *,
+                    pad_to_block: bool = False) -> jnp.ndarray:
+    """``[N,H,W,C] -> [N, C/Cb, H, W, Cb]`` (paper Fig. 3 left, plus batch).
+
+    ``pad_to_block=True`` zero-pads C up to the next multiple of ``cb`` first
+    (the escape hatch :func:`choose_pencil` names for degenerate pencils):
+    the paper's zero-overhead invariant is *explicitly* traded for full
+    lanes, and ``memory_model.bytes_channel_pad`` accounts the traded bytes.
+    ``blocked_to_nhwc(..., c=C)`` strips the pad back off.
+    """
     n, h, w, c = x.shape
     if c % cb:
-        raise ValueError(f"C={c} not divisible by block {cb}")
+        if not pad_to_block:
+            raise ValueError(f"C={c} not divisible by block {cb} "
+                             f"(pass pad_to_block=True to zero-pad)")
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, -c % cb)))
+        c = x.shape[-1]
     x = x.reshape(n, h, w, c // cb, cb)
     return x.transpose(0, 3, 1, 2, 4)
 
 
-def blocked_to_nhwc(x: jnp.ndarray) -> jnp.ndarray:
+def blocked_to_nhwc(x: jnp.ndarray, c: int | None = None) -> jnp.ndarray:
+    """Inverse of :func:`nhwc_to_blocked`; ``c`` strips a pad-to-block tail
+    (the matching strip for ``pad_to_block=True`` packing)."""
     n, cblk, h, w, cb = x.shape
-    return x.transpose(0, 2, 3, 1, 4).reshape(n, h, w, cblk * cb)
+    out = x.transpose(0, 2, 3, 1, 4).reshape(n, h, w, cblk * cb)
+    if c is not None:
+        if not 0 < c <= cblk * cb:
+            raise ValueError(f"cannot strip to C={c} from {cblk * cb} packed "
+                             f"channels")
+        out = out[..., :c]
+    return out
 
 
 # ---------------------------------------------------------------------------
 # Kernel weights:  HWIO  <->  [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob]
 # ---------------------------------------------------------------------------
 
-def hwio_to_blocked(w: jnp.ndarray, cib: int, cob: int) -> jnp.ndarray:
-    """``[Hf,Wf,Ci,Co] -> [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob]`` (Fig. 3 right)."""
+def hwio_to_blocked(w: jnp.ndarray, cib: int, cob: int, *,
+                    pad_to_block: bool = False) -> jnp.ndarray:
+    """``[Hf,Wf,Ci,Co] -> [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob]`` (Fig. 3 right).
+
+    ``pad_to_block=True`` zero-pads Ci/Co up to block multiples (matching
+    :func:`nhwc_to_blocked`'s padded maps: zero input channels contribute
+    zero partial sums, padded output channels are stripped by
+    ``blocked_to_nhwc(..., c=Co)``)."""
     hf, wf, ci, co = w.shape
     if ci % cib or co % cob:
-        raise ValueError(f"Ci={ci}/Co={co} not divisible by blocks {cib}/{cob}")
+        if not pad_to_block:
+            raise ValueError(
+                f"Ci={ci}/Co={co} not divisible by blocks {cib}/{cob} "
+                f"(pass pad_to_block=True to zero-pad)")
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, -ci % cib), (0, -co % cob)))
+        hf, wf, ci, co = w.shape
     w = w.reshape(hf, wf, ci // cib, cib, co // cob, cob)
     #            0    1    2         3     4         5
     return w.transpose(4, 2, 0, 1, 3, 5)

@@ -17,8 +17,8 @@ import dataclasses
 
 from .padding import Padding, normalize_padding, out_size
 
-__all__ = ["ConvShape", "bytes_overhead", "overhead_table",
-           "bytes_repack_boundary", "chain_repack_bytes"]
+__all__ = ["ConvShape", "bytes_overhead", "bytes_channel_pad",
+           "overhead_table", "bytes_repack_boundary", "chain_repack_bytes"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +95,30 @@ def bytes_overhead(s: ConvShape, algorithm: str, dtype_bytes: int = 4) -> int:
     raise ValueError(f"unknown algorithm {algorithm!r}")
 
 
+def bytes_channel_pad(s: ConvShape, lane: int = 128,
+                      dtype_bytes: int = 4) -> int:
+    """Extra bytes the pad-to-block layout trades for full lanes.
+
+    ``choose_pencil(pad_to_block=True)`` returns the pencil ``min(C, lane)``;
+    the packer (``nhwc_to_blocked``/``hwio_to_blocked`` with
+    ``pad_to_block=True``) then zero-pads each channel dim up to the next
+    pencil multiple.  This is the one *deliberate* departure from the
+    paper's zero-overhead invariant — degenerate (e.g. prime) channel counts
+    would otherwise ship nearly empty vector lanes — so the traded bytes are
+    accounted right next to the packing overheads they replace: 0 whenever
+    the channel dims already divide their pencils.
+    """
+    def padded(c: int) -> int:
+        pencil = min(c, lane)
+        return -(-c // pencil) * pencil
+
+    ci_p, co_p = padded(s.ci), padded(s.co)
+    x = s.n * s.hi * s.wi * (ci_p - s.ci)
+    w = s.hf * s.wf * (ci_p * co_p - s.ci * s.co)
+    y = s.n * s.ho * s.wo * (co_p - s.co)
+    return (x + w + y) * dtype_bytes
+
+
 def bytes_repack_boundary(prev: ConvShape, nxt: ConvShape,
                           dtype_bytes: int = 4) -> int:
     """Pack/unpack bytes a *chained* blocked layout eliminates at one layer
@@ -113,7 +137,7 @@ def chain_repack_bytes(shapes, dtype_bytes: int = 4) -> int:
                for a, b in zip(shapes, shapes[1:]))
 
 
-def overhead_table(shapes, dtype_bytes: int = 4):
+def overhead_table(shapes, dtype_bytes: int = 4, lane: int = 128):
     rows = []
     for s in shapes:
         base = s.base_bytes(dtype_bytes)
@@ -121,6 +145,9 @@ def overhead_table(shapes, dtype_bytes: int = 4):
             "layer": s.name,
             "base_MiB": base / 2**20,
             "direct_MiB": 0.0,
+            # pad-to-block lane padding: the explicit (and only) overhead a
+            # blocked layout may choose to trade; 0 for divisible channels
+            "pad_MiB": bytes_channel_pad(s, lane, dtype_bytes) / 2**20,
             "im2col_MiB": bytes_overhead(s, "im2col", dtype_bytes) / 2**20,
             "mec_MiB": bytes_overhead(s, "mec", dtype_bytes) / 2**20,
             "fft_MiB": bytes_overhead(s, "fft", dtype_bytes) / 2**20,

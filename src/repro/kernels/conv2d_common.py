@@ -1,0 +1,158 @@
+"""Shared grid / BlockSpec / epilogue machinery for the blocked direct-conv
+kernel family (forward, dgrad, wgrad — DESIGN.md §2, §7, §9).
+
+All three kernels walk the same kind of grid — a batch-like axis, a channel
+-block output axis, two spatial tile axes and one (or three) reduction axes —
+over operands in the paper's blocked layouts.  What they share lives here so
+that a kernel is only its contraction body:
+
+* ``halo_dims`` / ``halo_window_spec`` — the overlapping (halo'd) input
+  window that plain Blocked indexing cannot express.  Adjacent tiles overlap
+  by the ``Hf - stride`` / ``Wf - stride`` halos, so the BlockSpec uses
+  element-offset indexing (``pl.Unblocked``): the index map returns
+  ``tile * tile_extent * stride`` directly.  Safe with no out-of-bounds
+  semantics because every tile extent divides the corresponding output
+  extent (``core.blocking`` snaps to divisors).
+* ``weight_spec`` / ``tile_spec`` / ``bias_spec`` — the non-overlapping
+  operand blocks, parameterized by how the kernel's grid axes map onto the
+  operand's leading (batch, channel-block) dims.
+* ``tap_windows`` — the in-VMEM strided views, one per filter tap: the rows
+  of the im2col matrix that is never materialized (not in HBM, not in VMEM).
+* ``first_step`` / ``last_step`` — reduction-axis guards for the
+  init-accumulator / flush-epilogue pattern (the output block's index map is
+  constant along reduction axes, so Pallas revisits the same block).
+* ``epilogue_flush`` — the single down-cast store with the fused
+  bias + activation applied on the f32 accumulator (forward); dgrad reuses
+  it with no bias/activation.
+
+Every kernel is parameterized by the same ``core.blocking`` output
+(``Blocking`` for forward/dgrad, ``choose_wgrad_blocking`` for wgrad), which
+is the point of the refactor: the next variant (ROADMAP's halo-DMA streaming
+path) drops into this same machinery.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.direct_conv import apply_activation
+
+__all__ = [
+    "halo_dims", "halo_window_spec", "weight_spec", "tile_spec", "bias_spec",
+    "tap_windows", "first_step", "last_step", "epilogue_flush",
+]
+
+# A map from the kernel's grid indices to the operand's leading block
+# indices.  Forward walks (n, co, th, tw, ci), dgrad (n, ci, th, tw, co),
+# wgrad (co, ci, n, th, tw) — the specs below are grid-order agnostic; each
+# kernel passes the pick function that reorders its grid ids.
+GridPick = Callable[..., Tuple]
+
+
+def halo_dims(hob: int, wob: int, hf: int, wf: int,
+              stride: int = 1) -> Tuple[int, int]:
+    """Input rows/cols feeding one (hob x wob) output tile, halo included."""
+    return (hob - 1) * stride + hf, (wob - 1) * stride + wf
+
+
+def halo_window_spec(hib: int, wib: int, cb: int, hstep: int, wstep: int,
+                     pick: GridPick) -> pl.BlockSpec:
+    """Overlapping input window over a blocked map ``[B, C/Cb, H, W, Cb]``.
+
+    ``hstep``/``wstep`` are the *element* offsets between adjacent tiles'
+    windows (``hob * stride`` / ``wob * stride``); ``pick`` maps the grid ids
+    to ``(batch, channel_block, tile_h, tile_w)``.  Element-offset
+    (``pl.Unblocked``) indexing because adjacent windows overlap by the
+    filter halo — Blocked indexing only expresses multiples of the block
+    shape.
+    """
+    def index_map(*ids):
+        b, c, th, tw = pick(*ids)
+        return (b, c, th * hstep, tw * wstep, 0)
+
+    return pl.BlockSpec((1, 1, hib, wib, cb), index_map,
+                        indexing_mode=pl.Unblocked())
+
+
+def weight_spec(hf: int, wf: int, cib: int, cob: int,
+                pick: GridPick) -> pl.BlockSpec:
+    """One ``[Hf, Wf, Cib, Cob]`` tile of the paper's kernel layout
+    ``[Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob]``; ``pick`` -> (co_block, ci_block).
+    """
+    def index_map(*ids):
+        co, ci = pick(*ids)
+        return (co, ci, 0, 0, 0, 0)
+
+    return pl.BlockSpec((1, 1, hf, wf, cib, cob), index_map)
+
+
+def tile_spec(hob: int, wob: int, cb: int, pick: GridPick) -> pl.BlockSpec:
+    """A non-overlapping ``[hob, wob, cb]`` tile of a blocked map (the
+    output of forward/dgrad, the cotangent operand of wgrad); ``pick`` ->
+    (batch, channel_block, tile_h, tile_w).  For reduction-revisited outputs
+    the picked indices must be constant along the reduction axes."""
+    def index_map(*ids):
+        b, c, th, tw = pick(*ids)
+        return (b, c, th, tw, 0)
+
+    return pl.BlockSpec((1, 1, hob, wob, cb), index_map)
+
+
+def bias_spec(cob: int, pick: GridPick) -> pl.BlockSpec:
+    """One ``[1, Cob]`` bias pencil; ``pick`` -> (co_block,)."""
+    def index_map(*ids):
+        (co,) = pick(*ids)
+        return (co, 0)
+
+    return pl.BlockSpec((1, cob), index_map)
+
+
+def tap_windows(x: jnp.ndarray, hf: int, wf: int, hob: int, wob: int,
+                stride: int = 1) -> Iterator[Tuple[Tuple[int, int],
+                                                   jnp.ndarray]]:
+    """Yield ``((dh, dw), window[hob*wob, cb])`` for every filter tap.
+
+    ``x`` is the resident ``[Hib, Wib, Cb]`` input patch; each window is a
+    *strided VMEM view* (``lax.slice``) — these are the rows of the im2col
+    matrix, never copied out of the already-resident patch.  The unrolled
+    (dh, dw) loop is the paper's n, m loops (``Hf*Wf`` is small).
+    """
+    cb = x.shape[-1]
+    for dh in range(hf):
+        for dw in range(wf):
+            win = jax.lax.slice(
+                x, (dh, dw, 0),
+                (dh + (hob - 1) * stride + 1, dw + (wob - 1) * stride + 1,
+                 cb),
+                (stride, stride, 1))
+            yield (dh, dw), win.reshape(hob * wob, cb)
+
+
+def first_step(axes: Sequence[int]):
+    """True on the first iteration of the given reduction grid axes."""
+    cond = pl.program_id(axes[0]) == 0
+    for a in axes[1:]:
+        cond &= pl.program_id(a) == 0
+    return cond
+
+
+def last_step(axes: Sequence[int]):
+    """True on the last iteration of the given reduction grid axes."""
+    cond = pl.program_id(axes[0]) == pl.num_programs(axes[0]) - 1
+    for a in axes[1:]:
+        cond &= pl.program_id(a) == pl.num_programs(a) - 1
+    return cond
+
+
+def epilogue_flush(o_ref, acc: jnp.ndarray, hob: int, wob: int,
+                   b_ref=None, activation: Optional[str] = None) -> None:
+    """The single output store: bias + activation on the f32 accumulator,
+    one down-cast write of the ``[hob, wob, cb]`` tile (DESIGN.md §5)."""
+    out = acc
+    if b_ref is not None:
+        out = out + b_ref[...].astype(jnp.float32)       # (1, Cob) broadcast
+    out = apply_activation(out, activation)
+    o_ref[0, 0] = out.reshape(hob, wob, o_ref.shape[-1]).astype(o_ref.dtype)

@@ -1,39 +1,44 @@
-"""Pallas TPU kernel: zero-memory-overhead direct convolution (paper Alg. 3).
+"""Pallas TPU kernels: zero-memory-overhead direct convolution (paper Alg. 3)
+— a *family* of three kernels sharing one grid machinery (DESIGN.md §2–§5,
+§7, §9):
 
-TPU mapping of the paper's schedule (see DESIGN.md §2–§5, §7):
+  forward   out = conv(x, w) + bias, activation     (the paper's kernel)
+  dgrad     dx  = conv(dilate(dŷ), mirror(w))        (input gradient)
+  wgrad     dw  = Σ_tiles  x_windowᵀ @ dŷ_tile       (weight gradient)
+
+All three are parameterized by the same ``core.blocking`` output and built
+from ``kernels.conv2d_common``: the halo'd ``pl.Unblocked`` input window,
+the strided ``tap_windows`` VMEM views (the im2col rows that are never
+materialized), the reduction-axis init/flush guards and the fused epilogue.
+
+Forward grid (exactly the paper's schedule):
 
   grid = (N, Co/Cob, Ho/Hob, Wo/Wob, Ci/Cib)   # j', spatial tile, i' (red.)
-  x block   [1, 1, Hib, Wib, Cib]     # halo'd input patch for one output
-                                      #   tile: Hib = (Hob-1)*stride + Hf,
-                                      #         Wib = (Wob-1)*stride + Wf
+  x block   [1, 1, Hib, Wib, Cib]     # halo'd patch: Hib=(Hob-1)*stride+Hf
   w block   [1, 1, Hf, Wf, Cib, Cob]  # paper kernel layout, VMEM
   b block   [1, Cob]                  # bias pencil (only when bias given)
   out block [1, 1, Hob, Wob, Cob]     # the "register" tile (lane dim = Cob)
 
-Spatial tiling is two-dimensional, exactly the paper's (H_o,b x W_o,b)
-register blocking: output rows are tiled by ``Hob`` and output columns by
-``Wob`` (both chosen by ``core.blocking.choose_blocking`` to fit the VMEM
-budget, both snapped to divisors of the output extents).  Adjacent input
-windows overlap by the ``Hf - stride`` / ``Wf - stride`` halos, which plain
-Blocked indexing cannot express; the input BlockSpec therefore uses
-*element-offset* (``pl.Unblocked``) indexing.  Because ``Hob | Ho`` and
-``Wob | Wo``, the last window ends exactly at ``(Ho-1)*stride + Hf - 1 <=
-Hi - 1`` (and likewise in W) — no window ever reads out of bounds, so no
-OOB-padding semantics are relied on.
+dgrad is the same schedule applied to the *transposed* problem: the grid
+walks input-gradient tiles ``(N, Ci/Cib, E_h/Hob, E_w/Wob, Co/Cob)`` with
+the cotangent (stride-dilated, ``Hf-1``-halo-padded) as the windowed
+operand, the filter taps mirrored (``w[Hf-1-dh, Wf-1-dw]``) and the pencil
+contraction flipped to ``Cob`` (``choose_dgrad_blocking`` swaps the roles).
 
-Inside the kernel, the (l, n, m, k, j) loops become:
-  for (dh, dw) in Hf x Wf:            # n, m — unrolled (small)
-      window = strided VMEM view of x at offset (dh, dw)   # never copied
-      acc   += [Hob*Wob, Cib] @ [Cib, Cob] on the MXU      # k, j tile
+wgrad flips which axes are the reduction: the grid is
+``(Co/Cob, Ci/Cib, N, Ho/Hob, Wo/Wob)`` with the *last three* axes reduced
+into one resident ``[Hf, Wf, Cib, Cob]`` f32 accumulator per weight block —
+each step contracts a strided x window against the cotangent tile over the
+``Hob*Wob`` spatial positions (``choose_wgrad_blocking`` sizes the tile
+against the accumulator-widened VMEM inequality).
 
-The im2col matrix is never materialized — not in HBM (the paper's claim) and
-not even in VMEM (windows are views into the already-resident input patch).
-Accumulation over input-channel blocks (innermost grid dim) runs in a float32
-VMEM scratch; on the last step the fused epilogue (bias + activation) is
-applied and the output tile is written once — stacked layers chain in the
-blocked layout with no NHWC round-trip and no separate bias/activation pass.
-When no bias is given the bias operand and its BlockSpec are dropped
-entirely — no dummy zeros are shipped to VMEM on every grid step.
+``direct_conv2d_blocked_pallas`` carries a ``jax.custom_vjp`` wired to the
+backward kernels, so ``jax.grad`` flows *through the Pallas path*: training
+no longer detours through the XLA-scheduled jnp formulation.  The VJP's
+forward saves the pre-activation tile as its epilogue residual (computed by
+the same fused kernel with the activation deferred), so the activation and
+bias cotangents are exact — ``dŷ_pre = dŷ * act'(z)``, ``db = Σ_{N,H,W}
+dŷ_pre`` — and both backward kernels consume ``dŷ_pre``.
 """
 from __future__ import annotations
 
@@ -45,49 +50,324 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.blocking import MachineModel, TPU_V5E, choose_blocking
+from repro.core.blocking import (MachineModel, TPU_V5E, choose_blocking,
+                                 choose_dgrad_blocking, choose_wgrad_blocking,
+                                 dgrad_extents)
 from repro.core.conv_baselines import Padding, normalize_padding
 from repro.core.direct_conv import apply_activation, pad_blocked
+from .conv2d_common import (bias_spec, epilogue_flush, first_step, halo_dims,
+                            halo_window_spec, last_step, tap_windows,
+                            tile_spec, weight_spec)
 
-__all__ = ["direct_conv2d_blocked_pallas"]
+__all__ = ["direct_conv2d_blocked_pallas", "direct_conv2d_dgrad_pallas",
+           "direct_conv2d_wgrad_pallas"]
 
 
-def _kernel(x_ref, w_ref, *rest, hf, wf, hob, wob, stride, n_ci, activation,
-            has_bias):
+# ---------------------------------------------------------------------------
+# kernel bodies — each is only its contraction; the grid/Spec/epilogue
+# machinery is shared (kernels.conv2d_common)
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(x_ref, w_ref, *rest, hf, wf, hob, wob, stride, activation,
+                has_bias):
     if has_bias:
         b_ref, o_ref, acc_ref = rest
     else:
-        o_ref, acc_ref = rest
-    ci = pl.program_id(4)
+        b_ref, (o_ref, acc_ref) = None, rest
 
-    @pl.when(ci == 0)
+    @pl.when(first_step((4,)))
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[0, 0]                      # (Hib, Wib, Cib)
-    cib = x.shape[-1]
     acc = acc_ref[...]
-    for dh in range(hf):
-        for dw in range(wf):
-            win = jax.lax.slice(
-                x, (dh, dw, 0),
-                (dh + (hob - 1) * stride + 1, dw + (wob - 1) * stride + 1,
-                 cib),
-                (stride, stride, 1))                      # (Hob, Wob, Cib)
-            acc = acc + jnp.dot(
-                win.reshape(hob * wob, cib), w_ref[0, 0, dh, dw],
-                preferred_element_type=jnp.float32)
+    for (dh, dw), win in tap_windows(x_ref[0, 0], hf, wf, hob, wob, stride):
+        acc = acc + jnp.dot(win, w_ref[0, 0, dh, dw],
+                            preferred_element_type=jnp.float32)
     acc_ref[...] = acc
 
-    @pl.when(ci == n_ci - 1)
+    @pl.when(last_step((4,)))
     def _flush():
-        out = acc
-        if has_bias:
-            out = out + b_ref[...].astype(jnp.float32)     # (1, Cob) bcast
-        out = apply_activation(out, activation)
-        o_ref[0, 0] = out.reshape(hob, wob,
-                                  o_ref.shape[-1]).astype(o_ref.dtype)
+        epilogue_flush(o_ref, acc, hob, wob, b_ref, activation)
 
+
+def _dgrad_kernel(dy_ref, w_ref, o_ref, acc_ref, *, hf, wf, hob, wob):
+    """Transposed-window input gradient: mirrored taps over the (already
+    dilated + halo-padded) cotangent, contracting the Cob pencil.  Windows
+    slide by 1 — the forward stride lives in the dilation."""
+    @pl.when(first_step((4,)))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc = acc_ref[...]
+    for (dh, dw), win in tap_windows(dy_ref[0, 0], hf, wf, hob, wob, 1):
+        # [Hob*Wob, Cob] x [Cib, Cob] -> [Hob*Wob, Cib]  (contract lanes)
+        acc = acc + jax.lax.dot_general(
+            win, w_ref[0, 0, hf - 1 - dh, wf - 1 - dw],
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(last_step((4,)))
+    def _flush():
+        epilogue_flush(o_ref, acc, hob, wob)
+
+
+def _wgrad_kernel(x_ref, dy_ref, o_ref, acc_ref, *, hf, wf, hob, wob,
+                  stride):
+    """Per-tile accumulating weight gradient: the whole [Hf, Wf, Cib, Cob]
+    block stays resident while the (N, Ho/Hob, Wo/Wob) reduction axes walk;
+    each step contracts the Hob*Wob spatial positions."""
+    @pl.when(first_step((2, 3, 4)))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dy = dy_ref[0, 0].reshape(hob * wob, dy_ref.shape[-1])
+    for (dh, dw), win in tap_windows(x_ref[0, 0], hf, wf, hob, wob, stride):
+        # [Hob*Wob, Cib] x [Hob*Wob, Cob] -> [Cib, Cob]  (contract positions)
+        acc_ref[dh, dw] = acc_ref[dh, dw] + jax.lax.dot_general(
+            win, dy, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(last_step((2, 3, 4)))
+    def _flush():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# forward launch (operates on an already-padded input — always VALID)
+# ---------------------------------------------------------------------------
+
+def _forward_impl(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
+                  activation, hob, wob, machine: MachineModel,
+                  interpret: bool) -> jnp.ndarray:
+    n, ciblk, hi, wi, cib = xp.shape
+    coblk, ciblk2, hf, wf, cib2, cob = w.shape
+    assert (ciblk, cib) == (ciblk2, cib2), (xp.shape, w.shape)
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+
+    # pin cob/cib to this call's actual pencil sizes (and any explicit
+    # hob/wob) so the VMEM fit is evaluated against the blocks the kernel
+    # will really hold; choose_blocking also validates pinned tiles (must
+    # divide Ho/Wo, must fit), so misuse gets the model's clear error here
+    # instead of an opaque VMEM allocation failure at kernel launch
+    blk = choose_blocking(hi, wi, ciblk * cib, coblk * cob, hf, wf,
+                          stride, machine=machine, cob=cob, cib=cib,
+                          hob=hob, wob=wob,
+                          in_dtype_bytes=xp.dtype.itemsize)
+    hob, wob = blk.hob, blk.wob
+    hib, wib = halo_dims(hob, wob, hf, wf, stride)
+
+    has_bias = bias is not None
+    operands = [xp, w]
+    in_specs = [
+        halo_window_spec(hib, wib, cib, hob * stride, wob * stride,
+                         lambda b, co, th, tw, ci: (b, ci, th, tw)),
+        weight_spec(hf, wf, cib, cob,
+                    lambda b, co, th, tw, ci: (co, ci)),
+    ]
+    if has_bias:
+        operands.append(bias)
+        in_specs.append(bias_spec(cob, lambda b, co, th, tw, ci: (co,)))
+
+    grid = (n, coblk, ho // hob, wo // wob, ciblk)
+    return pl.pallas_call(
+        partial(_fwd_kernel, hf=hf, wf=wf, hob=hob, wob=wob, stride=stride,
+                activation=activation, has_bias=has_bias),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=tile_spec(hob, wob, cob,
+                            lambda b, co, th, tw, ci: (b, co, th, tw)),
+        out_shape=jax.ShapeDtypeStruct((n, coblk, ho, wo, cob), xp.dtype),
+        scratch_shapes=[pltpu.VMEM((hob * wob, cob), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# backward kernel launches
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("stride", "hob", "wob", "machine",
+                                   "interpret"))
+def direct_conv2d_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray,
+                               stride: int = 1,
+                               hob: Optional[int] = None,
+                               wob: Optional[int] = None,
+                               machine: MachineModel = TPU_V5E,
+                               interpret: bool = False) -> jnp.ndarray:
+    """Input gradient of the VALID blocked conv, as a direct convolution.
+
+    dy: [N, Co/Cob, Ho, Wo, Cob] cotangent; w: the forward's blocked weights
+    -> [N, Ci/Cib, Eh, Ew, Cib] gradient w.r.t. the *padded* forward input,
+    truncated at the touched extents ``E = (out-1)*stride + filter``
+    (``blocking.dgrad_extents``) — rows/cols of the padded input beyond E
+    are never read by the forward, so their gradient is zero and the caller
+    (the custom VJP) pads/crops to the original input shape.
+
+    The stride is folded into a spatial dilation of the cotangent (s-1 zeros
+    between elements) so the kernel itself always slides by 1; the ``Hf-1``
+    halo pad turns the correlation into the full (transposed) convolution.
+    The dilated copy is the one backward-only memory concession — accounted
+    in ``memory_model``-style terms in DESIGN.md §9.
+    """
+    n, coblk, ho, wo, cob = dy.shape
+    coblk2, ciblk, hf, wf, cib, cob2 = w.shape
+    assert (coblk, cob) == (coblk2, cob2), (dy.shape, w.shape)
+
+    if stride > 1:
+        dyd = jnp.zeros((n, coblk, (ho - 1) * stride + 1,
+                         (wo - 1) * stride + 1, cob), dy.dtype)
+        dyd = dyd.at[:, :, ::stride, ::stride, :].set(dy)
+    else:
+        dyd = dy
+    dyp = pad_blocked(dyd, (hf - 1, hf - 1), (wf - 1, wf - 1))
+
+    eh, ew = dgrad_extents(ho, wo, hf, wf, stride)
+    blk = choose_dgrad_blocking(ho, wo, ciblk * cib, coblk * cob, hf, wf,
+                                stride, machine=machine, cib=cib, cob=cob,
+                                hob=hob, wob=wob,
+                                in_dtype_bytes=dy.dtype.itemsize)
+    hob, wob = blk.hob, blk.wob
+    hib, wib = halo_dims(hob, wob, hf, wf, 1)        # stride lives in dilation
+
+    grid = (n, ciblk, eh // hob, ew // wob, coblk)
+    return pl.pallas_call(
+        partial(_dgrad_kernel, hf=hf, wf=wf, hob=hob, wob=wob),
+        grid=grid,
+        in_specs=[
+            halo_window_spec(hib, wib, cob, hob, wob,
+                             lambda b, ci, th, tw, co: (b, co, th, tw)),
+            weight_spec(hf, wf, cib, cob,
+                        lambda b, ci, th, tw, co: (co, ci)),
+        ],
+        out_specs=tile_spec(hob, wob, cib,
+                            lambda b, ci, th, tw, co: (b, ci, th, tw)),
+        out_shape=jax.ShapeDtypeStruct((n, ciblk, eh, ew, cib), dy.dtype),
+        scratch_shapes=[pltpu.VMEM((hob * wob, cib), jnp.float32)],
+        interpret=interpret,
+    )(dyp, w)
+
+
+@partial(jax.jit, static_argnames=("hf", "wf", "stride", "hob", "wob",
+                                   "machine", "interpret", "out_dtype"))
+def direct_conv2d_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
+                               hf: int, wf: int, stride: int = 1,
+                               hob: Optional[int] = None,
+                               wob: Optional[int] = None,
+                               machine: MachineModel = TPU_V5E,
+                               interpret: bool = False,
+                               out_dtype=None) -> jnp.ndarray:
+    """Weight gradient of the VALID blocked conv, accumulated per tile.
+
+    xp: [N, Ci/Cib, Hi, Wi, Cib] the forward's *padded* input;
+    dy: [N, Co/Cob, Ho, Wo, Cob] cotangent
+    -> [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob] in the paper's kernel layout.
+
+    The (N, Ho/Hob, Wo/Wob) grid axes are the reduction: each (Co, Ci)
+    block's [Hf, Wf, Cib, Cob] accumulator stays resident in f32 VMEM
+    scratch across all their steps and is stored exactly once.
+    """
+    n, ciblk, hi, wi, cib = xp.shape
+    n2, coblk, ho, wo, cob = dy.shape
+    assert n == n2, (xp.shape, dy.shape)
+
+    blk = choose_wgrad_blocking(ho, wo, hf, wf, stride, machine=machine,
+                                cob=cob, cib=cib, hob=hob, wob=wob,
+                                in_dtype_bytes=xp.dtype.itemsize)
+    hob, wob = blk.hob, blk.wob
+    hib, wib = halo_dims(hob, wob, hf, wf, stride)
+
+    grid = (coblk, ciblk, n, ho // hob, wo // wob)
+    return pl.pallas_call(
+        partial(_wgrad_kernel, hf=hf, wf=wf, hob=hob, wob=wob,
+                stride=stride),
+        grid=grid,
+        in_specs=[
+            halo_window_spec(hib, wib, cib, hob * stride, wob * stride,
+                             lambda co, ci, b, th, tw: (b, ci, th, tw)),
+            tile_spec(hob, wob, cob,
+                      lambda co, ci, b, th, tw: (b, co, th, tw)),
+        ],
+        out_specs=weight_spec(hf, wf, cib, cob,
+                              lambda co, ci, b, th, tw: (co, ci)),
+        out_shape=jax.ShapeDtypeStruct((coblk, ciblk, hf, wf, cib, cob),
+                                       out_dtype or xp.dtype),
+        scratch_shapes=[pltpu.VMEM((hf, wf, cib, cob), jnp.float32)],
+        interpret=interpret,
+    )(xp, dy)
+
+
+# ---------------------------------------------------------------------------
+# custom VJP: jax.grad flows through the kernel family
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _conv(x, w, bias, stride, pads, activation, hob, wob, machine,
+          interpret):
+    """Primal: the fully fused forward kernel (inference takes this path —
+    bias + activation inside the epilogue, output written once)."""
+    xp = pad_blocked(x, *pads)
+    return _forward_impl(xp, w, bias, stride, activation, hob, wob, machine,
+                         interpret)
+
+
+def _conv_fwd(x, w, bias, stride, pads, activation, hob, wob, machine,
+              interpret):
+    """VJP forward: the same kernel computes the *pre-activation* tile z (the
+    epilogue residual the backward needs — relu/gelu cotangents are functions
+    of z, not of the activated output); the activation is applied outside.
+    For linear epilogues z IS the output and no extra residual is kept."""
+    xp = pad_blocked(x, *pads)
+    z = _forward_impl(xp, w, bias, stride, None, hob, wob, machine,
+                      interpret)
+    linear = activation in (None, "linear")
+    out = z if linear else apply_activation(
+        z.astype(jnp.float32), activation).astype(z.dtype)
+    return out, (xp, w, bias, None if linear else z)
+
+
+def _conv_bwd(stride, pads, activation, hob, wob, machine, interpret, res,
+              g):
+    xp, w, bias, z = res
+    hf, wf = w.shape[2], w.shape[3]
+
+    # activation cotangent from the epilogue residual
+    if z is None:
+        dz = g
+    else:
+        def act(t):
+            return apply_activation(t.astype(jnp.float32),
+                                    activation).astype(t.dtype)
+        dz = jax.vjp(act, z)[1](g)[0]
+
+    # bias cotangent: the epilogue's broadcast, transposed (pencil sums)
+    db = None if bias is None else \
+        dz.astype(jnp.float32).sum(axis=(0, 2, 3)).astype(bias.dtype)
+
+    # input gradient w.r.t. the padded input, then strip the pads (rows the
+    # forward never touched — beyond the dgrad extents — stay zero)
+    (ph_lo, ph_hi), (pw_lo, pw_hi) = pads
+    hi_p, wi_p = xp.shape[2], xp.shape[3]
+    hi, wi = hi_p - ph_lo - ph_hi, wi_p - pw_lo - pw_hi
+    dxp = direct_conv2d_dgrad_pallas(dz, w, stride=stride, machine=machine,
+                                     interpret=interpret)
+    eh, ew = dxp.shape[2], dxp.shape[3]
+    dxp = jnp.pad(dxp, ((0, 0), (0, 0), (0, hi_p - eh), (0, wi_p - ew),
+                        (0, 0)))
+    dx = dxp[:, :, ph_lo:ph_lo + hi, pw_lo:pw_lo + wi, :].astype(xp.dtype)
+
+    dw = direct_conv2d_wgrad_pallas(xp, dz, hf, wf, stride=stride,
+                                    machine=machine, interpret=interpret,
+                                    out_dtype=jnp.float32).astype(w.dtype)
+    return dx, dw, db
+
+
+_conv.defvjp(_conv_fwd, _conv_bwd)
+
+
+# ---------------------------------------------------------------------------
+# public entry point
+# ---------------------------------------------------------------------------
 
 @partial(jax.jit,
          static_argnames=("stride", "padding", "activation", "hob", "wob",
@@ -101,63 +381,22 @@ def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
                                  wob: Optional[int] = None,
                                  machine: MachineModel = TPU_V5E,
                                  interpret: bool = False) -> jnp.ndarray:
-    """Tiled + fused direct convolution on the paper's blocked layouts.
+    """Tiled + fused direct convolution on the paper's blocked layouts,
+    differentiable end to end (custom VJP -> the dgrad/wgrad kernels).
 
     x: [N, Ci/Cib, Hi, Wi, Cib]; w: [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob];
     bias: [Co/Cob, Cob] or None -> [N, Co/Cob, Ho, Wo, Cob].
 
     ``padding`` is stride-aware (TF SAME semantics); ``hob``/``wob`` (output
     rows/cols per spatial tile) default to the analytical blocking model's
-    choice for ``machine`` and must divide Ho/Wo.
+    choice for ``machine`` and must divide Ho/Wo.  ``jax.grad`` through this
+    function runs the transposed-window dgrad and per-tile wgrad Pallas
+    kernels (their tiles sized by ``choose_dgrad_blocking`` /
+    ``choose_wgrad_blocking`` for the same ``machine``), with bias and
+    activation cotangents taken from the fused epilogue's residuals.
     """
-    n, ciblk, hi, wi, cib = x.shape
-    coblk, ciblk2, hf, wf, cib2, cob = w.shape
-    assert (ciblk, cib) == (ciblk2, cib2), (x.shape, w.shape)
-    ph, pw = normalize_padding(padding, hf, wf, stride, hi, wi)
-    x = pad_blocked(x, ph, pw)
     hi, wi = x.shape[2], x.shape[3]
-    ho = (hi - hf) // stride + 1
-    wo = (wi - wf) // stride + 1
-
-    # pin cob/cib to this call's actual pencil sizes (and any explicit
-    # hob/wob) so the VMEM fit is evaluated against the blocks the kernel
-    # will really hold; choose_blocking also validates pinned tiles (must
-    # divide Ho/Wo, must fit), so misuse gets the model's clear error here
-    # instead of an opaque VMEM allocation failure at kernel launch
-    blk = choose_blocking(hi, wi, ciblk * cib, coblk * cob, hf, wf,
-                          stride, machine=machine, cob=cob, cib=cib,
-                          hob=hob, wob=wob,
-                          in_dtype_bytes=x.dtype.itemsize)
-    hob, wob = blk.hob, blk.wob
-    hib = (hob - 1) * stride + hf        # halo'd input rows per output tile
-    wib = (wob - 1) * stride + wf        # halo'd input cols per output tile
-    n_ho, n_wo = ho // hob, wo // wob
-
-    has_bias = bias is not None
-    operands = [x, w]
-    in_specs = [
-        # Overlapping halo windows -> element-offset (Unblocked) indexing.
-        pl.BlockSpec((1, 1, hib, wib, cib),
-                     lambda b, co, th, tw, ci: (b, ci, th * hob * stride,
-                                                tw * wob * stride, 0),
-                     indexing_mode=pl.Unblocked()),
-        pl.BlockSpec((1, 1, hf, wf, cib, cob),
-                     lambda b, co, th, tw, ci: (co, ci, 0, 0, 0, 0)),
-    ]
-    if has_bias:
-        operands.append(bias)
-        in_specs.append(
-            pl.BlockSpec((1, cob), lambda b, co, th, tw, ci: (co, 0)))
-
-    grid = (n, coblk, n_ho, n_wo, ciblk)
-    return pl.pallas_call(
-        partial(_kernel, hf=hf, wf=wf, hob=hob, wob=wob, stride=stride,
-                n_ci=ciblk, activation=activation, has_bias=has_bias),
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, hob, wob, cob),
-                               lambda b, co, th, tw, ci: (b, co, th, tw, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, coblk, ho, wo, cob), x.dtype),
-        scratch_shapes=[pltpu.VMEM((hob * wob, cob), jnp.float32)],
-        interpret=interpret,
-    )(*operands)
+    hf, wf = w.shape[2], w.shape[3]
+    pads = normalize_padding(padding, hf, wf, stride, hi, wi)
+    return _conv(x, w, bias, stride, pads, activation, hob, wob, machine,
+                 interpret)

@@ -15,8 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import layout as L
-from repro.core.conv_baselines import Padding, normalize_padding
-from repro.core.direct_conv import direct_conv_nhwc, direct_conv1d_depthwise
+from repro.core.conv_baselines import Padding
+from repro.core.direct_conv import (bias_to_blocked, direct_conv_nhwc,
+                                    direct_conv1d_depthwise)
 from .conv1d_depthwise import conv1d_depthwise_blocked_pallas
 from .direct_conv2d import direct_conv2d_blocked_pallas
 
@@ -41,17 +42,20 @@ def direct_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
 
     Padding is stride-aware (TF SAME semantics); bias + activation are fused
     into the kernel epilogue (applied once, on the final Ci block's flush).
+    Differentiable on both paths (the Pallas kernel carries a custom VJP).
     """
     if not use_pallas:
         return direct_conv_nhwc(x, w, stride, padding, bias, activation)
-    hf, wf, ci, co = w.shape
-    ph, pw = normalize_padding(padding, hf, wf, stride, x.shape[1], x.shape[2])
+    ci, co = w.shape[2], w.shape[3]
+    # pure layout sandwich: padding is normalized exactly once, inside the
+    # kernel wrapper (the blocked map keeps the same H/W), and the bias is
+    # reblocked by the shared helper — no per-call re-derivation
     lay = L.BlockedConvLayout.choose(ci, co)
     xb = L.nhwc_to_blocked(x, lay.cb_in)
     wb = L.hwio_to_blocked(w, lay.cb_in, lay.cb_out)
-    bb = None if bias is None else bias.reshape(co // lay.cb_out, lay.cb_out)
+    bb = None if bias is None else bias_to_blocked(bias, lay.cb_out)
     yb = direct_conv2d_blocked_pallas(
-        xb, wb, bb, stride=stride, padding=(ph, pw), activation=activation,
+        xb, wb, bb, stride=stride, padding=padding, activation=activation,
         interpret=_interpret_default(interpret))
     return L.blocked_to_nhwc(yb)
 

@@ -9,11 +9,13 @@ repacking" claim.  Weights are *stored* in the paper's kernel layout
 as channel pencils ``[Co/Cob, Cob]``.  Bias + activation are fused into the
 convolution epilogue (DESIGN.md §5).
 
-Two execution paths share one semantics:
-  * ``use_pallas=False`` (default): the pure-JAX direct formulation — fully
-    differentiable, used for training;
-  * ``use_pallas=True``: the tiled Pallas kernel (interpret mode off-TPU) —
-    the inference path.
+Two execution paths share one semantics, and both are fully differentiable:
+  * ``use_pallas=False`` (default): the pure-JAX direct formulation (the
+    XLA-scheduled oracle);
+  * ``use_pallas=True``: the tiled Pallas kernel family (interpret mode
+    off-TPU) — forward, plus its custom VJP routing ``jax.grad`` through
+    the transposed-window dgrad and per-tile wgrad kernels (DESIGN.md §9),
+    so training runs entirely inside the blocked layout too.
 """
 from __future__ import annotations
 
@@ -81,6 +83,9 @@ class BlockedConv2D:
 
     def __call__(self, p, xb: jnp.ndarray, *, use_pallas: bool = False,
                  interpret: Optional[bool] = None) -> jnp.ndarray:
+        """Both paths are differentiable: the Pallas path carries a custom
+        VJP (dgrad/wgrad kernels), so this layer trains through the kernel
+        with no fallback to the jnp formulation."""
         bias = p["b"] if self.use_bias else None
         if use_pallas:
             from repro.kernels.direct_conv2d import direct_conv2d_blocked_pallas

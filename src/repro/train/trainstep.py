@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.nn.conv import BlockedCNN
 from repro.nn.models import EncDec, LM
 from repro.nn.module import Parallelism
 from .losses import cross_entropy
@@ -25,11 +26,20 @@ class TrainSettings:
     unroll: bool = False             # unroll the layer scan (cost extraction)
     fused_loss: bool = False         # chunked CE: never materialize logits
     loss_chunks: int = 8
+    use_pallas: bool = False         # conv models: train through the Pallas
+                                     # kernel family (custom VJP) instead of
+                                     # the XLA-scheduled jnp formulation
 
 
 def forward(model, params, batch: Dict[str, Any], *, train=True,
-            remat="full", chunk=2048, unroll=False, return_hidden=False):
+            remat="full", chunk=2048, unroll=False, return_hidden=False,
+            use_pallas=False):
     """Uniform forward over model families."""
+    if isinstance(model, BlockedCNN):
+        # blocked-layout image classifier: NHWC batch in, class logits out;
+        # use_pallas routes every conv (fwd AND bwd) through the kernels
+        return model(params, batch["images"], use_pallas=use_pallas), \
+            jnp.zeros((), jnp.float32)
     if isinstance(model, EncDec):
         return model(params, batch["tokens"], batch["frames"], train=train,
                      remat=remat, chunk=chunk, unroll=unroll,
@@ -40,7 +50,20 @@ def forward(model, params, batch: Dict[str, Any], *, train=True,
                  return_hidden=return_hidden)
 
 
-def make_loss_fn(model, cfg: ModelConfig, settings: TrainSettings):
+def make_loss_fn(model, cfg: Optional[ModelConfig], settings: TrainSettings):
+    if isinstance(model, BlockedCNN):
+        # image classification: cfg is not needed (the class count lives on
+        # the model); cross_entropy over a singleton "sequence" axis
+        def conv_loss_fn(params, batch):
+            logits, aux = forward(model, params, batch, train=True,
+                                  use_pallas=settings.use_pallas)
+            loss, metrics = cross_entropy(
+                logits[:, None, :], batch["targets"][:, None].astype(jnp.int32),
+                model.n_classes)
+            metrics["aux_loss"] = aux
+            return loss + aux, metrics
+        return conv_loss_fn
+
     from repro.nn.models import EncDec as _EncDec
     lm = model.decoder if isinstance(model, _EncDec) else model
 
@@ -72,13 +95,18 @@ def make_loss_fn(model, cfg: ModelConfig, settings: TrainSettings):
     return loss_fn
 
 
-def make_train_step(model, cfg: ModelConfig, optimizer: AdamW,
+def make_train_step(model, cfg: Optional[ModelConfig], optimizer: AdamW,
                     settings: TrainSettings = TrainSettings()):
     """-> train_step(params, opt_state, batch) -> (params, state, metrics).
 
     With accum_steps > 1 the global batch is split along dim 0 into
     microbatches scanned sequentially — activation memory drops by the same
     factor while the gradient math is identical (mean of microbatch grads).
+
+    Works for LM/EncDec token models and for ``BlockedCNN`` image
+    classifiers (``cfg`` may be None there; batches carry ``images`` +
+    ``targets``, and ``settings.use_pallas`` trains through the Pallas
+    custom-VJP kernel family — gradient accumulation included).
     """
     loss_fn = make_loss_fn(model, cfg, settings)
     grad_fn = jax.grad(loss_fn, has_aux=True)

@@ -1,0 +1,383 @@
+"""Training through the kernel (ISSUE 3): the custom-VJP blocked direct
+convolution.
+
+* gradient-equivalence sweep: ``jax.grad`` through
+  ``direct_conv2d_blocked_pallas`` (interpret mode) == the
+  ``lax.conv_general_dilated`` oracle for dx, dw AND db, across
+  stride x padding x bias x activation on shapes forcing multiple spatial
+  tiles;
+* the backward kernels honor the backward blocking model: a small VMEM
+  budget forces multi-tile dgrad/wgrad grids that still match the oracle;
+* ``BlockedConv2D(use_pallas=True)`` is differentiable, and a
+  ``make_train_step`` gradient-accumulation step through the Pallas path
+  equals the jnp path / the unaccumulated step;
+* ``direct_conv_nhwc``'s gradient is the blocked path's gradient bit for
+  bit (it is the layout-sandwich oracle the sweeps rely on);
+* backward tile sizing: ``choose_dgrad_blocking`` divides the dgrad
+  extents, ``choose_wgrad_blocking`` shrinks under the accumulator-widened
+  inequality and raises on genuine misfits;
+* channel padding as a layout op: pad-to-block pack/strip round-trips, the
+  padded convolution matches the unpadded oracle, and ``memory_model``
+  accounts the traded bytes.
+"""
+import zlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import direct_conv as D
+from repro.core import layout as L
+from repro.core.blocking import (MachineModel, choose_dgrad_blocking,
+                                 choose_wgrad_blocking, dgrad_extents,
+                                 wgrad_resident_bytes)
+from repro.core.memory_model import ConvShape, bytes_channel_pad
+from repro.kernels.direct_conv2d import (direct_conv2d_blocked_pallas,
+                                         direct_conv2d_dgrad_pallas,
+                                         direct_conv2d_wgrad_pallas)
+from repro.nn.conv import BlockedCNN, BlockedConv2D
+from repro.nn.module import init_tree
+
+
+def _oracle(x, w, stride, padding, bias, activation):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if bias is not None:
+        y = y + bias
+    return D.apply_activation(y, activation)
+
+
+def _blocked(x, w, bias, lane):
+    ci, co = w.shape[2], w.shape[3]
+    lay = L.BlockedConvLayout.choose(ci, co, lane=lane)
+    xb = L.nhwc_to_blocked(x, lay.cb_in)
+    wb = L.hwio_to_blocked(w, lay.cb_in, lay.cb_out)
+    bb = None if bias is None else bias.reshape(co // lay.cb_out, lay.cb_out)
+    return xb, wb, bb
+
+
+# hi, wi, ci, co, hf, wf, lane, hob, wob — explicit tiles force multi-tile
+# grids (halo'd windows in both spatial dims); None -> the blocking model
+SWEEP = [
+    (11, 9, 4, 8, 3, 3, 4, 3, 3),
+    (12, 12, 4, 8, 3, 3, 4, 2, 3),
+    (9, 8, 2, 4, 2, 3, 2, None, 4),     # even filter, multiple Ci blocks
+]
+
+
+@pytest.mark.parametrize("case", SWEEP)
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("use_bias", [True, False])
+@pytest.mark.parametrize("activation", ["relu", "gelu", None])
+def test_grad_sweep_pallas_vs_lax(case, stride, padding, use_bias,
+                                  activation):
+    hi, wi, ci, co, hf, wf, lane, hob, wob = case
+    rng = np.random.default_rng(
+        zlib.crc32(repr((case, stride, padding, activation)).encode()))
+    x = jnp.asarray(rng.normal(size=(2, hi, wi, ci)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(hf, wf, ci, co)).astype(np.float32))
+    b = (jnp.asarray(rng.normal(size=(co,)).astype(np.float32))
+         if use_bias else None)
+    xb, wb, bb = _blocked(x, w, b, lane)
+
+    ho = -(-hi // stride) if padding == "SAME" else (hi - hf) // stride + 1
+    wo = -(-wi // stride) if padding == "SAME" else (wi - wf) // stride + 1
+    if hob is not None and ho % hob:
+        hob = None                      # explicit tile must divide this Ho
+    if wob is not None and wo % wob:
+        wob = None
+
+    out = direct_conv2d_blocked_pallas(
+        xb, wb, bb, stride=stride, padding=padding, activation=activation,
+        hob=hob, wob=wob, interpret=True)
+    r = jnp.asarray(rng.normal(size=out.shape).astype(np.float32))
+    rn = L.blocked_to_nhwc(r)
+
+    argnums = (0, 1, 2) if use_bias else (0, 1)
+
+    def loss_pallas(xb_, wb_, bb_=None):
+        return jnp.sum(direct_conv2d_blocked_pallas(
+            xb_, wb_, bb_, stride=stride, padding=padding,
+            activation=activation, hob=hob, wob=wob, interpret=True) * r)
+
+    def loss_lax(x_, w_, b_=None):
+        return jnp.sum(_oracle(x_, w_, stride, padding, b_, activation) * rn)
+
+    pargs = (xb, wb, bb) if use_bias else (xb, wb)
+    oargs = (x, w, b) if use_bias else (x, w)
+    gp = jax.grad(loss_pallas, argnums=argnums)(*pargs)
+    go = jax.grad(loss_lax, argnums=argnums)(*oargs)
+
+    np.testing.assert_allclose(
+        np.asarray(L.blocked_to_nhwc(gp[0])), np.asarray(go[0]),
+        rtol=2e-4, atol=2e-4, err_msg="dx")
+    np.testing.assert_allclose(
+        np.asarray(L.blocked_to_hwio(gp[1])), np.asarray(go[1]),
+        rtol=2e-4, atol=2e-4, err_msg="dw")
+    if use_bias:
+        np.testing.assert_allclose(
+            np.asarray(gp[2]).reshape(-1), np.asarray(go[2]),
+            rtol=2e-4, atol=2e-4, err_msg="db")
+
+
+# Small enough that dgrad AND wgrad must tile (the wgrad accumulator alone
+# is 2304 B here), large enough that both fit at some (hob, wob).
+TINY = MachineModel(name="tiny-bwd", n_vec=8, n_fma=1, l_fma=8, n_reg=64,
+                    vmem_bytes=10000)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_backward_kernels_tile_under_vmem_pressure(stride):
+    """The backward blocking model engages (multi-tile dgrad/wgrad grids)
+    and the gradients still match the oracle."""
+    rng = np.random.default_rng(11 + stride)
+    x = jnp.asarray(rng.normal(size=(2, 16, 16, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 8, 8)).astype(np.float32))
+    xb, wb, _ = _blocked(x, w, None, 8)
+    ho = wo = 16 // stride
+
+    dblk = choose_dgrad_blocking(ho, wo, 8, 8, 3, 3, stride, machine=TINY,
+                                 cib=8, cob=8)
+    wblk = choose_wgrad_blocking(ho, wo, 3, 3, stride, machine=TINY,
+                                 cob=8, cib=8)
+    eh, ew = dgrad_extents(ho, wo, 3, 3, stride)
+    assert dblk.hob * dblk.wob < eh * ew          # dgrad really tiled
+    assert wblk.hob * wblk.wob < ho * wo          # wgrad really tiled
+
+    out = direct_conv2d_blocked_pallas(xb, wb, stride=stride, padding="SAME",
+                                       machine=TINY, interpret=True)
+    r = jnp.asarray(rng.normal(size=out.shape).astype(np.float32))
+    rn = L.blocked_to_nhwc(r)
+    gp = jax.grad(lambda a, b: jnp.sum(direct_conv2d_blocked_pallas(
+        a, b, stride=stride, padding="SAME", machine=TINY,
+        interpret=True) * r), argnums=(0, 1))(xb, wb)
+    go = jax.grad(lambda a, b: jnp.sum(
+        _oracle(a, b, stride, "SAME", None, None) * rn),
+        argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(L.blocked_to_nhwc(gp[0])),
+                               np.asarray(go[0]), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(L.blocked_to_hwio(gp[1])),
+                               np.asarray(go[1]), rtol=2e-4, atol=2e-4)
+
+
+def test_backward_kernels_directly_match_jnp_vjp():
+    """Unit-level: each backward kernel alone == jax.vjp of the jnp blocked
+    formulation (no activation/bias in the way)."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(2, 10, 11, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 2, 4, 8)).astype(np.float32))
+    xb, wb, _ = _blocked(x, w, None, 4)
+    stride = 2
+    out, vjp = jax.vjp(
+        lambda a, b: D.direct_conv_blocked(a, b, stride, "VALID"), xb, wb)
+    dy = jnp.asarray(rng.normal(size=out.shape).astype(np.float32))
+    want_dx, want_dw = vjp(dy)
+
+    got_dxe = direct_conv2d_dgrad_pallas(dy, wb, stride=stride,
+                                         interpret=True)
+    # embed the touched-extent gradient into the full input plane
+    eh, ew = got_dxe.shape[2], got_dxe.shape[3]
+    got_dx = jnp.pad(got_dxe, ((0, 0), (0, 0), (0, 10 - eh), (0, 11 - ew),
+                               (0, 0)))
+    np.testing.assert_allclose(np.asarray(got_dx), np.asarray(want_dx),
+                               rtol=2e-4, atol=2e-4)
+
+    got_dw = direct_conv2d_wgrad_pallas(xb, dy, 3, 2, stride=stride,
+                                        interpret=True)
+    np.testing.assert_allclose(np.asarray(got_dw), np.asarray(want_dw),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_blocked_conv2d_layer_trains_through_pallas():
+    """jax.grad through BlockedConv2D(use_pallas=True) == the jnp path."""
+    conv = BlockedConv2D(ci=4, co=8, stride=2, padding="SAME",
+                         activation="relu", lane=4)
+    p = init_tree(conv.specs(), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    xb = L.nhwc_to_blocked(
+        jnp.asarray(rng.normal(size=(2, 9, 9, 4)).astype(np.float32)), 4)
+
+    def loss(p, use_pallas):
+        out = conv(p, xb, use_pallas=use_pallas, interpret=True)
+        return jnp.sum(out * out)
+
+    gp = jax.grad(loss)(p, True)
+    gj = jax.grad(loss)(p, False)
+    for a, b in zip(jax.tree.leaves(gp), jax.tree.leaves(gj)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_train_step_grad_accum_through_pallas():
+    """make_train_step drives the custom VJP: accumulated microbatch grads
+    through the Pallas path == single-batch, == the jnp path."""
+    from repro.train.optimizer import AdamW
+    from repro.train.trainstep import TrainSettings, make_train_step
+
+    model = BlockedCNN(convs=(BlockedConv2D(ci=4, co=8, lane=4),
+                              BlockedConv2D(ci=8, co=8, stride=2, lane=4)),
+                       n_classes=3)
+    p = init_tree(model.specs(), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "images": jnp.asarray(
+            rng.normal(size=(4, 8, 8, 4)).astype(np.float32)),
+        "targets": jnp.asarray(rng.integers(0, 3, 4, dtype=np.int32)),
+    }
+    opt = AdamW(lr=lambda s: jnp.float32(1e-2), weight_decay=0.0)
+    outs = {}
+    for pallas in (False, True):
+        for accum in (1, 2):
+            step = make_train_step(
+                model, None, opt,
+                TrainSettings(accum_steps=accum, use_pallas=pallas))
+            pp, _, _ = jax.jit(step)(p, opt.init(p), batch)
+            outs[(pallas, accum)] = np.asarray(jax.tree.leaves(pp)[0])
+    np.testing.assert_allclose(outs[(True, 2)], outs[(True, 1)],
+                               rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(outs[(True, 1)], outs[(False, 1)],
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_short_training_same_loss_both_paths():
+    """A few optimizer steps end to end: the Pallas custom-VJP path and the
+    jnp path reach the same losses on the same data (the acceptance
+    criterion behind examples/train_conv_net.py --pallas)."""
+    from repro.train.optimizer import AdamW
+    from repro.train.trainstep import TrainSettings, make_train_step
+
+    model = BlockedCNN(convs=(BlockedConv2D(ci=4, co=8, lane=4),),
+                       n_classes=4)
+    rng = np.random.default_rng(1)
+    opt = AdamW(lr=lambda s: jnp.float32(5e-3), weight_decay=0.0)
+    losses = {}
+    for pallas in (False, True):
+        p = init_tree(model.specs(), jax.random.PRNGKey(0))
+        st = opt.init(p)
+        step = jax.jit(make_train_step(model, None, opt,
+                                       TrainSettings(use_pallas=pallas)))
+        rng = np.random.default_rng(1)          # same batches for both
+        ls = []
+        for _ in range(3):
+            batch = {
+                "images": jnp.asarray(
+                    rng.normal(size=(4, 6, 6, 4)).astype(np.float32)),
+                "targets": jnp.asarray(rng.integers(0, 4, 4,
+                                                    dtype=np.int32)),
+            }
+            p, st, m = step(p, st, batch)
+            ls.append(float(m["nll"]))
+        losses[pallas] = ls
+    np.testing.assert_allclose(losses[True], losses[False],
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the nhwc oracle and the layout satellites
+# ---------------------------------------------------------------------------
+
+def test_nhwc_gradient_is_blocked_gradient_bit_for_bit():
+    """direct_conv_nhwc is a pure layout sandwich: its jax.grad must equal
+    the manually-blocked path's gradient exactly (permutation VJPs are
+    permutations)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(2, 8, 8, 8)).astype(np.float32))
+
+    g1 = jax.grad(lambda x_, w_: jnp.sum(
+        D.direct_conv_nhwc(x_, w_, 1, "SAME") * r), argnums=(0, 1))(x, w)
+
+    def blocked(x_, w_):
+        xb = L.nhwc_to_blocked(x_, 4)
+        wb = L.hwio_to_blocked(w_, 4, 8)
+        return L.blocked_to_nhwc(D.direct_conv_blocked(xb, wb, 1, "SAME"))
+
+    g2 = jax.grad(lambda x_, w_: jnp.sum(blocked(x_, w_) * r),
+                  argnums=(0, 1))(x, w)
+    np.testing.assert_array_equal(np.asarray(g1[0]), np.asarray(g2[0]))
+    np.testing.assert_array_equal(np.asarray(g1[1]), np.asarray(g2[1]))
+
+
+def test_pad_to_block_layout_op():
+    """First-class channel padding: pack pads, unpack strips, the padded
+    convolution equals the oracle, and gradients flow (zero rows stay
+    zero)."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(2, 9, 9, 5)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 5, 6)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(6,)).astype(np.float32))
+
+    # pack/strip round trip
+    xb = L.nhwc_to_blocked(x, 4, pad_to_block=True)
+    assert xb.shape == (2, 2, 9, 9, 4)             # 5 -> 8 channels
+    np.testing.assert_array_equal(np.asarray(L.blocked_to_nhwc(xb, 5)),
+                                  np.asarray(x))
+    with pytest.raises(ValueError, match="pad_to_block"):
+        L.nhwc_to_blocked(x, 4)
+    with pytest.raises(ValueError, match="pad_to_block"):
+        L.hwio_to_blocked(w, 4, 4)
+
+    got = D.direct_conv_nhwc(x, w, 2, "SAME", b, "relu",
+                             pad_to_block=True, lane=4)
+    want = _oracle(x, w, 2, "SAME", b, "relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+    g = jax.grad(lambda x_: jnp.sum(D.direct_conv_nhwc(
+        x_, w, 2, "SAME", b, "relu", pad_to_block=True, lane=4)))(x)
+    gw = jax.grad(lambda x_: jnp.sum(_oracle(x_, w, 2, "SAME", b,
+                                             "relu")))(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gw),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_bytes_channel_pad_accounting():
+    s = ConvShape("prime", 1, 8, 8, 131, 131, 3, 3)
+    pad = bytes_channel_pad(s, lane=128)
+    # 131 -> 256 in both channel dims (pencil 128)
+    assert pad == (8 * 8 * 125 + 9 * (256 * 256 - 131 * 131)
+                   + 6 * 6 * 125) * 4
+    assert bytes_channel_pad(ConvShape("even", 1, 8, 8, 128, 256, 3, 3)) == 0
+    # narrow layers keep their original pencil: no pad (paper's first-layer
+    # choice)
+    assert bytes_channel_pad(ConvShape("narrow", 1, 8, 8, 3, 64, 3, 3)) == 0
+    from repro.core.memory_model import overhead_table
+    row = overhead_table([s])[0]
+    assert row["pad_MiB"] == pad / 2**20
+
+
+# ---------------------------------------------------------------------------
+# backward blocking model
+# ---------------------------------------------------------------------------
+
+def test_dgrad_blocking_divides_extents():
+    for stride in (1, 2, 3):
+        ho = wo = 12
+        eh, ew = dgrad_extents(ho, wo, 3, 3, stride)
+        blk = choose_dgrad_blocking(ho, wo, 64, 64, 3, 3, stride,
+                                    cib=64, cob=64)
+        assert eh % blk.hob == 0 and ew % blk.wob == 0
+        # dgrad swaps the pencil roles: cob is the *input*-channel pencil
+        assert blk.cob == 64 and blk.cib == 64
+
+
+def test_wgrad_blocking_inequality_and_errors():
+    blk = choose_wgrad_blocking(16, 16, 3, 3, machine=TINY, cob=8, cib=8)
+    assert 16 % blk.hob == 0 and 16 % blk.wob == 0
+    assert wgrad_resident_bytes(blk.hob, blk.wob, 8, 8, 3, 3) \
+        <= TINY.vmem_bytes
+    # the resident accumulator makes the inequality strictly harder than
+    # the forward's at the same tile
+    from repro.core.blocking import resident_bytes
+    assert wgrad_resident_bytes(4, 4, 8, 8, 3, 3) > \
+        resident_bytes(4, 4, 8, 8, 3, 3)
+    with pytest.raises(ValueError, match="hob=5 must divide"):
+        choose_wgrad_blocking(16, 16, 3, 3, hob=5)
+    micro = MachineModel(name="micro", n_vec=8, n_fma=1, l_fma=1, n_reg=8,
+                         vmem_bytes=512)
+    with pytest.raises(ValueError, match="does not fit VMEM"):
+        choose_wgrad_blocking(8, 8, 3, 3, machine=micro, cob=8, cib=8)
