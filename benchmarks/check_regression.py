@@ -1,0 +1,103 @@
+"""CI perf-regression gate: compare a fresh fig_conv JSON to the baseline.
+
+The CI bench job runs ``python -m benchmarks.fig_conv --smoke --backward
+--dtype f32 --dtype bf16 --json BENCH_ci.json`` on the pinned ``CI_SHAPES``
+set, uploads the JSON as an artifact (the perf trajectory), and gates on
+this script: every timing in the candidate must stay within ``--threshold``
+(default 2x) of the checked-in ``BENCH_baseline.json``.
+
+Rows are keyed by ``(section, layer, dtype)``; only ``*_us`` wall-clock
+fields gate (ratio fields like ``direct_bwd_over_fwd`` are derived and
+noisy-by-division).  A baseline row missing from the candidate fails —
+silently dropping a shape from the bench would otherwise read as "no
+regressions".  Candidate-only rows are reported but don't gate (new shapes
+start accumulating trajectory before they have a baseline).
+
+The CI shapes run in tens of microseconds, where shared-runner noise is the
+same order as the signal, so a violation must clear BOTH bars: the ratio
+threshold AND an absolute delta (``--atol-us``).  A 40us -> 90us wobble is
+runner noise; a sustained 100us -> 400us median-of-5 is a real regression.
+
+Usage:  python benchmarks/check_regression.py BENCH_baseline.json \
+            BENCH_ci.json [--threshold 2.0] [--atol-us 250]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _rows_by_key(report: dict) -> dict:
+    out = {}
+    for section, rows in report.items():
+        for row in rows:
+            out[(section, row.get("layer"), row.get("dtype", "f32"))] = row
+    return out
+
+
+def compare(baseline: dict, candidate: dict, threshold: float,
+            atol_us: float = 0.0):
+    """-> (failures, notes): failures are gate violations, notes are FYI."""
+    base, cand = _rows_by_key(baseline), _rows_by_key(candidate)
+    failures, notes = [], []
+    for key, brow in base.items():
+        crow = cand.get(key)
+        if crow is None:
+            failures.append(f"{key}: row missing from candidate")
+            continue
+        for field, bval in brow.items():
+            if not field.endswith("_us") or not isinstance(bval, (int, float)):
+                continue
+            cval = crow.get(field)
+            if cval is None:
+                failures.append(f"{key}.{field}: missing from candidate")
+                continue
+            ratio = cval / max(bval, 1e-9)
+            line = (f"{key}.{field}: {bval:.1f}us -> {cval:.1f}us "
+                    f"({ratio:.2f}x)")
+            if ratio > threshold and cval - bval > atol_us:
+                failures.append(line)
+            elif ratio > 1.0:
+                notes.append(line)
+    for key in cand.keys() - base.keys():
+        notes.append(f"{key}: new row (no baseline yet)")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail if any benchmark step time regresses past the "
+                    "threshold vs the checked-in baseline")
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="max allowed candidate/baseline ratio (default 2x "
+                         "— CI runners are noisy; the trajectory artifact "
+                         "is the fine-grained record)")
+    ap.add_argument("--atol-us", type=float, default=250.0,
+                    help="a ratio violation only gates if the absolute "
+                         "regression also exceeds this many microseconds "
+                         "(keeps tens-of-us runner wobble out of the gate)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+
+    failures, notes = compare(baseline, candidate, args.threshold,
+                              args.atol_us)
+    for n in notes:
+        print(f"note: {n}")
+    if failures:
+        print(f"\n{len(failures)} regression(s) past {args.threshold}x:")
+        for fail in failures:
+            print(f"FAIL: {fail}")
+        return 1
+    print(f"\nok: all step times within {args.threshold}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,12 +10,13 @@ headline claim) are exact, from compiled buffer analysis in memory_table.py.
 
 Runnable:  PYTHONPATH=src python -m benchmarks.fig_conv [--backward] [--json f]
 (the ``-m`` form is required — the module uses relative imports).
-``--backward`` adds fwd+bwd training-step timings; ``--smoke`` uses tiny
-CI-sized shapes.
+``--backward`` adds fwd+bwd training-step timings; ``--smoke`` uses the
+pinned CI-sized shapes (``CI_SHAPES`` — the CI bench job's fixed set, so the
+``BENCH_*.json`` trajectory is comparable run to run); ``--dtype f32
+--dtype bf16`` sweeps the mixed-precision operand dtype (rows are tagged,
+accumulation stays f32 per the precision policy).
 """
 from __future__ import annotations
-
-import functools
 
 import numpy as np
 import jax
@@ -26,7 +27,15 @@ from repro.core import direct_conv as D
 from repro.core.memory_model import ConvShape
 
 from .cnn_zoo import ZOO, ALEXNET
-from .timing import time_fn
+from .timing import resolve_bench_dtype, time_fn
+
+# The CI bench job's pinned shape set: small enough for a CPU runner, big
+# enough to cross tile boundaries.  Changing these invalidates the
+# checked-in BENCH_baseline.json — regenerate it in the same PR.
+CI_SHAPES = [
+    ConvShape("smoke.3x3", 1, 12, 12, 4, 8, 3, 3, pad=1),
+    ConvShape("smoke.s2", 1, 12, 12, 8, 8, 3, 3, stride=2, pad="SAME"),
+]
 
 
 def _inputs(s: ConvShape, dtype=jnp.float32):
@@ -61,28 +70,35 @@ def bench_fig4(shapes=None, iters=3):
     return rows
 
 
-def bench_backward(shapes=None, iters=3):
+def bench_backward(shapes=None, iters=3, dtype_name="f32"):
     """fwd vs fwd+bwd step timings for the direct path and the XLA oracle.
 
     The backward of the direct formulation is itself a direct convolution
     (transposed-window dgrad + per-tile wgrad — DESIGN.md §9), so the
     fwd+bwd/fwd ratio should track the oracle's: one step is ~3 convs.
     Rows land in the benchmark JSON via ``--backward --json``.
+
+    ``dtype_name`` is the precision policy's operand dtype ("f32"/"bf16"):
+    inputs are cast once by ``time_fn``, accumulation stays f32 inside the
+    direct path (the policy's guarantee), and every row carries its dtype so
+    the CI regression gate keys on (layer, dtype).
     """
+    dtype = resolve_bench_dtype(dtype_name)
     rows = []
     for s in shapes or ZOO:
         x, w = _inputs(s)
         pad = s.pad
         t_fwd = time_fn(lambda x, w: D.direct_conv_nhwc(x, w, s.stride, pad),
-                        x, w, iters=iters)
+                        x, w, iters=iters, dtype=dtype)
         t_step = time_fn(lambda x, w: D.direct_conv_nhwc(x, w, s.stride, pad),
-                         x, w, iters=iters, backward=True)
+                         x, w, iters=iters, backward=True, dtype=dtype)
         t_lax_fwd = time_fn(lambda x, w: B.conv_lax(x, w, s.stride, pad),
-                            x, w, iters=iters)
+                            x, w, iters=iters, dtype=dtype)
         t_lax_step = time_fn(lambda x, w: B.conv_lax(x, w, s.stride, pad),
-                             x, w, iters=iters, backward=True)
+                             x, w, iters=iters, backward=True, dtype=dtype)
         rows.append({
             "layer": s.name,
+            "dtype": dtype_name,
             "direct_fwd_us": t_fwd * 1e6,
             "direct_fwdbwd_us": t_step * 1e6,
             "lax_fwd_us": t_lax_fwd * 1e6,
@@ -133,20 +149,28 @@ if __name__ == "__main__":
     ap.add_argument("--json", default=None,
                     help="write all rows to this JSON file")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny shapes + few iters (CI-sized)")
-    ap.add_argument("--iters", type=int, default=3)
+                    help="the pinned CI shape set + few iters")
+    ap.add_argument("--dtype", action="append", choices=["f32", "bf16"],
+                    default=None,
+                    help="operand dtype(s) for the training-step rows "
+                         "(repeatable; default f32)")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="timing iterations per measurement (default: 5 "
+                         "for --smoke — median-of-5 keeps the CI gate off "
+                         "the noise floor — else 3)")
     args = ap.parse_args()
 
-    smoke_shapes = [
-        ConvShape("smoke.3x3", 1, 12, 12, 4, 8, 3, 3, pad=1),
-        ConvShape("smoke.s2", 1, 12, 12, 8, 8, 3, 3, stride=2, pad="SAME"),
-    ]
-    shapes = smoke_shapes if args.smoke else ZOO
-    iters = 2 if args.smoke else args.iters
+    shapes = CI_SHAPES if args.smoke else ZOO
+    iters = args.iters if args.iters is not None else (5 if args.smoke else 3)
+    dtypes = args.dtype or ["f32"]
 
+    # fig4's baseline comparison stays f32 (the FFT path has no bf16
+    # story); the dtype axis lives on the training-step rows.
     report = {"fig4": bench_fig4(shapes, iters=iters)}
     if args.backward:
-        report["backward"] = bench_backward(shapes, iters=iters)
+        report["backward"] = [
+            row for d in dtypes
+            for row in bench_backward(shapes, iters=iters, dtype_name=d)]
 
     for section, rows in report.items():
         print(f"== {section} ==")

@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import conv_baselines as B
 from repro.core import direct_conv as D

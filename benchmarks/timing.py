@@ -5,16 +5,34 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["time_fn"]
+from repro.core.precision import resolve_precision
+
+__all__ = ["time_fn", "resolve_bench_dtype"]
+
+
+def resolve_bench_dtype(name: str):
+    """"f32"/"bf16" -> operand jnp dtype, via the one precision vocabulary
+    (``core.precision``) — the bench CLI's --dtype axis measures exactly
+    the dtypes the kernel policy can run."""
+    return resolve_precision(name).op_dtype
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2,
-            backward: bool = False) -> float:
+            backward: bool = False, dtype=None) -> float:
     """Median seconds per call of a jitted function.
 
     ``backward=True`` times a full fwd+bwd step instead: ``value_and_grad``
     of ``sum(fn(*args))`` w.r.t. every array argument — what one training
-    step pays for this op (used by ``fig_conv --backward``)."""
+    step pays for this op (used by ``fig_conv --backward``).
+
+    ``dtype`` is the benchmark's precision axis: array arguments are cast
+    once, outside the timed region, so every caller sweeping f32-vs-bf16
+    pays the cast exactly nowhere (the loss scalar and the grads still
+    up-cast to f32 inside ``value_and_grad`` — the policy's discipline).
+    """
+    if dtype is not None:
+        args = tuple(a.astype(dtype) if hasattr(a, "astype") else a
+                     for a in args)
     if backward:
         def scalar(*a):
             return jnp.sum(fn(*a).astype(jnp.float32))

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 __all__ = ["MoEConfig", "SSMConfig", "EncoderConfig", "ModelConfig", "LayerKind"]
 

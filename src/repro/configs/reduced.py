@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from .base import EncoderConfig, ModelConfig, MoEConfig, SSMConfig
+from .base import EncoderConfig, ModelConfig
 from .registry import get_config
 
 __all__ = ["reduced_config"]

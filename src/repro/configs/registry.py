@@ -7,7 +7,6 @@ d_model/n_heads (gemma2-27b: 128; qwen3 MoE: 128).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Dict
 
 from .base import EncoderConfig, ModelConfig, MoEConfig, SSMConfig

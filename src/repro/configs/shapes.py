@@ -13,7 +13,7 @@ full-attention archs per the assignment.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 from .base import ModelConfig
 

@@ -5,7 +5,10 @@
 - ``direct_conv``   — the direct algorithm (Algorithm 3) in JAX
 - ``conv_baselines``— the §2 baselines (im2col+GEMM, FFT, lax oracle)
 - ``memory_model``  — per-algorithm memory-overhead accounting
+- ``precision``     — the mixed-precision policy (bf16 operands/residuals,
+                      f32 accumulators) the kernel family threads through
 """
-from . import layout, blocking, direct_conv, conv_baselines, memory_model  # noqa: F401
+from . import layout, blocking, direct_conv, conv_baselines, memory_model, precision  # noqa: F401
 from .blocking import Blocking, MachineModel, TPU_V5E, CPU_HASWELL, choose_blocking  # noqa: F401
 from .direct_conv import direct_conv_blocked, direct_conv_nhwc, direct_conv1d_depthwise  # noqa: F401
+from .precision import BF16, F32, Precision, resolve_precision  # noqa: F401

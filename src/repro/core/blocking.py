@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 
 from .layout import choose_pencil, divisors, largest_divisor_leq
+from .precision import resolve_precision
 
 __all__ = [
     "MachineModel", "TPU_V5E", "CPU_HASWELL", "Blocking",
@@ -32,6 +33,22 @@ __all__ = [
     "choose_blocking", "dgrad_extents", "choose_dgrad_blocking",
     "wgrad_resident_bytes", "choose_wgrad_blocking",
 ]
+
+
+def _policy_itemsizes(precision, in_dtype_bytes: int,
+                      acc_dtype_bytes: int) -> tuple[int, int]:
+    """Resolve the (operand, accumulator) itemsizes the VMEM inequality uses.
+
+    A ``precision`` policy overrides the raw byte counts — this is the single
+    place the mixed-precision policy meets the blocking model: bf16 operands
+    halve the window/weight/output terms of the inequality (the accumulator
+    term stays f32), so ``choose_blocking`` admits strictly larger (or equal)
+    tiles for the same VMEM budget.
+    """
+    if precision is None:
+        return in_dtype_bytes, acc_dtype_bytes
+    pol = resolve_precision(precision)
+    return pol.operand_itemsize, pol.accum_itemsize
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +139,7 @@ def choose_blocking(
     in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
     cob: int | None = None, cib: int | None = None,
     hob: int | None = None, wob: int | None = None,
+    precision=None,
 ) -> Blocking:
     """Pick (Cob, Cib, Hob, Wob) per the adapted Eq. 1/2 + VMEM budget.
 
@@ -153,7 +171,14 @@ def choose_blocking(
     tile (must divide Ho/Wo): the free dim is then chosen *under* that
     constraint, so a caller fixing one dim still gets a fitting pair — or
     the model's clear error instead of a downstream VMEM allocation failure.
+
+    ``precision`` (a ``core.precision.Precision`` or its name) overrides the
+    raw ``in_dtype_bytes``/``acc_dtype_bytes``: bf16 operands halve every
+    term of the inequality except the f32 accumulator, so the model admits
+    larger (never smaller) tiles than the f32 fit for the same budget.
     """
+    in_dtype_bytes, acc_dtype_bytes = _policy_itemsizes(
+        precision, in_dtype_bytes, acc_dtype_bytes)
     ho = (hi - hf) // stride + 1
     wo = (wi - wf) // stride + 1
     if ho <= 0 or wo <= 0:
@@ -243,6 +268,7 @@ def choose_dgrad_blocking(
     in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
     cib: int | None = None, cob: int | None = None,
     hob: int | None = None, wob: int | None = None,
+    precision=None,
 ) -> Blocking:
     """Tile the transposed-window dgrad kernel (input gradient).
 
@@ -261,14 +287,15 @@ def choose_dgrad_blocking(
         output-channel pencils respectively (swapped vs forward).
 
     ``cib``/``cob`` pin the pencils baked into the caller's operand layouts
-    (x's channel block / w's output pencil).
+    (x's channel block / w's output pencil).  ``precision`` has the forward
+    model's meaning (bf16 cotangent windows halve the inequality).
     """
     eh, ew = dgrad_extents(ho, wo, hf, wf, stride)
     return choose_blocking(
         eh + hf - 1, ew + wf - 1, co, ci, hf, wf, stride=1,
         machine=machine, in_dtype_bytes=in_dtype_bytes,
         acc_dtype_bytes=acc_dtype_bytes,
-        cob=cib, cib=cob, hob=hob, wob=wob)
+        cob=cib, cib=cob, hob=hob, wob=wob, precision=precision)
 
 
 def wgrad_resident_bytes(hob: int, wob: int, cob: int, cib: int,
@@ -297,6 +324,7 @@ def choose_wgrad_blocking(
     cob: int = 128, cib: int = 128,
     in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
     hob: int | None = None, wob: int | None = None,
+    precision=None,
 ) -> Blocking:
     """Tile the per-tile accumulating wgrad kernel (weight gradient).
 
@@ -308,7 +336,12 @@ def choose_wgrad_blocking(
     ``wob`` (divisors of Ho/Wo, exactly the forward's constraint, since the
     cotangent tile and the halo'd x window tile the same output grid); a
     configuration that misfits even at ``hob = wob = 1`` raises.
+    ``precision`` overrides the operand itemsize (the ``[Hf, Wf, Cib, Cob]``
+    accumulator term stays f32 — it dominates this inequality, which is why
+    bf16's wgrad win is smaller than forward's).
     """
+    in_dtype_bytes, acc_dtype_bytes = _policy_itemsizes(
+        precision, in_dtype_bytes, acc_dtype_bytes)
     if ho <= 0 or wo <= 0:
         raise ValueError(f"empty cotangent {ho}x{wo}")
     hob_pinned, wob_pinned = hob is not None, wob is not None

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from . import layout as L
 from .conv_baselines import Padding, normalize_padding, out_size
+from .precision import resolve_precision
 
 __all__ = [
     "apply_activation", "pad_blocked", "bias_to_blocked",
@@ -74,7 +75,8 @@ def direct_conv_blocked(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
                         bias: Optional[jnp.ndarray] = None,
                         activation: Optional[str] = None,
                         hob: Optional[int] = None,
-                        wob: Optional[int] = None) -> jnp.ndarray:
+                        wob: Optional[int] = None,
+                        precision=None) -> jnp.ndarray:
     """Direct convolution on blocked layouts, fused bias + activation.
 
     x: [N, Ci/Cib, Hi, Wi, Cib]      (paper input layout)
@@ -92,7 +94,17 @@ def direct_conv_blocked(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
     in the unjitted wrapper — must divide Ho/Wo, exactly the kernel's
     constraint — but never reach the jitted core (identical programs must
     not recompile per tile setting).
+
+    ``precision`` mirrors the Pallas path's mixed-precision policy
+    (DESIGN.md §10): operands are cast to ``policy.operand`` here, the
+    einsum accumulates f32 (``preferred_element_type``) and the output is
+    the operand dtype — so this formulation stays the oracle for the bf16
+    kernels too (bias stays master-dtype; the epilogue adds it in f32).
     """
+    if precision is not None:
+        pol = resolve_precision(precision)
+        x = x.astype(pol.op_dtype)
+        w = w.astype(pol.op_dtype)
     hi, wi = x.shape[2], x.shape[3]
     hf, wf = w.shape[2], w.shape[3]
     if hob is not None or wob is not None:

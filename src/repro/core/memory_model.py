@@ -16,9 +16,11 @@ from __future__ import annotations
 import dataclasses
 
 from .padding import Padding, normalize_padding, out_size
+from .precision import resolve_precision
 
 __all__ = ["ConvShape", "bytes_overhead", "bytes_channel_pad",
-           "overhead_table", "bytes_repack_boundary", "chain_repack_bytes"]
+           "bytes_precision_split", "overhead_table",
+           "bytes_repack_boundary", "chain_repack_bytes"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +119,44 @@ def bytes_channel_pad(s: ConvShape, lane: int = 128,
     w = s.hf * s.wf * (ci_p * co_p - s.ci * s.co)
     y = s.n * s.ho * s.wo * (co_p - s.co)
     return (x + w + y) * dtype_bytes
+
+
+def bytes_precision_split(s: ConvShape, precision="bf16",
+                          master_bytes: int = 4) -> dict:
+    """Training working-set bytes under a mixed-precision policy, by role.
+
+    The policy (DESIGN.md §10) splits one layer's bytes four ways:
+
+      activations     x and y stream at the *operand* dtype (the layers
+                      chain in it — this is the traffic the bf16 win halves)
+      params_master   the optimizer's f32 copy of w (and bias), untouched
+                      by the policy
+      params_compute  the transient operand-cast copy of w the kernel
+                      contracts — 0 when the operand IS the master dtype
+      vjp_residual    what forward stores for backward (the padded input +
+                      the pre-activation tile), at the *residual* dtype
+
+    ``f32_total`` is the same working set with every role at
+    ``master_bytes`` — the policy's saving is ``f32_total - total``.
+    """
+    pol = resolve_precision(precision)
+    ob, rb = pol.operand_itemsize, pol.residual_dtype.itemsize
+    x = s.n * s.hi * s.wi * s.ci
+    y = s.n * s.ho * s.wo * s.co
+    w = s.hf * s.wf * s.ci * s.co
+    xp = s.n * s.padded_hi * s.padded_wi * s.ci           # VJP's stored input
+    acts = (x + y) * ob
+    master = w * master_bytes
+    compute = 0 if ob == master_bytes else w * ob
+    residual = (xp + y) * rb                               # xp + z
+    total = acts + master + compute + residual
+    f32_total = (x + y + w + xp + y) * master_bytes
+    return {
+        "activations": acts, "params_master": master,
+        "params_compute": compute, "vjp_residual": residual,
+        "total": total, "f32_total": f32_total,
+        "saved": f32_total - total,
+    }
 
 
 def bytes_repack_boundary(prev: ConvShape, nxt: ConvShape,

@@ -1,0 +1,117 @@
+"""Mixed-precision policy for the blocked kernel family (DESIGN.md §10).
+
+One frozen, hashable policy object answers the three dtype questions every
+layer of the stack otherwise re-decides ad hoc:
+
+  operand   what the MXU contracts (x windows, weight tiles, cotangents).
+            bf16 halves the VMEM inequality — ``core.blocking`` admits
+            strictly larger tiles — and is what unlocks the MXU's bf16 peak.
+  accum     what partial sums live in.  Always f32: the kernels' scratch
+            tiles are allocated f32 and every ``jnp.dot`` passes
+            ``preferred_element_type=f32``, so a bf16 run is *never*
+            bf16-naive summation (tests assert the distinction).
+  residual  what the custom VJP stores between forward and backward (the
+            padded input, the operand-cast weights, the pre-activation
+            epilogue tile).  bf16 halves the training working set.
+
+Casts happen in exactly two places: operands are down-cast once on kernel
+entry, and cotangents are up-cast once on VJP exit (master params stay f32 —
+the weight gradient leaves the wgrad kernel in f32 and is never round-tripped
+through bf16).  Everything in between is the policy's operand dtype with f32
+accumulation, matching the epilogue-flush discipline of DESIGN.md §5.
+
+The policy is threaded as a *static* argument (frozen dataclass of strings,
+hashable) so it composes with ``jax.jit`` / ``jax.custom_vjp`` nondiff
+arguments without retracing games.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["Precision", "F32", "BF16", "resolve_precision"]
+
+# dtypes the kernel family supports as operands / residuals (the accumulator
+# is pinned to f32 — see Precision.__post_init__).
+_SUPPORTED = ("float32", "bfloat16", "float16")
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """(operand, accum, residual) dtype triple, by canonical dtype name.
+
+    String fields keep the policy hashable (it rides through
+    ``jax.jit(static_argnames=...)`` and ``custom_vjp`` nondiff slots);
+    the ``*_dtype`` properties give the jnp dtypes back.
+    """
+
+    operand: str = "float32"
+    accum: str = "float32"
+    residual: str = "float32"
+
+    def __post_init__(self):
+        for field in ("operand", "residual"):
+            name = getattr(self, field)
+            if name not in _SUPPORTED:
+                raise ValueError(
+                    f"unsupported {field} dtype {name!r}; have {_SUPPORTED}")
+        if self.accum != "float32":
+            # The kernels allocate f32 VMEM scratch and contract with
+            # preferred_element_type=f32; a non-f32 accumulator would
+            # silently change the summation the paper's tiles rely on.
+            raise ValueError(
+                f"accumulator must stay float32 (got {self.accum!r}): the "
+                "kernel scratch tiles are f32 by construction")
+
+    @property
+    def op_dtype(self):
+        return jnp.dtype(self.operand)
+
+    @property
+    def accum_dtype(self):
+        return jnp.dtype(self.accum)
+
+    @property
+    def residual_dtype(self):
+        return jnp.dtype(self.residual)
+
+    @property
+    def operand_itemsize(self) -> int:
+        """Bytes per operand element — what the VMEM inequality sees."""
+        return self.op_dtype.itemsize
+
+    @property
+    def accum_itemsize(self) -> int:
+        return self.accum_dtype.itemsize
+
+    @property
+    def name(self) -> str:
+        """Short display name ("f32", "bf16", or the full triple)."""
+        if self == F32:
+            return "f32"
+        if self == BF16:
+            return "bf16"
+        return f"{self.operand}/{self.accum}/{self.residual}"
+
+
+F32 = Precision()
+BF16 = Precision(operand="bfloat16", residual="bfloat16")
+
+_ALIASES = {
+    None: F32,
+    "f32": F32, "float32": F32, "fp32": F32,
+    "bf16": BF16, "bfloat16": BF16,
+}
+
+
+def resolve_precision(policy) -> Precision:
+    """Accept a Precision, a name ("f32"/"bf16"), or None (-> f32)."""
+    if isinstance(policy, Precision):
+        return policy
+    try:
+        return _ALIASES[policy]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown precision policy {policy!r}; pass a Precision or one "
+            f"of {sorted(k for k in _ALIASES if k)}") from None

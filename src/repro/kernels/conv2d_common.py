@@ -150,7 +150,16 @@ def last_step(axes: Sequence[int]):
 def epilogue_flush(o_ref, acc: jnp.ndarray, hob: int, wob: int,
                    b_ref=None, activation: Optional[str] = None) -> None:
     """The single output store: bias + activation on the f32 accumulator,
-    one down-cast write of the ``[hob, wob, cb]`` tile (DESIGN.md §5)."""
+    one down-cast write of the ``[hob, wob, cb]`` tile (DESIGN.md §5).
+
+    This is where the mixed-precision policy's accumulator guarantee is
+    enforced: whatever the operand dtype (f32 or bf16), the tile arrives
+    here as f32 partial sums and is cast to the output dtype exactly once —
+    a bf16 run is never bf16-naive summation (DESIGN.md §10).
+    """
+    assert acc.dtype == jnp.float32, (
+        f"epilogue got a {acc.dtype} accumulator; the kernel scratch must "
+        "stay f32 under every precision policy")
     out = acc
     if b_ref is not None:
         out = out + b_ref[...].astype(jnp.float32)       # (1, Cob) broadcast

@@ -39,6 +39,16 @@ forward saves the pre-activation tile as its epilogue residual (computed by
 the same fused kernel with the activation deferred), so the activation and
 bias cotangents are exact — ``dŷ_pre = dŷ * act'(z)``, ``db = Σ_{N,H,W}
 dŷ_pre`` — and both backward kernels consume ``dŷ_pre``.
+
+Every entry point takes a ``precision`` policy (``core.precision.Precision``,
+DESIGN.md §10): operands are down-cast to ``policy.operand`` once on entry,
+every contraction accumulates in f32 (``preferred_element_type`` + the f32
+scratch tiles — bf16 runs are never bf16-naive sums), residuals are stored at
+``policy.residual``, and cotangents are up-cast exactly once on VJP exit
+(the weight gradient leaves the wgrad kernel in f32 and reaches f32 master
+params without a bf16 round-trip).  bf16 operands also halve the VMEM
+inequality, so the blocking model admits larger tiles (the itemsize is taken
+from the actual operand arrays — the policy and the fit can't drift).
 """
 from __future__ import annotations
 
@@ -55,6 +65,7 @@ from repro.core.blocking import (MachineModel, TPU_V5E, choose_blocking,
                                  dgrad_extents)
 from repro.core.conv_baselines import Padding, normalize_padding
 from repro.core.direct_conv import apply_activation, pad_blocked
+from repro.core.precision import F32, Precision, resolve_precision
 from .conv2d_common import (bias_spec, epilogue_flush, first_step, halo_dims,
                             halo_window_spec, last_step, tap_windows,
                             tile_spec, weight_spec)
@@ -301,46 +312,63 @@ def direct_conv2d_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
 # custom VJP: jax.grad flows through the kernel family
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
 def _conv(x, w, bias, stride, pads, activation, hob, wob, machine,
-          interpret):
+          interpret, precision):
     """Primal: the fully fused forward kernel (inference takes this path —
-    bias + activation inside the epilogue, output written once)."""
-    xp = pad_blocked(x, *pads)
-    return _forward_impl(xp, w, bias, stride, activation, hob, wob, machine,
-                         interpret)
+    bias + activation inside the epilogue, output written once).  Operands
+    are cast to the policy dtype here — the one down-cast of the forward;
+    bias stays in its master dtype (the epilogue adds it on the f32
+    accumulator anyway)."""
+    op = precision.op_dtype
+    xp = pad_blocked(x.astype(op), *pads)
+    return _forward_impl(xp, w.astype(op), bias, stride, activation, hob,
+                         wob, machine, interpret)
 
 
 def _conv_fwd(x, w, bias, stride, pads, activation, hob, wob, machine,
-              interpret):
+              interpret, precision):
     """VJP forward: the same kernel computes the *pre-activation* tile z (the
     epilogue residual the backward needs — relu/gelu cotangents are functions
     of z, not of the activated output); the activation is applied outside.
-    For linear epilogues z IS the output and no extra residual is kept."""
-    xp = pad_blocked(x, *pads)
-    z = _forward_impl(xp, w, bias, stride, None, hob, wob, machine,
+    For linear epilogues z IS the output and no extra residual is kept.
+
+    Residuals are stored at the policy dtypes (operand-cast xp/w, z at
+    ``policy.residual`` — the halved training working set); two zero-size
+    dtype tokens remember the primal x/w dtypes so the backward can up-cast
+    its cotangents exactly once, at the very end.
+    """
+    op = precision.op_dtype
+    xp = pad_blocked(x.astype(op), *pads)
+    wq = w.astype(op)
+    z = _forward_impl(xp, wq, bias, stride, None, hob, wob, machine,
                       interpret)
     linear = activation in (None, "linear")
     out = z if linear else apply_activation(
         z.astype(jnp.float32), activation).astype(z.dtype)
-    return out, (xp, w, bias, None if linear else z)
+    res = (xp, wq, bias,
+           None if linear else z.astype(precision.residual_dtype),
+           jnp.zeros((0,), x.dtype), jnp.zeros((0,), w.dtype))
+    return out, res
 
 
-def _conv_bwd(stride, pads, activation, hob, wob, machine, interpret, res,
-              g):
-    xp, w, bias, z = res
-    hf, wf = w.shape[2], w.shape[3]
+def _conv_bwd(stride, pads, activation, hob, wob, machine, interpret,
+              precision, res, g):
+    xp, wq, bias, z, x_token, w_token = res
+    hf, wf = wq.shape[2], wq.shape[3]
 
-    # activation cotangent from the epilogue residual
+    # activation cotangent from the epilogue residual (act' evaluated in f32)
     if z is None:
         dz = g
     else:
         def act(t):
             return apply_activation(t.astype(jnp.float32),
                                     activation).astype(t.dtype)
-        dz = jax.vjp(act, z)[1](g)[0]
+        dz = jax.vjp(act, z)[1](g.astype(z.dtype))[0]
+    dz = dz.astype(precision.op_dtype)       # the backward kernels' operand
 
-    # bias cotangent: the epilogue's broadcast, transposed (pencil sums)
+    # bias cotangent: the epilogue's broadcast, transposed (pencil sums,
+    # accumulated in f32, cast to the master bias dtype once)
     db = None if bias is None else \
         dz.astype(jnp.float32).sum(axis=(0, 2, 3)).astype(bias.dtype)
 
@@ -349,16 +377,20 @@ def _conv_bwd(stride, pads, activation, hob, wob, machine, interpret, res,
     (ph_lo, ph_hi), (pw_lo, pw_hi) = pads
     hi_p, wi_p = xp.shape[2], xp.shape[3]
     hi, wi = hi_p - ph_lo - ph_hi, wi_p - pw_lo - pw_hi
-    dxp = direct_conv2d_dgrad_pallas(dz, w, stride=stride, machine=machine,
+    dxp = direct_conv2d_dgrad_pallas(dz, wq, stride=stride, machine=machine,
                                      interpret=interpret)
     eh, ew = dxp.shape[2], dxp.shape[3]
     dxp = jnp.pad(dxp, ((0, 0), (0, 0), (0, hi_p - eh), (0, wi_p - ew),
                         (0, 0)))
-    dx = dxp[:, :, ph_lo:ph_lo + hi, pw_lo:pw_lo + wi, :].astype(xp.dtype)
+    dx = dxp[:, :, ph_lo:ph_lo + hi, pw_lo:pw_lo + wi, :] \
+        .astype(x_token.dtype)               # the single cotangent up-cast
 
+    # dw leaves the wgrad kernel in f32 and reaches the (f32 master) weight
+    # dtype directly — never round-tripped through the operand dtype
     dw = direct_conv2d_wgrad_pallas(xp, dz, hf, wf, stride=stride,
                                     machine=machine, interpret=interpret,
-                                    out_dtype=jnp.float32).astype(w.dtype)
+                                    out_dtype=jnp.float32) \
+        .astype(w_token.dtype)
     return dx, dw, db
 
 
@@ -371,7 +403,7 @@ _conv.defvjp(_conv_fwd, _conv_bwd)
 
 @partial(jax.jit,
          static_argnames=("stride", "padding", "activation", "hob", "wob",
-                          "machine", "interpret"))
+                          "machine", "interpret", "precision"))
 def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
                                  bias: Optional[jnp.ndarray] = None,
                                  stride: int = 1,
@@ -380,12 +412,15 @@ def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
                                  hob: Optional[int] = None,
                                  wob: Optional[int] = None,
                                  machine: MachineModel = TPU_V5E,
-                                 interpret: bool = False) -> jnp.ndarray:
+                                 interpret: bool = False,
+                                 precision: Precision | str = F32
+                                 ) -> jnp.ndarray:
     """Tiled + fused direct convolution on the paper's blocked layouts,
     differentiable end to end (custom VJP -> the dgrad/wgrad kernels).
 
     x: [N, Ci/Cib, Hi, Wi, Cib]; w: [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob];
-    bias: [Co/Cob, Cob] or None -> [N, Co/Cob, Ho, Wo, Cob].
+    bias: [Co/Cob, Cob] or None -> [N, Co/Cob, Ho, Wo, Cob] in the policy's
+    operand dtype (layers chain in bf16 under the bf16 policy).
 
     ``padding`` is stride-aware (TF SAME semantics); ``hob``/``wob`` (output
     rows/cols per spatial tile) default to the analytical blocking model's
@@ -394,9 +429,14 @@ def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
     kernels (their tiles sized by ``choose_dgrad_blocking`` /
     ``choose_wgrad_blocking`` for the same ``machine``), with bias and
     activation cotangents taken from the fused epilogue's residuals.
+
+    ``precision`` is the mixed-precision policy (a ``Precision`` or
+    "f32"/"bf16"): operand casts on entry, f32 accumulators throughout,
+    residuals at the policy dtype, one cotangent up-cast on exit —
+    see the module docstring and DESIGN.md §10.
     """
     hi, wi = x.shape[2], x.shape[3]
     hf, wf = w.shape[2], w.shape[3]
     pads = normalize_padding(padding, hf, wf, stride, hi, wi)
     return _conv(x, w, bias, stride, pads, activation, hob, wob, machine,
-                 interpret)
+                 interpret, resolve_precision(precision))

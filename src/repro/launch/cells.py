@@ -4,7 +4,7 @@ shardings.  Used by launch/dryrun.py, benchmarks/roofline.py and tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

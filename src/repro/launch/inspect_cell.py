@@ -7,14 +7,13 @@ import json
 import re
 from collections import defaultdict
 
-import jax
 
 from repro.launch.cells import build_cell
 from repro.launch.mesh import make_production_mesh
 from repro.nn.module import Parallelism
 from repro.train.trainstep import TrainSettings
 from repro.utils.compat import cost_analysis_dict
-from repro.utils.hlo import DTYPE_BYTES, collective_bytes, parse_shape_bytes
+from repro.utils.hlo import collective_bytes, parse_shape_bytes
 
 """Hillclimb diagnosis: rebuild one cell (optionally with experimental
 settings / rule overrides), compile, and print the largest collectives and

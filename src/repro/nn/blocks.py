@@ -2,17 +2,17 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LayerKind, ModelConfig
-from .attention import Attention, KVCache, init_kv_cache
+from .attention import Attention, init_kv_cache
 from .layers import MLP, LayerNorm, RMSNorm
 from .module import ParamSpec, Parallelism
 from .moe import MoE
-from .ssm import Mamba2, MambaCache
+from .ssm import Mamba2
 
 __all__ = ["DecoderLayer", "EncoderLayer"]
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro.core.conv_baselines import Padding
 from repro.core.direct_conv import direct_conv_blocked
 from repro.core.layout import BlockedConvLayout, nhwc_to_blocked
+from repro.core.precision import Precision, resolve_precision
 from .module import ParamSpec
 
 __all__ = ["BlockedConv2D", "BlockedCNN", "blocked_global_avg_pool"]
@@ -64,6 +65,11 @@ class BlockedConv2D:
     hob: Optional[int] = None            # output rows per spatial tile
     wob: Optional[int] = None            # output cols per spatial tile
                                          # (None -> analytical blocking model)
+    precision: Union[str, Precision] = "f32"
+                                         # mixed-precision policy: params are
+                                         # f32 masters; compute casts to the
+                                         # policy operand dtype at call time
+                                         # (DESIGN.md §10)
 
     @property
     def layout(self) -> BlockedConvLayout:
@@ -82,10 +88,20 @@ class BlockedConv2D:
         return s
 
     def __call__(self, p, xb: jnp.ndarray, *, use_pallas: bool = False,
-                 interpret: Optional[bool] = None) -> jnp.ndarray:
+                 interpret: Optional[bool] = None,
+                 precision: Union[str, Precision, None] = None
+                 ) -> jnp.ndarray:
         """Both paths are differentiable: the Pallas path carries a custom
         VJP (dgrad/wgrad kernels), so this layer trains through the kernel
-        with no fallback to the jnp formulation."""
+        with no fallback to the jnp formulation.
+
+        ``precision`` overrides the layer's policy for this call (the
+        ``BlockedCNN``/``TrainSettings`` pass-down); params stay f32 masters
+        either way — the cast to the operand dtype happens inside the conv,
+        and its transpose up-casts the weight cotangent back to f32.
+        """
+        pol = resolve_precision(
+            self.precision if precision is None else precision)
         bias = p["b"] if self.use_bias else None
         if use_pallas:
             from repro.kernels.direct_conv2d import direct_conv2d_blocked_pallas
@@ -94,10 +110,11 @@ class BlockedConv2D:
             return direct_conv2d_blocked_pallas(
                 xb, p["w"], bias, stride=self.stride, padding=self.padding,
                 activation=self.activation, hob=self.hob, wob=self.wob,
-                interpret=interpret)
+                interpret=interpret, precision=pol)
         return direct_conv_blocked(xb, p["w"], self.stride, self.padding,
                                    bias, self.activation,
-                                   hob=self.hob, wob=self.wob)
+                                   hob=self.hob, wob=self.wob,
+                                   precision=pol)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,11 +145,18 @@ class BlockedCNN:
         return s
 
     def __call__(self, p, x_nhwc: jnp.ndarray, *, use_pallas: bool = False,
-                 interpret: Optional[bool] = None) -> jnp.ndarray:
+                 interpret: Optional[bool] = None,
+                 precision: Union[str, Precision, None] = None
+                 ) -> jnp.ndarray:
+        """``precision`` (if given) overrides every conv's policy for this
+        forward — under bf16 the layers *chain in bf16* (each conv emits its
+        operand dtype), GAP pools in f32, and the head matmul casts its f32
+        master to the feature dtype; logits come back in the compute dtype
+        and the loss up-casts them once."""
         # the single layout transform of the whole forward pass
         h = nhwc_to_blocked(x_nhwc, self.convs[0].layout.cb_in)
         for i, conv in enumerate(self.convs):
             h = conv(p[f"conv{i}"], h, use_pallas=use_pallas,
-                     interpret=interpret)
+                     interpret=interpret, precision=precision)
         feat = blocked_global_avg_pool(h)
         return feat @ p["head"].astype(feat.dtype)

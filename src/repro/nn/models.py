@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +19,7 @@ from repro.configs.base import ModelConfig
 from .attention import KVCache
 from .blocks import DecoderLayer, EncoderLayer
 from .layers import Embedding, LayerNorm, RMSNorm, sinusoidal_positions, softcap
-from .module import ParamSpec, Parallelism, axes_tree, init_tree, with_layers_axis
+from .module import ParamSpec, Parallelism, init_tree, with_layers_axis
 from .moe import MoE
 
 __all__ = ["LM", "EncDec", "build_model"]
@@ -212,7 +212,8 @@ class LM:
         """
         from jax.sharding import PartitionSpec as P
         px, c = self.px, self.cfg
-        pre = lambda spec: P(*((None,) + tuple(spec)))
+        def pre(spec):
+            return P(*((None,) + tuple(spec)))
 
         out = {}
         for i, layer in enumerate(self.layers):

@@ -112,8 +112,9 @@ def convert_expert_layout(x: jnp.ndarray, kind: str, e: int, f: int,
 
     Handles extra leading dims (the stacked-layers axis) by vmapping.
     """
-    fn = lambda a: stored_from_canonical(
-        canonical_experts(a, e, f, kind), dst_ep, dst_tp, kind)
+    def fn(a):
+        return stored_from_canonical(
+            canonical_experts(a, e, f, kind), dst_ep, dst_tp, kind)
     ndim = x.ndim
     while ndim > 4:
         fn = jax.vmap(fn)

@@ -1,13 +1,11 @@
 """Serving steps: prefill + single-token decode, and sampling helpers."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.nn.models import EncDec, LM
+from repro.nn.models import EncDec
 
 __all__ = ["make_serve_step", "make_prefill", "greedy", "sample_topk"]
 

@@ -7,7 +7,6 @@ consumes exactly the token stream it would have seen — no skew, no repeats.
 from __future__ import annotations
 
 import dataclasses
-import os
 from typing import Dict, Iterator, Optional
 
 import numpy as np

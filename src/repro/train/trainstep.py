@@ -9,8 +9,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.nn.conv import BlockedCNN
-from repro.nn.models import EncDec, LM
-from repro.nn.module import Parallelism
+from repro.nn.models import EncDec
 from .losses import cross_entropy
 from .optimizer import AdamW, OptState
 
@@ -29,16 +28,22 @@ class TrainSettings:
     use_pallas: bool = False         # conv models: train through the Pallas
                                      # kernel family (custom VJP) instead of
                                      # the XLA-scheduled jnp formulation
+    precision: str = "f32"           # conv models: mixed-precision policy
+                                     # ("f32" | "bf16") — bf16 operands/
+                                     # residuals, f32 accumulators + master
+                                     # params (DESIGN.md §10)
 
 
 def forward(model, params, batch: Dict[str, Any], *, train=True,
             remat="full", chunk=2048, unroll=False, return_hidden=False,
-            use_pallas=False):
+            use_pallas=False, precision=None):
     """Uniform forward over model families."""
     if isinstance(model, BlockedCNN):
         # blocked-layout image classifier: NHWC batch in, class logits out;
-        # use_pallas routes every conv (fwd AND bwd) through the kernels
-        return model(params, batch["images"], use_pallas=use_pallas), \
+        # use_pallas routes every conv (fwd AND bwd) through the kernels,
+        # precision sets the operand/residual dtypes (params stay f32)
+        return model(params, batch["images"], use_pallas=use_pallas,
+                     precision=precision), \
             jnp.zeros((), jnp.float32)
     if isinstance(model, EncDec):
         return model(params, batch["tokens"], batch["frames"], train=train,
@@ -56,7 +61,10 @@ def make_loss_fn(model, cfg: Optional[ModelConfig], settings: TrainSettings):
         # the model); cross_entropy over a singleton "sequence" axis
         def conv_loss_fn(params, batch):
             logits, aux = forward(model, params, batch, train=True,
-                                  use_pallas=settings.use_pallas)
+                                  use_pallas=settings.use_pallas,
+                                  precision=settings.precision)
+            # the single up-cast of the compute dtype: CE runs in f32
+            logits = logits.astype(jnp.float32)
             loss, metrics = cross_entropy(
                 logits[:, None, :], batch["targets"][:, None].astype(jnp.int32),
                 model.n_classes)

@@ -1,7 +1,5 @@
 """The analytical blocking model: paper Eq. 1/2 verbatim + TPU adaptation."""
-import pytest
-
-from repro.core.blocking import (CPU_HASWELL, TPU_V5E, Blocking,
+from repro.core.blocking import (CPU_HASWELL, TPU_V5E,
                                  choose_blocking, cpu_max_tile_elems,
                                  cpu_min_tile_elems, resident_bytes)
 from repro.core.memory_model import ConvShape, bytes_overhead, overhead_table

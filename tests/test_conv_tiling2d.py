@@ -15,7 +15,6 @@ import warnings
 import zlib
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -1,6 +1,5 @@
 """Flash-attention Pallas kernel vs dense-softmax oracle (interpret mode)."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

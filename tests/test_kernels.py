@@ -1,14 +1,12 @@
 """Per-kernel Pallas (interpret-mode) vs pure-jnp oracle, swept over shapes
 and dtypes — the required kernel validation."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.core import layout as L
 from repro.core.conv_baselines import conv_lax
 from repro.kernels import ops, ref
-from repro.kernels.conv1d_depthwise import conv1d_depthwise_blocked_pallas
 from repro.kernels.direct_conv2d import direct_conv2d_blocked_pallas
 
 CONV2D_CASES = [

@@ -3,7 +3,6 @@ expert-layout conversions."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs.base import MoEConfig
 from repro.nn.moe import (MoE, canonical_experts, convert_expert_layout,

@@ -1,0 +1,318 @@
+"""Mixed-precision policy through the blocked kernel family (ISSUE 4):
+
+* policy objects resolve/hash/validate (f32 accumulators are mandatory);
+* bf16 Pallas forward == the f32 oracle to bf16 rounding across the
+  stride x padding x activation sweep, and the custom VJP's gradients come
+  back f32 to master params within bf16 tolerance;
+* the f32-accumulator property: a bf16 run's pencil sums equal the
+  f32-computed sum cast once — NOT the bf16-naive running sum (the
+  distinction the f32 scratch tiles exist for);
+* the custom VJP stores its residuals at the policy dtype;
+* dtype-aware blocking admits strictly-larger-or-equal tiles for bf16 on a
+  tiny MachineModel (the halved VMEM inequality);
+* BlockedCNN trains end to end under TrainSettings(use_pallas=True,
+  precision="bf16") — the PR's acceptance criterion;
+* memory_model.bytes_precision_split accounts the dtype split.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import layout as L
+from repro.core.blocking import (MachineModel, choose_blocking,
+                                 choose_wgrad_blocking, resident_bytes,
+                                 wgrad_resident_bytes)
+from repro.core.direct_conv import direct_conv_blocked
+from repro.core.memory_model import ConvShape, bytes_precision_split
+from repro.core.precision import BF16, F32, Precision, resolve_precision
+from repro.kernels.direct_conv2d import direct_conv2d_blocked_pallas
+from repro.nn.conv import BlockedCNN, BlockedConv2D
+from repro.nn.module import init_tree
+
+# bf16 keeps 8 mantissa bits (eps ~ 2^-8); with f32 accumulation the error
+# is operand rounding scaled by the *accumulated magnitude*, so compare
+# normalized by the tensor's scale (per-element rtol is meaningless where
+# cancellation leaves a near-zero output).
+BF16_TOL = dict(rtol=3e-2, atol=3e-2)
+
+
+def _assert_close_bf16(got, want, err_msg=""):
+    want = np.asarray(want, np.float32)
+    scale = max(1e-6, float(np.abs(want).max()))
+    np.testing.assert_allclose(np.asarray(got, np.float32) / scale,
+                               want / scale, rtol=0, atol=2e-2,
+                               err_msg=err_msg)
+
+
+def _blocked_inputs(seed, n=2, hi=10, wi=9, ci=4, co=8, hf=3, wf=3, lane=4):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, hi, wi, ci)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(hf, wf, ci, co)).astype(np.float32))
+    lay = L.BlockedConvLayout.choose(ci, co, lane=lane)
+    return L.nhwc_to_blocked(x, lay.cb_in), \
+        L.hwio_to_blocked(w, lay.cb_in, lay.cb_out)
+
+
+# ---------------------------------------------------------------------------
+# policy objects
+# ---------------------------------------------------------------------------
+
+def test_resolve_and_properties():
+    assert resolve_precision("bf16") is BF16
+    assert resolve_precision("bfloat16") is BF16
+    assert resolve_precision(None) is F32
+    assert resolve_precision(BF16) is BF16
+    assert BF16.op_dtype == jnp.bfloat16
+    assert BF16.accum_dtype == jnp.float32
+    assert BF16.residual_dtype == jnp.bfloat16
+    assert BF16.operand_itemsize == 2 and F32.operand_itemsize == 4
+    assert BF16.name == "bf16" and F32.name == "f32"
+    hash(BF16)                                  # static-arg requirement
+
+
+def test_invalid_policies_raise():
+    with pytest.raises(ValueError, match="accumulator must stay float32"):
+        Precision(operand="bfloat16", accum="bfloat16")
+    with pytest.raises(ValueError, match="unsupported operand"):
+        Precision(operand="int8")
+    with pytest.raises(ValueError, match="unknown precision"):
+        resolve_precision("fp8")
+
+
+# ---------------------------------------------------------------------------
+# bf16 forward / VJP vs the f32 oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["VALID", "SAME"])
+@pytest.mark.parametrize("activation", [None, "relu", "gelu"])
+def test_bf16_forward_matches_f32_oracle(stride, padding, activation):
+    xb, wb = _blocked_inputs(hash((stride, padding, activation)) % 2**31)
+    want = np.asarray(direct_conv_blocked(xb, wb, stride, padding,
+                                          None, activation))
+    for name, got in (
+            ("pallas", direct_conv2d_blocked_pallas(
+                xb, wb, stride=stride, padding=padding,
+                activation=activation, interpret=True, precision="bf16")),
+            ("jnp", direct_conv_blocked(xb, wb, stride, padding, None,
+                                        activation, precision=BF16))):
+        assert got.dtype == jnp.bfloat16, name
+        _assert_close_bf16(got, want, err_msg=name)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("activation", [None, "gelu"])  # smooth acts only:
+# relu's mask can legitimately flip where bf16 quantization crosses z=0,
+# which is a subgradient artifact, not an accuracy property
+def test_bf16_vjp_matches_f32_oracle(stride, activation):
+    xb, wb = _blocked_inputs(7, hi=9, wi=9)
+
+    def pallas_loss(xb, wb):
+        out = direct_conv2d_blocked_pallas(
+            xb, wb, stride=stride, padding="SAME", activation=activation,
+            interpret=True, precision=BF16)
+        return jnp.sum(out.astype(jnp.float32) ** 2)
+
+    def oracle_loss(xb, wb):
+        out = direct_conv_blocked(xb, wb, stride, "SAME", None, activation)
+        return jnp.sum(out.astype(jnp.float32) ** 2)
+
+    gx, gw = jax.grad(pallas_loss, argnums=(0, 1))(xb, wb)
+    gx0, gw0 = jax.grad(oracle_loss, argnums=(0, 1))(xb, wb)
+    # cotangents are up-cast exactly once: master-dtype grads out
+    assert gx.dtype == xb.dtype and gw.dtype == wb.dtype
+    scale = float(jnp.abs(gw0).max())
+    np.testing.assert_allclose(np.asarray(gx) / scale,
+                               np.asarray(gx0) / scale, **BF16_TOL)
+    np.testing.assert_allclose(np.asarray(gw) / scale,
+                               np.asarray(gw0) / scale, **BF16_TOL)
+
+
+def test_vjp_residuals_stored_at_policy_dtype():
+    """The custom VJP's saved tensors ARE the policy's residual dtype — the
+    halved training working set is real, not an accounting fiction."""
+    from repro.core.blocking import TPU_V5E
+    from repro.kernels.direct_conv2d import _conv_fwd
+
+    xb, wb = _blocked_inputs(3)
+    out, res = _conv_fwd(xb, wb, None, 1, ((1, 1), (1, 1)), "relu",
+                         None, None, TPU_V5E, True, BF16)
+    xp, wq, bias, z, x_token, w_token = res
+    assert out.dtype == jnp.bfloat16
+    assert xp.dtype == jnp.bfloat16          # operand-cast padded input
+    assert wq.dtype == jnp.bfloat16          # operand-cast weights
+    assert z.dtype == jnp.bfloat16           # pre-activation epilogue tile
+    assert bias is None
+    # zero-size tokens remember the master dtypes for the one up-cast
+    assert x_token.dtype == jnp.float32 and x_token.size == 0
+    assert w_token.dtype == jnp.float32 and w_token.size == 0
+
+
+# ---------------------------------------------------------------------------
+# the f32-accumulator property
+# ---------------------------------------------------------------------------
+
+def test_bf16_pencils_sum_in_f32_not_bf16():
+    """Adversarial pencil: 256 followed by 0.25s.  A bf16-naive running sum
+    never leaves 256 (0.25 is below the lattice step there); the kernel's
+    f32 scratch accumulates exactly and casts once -> 260.  The kernel must
+    produce the f32-computed sum, across Ci-block grid steps too."""
+    ci, cb = 32, 16                          # 2 Ci blocks: the grid
+    x = np.full((1, 2, 2, ci), 0.25, np.float32)  # reduction crosses scratch
+    x[..., 0] = 256.0
+    w = np.ones((1, 1, ci, 8), np.float32)
+    xb = L.nhwc_to_blocked(jnp.asarray(x), cb)
+    wb = L.hwio_to_blocked(jnp.asarray(w), cb, 8)
+
+    f32_sum = 256.0 + (ci - 1) * 0.25                     # 263.75
+    f32_then_cast = float(jnp.float32(f32_sum).astype(jnp.bfloat16))  # 264.0
+    naive = jnp.bfloat16(0.0)
+    for v in x[0, 0, 0]:
+        naive = (naive + jnp.bfloat16(v)).astype(jnp.bfloat16)
+    assert float(naive) == 256.0                          # the failure mode
+    assert f32_then_cast != float(naive)
+
+    for name, out in (
+            ("pallas", direct_conv2d_blocked_pallas(
+                xb, wb, interpret=True, precision="bf16")),
+            ("jnp", direct_conv_blocked(xb, wb, precision="bf16"))):
+        got = np.asarray(out, np.float32)
+        assert np.all(got == f32_then_cast), (name, got)
+
+
+# ---------------------------------------------------------------------------
+# dtype-aware blocking
+# ---------------------------------------------------------------------------
+
+def test_bf16_blocking_admits_larger_tiles():
+    """Pick a VMEM budget between the bf16 and f32 resident sets of the full
+    output tile: bf16 keeps the full tile, f32 must shrink — the halved
+    inequality is worth real tile area, never less."""
+    hi = wi = 20
+    ci = co = 8
+    hf = wf = 3
+    r32 = resident_bytes(18, 18, 8, 8, hf, wf, in_dtype_bytes=4)
+    r16 = resident_bytes(18, 18, 8, 8, hf, wf, in_dtype_bytes=2)
+    assert r16 < r32
+    tiny = MachineModel(name="tiny-mp", n_vec=8, n_fma=1, l_fma=8, n_reg=64,
+                        vmem_bytes=(r16 + r32) // 2)
+
+    blk32 = choose_blocking(hi, wi, ci, co, hf, wf, machine=tiny,
+                            precision=F32)
+    blk16 = choose_blocking(hi, wi, ci, co, hf, wf, machine=tiny,
+                            precision=BF16)
+    assert blk16.hob * blk16.wob > blk32.hob * blk32.wob
+    assert (blk16.hob, blk16.wob) == (18, 18)             # full map resident
+    # the precision kwarg and the raw itemsize are the same model
+    assert blk16 == choose_blocking(hi, wi, ci, co, hf, wf, machine=tiny,
+                                    in_dtype_bytes=2)
+
+
+def test_bf16_wgrad_blocking_no_smaller():
+    r32 = wgrad_resident_bytes(8, 8, 8, 8, 3, 3, in_dtype_bytes=4)
+    r16 = wgrad_resident_bytes(8, 8, 8, 8, 3, 3, in_dtype_bytes=2)
+    assert r16 < r32                          # acc term stays f32, rest halves
+    tiny = MachineModel(name="tiny-wg", n_vec=8, n_fma=1, l_fma=8, n_reg=64,
+                        vmem_bytes=(r16 + r32) // 2)
+    b32 = choose_wgrad_blocking(8, 8, 3, 3, machine=tiny, cob=8, cib=8,
+                                precision=F32)
+    b16 = choose_wgrad_blocking(8, 8, 3, 3, machine=tiny, cob=8, cib=8,
+                                precision=BF16)
+    assert b16.hob * b16.wob >= b32.hob * b32.wob
+    assert (b16.hob, b16.wob) == (8, 8)
+
+
+def test_kernel_blocking_follows_operand_dtype():
+    """The kernel derives its VMEM fit from the actual operand arrays, so a
+    bf16 run on the same tiny machine takes the larger tiles end to end (and
+    still matches the oracle)."""
+    hi = wi = 20
+    r32 = resident_bytes(18, 18, 8, 8, 3, 3, in_dtype_bytes=4)
+    r16 = resident_bytes(18, 18, 8, 8, 3, 3, in_dtype_bytes=2)
+    tiny = MachineModel(name="tiny-mp2", n_vec=8, n_fma=1, l_fma=8, n_reg=64,
+                        vmem_bytes=(r16 + r32) // 2)
+    xb, wb = _blocked_inputs(11, n=1, hi=hi, wi=wi, ci=8, co=8, lane=8)
+    want = np.asarray(direct_conv_blocked(xb, wb, 1, "VALID"))
+    got = direct_conv2d_blocked_pallas(xb, wb, machine=tiny, interpret=True,
+                                       precision="bf16")
+    _assert_close_bf16(got, want)
+
+
+# ---------------------------------------------------------------------------
+# training end to end + accounting
+# ---------------------------------------------------------------------------
+
+def test_blocked_cnn_trains_bf16_through_pallas_vjp():
+    """The acceptance criterion: BlockedCNN + TrainSettings(use_pallas=True,
+    precision="bf16") takes optimizer steps through the Pallas custom VJP
+    with bf16 operands and f32 master params, and the loss moves."""
+    from repro.train.optimizer import AdamW
+    from repro.train.trainstep import TrainSettings, make_train_step
+
+    model = BlockedCNN(convs=(BlockedConv2D(ci=4, co=8, lane=4),
+                              BlockedConv2D(ci=8, co=8, stride=2, lane=4)),
+                       n_classes=3)
+    p = init_tree(model.specs(), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "images": jnp.asarray(
+            rng.normal(size=(4, 8, 8, 4)).astype(np.float32)),
+        "targets": jnp.asarray(rng.integers(0, 3, 4, dtype=np.int32)),
+    }
+    opt = AdamW(lr=lambda s: jnp.float32(1e-2), weight_decay=0.0)
+    step = jax.jit(make_train_step(
+        model, None, opt,
+        TrainSettings(use_pallas=True, precision="bf16")))
+    st = opt.init(p)
+    losses = []
+    for _ in range(3):
+        p, st, metrics = step(p, st, batch)
+        losses.append(float(metrics["nll"]))
+    # master params stay f32 through bf16 training
+    assert all(leaf.dtype == jnp.float32 for leaf in jax.tree.leaves(p))
+    assert all(np.isfinite(losses)), losses
+    assert losses[-1] < losses[0], losses
+
+
+def test_bf16_grad_accum_matches_single_batch():
+    """Gradient accumulation composes with the policy: microbatched bf16
+    grads equal the single-batch bf16 grads (both f32-accumulated)."""
+    from repro.train.optimizer import AdamW
+    from repro.train.trainstep import TrainSettings, make_train_step
+
+    model = BlockedCNN(convs=(BlockedConv2D(ci=4, co=8, lane=4),),
+                       n_classes=3)
+    p = init_tree(model.specs(), jax.random.PRNGKey(1))
+    rng = np.random.default_rng(5)
+    batch = {
+        "images": jnp.asarray(
+            rng.normal(size=(4, 8, 8, 4)).astype(np.float32)),
+        "targets": jnp.asarray(rng.integers(0, 3, 4, dtype=np.int32)),
+    }
+    opt = AdamW(lr=lambda s: jnp.float32(1e-2), weight_decay=0.0)
+    outs = {}
+    for accum in (1, 2):
+        step = make_train_step(
+            model, None, opt,
+            TrainSettings(accum_steps=accum, use_pallas=True,
+                          precision="bf16"))
+        pp, _, _ = jax.jit(step)(p, opt.init(p), batch)
+        outs[accum] = np.asarray(jax.tree.leaves(pp)[0])
+    np.testing.assert_allclose(outs[2], outs[1], rtol=2e-3, atol=1e-4)
+
+
+def test_bytes_precision_split_accounting():
+    s = ConvShape("t", 4, 16, 16, 8, 8, 3, 3, pad=1)
+    f32 = bytes_precision_split(s, "f32")
+    bf16 = bytes_precision_split(s, "bf16")
+    # f32 policy: no compute copy, no saving, totals agree with the roles
+    assert f32["params_compute"] == 0 and f32["saved"] == 0
+    assert f32["total"] == f32["f32_total"]
+    # bf16 halves activations and residuals exactly; masters untouched
+    assert bf16["activations"] * 2 == f32["activations"]
+    assert bf16["vjp_residual"] * 2 == f32["vjp_residual"]
+    assert bf16["params_master"] == f32["params_master"]
+    # the compute copy costs w*2 but the halved streams dominate
+    assert bf16["saved"] > 0
+    assert bf16["total"] < f32["total"]

@@ -1,7 +1,6 @@
 """Mamba-2 SSD: chunked algorithm == step recurrence oracle (property-swept),
 plus the decode step and Mamba block consistency."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 pytest.importorskip(

@@ -3,7 +3,6 @@ server completes requests; HLO collective accounting parses real modules."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs.base import ModelConfig
 from repro.nn.models import build_model

@@ -180,7 +180,6 @@ def test_runtime_loop_and_resume(tmp_path):
 
 @pytest.mark.parametrize("tie", [True, False])
 def test_fused_loss_equivalence(tie, rng):
-    import dataclasses
     from repro.configs.base import ModelConfig
     from repro.nn.models import build_model
     from repro.nn.module import Parallelism
