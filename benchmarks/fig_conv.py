@@ -14,7 +14,12 @@ Runnable:  PYTHONPATH=src python -m benchmarks.fig_conv [--backward] [--json f]
 pinned CI-sized shapes (``CI_SHAPES`` — the CI bench job's fixed set, so the
 ``BENCH_*.json`` trajectory is comparable run to run); ``--dtype f32
 --dtype bf16`` sweeps the mixed-precision operand dtype (rows are tagged,
-accumulation stays f32 per the precision policy).
+accumulation stays f32 per the precision policy); ``--stream`` adds the
+streamed halo-DMA kernel section (DESIGN.md §11): fwd + fwd+bwd step
+timings through ``stream=True`` for the CI shapes AND a "pathological"
+deep-pinned-pencil shape on a tiny ``MachineModel`` — the configuration
+that hard-raised before ISSUE 5 — plus the per-shape halo-traffic delta
+(``memory_model.bytes_halo_refetch``, window tiles vs streamed bands).
 """
 from __future__ import annotations
 
@@ -24,7 +29,12 @@ import jax.numpy as jnp
 
 from repro.core import conv_baselines as B
 from repro.core import direct_conv as D
-from repro.core.memory_model import ConvShape
+from repro.core import layout as LAY
+from repro.core.blocking import (Blocking, MachineModel, TPU_V5E,
+                                 VmemMisfitError, choose_blocking,
+                                 choose_stream_blocking)
+from repro.core.memory_model import ConvShape, bytes_halo_refetch
+from repro.kernels.direct_conv2d import direct_conv2d_blocked_pallas
 
 from .cnn_zoo import ZOO, ALEXNET
 from .timing import resolve_bench_dtype, time_fn
@@ -35,6 +45,23 @@ from .timing import resolve_bench_dtype, time_fn
 CI_SHAPES = [
     ConvShape("smoke.3x3", 1, 12, 12, 4, 8, 3, 3, pad=1),
     ConvShape("smoke.s2", 1, 12, 12, 8, 8, 3, 3, stride=2, pad="SAME"),
+]
+
+# The streamed section's machine for the pathological rows: pinned 32-deep
+# pencils against a 50 KB budget misfit the window inequality even at
+# hob = wob = 1 (the pre-ISSUE-5 hard raise) while the streamed floor fits.
+STREAM_TINY = MachineModel(name="ci-deep-pencil", n_vec=32, n_fma=1,
+                           l_fma=8, n_reg=64, vmem_bytes=50_000)
+
+# (shape, machine) pairs the --stream section times: the pinned CI shapes on
+# the default model (streamed forced, for a like-for-like trajectory against
+# the window rows) and the previously-fatal deep pencil on STREAM_TINY
+# (streamed is the ONLY path that runs).  Same baseline-invalidated-on-change
+# contract as CI_SHAPES.
+STREAM_SHAPES = [
+    (CI_SHAPES[0], TPU_V5E),
+    (CI_SHAPES[1], TPU_V5E),
+    (ConvShape("patho.pencil32", 1, 6, 6, 32, 32, 3, 3, pad=1), STREAM_TINY),
 ]
 
 
@@ -109,6 +136,84 @@ def bench_backward(shapes=None, iters=3, dtype_name="f32"):
     return rows
 
 
+def _blocked_operands(s: ConvShape, lane: int = 128):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(s.n, s.hi, s.wi, s.ci)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(s.hf, s.wf, s.ci, s.co)), jnp.float32)
+    lay = LAY.BlockedConvLayout.choose(s.ci, s.co, lane=lane)
+    return (LAY.nhwc_to_blocked(x, lay.cb_in),
+            LAY.hwio_to_blocked(w, lay.cb_in, lay.cb_out), lay)
+
+
+def _halo_bytes(s: ConvShape, machine, lay, dtype_name: str):
+    """(window, streamed) re-fetch bytes under each path's chosen blocking.
+
+    When the window inequality misfits outright (the pathological rows) the
+    window number is the ``hob = wob = 1`` floor it was driving toward —
+    the traffic it would have paid had it been allowed to launch."""
+    kw = dict(machine=machine, cob=lay.cb_out, cib=lay.cb_in,
+              precision=dtype_name)
+    try:
+        wblk = choose_blocking(s.padded_hi, s.padded_wi, s.ci, s.co,
+                               s.hf, s.wf, s.stride, **kw)
+    except VmemMisfitError:
+        wblk = Blocking(cob=lay.cb_out, cib=lay.cb_in, hob=1, wob=1)
+    sblk = choose_stream_blocking(s.padded_hi, s.padded_wi, s.ci, s.co,
+                                  s.hf, s.wf, s.stride, **kw)
+    dtype_bytes = resolve_bench_dtype(dtype_name).itemsize
+    return (bytes_halo_refetch(s, wblk, dtype_bytes),
+            bytes_halo_refetch(s, sblk, dtype_bytes))
+
+
+def bench_stream(shapes=None, iters=3, dtype_name="f32"):
+    """The streamed halo-DMA kernel section (``--stream``, DESIGN.md §11).
+
+    Per (shape, machine) pair: fwd and fwd+bwd step times through
+    ``direct_conv2d_blocked_pallas(stream=True)`` (interpret mode on CPU —
+    the trajectory tracks relative drift, not TPU wall-clock), the window
+    path's fwd time when its inequality fits (absent for the pathological
+    rows: that path *raises* there, which is the point), and the
+    halo-traffic delta between the two paths' chosen blockings.  Only the
+    ``*_us`` fields gate in CI; the byte columns are the accounting.
+    """
+    dtype = resolve_bench_dtype(dtype_name)
+    rows = []
+    for s, machine in shapes or STREAM_SHAPES:
+        xb, wb, lay = _blocked_operands(s)
+
+        def stream_fn(xb_, wb_):
+            return direct_conv2d_blocked_pallas(
+                xb_, wb_, stride=s.stride, padding=s.pad, machine=machine,
+                interpret=True, precision=dtype_name, stream=True)
+
+        t_fwd = time_fn(stream_fn, xb, wb, iters=iters, dtype=dtype)
+        t_step = time_fn(stream_fn, xb, wb, iters=iters, backward=True,
+                         dtype=dtype)
+        halo_window, halo_stream = _halo_bytes(s, machine, lay, dtype_name)
+        row = {
+            "layer": s.name,
+            "dtype": dtype_name,
+            "machine": machine.name,
+            "stream_fwd_us": t_fwd * 1e6,
+            "stream_fwdbwd_us": t_step * 1e6,
+            "halo_window_bytes": halo_window,
+            "halo_stream_bytes": halo_stream,
+            "halo_saved_bytes": halo_window - halo_stream,
+        }
+        try:
+            def window_fn(xb_, wb_):
+                return direct_conv2d_blocked_pallas(
+                    xb_, wb_, stride=s.stride, padding=s.pad,
+                    machine=machine, interpret=True, precision=dtype_name,
+                    stream=False)
+            row["window_fwd_us"] = time_fn(window_fn, xb, wb, iters=iters,
+                                           dtype=dtype) * 1e6
+        except VmemMisfitError:
+            pass          # the pathological rows: streamed is the only path
+        rows.append(row)
+    return rows
+
+
 def bench_fig1_packing_split(shapes=None, iters=3):
     """Fig. 1: how much of im2col+GEMM is pure packing overhead."""
     rows = []
@@ -146,6 +251,10 @@ if __name__ == "__main__":
                     "steps)")
     ap.add_argument("--backward", action="store_true",
                     help="also time fwd+bwd training steps per layer")
+    ap.add_argument("--stream", action="store_true",
+                    help="also time the streamed halo-DMA kernel variant "
+                         "(CI shapes + a pathological deep-pencil shape on "
+                         "a tiny MachineModel) with the halo-traffic delta")
     ap.add_argument("--json", default=None,
                     help="write all rows to this JSON file")
     ap.add_argument("--smoke", action="store_true",
@@ -171,6 +280,10 @@ if __name__ == "__main__":
         report["backward"] = [
             row for d in dtypes
             for row in bench_backward(shapes, iters=iters, dtype_name=d)]
+    if args.stream:
+        report["stream"] = [
+            row for d in dtypes
+            for row in bench_stream(iters=iters, dtype_name=d)]
 
     for section, rows in report.items():
         print(f"== {section} ==")

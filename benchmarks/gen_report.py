@@ -50,8 +50,8 @@ def roofline_md(outdir: str) -> str:
         if "error" in r:
             rows.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | | |")
             continue
-        hbm = f"{r['hbm_per_chip_gib']:.1f}" if r.get("hbm_per_chip_gib") \
-            is not None else "—"
+        hbm = (f"{r['hbm_per_chip_gib']:.1f}"
+               if r.get("hbm_per_chip_gib") is not None else "—")
         rows.append(
             f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
             f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "

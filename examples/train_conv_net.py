@@ -122,8 +122,8 @@ def main():
     tol = PARITY_TOL[args.dtype]
     print(f"final loss parity: {path}={float(mine):.6f} "
           f"other={float(other):.6f} (tol={tol:g})")
-    assert abs(float(mine) - float(other)) < tol + tol * abs(float(mine)), \
-        "paths disagree on the trained params"
+    assert abs(float(mine) - float(other)) < tol + tol * abs(float(mine)), (
+        "paths disagree on the trained params")
 
     if args.steps >= 100:
         assert float(acc) > 0.9, "conv net failed to learn"

@@ -160,8 +160,9 @@ class ModelConfig:
                 total += self.moe.n_experts * 3 * d * self.moe.d_ff
                 total += d * self.moe.n_experts                     # router
         if self.encoder:
-            per = d * self.n_heads * self.head_dim * 2 + \
-                  d * self.n_kv_heads * self.head_dim * 2 + 2 * d * self.d_ff
+            per = (d * self.n_heads * self.head_dim * 2
+                   + d * self.n_kv_heads * self.head_dim * 2
+                   + 2 * d * self.d_ff)
             total += self.encoder.n_layers * per
         return total
 

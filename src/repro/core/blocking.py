@@ -28,11 +28,23 @@ from .layout import choose_pencil, divisors, largest_divisor_leq
 from .precision import resolve_precision
 
 __all__ = [
-    "MachineModel", "TPU_V5E", "CPU_HASWELL", "Blocking",
+    "MachineModel", "TPU_V5E", "CPU_HASWELL", "Blocking", "StreamBlocking",
+    "VmemMisfitError",
     "cpu_min_tile_elems", "cpu_max_tile_elems", "resident_bytes",
     "choose_blocking", "dgrad_extents", "choose_dgrad_blocking",
     "wgrad_resident_bytes", "choose_wgrad_blocking",
+    "stream_resident_bytes", "choose_stream_blocking",
+    "choose_stream_dgrad_blocking",
+    "stream_wgrad_resident_bytes", "choose_stream_wgrad_blocking",
 ]
+
+
+class VmemMisfitError(ValueError):
+    """A blocking model could not satisfy its VMEM inequality at the smallest
+    admissible tile.  A distinct type (still a ``ValueError`` — existing
+    callers and tests keep working) so the kernel router can tell a genuine
+    capacity misfit — which the streamed halo-DMA variant may still serve —
+    from an invalid-argument error, which must always propagate."""
 
 
 def _policy_itemsizes(precision, in_dtype_bytes: int,
@@ -223,23 +235,27 @@ def choose_blocking(
         cib = _shrink_to_fit(ci, cib, cib_pinned,
                              lambda c: fits(c, hob, wob))
         if not fits(cib, hob, wob):
-            raise ValueError(
+            raise VmemMisfitError(
                 f"conv tile does not fit VMEM at hob={hob}, wob={wob}, "
                 f"cib={cib} (pinned dims included): filter {hf}x{wf} with "
                 f"cob={cob} needs more than {machine.vmem_bytes} bytes "
-                f"resident")
+                f"resident.  The streamed halo-DMA variant "
+                f"(kernels/conv2d_stream) holds only ~2 row-strips + a "
+                f"singly-resident weight tile and may still serve this "
+                f"shape: pass stream=True to the Pallas entry points, or "
+                f"leave stream=None to auto-route through it")
         # Eq. 1 floor: grow the tile back to the smallest divisor pair that
         # still fits VMEM and yields >= min_rows matmul rows.
         if not hob_pinned and hob * wob < min_rows:
             for cand in divisors(ho):
-                if cand >= hob and cand * wob >= min_rows and \
-                        fits(cib, cand, wob):
+                if (cand >= hob and cand * wob >= min_rows
+                        and fits(cib, cand, wob)):
                     hob = cand
                     break
         if not wob_pinned and hob * wob < min_rows:
             for cand in divisors(wo):
-                if cand >= wob and hob * cand >= min_rows and \
-                        fits(cib, hob, cand):
+                if (cand >= wob and hob * cand >= min_rows
+                        and fits(cib, hob, cand)):
                     wob = cand
                     break
     return Blocking(cob=cob, cib=cib, hob=hob, wob=wob)
@@ -363,8 +379,249 @@ def choose_wgrad_blocking(
         hob = _shrink_to_fit(ho, hob, hob_pinned, lambda h: fits(h, wob))
         wob = _shrink_to_fit(wo, wob, wob_pinned, lambda w: fits(hob, w))
         if not fits(hob, wob):
-            raise ValueError(
+            raise VmemMisfitError(
                 f"wgrad tile does not fit VMEM at hob={hob}, wob={wob}: "
                 f"the [{hf}x{wf}x{cib}x{cob}] accumulator plus windows needs "
-                f"more than {machine.vmem_bytes} bytes resident")
+                f"more than {machine.vmem_bytes} bytes resident.  The "
+                f"streamed wgrad variant (kernels/conv2d_stream) drops the "
+                f"double-buffered windows and the VMEM output block (the "
+                f"accumulator flushes by manual DMA) and may still fit: pass "
+                f"stream=True to direct_conv2d_wgrad_pallas, or leave "
+                f"stream=None to auto-route through it")
     return Blocking(cob=cob, cib=cib, hob=hob, wob=wob)
+
+
+# ---------------------------------------------------------------------------
+# Streamed (halo-DMA) tile sizing — DESIGN.md §11.  The streamed kernels do
+# not let BlockSpec windows pull the whole halo'd patch: the input stays in
+# HBM and a manually double-buffered ``make_async_copy`` pipeline streams it
+# through a 2-slot ring of row-strips, while the weight tile is DMA'd once
+# per grid step into singly-resident scratch.  That changes the inequality in
+# two ways: the 2x on the weight tile disappears (the dominant term for deep
+# pinned pencils), and the input term shrinks from the full window to two
+# strips — with the *strip height* ``hso`` as a new free variable.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StreamBlocking:
+    """Blocking for the streamed kernels: the window vocabulary plus ``hso``,
+    the output rows per streamed strip (``hso`` divides ``hob`` divides Ho).
+    ``hob`` is the rows one *grid step* accumulates (the acc/output tile);
+    within a step the input band arrives as ``hob/hso`` ring strips whose
+    ``Hf - stride`` row overlap is fetched from HBM exactly once."""
+    cob: int    # output-channel pencil (lane dim)
+    cib: int    # input-channel block  (contraction depth per grid step)
+    hob: int    # output rows per grid step (the accumulator tile)
+    wob: int    # output cols per tile
+    hso: int    # output rows per streamed strip (ring granularity)
+
+    @property
+    def n_strips(self) -> int:
+        return self.hob // self.hso
+
+
+def stream_resident_bytes(hso: int, hob: int, wob: int, cob: int, cib: int,
+                          hf: int, wf: int, stride: int = 1,
+                          in_dtype_bytes: int = 4,
+                          acc_dtype_bytes: int = 4) -> int:
+    """VMEM bytes one streamed fwd/dgrad grid step holds resident:
+
+        weights   hf*wf*cib*cob       x1  (manual DMA into scratch — the
+                                           streamed variant's headline win:
+                                           no Pallas double-buffering)
+        ring      2 * hin*wib*cib         (hin = (hso-1)*stride + hf: two
+                                           strip slots, halo rows included)
+        out tile  2 * hob*wob*cob         (a regular pipelined BlockSpec)
+        acc       hob*wob*cob             (persistent f32 scratch)
+
+    The single source of the streamed inequality — the router, tests and
+    benchmarks must use this, not a copy."""
+    hin = (hso - 1) * stride + hf
+    wib = (wob - 1) * stride + wf
+    wgt = hf * wf * cib * cob * in_dtype_bytes
+    ring = 2 * hin * wib * cib * in_dtype_bytes
+    out = 2 * hob * wob * cob * in_dtype_bytes
+    acc = hob * wob * cob * acc_dtype_bytes
+    return wgt + ring + out + acc
+
+
+def choose_stream_blocking(
+    hi: int, wi: int, ci: int, co: int, hf: int, wf: int,
+    stride: int = 1, machine: MachineModel = TPU_V5E,
+    in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
+    cob: int | None = None, cib: int | None = None,
+    hob: int | None = None, wob: int | None = None,
+    hso: int | None = None,
+    precision=None,
+) -> StreamBlocking:
+    """Tile the streamed forward kernel (and, transposed, its dgrad).
+
+    Same contract as :func:`choose_blocking` — ``cob``/``cib`` pin the
+    operand pencils, ``hob``/``wob`` must divide Ho/Wo, ``precision`` is the
+    dtype-aware itemsize — plus the strip height ``hso`` (must divide
+    ``hob``).  Defaults maximize reuse: the whole output map in one grid
+    step (``hob = Ho``, ``wob = Wo``) streamed as one strip.  Under VMEM
+    pressure the model shrinks, in order:
+
+      1. ``hso`` — the ring shrinks; halo traffic is *unchanged* (strips
+         share their overlap rows through the ring, so a band costs one
+         fetch of its extent no matter how finely it is striped);
+      2. ``hob`` — the accumulator/output tile shrinks; row-halo re-fetch
+         appears at the new band seams (``bytes_halo_refetch``);
+      3. ``wob`` — column tiling, the last resort (column halo re-fetch).
+
+    A shape that misfits even at ``hso = hob = wob = 1`` raises
+    :class:`VmemMisfitError`: the hard floor is the singly-resident weight
+    tile plus two minimal strips — below that, no streaming helps."""
+    in_dtype_bytes, acc_dtype_bytes = _policy_itemsizes(
+        precision, in_dtype_bytes, acc_dtype_bytes)
+    ho = (hi - hf) // stride + 1
+    wo = (wi - wf) // stride + 1
+    if ho <= 0 or wo <= 0:
+        raise ValueError(f"empty output for input {hi}x{wi}, filter {hf}x{wf}")
+
+    hob_pinned = hob is not None
+    wob_pinned = wob is not None
+    hso_pinned = hso is not None
+    if cob is None:
+        cob = choose_pencil(co, machine.n_vec)
+    if cib is None:
+        cib = choose_pencil(ci, machine.n_vec)
+    if hob_pinned and (hob < 1 or ho % hob):
+        raise ValueError(f"hob={hob} must divide Ho={ho}")
+    if wob_pinned and (wob < 1 or wo % wob):
+        raise ValueError(f"wob={wob} must divide Wo={wo}")
+    if not hob_pinned:
+        hob = ho
+    if hso_pinned and (hso < 1 or hob % hso):
+        # hso | hob | Ho, so a pinned strip height must divide the band
+        # (and hence Ho when the band defaults to the full extent)
+        raise ValueError(f"hso={hso} must divide hob={hob}")
+    if not wob_pinned:
+        wob = wo
+    if not hso_pinned:
+        hso = hob
+
+    if machine.vmem_bytes:
+        def fits(hso_, hob_, wob_):
+            return stream_resident_bytes(
+                hso_, hob_, wob_, cob, cib, hf, wf, stride,
+                in_dtype_bytes, acc_dtype_bytes) <= machine.vmem_bytes
+
+        hso = _shrink_to_fit(hob, hso, hso_pinned,
+                             lambda s: fits(s, hob, wob))
+        # ring is minimal; if the acc/out tile is what misfits, shrink the
+        # band (hso follows down so it keeps dividing hob)
+        while not hob_pinned and hob > 1 and not fits(hso, hob, wob):
+            if hso_pinned:
+                # the band must stay a multiple of the pinned strip height
+                cand = [d for d in divisors(ho) if d < hob and d % hso == 0]
+                nxt = max(cand) if cand else hob
+            else:
+                nxt = largest_divisor_leq(ho, max(1, hob // 2))
+            if nxt == hob:
+                break
+            hob = nxt
+            if not hso_pinned:
+                hso = largest_divisor_leq(hob, hso)
+        wob = _shrink_to_fit(wo, wob, wob_pinned,
+                             lambda w: fits(hso, hob, w))
+        if not fits(hso, hob, wob):
+            raise VmemMisfitError(
+                f"streamed conv tile does not fit VMEM at hso={hso}, "
+                f"hob={hob}, wob={wob}, cib={cib} (pinned dims included): "
+                f"even the streamed floor — the single [{hf}x{wf}x{cib}x"
+                f"{cob}] weight tile plus two minimal strips — needs more "
+                f"than {machine.vmem_bytes} bytes resident")
+    return StreamBlocking(cob=cob, cib=cib, hob=hob, wob=wob, hso=hso)
+
+
+def choose_stream_dgrad_blocking(
+    ho: int, wo: int, ci: int, co: int, hf: int, wf: int,
+    stride: int = 1, machine: MachineModel = TPU_V5E,
+    in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
+    cib: int | None = None, cob: int | None = None,
+    hob: int | None = None, wob: int | None = None,
+    hso: int | None = None,
+    precision=None,
+) -> StreamBlocking:
+    """Streamed tiles for the transposed-window dgrad: exactly
+    :func:`choose_dgrad_blocking`'s transposition (stride-1 windows over the
+    dilated, ``Hf-1``-halo-padded cotangent, channel pencils swapped)
+    applied to the streamed inequality.  The returned ``hob``/``hso``
+    stripe the dgrad extents ``E = (out-1)*stride + filter``."""
+    eh, ew = dgrad_extents(ho, wo, hf, wf, stride)
+    return choose_stream_blocking(
+        eh + hf - 1, ew + wf - 1, co, ci, hf, wf, stride=1,
+        machine=machine, in_dtype_bytes=in_dtype_bytes,
+        acc_dtype_bytes=acc_dtype_bytes,
+        cob=cib, cib=cob, hob=hob, wob=wob, hso=hso, precision=precision)
+
+
+def stream_wgrad_resident_bytes(hso: int, wob: int, cob: int, cib: int,
+                                hf: int, wf: int, stride: int = 1,
+                                in_dtype_bytes: int = 4,
+                                acc_dtype_bytes: int = 4) -> int:
+    """VMEM bytes one streamed wgrad grid step holds resident.
+
+    Both operands stream (a halo'd x ring and a disjoint cotangent ring);
+    the ``[Hf, Wf, Cib, Cob]`` f32 accumulator is the only weight-sized
+    buffer — it flushes to HBM by manual DMA, so the window path's
+    double-buffered VMEM output block simply does not exist:
+
+        2*(hin*wib*cib + hso*wob*cob)*in_bytes + hf*wf*cib*cob*acc_bytes
+    """
+    hin = (hso - 1) * stride + hf
+    wib = (wob - 1) * stride + wf
+    rings = 2 * (hin * wib * cib + hso * wob * cob) * in_dtype_bytes
+    acc = hf * wf * cib * cob * acc_dtype_bytes
+    return rings + acc
+
+
+def choose_stream_wgrad_blocking(
+    ho: int, wo: int, hf: int, wf: int, stride: int = 1,
+    machine: MachineModel = TPU_V5E,
+    cob: int = 128, cib: int = 128,
+    in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
+    wob: int | None = None, hso: int | None = None,
+    precision=None,
+) -> StreamBlocking:
+    """Tile the streamed wgrad kernel.
+
+    The channel pencils are pinned by the operand layouts (the accumulator
+    *is* the weight block, exactly the window wgrad's contract) and the
+    whole row extent streams in one grid step (``hob = Ho`` always — strips
+    make row tiling at the grid level pointless here, since the accumulator
+    does not grow with the band).  Free variables are ``hso`` (divides Ho)
+    and ``wob`` (divides Wo); shrink order ``hso`` then ``wob``; a misfit at
+    ``hso = wob = 1`` raises :class:`VmemMisfitError` — the floor is the
+    f32 weight-gradient accumulator itself."""
+    in_dtype_bytes, acc_dtype_bytes = _policy_itemsizes(
+        precision, in_dtype_bytes, acc_dtype_bytes)
+    if ho <= 0 or wo <= 0:
+        raise ValueError(f"empty cotangent {ho}x{wo}")
+    wob_pinned, hso_pinned = wob is not None, hso is not None
+    if wob_pinned and (wob < 1 or wo % wob):
+        raise ValueError(f"wob={wob} must divide Wo={wo}")
+    if hso_pinned and (hso < 1 or ho % hso):
+        raise ValueError(f"hso={hso} must divide Ho={ho}")
+    if not wob_pinned:
+        wob = wo
+    if not hso_pinned:
+        hso = ho
+
+    if machine.vmem_bytes:
+        def fits(hso_, wob_):
+            return stream_wgrad_resident_bytes(
+                hso_, wob_, cob, cib, hf, wf, stride,
+                in_dtype_bytes, acc_dtype_bytes) <= machine.vmem_bytes
+
+        hso = _shrink_to_fit(ho, hso, hso_pinned, lambda s: fits(s, wob))
+        wob = _shrink_to_fit(wo, wob, wob_pinned, lambda w: fits(hso, w))
+        if not fits(hso, wob):
+            raise VmemMisfitError(
+                f"streamed wgrad tile does not fit VMEM at hso={hso}, "
+                f"wob={wob}: the irreducible [{hf}x{wf}x{cib}x{cob}] f32 "
+                f"accumulator plus two minimal strips needs more than "
+                f"{machine.vmem_bytes} bytes resident")
+    return StreamBlocking(cob=cob, cib=cib, hob=ho, wob=wob, hso=hso)

@@ -19,7 +19,7 @@ from .padding import Padding, normalize_padding, out_size
 from .precision import resolve_precision
 
 __all__ = ["ConvShape", "bytes_overhead", "bytes_channel_pad",
-           "bytes_precision_split", "overhead_table",
+           "bytes_precision_split", "bytes_halo_refetch", "overhead_table",
            "bytes_repack_boundary", "chain_repack_bytes"]
 
 
@@ -157,6 +157,39 @@ def bytes_precision_split(s: ConvShape, precision="bf16",
         "total": total, "f32_total": f32_total,
         "saved": f32_total - total,
     }
+
+
+def bytes_halo_refetch(s: ConvShape, blk, dtype_bytes: int = 4) -> int:
+    """Extra HBM input bytes a tiled kernel re-fetches through its halos.
+
+    Each spatial tile pulls the halo'd window ``Hib x Wib`` that feeds it
+    (``Hib = (hob-1)*stride + Hf``); adjacent tiles overlap by
+    ``Hf - stride`` rows/cols, so over the whole grid the input's touched
+    extent ``E = (out-1)*stride + filter`` is fetched *more than once*.
+    This returns exactly that excess, summed over the batch and the
+    ``Co/Cob`` passes the grid makes over the input:
+
+        n * ceil(Co/cob) * Ci * (Σ_tiles Hib*Wib  -  Eh*Ew) * dtype_bytes
+
+    ``blk`` is the chosen blocking — ``core.blocking.Blocking`` (window
+    path) or ``StreamBlocking`` (streamed path); only ``hob``/``wob``/
+    ``cob`` are read, so the two are interchangeable here.  The streamed
+    kernel's strips do NOT appear: within a band the ring reuses the
+    ``Hf - stride`` overlap rows through VMEM, so a band costs one fetch of
+    its halo'd extent no matter how finely it is striped — the formula is
+    the same, and the streamed variant's saving is that its inequality
+    affords much larger ``hob`` (usually the full ``Ho``, making the row
+    term vanish) where the window path had to shrink.  Zero when one tile
+    covers the whole map — the zero-overhead ideal.
+    """
+    st = s.stride
+    ho, wo = s.ho, s.wo
+    hib = (blk.hob - 1) * st + s.hf
+    wib = (blk.wob - 1) * st + s.wf
+    eh, ew = (ho - 1) * st + s.hf, (wo - 1) * st + s.wf
+    fetched = (ho // blk.hob) * (wo // blk.wob) * hib * wib
+    passes = s.n * -(-s.co // blk.cob)
+    return passes * (fetched - eh * ew) * s.ci * dtype_bytes
 
 
 def bytes_repack_boundary(prev: ConvShape, nxt: ConvShape,

@@ -27,8 +27,11 @@ that a kernel is only its contraction body:
 
 Every kernel is parameterized by the same ``core.blocking`` output
 (``Blocking`` for forward/dgrad, ``choose_wgrad_blocking`` for wgrad), which
-is the point of the refactor: the next variant (ROADMAP's halo-DMA streaming
-path) drops into this same machinery.
+is the point of the refactor: the streamed halo-DMA variant
+(``kernels/conv2d_stream.py``, DESIGN.md §11) reuses ``tap_windows``, the
+reduction guards, ``epilogue_flush`` and the non-overlapping operand specs
+verbatim — only the halo'd window spec is replaced by its manual
+``make_async_copy`` ring.
 """
 from __future__ import annotations
 

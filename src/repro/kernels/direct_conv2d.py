@@ -49,6 +49,15 @@ scratch tiles — bf16 runs are never bf16-naive sums), residuals are stored at
 params without a bf16 round-trip).  bf16 operands also halve the VMEM
 inequality, so the blocking model admits larger tiles (the itemsize is taken
 from the actual operand arrays — the policy and the fit can't drift).
+
+Every entry point also takes a ``stream`` knob (DESIGN.md §11): each of the
+three kernels has a streamed halo-DMA twin in ``kernels/conv2d_stream.py``
+(input kept in HBM, double-buffered ``make_async_copy`` ring of row-strips,
+singly-resident weight tile), and the wrappers here route between the two —
+window path by default, streamed on an explicit ``stream=True`` or
+automatically when the window blocking model raises ``VmemMisfitError``.
+What used to be the family's one hard failure (deep pinned pencils misfitting
+at ``hob = wob = 1``) is now a served configuration.
 """
 from __future__ import annotations
 
@@ -60,15 +69,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.blocking import (MachineModel, TPU_V5E, choose_blocking,
-                                 choose_dgrad_blocking, choose_wgrad_blocking,
-                                 dgrad_extents)
+from repro.core.blocking import (MachineModel, TPU_V5E, VmemMisfitError,
+                                 choose_blocking, choose_dgrad_blocking,
+                                 choose_wgrad_blocking, dgrad_extents)
 from repro.core.conv_baselines import Padding, normalize_padding
 from repro.core.direct_conv import apply_activation, pad_blocked
 from repro.core.precision import F32, Precision, resolve_precision
 from .conv2d_common import (bias_spec, epilogue_flush, first_step, halo_dims,
                             halo_window_spec, last_step, tap_windows,
                             tile_spec, weight_spec)
+from .conv2d_stream import stream_dgrad, stream_forward, stream_wgrad
 
 __all__ = ["direct_conv2d_blocked_pallas", "direct_conv2d_dgrad_pallas",
            "direct_conv2d_wgrad_pallas"]
@@ -147,9 +157,43 @@ def _wgrad_kernel(x_ref, dy_ref, o_ref, acc_ref, *, hf, wf, hob, wob,
 # forward launch (operates on an already-padded input — always VALID)
 # ---------------------------------------------------------------------------
 
+def _resolve_stream(stream: Optional[bool], hso: Optional[int]
+                    ) -> Optional[bool]:
+    """Normalize the routing knob: an explicit strip height implies the
+    streamed path (``hso`` has no meaning on the window path)."""
+    if hso is not None:
+        if stream is False:
+            raise ValueError("hso= is the streamed variant's strip height; "
+                             "it cannot combine with stream=False")
+        return True
+    return stream
+
+
 def _forward_impl(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
                   activation, hob, wob, machine: MachineModel,
-                  interpret: bool) -> jnp.ndarray:
+                  interpret: bool, stream: Optional[bool] = None,
+                  hso: Optional[int] = None) -> jnp.ndarray:
+    """Route one forward launch: the window path by default, the streamed
+    halo-DMA path (``kernels/conv2d_stream``) when forced (``stream=True``
+    or an explicit ``hso``) or when the window inequality misfits and
+    ``stream`` is None — the old ``hob = wob = 1`` hard-raise is now a
+    routed fallback.  ``stream=False`` pins the window path (its misfit
+    propagates)."""
+    stream = _resolve_stream(stream, hso)
+    if stream is not True:
+        try:
+            return _forward_windowed(xp, w, bias, stride, activation, hob,
+                                     wob, machine, interpret)
+        except VmemMisfitError:
+            if stream is False:
+                raise
+    return stream_forward(xp, w, bias, stride, activation, hob, wob, hso,
+                          machine, interpret)
+
+
+def _forward_windowed(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
+                      activation, hob, wob, machine: MachineModel,
+                      interpret: bool) -> jnp.ndarray:
     n, ciblk, hi, wi, cib = xp.shape
     coblk, ciblk2, hf, wf, cib2, cob = w.shape
     assert (ciblk, cib) == (ciblk2, cib2), (xp.shape, w.shape)
@@ -199,13 +243,15 @@ def _forward_impl(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("stride", "hob", "wob", "machine",
-                                   "interpret"))
+                                   "interpret", "stream", "hso"))
 def direct_conv2d_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray,
                                stride: int = 1,
                                hob: Optional[int] = None,
                                wob: Optional[int] = None,
                                machine: MachineModel = TPU_V5E,
-                               interpret: bool = False) -> jnp.ndarray:
+                               interpret: bool = False,
+                               stream: Optional[bool] = None,
+                               hso: Optional[int] = None) -> jnp.ndarray:
     """Input gradient of the VALID blocked conv, as a direct convolution.
 
     dy: [N, Co/Cob, Ho, Wo, Cob] cotangent; w: the forward's blocked weights
@@ -220,7 +266,25 @@ def direct_conv2d_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray,
     halo pad turns the correlation into the full (transposed) convolution.
     The dilated copy is the one backward-only memory concession — accounted
     in ``memory_model``-style terms in DESIGN.md §9.
+
+    ``stream`` routes like the forward: None auto-falls-back to the streamed
+    transposed kernel when ``choose_dgrad_blocking`` misfits, True forces
+    it (``hso`` stripes the dgrad extents), False pins the window path.
     """
+    stream = _resolve_stream(stream, hso)
+    if stream is not True:
+        try:
+            return _dgrad_windowed(dy, w, stride, hob, wob, machine,
+                                   interpret)
+        except VmemMisfitError:
+            if stream is False:
+                raise
+    return stream_dgrad(dy, w, stride, hob, wob, hso, machine, interpret)
+
+
+def _dgrad_windowed(dy: jnp.ndarray, w: jnp.ndarray, stride: int,
+                    hob: Optional[int], wob: Optional[int],
+                    machine: MachineModel, interpret: bool) -> jnp.ndarray:
     n, coblk, ho, wo, cob = dy.shape
     coblk2, ciblk, hf, wf, cib, cob2 = w.shape
     assert (coblk, cob) == (coblk2, cob2), (dy.shape, w.shape)
@@ -260,14 +324,17 @@ def direct_conv2d_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray,
 
 
 @partial(jax.jit, static_argnames=("hf", "wf", "stride", "hob", "wob",
-                                   "machine", "interpret", "out_dtype"))
+                                   "machine", "interpret", "out_dtype",
+                                   "stream", "hso"))
 def direct_conv2d_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
                                hf: int, wf: int, stride: int = 1,
                                hob: Optional[int] = None,
                                wob: Optional[int] = None,
                                machine: MachineModel = TPU_V5E,
                                interpret: bool = False,
-                               out_dtype=None) -> jnp.ndarray:
+                               out_dtype=None,
+                               stream: Optional[bool] = None,
+                               hso: Optional[int] = None) -> jnp.ndarray:
     """Weight gradient of the VALID blocked conv, accumulated per tile.
 
     xp: [N, Ci/Cib, Hi, Wi, Cib] the forward's *padded* input;
@@ -277,7 +344,28 @@ def direct_conv2d_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
     The (N, Ho/Hob, Wo/Wob) grid axes are the reduction: each (Co, Ci)
     block's [Hf, Wf, Cib, Cob] accumulator stays resident in f32 VMEM
     scratch across all their steps and is stored exactly once.
+
+    ``stream`` routes like the forward: None auto-falls-back to the streamed
+    wgrad (both operands ringed, the accumulator flushed by manual DMA) when
+    ``choose_wgrad_blocking`` misfits, True forces it, False pins the
+    window path.
     """
+    stream = _resolve_stream(stream, hso)
+    if stream is not True:
+        try:
+            return _wgrad_windowed(xp, dy, hf, wf, stride, hob, wob, machine,
+                                   interpret, out_dtype)
+        except VmemMisfitError:
+            if stream is False:
+                raise
+    return stream_wgrad(xp, dy, hf, wf, stride, wob, hso, machine, interpret,
+                        out_dtype)
+
+
+def _wgrad_windowed(xp: jnp.ndarray, dy: jnp.ndarray, hf: int, wf: int,
+                    stride: int, hob: Optional[int], wob: Optional[int],
+                    machine: MachineModel, interpret: bool,
+                    out_dtype) -> jnp.ndarray:
     n, ciblk, hi, wi, cib = xp.shape
     n2, coblk, ho, wo, cob = dy.shape
     assert n == n2, (xp.shape, dy.shape)
@@ -312,9 +400,9 @@ def direct_conv2d_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
 # custom VJP: jax.grad flows through the kernel family
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11, 12))
 def _conv(x, w, bias, stride, pads, activation, hob, wob, machine,
-          interpret, precision):
+          interpret, precision, stream, hso):
     """Primal: the fully fused forward kernel (inference takes this path —
     bias + activation inside the epilogue, output written once).  Operands
     are cast to the policy dtype here — the one down-cast of the forward;
@@ -323,11 +411,11 @@ def _conv(x, w, bias, stride, pads, activation, hob, wob, machine,
     op = precision.op_dtype
     xp = pad_blocked(x.astype(op), *pads)
     return _forward_impl(xp, w.astype(op), bias, stride, activation, hob,
-                         wob, machine, interpret)
+                         wob, machine, interpret, stream, hso)
 
 
 def _conv_fwd(x, w, bias, stride, pads, activation, hob, wob, machine,
-              interpret, precision):
+              interpret, precision, stream, hso):
     """VJP forward: the same kernel computes the *pre-activation* tile z (the
     epilogue residual the backward needs — relu/gelu cotangents are functions
     of z, not of the activated output); the activation is applied outside.
@@ -342,7 +430,7 @@ def _conv_fwd(x, w, bias, stride, pads, activation, hob, wob, machine,
     xp = pad_blocked(x.astype(op), *pads)
     wq = w.astype(op)
     z = _forward_impl(xp, wq, bias, stride, None, hob, wob, machine,
-                      interpret)
+                      interpret, stream, hso)
     linear = activation in (None, "linear")
     out = z if linear else apply_activation(
         z.astype(jnp.float32), activation).astype(z.dtype)
@@ -353,7 +441,11 @@ def _conv_fwd(x, w, bias, stride, pads, activation, hob, wob, machine,
 
 
 def _conv_bwd(stride, pads, activation, hob, wob, machine, interpret,
-              precision, res, g):
+              precision, stream, hso, res, g):
+    """The backward kernels inherit the ``stream`` routing (an explicit
+    override forces all three kernels onto one path; None lets each kernel
+    fall back only where its own window inequality misfits).  Strip heights
+    are per-kernel model choices — the forward's ``hso`` is not theirs."""
     xp, wq, bias, z, x_token, w_token = res
     hf, wf = wq.shape[2], wq.shape[3]
 
@@ -369,8 +461,8 @@ def _conv_bwd(stride, pads, activation, hob, wob, machine, interpret,
 
     # bias cotangent: the epilogue's broadcast, transposed (pencil sums,
     # accumulated in f32, cast to the master bias dtype once)
-    db = None if bias is None else \
-        dz.astype(jnp.float32).sum(axis=(0, 2, 3)).astype(bias.dtype)
+    db = (None if bias is None else
+          dz.astype(jnp.float32).sum(axis=(0, 2, 3)).astype(bias.dtype))
 
     # input gradient w.r.t. the padded input, then strip the pads (rows the
     # forward never touched — beyond the dgrad extents — stay zero)
@@ -378,19 +470,18 @@ def _conv_bwd(stride, pads, activation, hob, wob, machine, interpret,
     hi_p, wi_p = xp.shape[2], xp.shape[3]
     hi, wi = hi_p - ph_lo - ph_hi, wi_p - pw_lo - pw_hi
     dxp = direct_conv2d_dgrad_pallas(dz, wq, stride=stride, machine=machine,
-                                     interpret=interpret)
+                                     interpret=interpret, stream=stream)
     eh, ew = dxp.shape[2], dxp.shape[3]
     dxp = jnp.pad(dxp, ((0, 0), (0, 0), (0, hi_p - eh), (0, wi_p - ew),
                         (0, 0)))
-    dx = dxp[:, :, ph_lo:ph_lo + hi, pw_lo:pw_lo + wi, :] \
-        .astype(x_token.dtype)               # the single cotangent up-cast
+    # the single cotangent up-cast
+    dx = dxp[:, :, ph_lo:ph_lo + hi, pw_lo:pw_lo + wi, :].astype(x_token.dtype)
 
     # dw leaves the wgrad kernel in f32 and reaches the (f32 master) weight
     # dtype directly — never round-tripped through the operand dtype
-    dw = direct_conv2d_wgrad_pallas(xp, dz, hf, wf, stride=stride,
-                                    machine=machine, interpret=interpret,
-                                    out_dtype=jnp.float32) \
-        .astype(w_token.dtype)
+    dw = direct_conv2d_wgrad_pallas(
+        xp, dz, hf, wf, stride=stride, machine=machine, interpret=interpret,
+        out_dtype=jnp.float32, stream=stream).astype(w_token.dtype)
     return dx, dw, db
 
 
@@ -403,7 +494,8 @@ _conv.defvjp(_conv_fwd, _conv_bwd)
 
 @partial(jax.jit,
          static_argnames=("stride", "padding", "activation", "hob", "wob",
-                          "machine", "interpret", "precision"))
+                          "machine", "interpret", "precision", "stream",
+                          "hso"))
 def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
                                  bias: Optional[jnp.ndarray] = None,
                                  stride: int = 1,
@@ -413,7 +505,9 @@ def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
                                  wob: Optional[int] = None,
                                  machine: MachineModel = TPU_V5E,
                                  interpret: bool = False,
-                                 precision: Precision | str = F32
+                                 precision: Precision | str = F32,
+                                 stream: Optional[bool] = None,
+                                 hso: Optional[int] = None
                                  ) -> jnp.ndarray:
     """Tiled + fused direct convolution on the paper's blocked layouts,
     differentiable end to end (custom VJP -> the dgrad/wgrad kernels).
@@ -434,9 +528,17 @@ def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
     "f32"/"bf16"): operand casts on entry, f32 accumulators throughout,
     residuals at the policy dtype, one cotangent up-cast on exit —
     see the module docstring and DESIGN.md §10.
+
+    ``stream`` selects the kernel variant (DESIGN.md §11): None (default)
+    runs the window path and **auto-falls-back** to the streamed halo-DMA
+    variant when the window VMEM inequality misfits even at
+    ``hob = wob = 1`` (what used to be a hard raise); True forces the
+    streamed path (``hso`` optionally pins its strip height); False pins
+    the window path, letting the misfit propagate.  The override rides the
+    custom VJP too, so dgrad/wgrad route consistently.
     """
     hi, wi = x.shape[2], x.shape[3]
     hf, wf = w.shape[2], w.shape[3]
     pads = normalize_padding(padding, hf, wf, stride, hi, wi)
     return _conv(x, w, bias, stride, pads, activation, hob, wob, machine,
-                 interpret, resolve_precision(precision))
+                 interpret, resolve_precision(precision), stream, hso)

@@ -113,8 +113,8 @@ def build_cell(arch: str, shape_name: str, px: Parallelism,
     b = shape.global_batch
     cache_struct = jax.eval_shape(
         lambda: lm.init_cache(b, shape.seq_len, dtype=jnp.bfloat16))
-    cache_sh = _shard_tree(px, lm.cache_pspecs(b, shape.seq_len)) \
-        if px.mesh is not None else None
+    cache_sh = (_shard_tree(px, lm.cache_pspecs(b, shape.seq_len))
+                if px.mesh is not None else None)
     serve = make_serve_step(model, unroll=settings.unroll)
     tok_struct = jax.ShapeDtypeStruct((b, 1), jnp.int32)
     pos_struct = jax.ShapeDtypeStruct((), jnp.int32)

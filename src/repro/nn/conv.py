@@ -26,6 +26,7 @@ from typing import Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core.blocking import MachineModel, TPU_V5E
 from repro.core.conv_baselines import Padding
 from repro.core.direct_conv import direct_conv_blocked
 from repro.core.layout import BlockedConvLayout, nhwc_to_blocked
@@ -70,6 +71,13 @@ class BlockedConv2D:
                                          # f32 masters; compute casts to the
                                          # policy operand dtype at call time
                                          # (DESIGN.md §10)
+    machine: MachineModel = TPU_V5E      # VMEM budget the blocking models
+                                         # fit against (Pallas path)
+    stream: Optional[bool] = None        # kernel variant (DESIGN.md §11):
+                                         # None auto-falls-back to the
+                                         # streamed halo-DMA path on a
+                                         # window-inequality misfit; True/
+                                         # False force one path
 
     @property
     def layout(self) -> BlockedConvLayout:
@@ -89,8 +97,8 @@ class BlockedConv2D:
 
     def __call__(self, p, xb: jnp.ndarray, *, use_pallas: bool = False,
                  interpret: Optional[bool] = None,
-                 precision: Union[str, Precision, None] = None
-                 ) -> jnp.ndarray:
+                 precision: Union[str, Precision, None] = None,
+                 stream: Optional[bool] = None) -> jnp.ndarray:
         """Both paths are differentiable: the Pallas path carries a custom
         VJP (dgrad/wgrad kernels), so this layer trains through the kernel
         with no fallback to the jnp formulation.
@@ -99,6 +107,12 @@ class BlockedConv2D:
         ``BlockedCNN``/``TrainSettings`` pass-down); params stay f32 masters
         either way — the cast to the operand dtype happens inside the conv,
         and its transpose up-casts the weight cotangent back to f32.
+
+        ``stream`` (call override of the layer field) picks the Pallas
+        kernel variant; by default a window-inequality misfit on
+        ``self.machine`` routes to the streamed halo-DMA kernels instead of
+        raising, so deep-pencil layers train end to end.  The jnp path is
+        schedule-agnostic — the knob is a no-op there, like ``hob``/``wob``.
         """
         pol = resolve_precision(
             self.precision if precision is None else precision)
@@ -110,7 +124,8 @@ class BlockedConv2D:
             return direct_conv2d_blocked_pallas(
                 xb, p["w"], bias, stride=self.stride, padding=self.padding,
                 activation=self.activation, hob=self.hob, wob=self.wob,
-                interpret=interpret, precision=pol)
+                machine=self.machine, interpret=interpret, precision=pol,
+                stream=self.stream if stream is None else stream)
         return direct_conv_blocked(xb, p["w"], self.stride, self.padding,
                                    bias, self.activation,
                                    hob=self.hob, wob=self.wob,
@@ -146,17 +161,19 @@ class BlockedCNN:
 
     def __call__(self, p, x_nhwc: jnp.ndarray, *, use_pallas: bool = False,
                  interpret: Optional[bool] = None,
-                 precision: Union[str, Precision, None] = None
-                 ) -> jnp.ndarray:
+                 precision: Union[str, Precision, None] = None,
+                 stream: Optional[bool] = None) -> jnp.ndarray:
         """``precision`` (if given) overrides every conv's policy for this
         forward — under bf16 the layers *chain in bf16* (each conv emits its
         operand dtype), GAP pools in f32, and the head matmul casts its f32
         master to the feature dtype; logits come back in the compute dtype
-        and the loss up-casts them once."""
+        and the loss up-casts them once.  ``stream`` (if given) overrides
+        every conv's kernel-variant routing the same way."""
         # the single layout transform of the whole forward pass
         h = nhwc_to_blocked(x_nhwc, self.convs[0].layout.cb_in)
         for i, conv in enumerate(self.convs):
             h = conv(p[f"conv{i}"], h, use_pallas=use_pallas,
-                     interpret=interpret, precision=precision)
+                     interpret=interpret, precision=precision,
+                     stream=stream)
         feat = blocked_global_avg_pool(h)
         return feat @ p["head"].astype(feat.dtype)

@@ -231,8 +231,8 @@ class LM:
                 pk = pre(px.pspec(("batch", None, "kv_heads", None), shp))
                 mix = (pk, pk)
             else:
-                w = min(layer.kind.window, cache_len) if layer.kind.window \
-                    else cache_len
+                w = (min(layer.kind.window, cache_len)
+                     if layer.kind.window else cache_len)
                 shp = (batch, w, c.n_kv_heads, c.head_dim)
                 pk = pre(px.pspec(("batch", "kv_seq", None, None), shp))
                 mix = KVCache(k=pk, v=pk)

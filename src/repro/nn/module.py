@@ -192,8 +192,8 @@ class Parallelism:
                 parts = list(pspec) + [None] * (len(specs.shape) - len(pspec))
                 used = {a for pp in parts if pp
                         for a in ((pp,) if isinstance(pp, str) else pp)}
-                if "data" not in used and \
-                        int(np.prod(specs.shape)) >= 2 ** 16:
+                if ("data" not in used
+                        and int(np.prod(specs.shape)) >= 2 ** 16):
                     dsize = self.axis_size("data")
                     cands = [(dim, i) for i, (dim, part) in
                              enumerate(zip(specs.shape, parts))

@@ -32,8 +32,8 @@ def fused_cross_entropy(hidden, head_w, targets, vocab: int, *,
 
     def chunk_stats(h, t):
         w = head_w.astype(h.dtype)
-        logits = jnp.einsum("bsd,vd->bsv", h, w) if transpose_head \
-            else jnp.einsum("bsd,dv->bsv", h, w)
+        logits = (jnp.einsum("bsd,vd->bsv", h, w) if transpose_head
+                  else jnp.einsum("bsd,dv->bsv", h, w))
         logits = logits.astype(jnp.float32)
         if cap is not None:
             logits = cap * jnp.tanh(logits / cap)

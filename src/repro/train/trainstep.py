@@ -28,10 +28,13 @@ class TrainSettings:
     use_pallas: bool = False         # conv models: train through the Pallas
                                      # kernel family (custom VJP) instead of
                                      # the XLA-scheduled jnp formulation
-    precision: str = "f32"           # conv models: mixed-precision policy
+    precision: Optional[str] = None  # conv models: mixed-precision policy
                                      # ("f32" | "bf16") — bf16 operands/
                                      # residuals, f32 accumulators + master
-                                     # params (DESIGN.md §10)
+                                     # params (DESIGN.md §10).  None defers
+                                     # to each layer's own policy field; a
+                                     # concrete value overrides every layer
+                                     # for the whole run
 
 
 def forward(model, params, batch: Dict[str, Any], *, train=True,
@@ -42,9 +45,9 @@ def forward(model, params, batch: Dict[str, Any], *, train=True,
         # blocked-layout image classifier: NHWC batch in, class logits out;
         # use_pallas routes every conv (fwd AND bwd) through the kernels,
         # precision sets the operand/residual dtypes (params stay f32)
-        return model(params, batch["images"], use_pallas=use_pallas,
-                     precision=precision), \
-            jnp.zeros((), jnp.float32)
+        return (model(params, batch["images"], use_pallas=use_pallas,
+                      precision=precision),
+                jnp.zeros((), jnp.float32))
     if isinstance(model, EncDec):
         return model(params, batch["tokens"], batch["frames"], train=train,
                      remat=remat, chunk=chunk, unroll=unroll,

@@ -39,8 +39,8 @@ def test_blocking_wide_map_shrinks_wob():
                         cob=128, cib=128)
     wo = 2 ** 17 - 2
     assert b.wob < wo and wo % b.wob == 0
-    assert resident_bytes(b.hob, b.wob, b.cob, b.cib, 3, 3) \
-        <= TPU_V5E.vmem_bytes
+    assert (resident_bytes(b.hob, b.wob, b.cob, b.cib, 3, 3)
+            <= TPU_V5E.vmem_bytes)
 
 
 def test_overhead_table_alexnet():

@@ -1,0 +1,405 @@
+"""Halo-DMA streamed direct convolution (ISSUE 5): the double-buffered
+async-copy kernel family and its router.
+
+* streamed-vs-window bit-identity property sweep: ``stream=True`` and
+  ``stream=False`` produce byte-identical outputs AND byte-identical
+  gradients across stride x padding x bias x activation under both
+  precision policies, including forced multi-strip rings (``hso=``) — the
+  strips partition rows, which are independent accumulators, so the
+  per-element (Ci-block, tap) contraction order never changes;
+* the previously-fatal deep-pencil configuration from DESIGN.md §7 (pinned
+  pencils whose window inequality misfits even at ``Hob = Wob = 1`` on a
+  tiny ``MachineModel``) runs end to end through the routed fallback:
+  forward bit-identical to the ``direct_conv_blocked`` oracle in f32,
+  ``jax.vjp``, and a full ``BlockedCNN`` train step matching the jnp path;
+* ``stream_resident_bytes`` / ``choose_stream_blocking`` units: formula
+  match, monotonicity in every free variable and in the VMEM budget,
+  divisibility invariants (``hso | hob | Ho``), pin validation, the bf16
+  halved inequality, and the streamed floor's ``VmemMisfitError``;
+* the sharpened window-misfit errors name the ``stream=`` knob;
+* ``memory_model.bytes_halo_refetch`` accounting and the window-vs-stream
+  delta for a pathological shape;
+* ``benchmarks/check_regression.py`` treats candidate-only rows as
+  "new (unseeded)" notes while baseline rows missing from the candidate
+  still fail the gate.
+"""
+import importlib.util
+import pathlib
+import zlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import layout as L
+from repro.core.blocking import (Blocking, MachineModel, StreamBlocking,
+                                 VmemMisfitError, choose_blocking,
+                                 choose_stream_blocking,
+                                 choose_stream_wgrad_blocking,
+                                 stream_resident_bytes,
+                                 stream_wgrad_resident_bytes)
+from repro.core.direct_conv import direct_conv_blocked
+from repro.core.memory_model import ConvShape, bytes_halo_refetch
+from repro.kernels.direct_conv2d import (direct_conv2d_blocked_pallas,
+                                         direct_conv2d_dgrad_pallas,
+                                         direct_conv2d_wgrad_pallas)
+from repro.nn.conv import BlockedCNN, BlockedConv2D
+from repro.nn.module import init_tree
+
+
+def _blocked(rng, hi, wi, ci, co, hf, wf, lane, use_bias=True):
+    x = jnp.asarray(rng.normal(size=(2, hi, wi, ci)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(hf, wf, ci, co)).astype(np.float32))
+    lay = L.BlockedConvLayout.choose(ci, co, lane=lane)
+    xb = L.nhwc_to_blocked(x, lay.cb_in)
+    wb = L.hwio_to_blocked(w, lay.cb_in, lay.cb_out)
+    bb = None
+    if use_bias:
+        b = jnp.asarray(rng.normal(size=(co,)).astype(np.float32))
+        bb = b.reshape(co // lay.cb_out, lay.cb_out)
+    return xb, wb, bb
+
+
+# ---------------------------------------------------------------------------
+# streamed-vs-window bit-identity property sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("use_bias", [True, False])
+@pytest.mark.parametrize("activation", ["relu", "gelu", None])
+@pytest.mark.parametrize("precision", ["f32", "bf16"])
+def test_stream_matches_window_bitwise(stride, padding, use_bias, activation,
+                                       precision):
+    """Both kernel variants share the epilogue and the per-output-element
+    (Ci-block, tap) contraction order, so their outputs are byte-identical
+    — not allclose: identical — under every policy."""
+    rng = np.random.default_rng(zlib.crc32(
+        repr((stride, padding, use_bias, activation, precision)).encode()))
+    xb, wb, bb = _blocked(rng, 9, 9, 4, 8, 3, 3, 4, use_bias)
+
+    kw = dict(stride=stride, padding=padding, activation=activation,
+              interpret=True, precision=precision)
+    want = direct_conv2d_blocked_pallas(xb, wb, bb, stream=False, **kw)
+    got = direct_conv2d_blocked_pallas(xb, wb, bb, stream=True, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # a forced multi-strip ring (hso=1: one output row per strip, the halo
+    # rows crossing the VMEM seam copy every strip) changes nothing
+    got = direct_conv2d_blocked_pallas(xb, wb, bb, stream=True, hso=1, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("precision", ["f32", "bf16"])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_stream_grads_match_window_bitwise(precision, stride):
+    """jax.grad through the router: forcing the streamed family (forward,
+    dgrad AND wgrad) reproduces the window family's cotangents bit for
+    bit."""
+    rng = np.random.default_rng(7 + stride)
+    xb, wb, bb = _blocked(rng, 8, 8, 4, 8, 3, 3, 4)
+
+    def loss(path):
+        def f(xb_, wb_, bb_):
+            return jnp.sum(direct_conv2d_blocked_pallas(
+                xb_, wb_, bb_, stride=stride, padding="SAME",
+                activation="relu", interpret=True, precision=precision,
+                stream=path).astype(jnp.float32))
+        return jax.grad(f, argnums=(0, 1, 2))(xb, wb, bb)
+
+    for a, b, name in zip(loss(False), loss(True), ("dx", "dw", "db")):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_stream_hso_validation():
+    rng = np.random.default_rng(0)
+    xb, wb, _ = _blocked(rng, 9, 9, 4, 8, 3, 3, 4, use_bias=False)
+    # hso must divide the band height (Ho = 9 here, hso = 2 does not)
+    with pytest.raises(ValueError, match="hso=2 must divide"):
+        direct_conv2d_blocked_pallas(xb, wb, stride=1, padding="SAME",
+                                     stream=True, hso=2, interpret=True)
+    # hso contradicts a pinned window path
+    with pytest.raises(ValueError, match="cannot combine"):
+        direct_conv2d_blocked_pallas(xb, wb, stride=1, padding="SAME",
+                                     stream=False, hso=3, interpret=True)
+    # an explicit hso alone implies the streamed path (and works)
+    out = direct_conv2d_blocked_pallas(xb, wb, stride=1, padding="SAME",
+                                       hso=3, interpret=True)
+    want = direct_conv2d_blocked_pallas(xb, wb, stride=1, padding="SAME",
+                                        stream=False, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# the previously-fatal deep-pencil configuration (DESIGN.md §7 -> §11)
+# ---------------------------------------------------------------------------
+
+# Pinned 32-deep pencils against a 50 KB budget: the window inequality needs
+# 2*(Hf*Wf*Cib + Hf*Wf*Cib*Cob + Cob)*4 + 4*Cob ~ 76 KB even at
+# hob = wob = 1, while the streamed floor (one weight tile + two minimal
+# strips) is ~40 KB — exactly the regime ISSUE 5 opens.
+DEEP = MachineModel(name="deep-pencil", n_vec=32, n_fma=1, l_fma=8, n_reg=64,
+                    vmem_bytes=50_000)
+DEEP_SHAPE = dict(hi=6, wi=6, ci=32, co=32, hf=3, wf=3, lane=32)
+
+
+def test_deep_pencil_window_path_still_raises():
+    """stream=False preserves the old contract — and the error now names
+    the fallback and the knob instead of a bare inequality failure."""
+    rng = np.random.default_rng(1)
+    xb, wb, _ = _blocked(rng, use_bias=False, **DEEP_SHAPE)
+    with pytest.raises(VmemMisfitError, match="does not fit VMEM"):
+        direct_conv2d_blocked_pallas(xb, wb, stride=1, padding="SAME",
+                                     machine=DEEP, stream=False,
+                                     interpret=True)
+    with pytest.raises(ValueError, match="stream=True"):
+        choose_blocking(6, 6, 32, 32, 3, 3, machine=DEEP, cob=32, cib=32)
+
+
+def test_deep_pencil_forward_falls_back_bit_identical_to_oracle():
+    """The acceptance configuration: raises on the window path, runs through
+    the streamed fallback with stream=None, f32 output bit-identical to the
+    direct_conv_blocked oracle."""
+    rng = np.random.default_rng(2)
+    xb, wb, bb = _blocked(rng, **DEEP_SHAPE)
+    got = direct_conv2d_blocked_pallas(xb, wb, bb, stride=1, padding="SAME",
+                                       activation="relu", machine=DEEP,
+                                       interpret=True)
+    want = direct_conv_blocked(xb, wb, 1, "SAME", bb, "relu")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_deep_pencil_vjp_through_fallback():
+    """jax.vjp through the routed kernels (streamed forward + dgrad + wgrad
+    all engage — their window models misfit too) matches the differentiable
+    oracle."""
+    rng = np.random.default_rng(3)
+    xb, wb, bb = _blocked(rng, **DEEP_SHAPE)
+
+    def f_pallas(xb_, wb_, bb_):
+        return direct_conv2d_blocked_pallas(
+            xb_, wb_, bb_, stride=1, padding="SAME", activation="relu",
+            machine=DEEP, interpret=True)
+
+    def f_oracle(xb_, wb_, bb_):
+        return direct_conv_blocked(xb_, wb_, 1, "SAME", bb_, "relu")
+
+    y, vjp = jax.vjp(f_pallas, xb, wb, bb)
+    yo, vjpo = jax.vjp(f_oracle, xb, wb, bb)
+    r = jnp.asarray(rng.normal(size=y.shape).astype(np.float32))
+    for a, b, name in zip(vjp(r), vjpo(r), ("dx", "dw", "db")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-5, err_msg=name)
+
+
+def test_deep_pencil_cnn_train_step_through_fallback():
+    """A BlockedCNN whose conv misfits the window inequality trains end to
+    end (make_train_step, Pallas custom VJP on the streamed kernels) and
+    matches the jnp path's parameter update."""
+    from repro.train.optimizer import AdamW
+    from repro.train.trainstep import TrainSettings, make_train_step
+
+    model = BlockedCNN(
+        convs=(BlockedConv2D(ci=32, co=32, lane=32, machine=DEEP),),
+        n_classes=3)
+    params = init_tree(model.specs(), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "images": jnp.asarray(
+            rng.normal(size=(4, 6, 6, 32)).astype(np.float32)),
+        "targets": jnp.asarray(rng.integers(0, 3, 4, dtype=np.int32)),
+    }
+    opt = AdamW(lr=lambda s: jnp.float32(1e-2), weight_decay=0.0)
+    outs = {}
+    for pallas in (False, True):
+        step = make_train_step(model, None, opt,
+                               TrainSettings(use_pallas=pallas))
+        pp, _, _ = jax.jit(step)(params, opt.init(params), batch)
+        outs[pallas] = np.asarray(jax.tree.leaves(pp)[0])
+    np.testing.assert_allclose(outs[True], outs[False], rtol=2e-4, atol=1e-5)
+
+
+def test_backward_wrappers_route_stream():
+    """The dgrad/wgrad wrappers expose the same routing contract as the
+    forward: stream=False raises on the deep-pencil config, stream=None
+    falls back and matches the forced-stream result."""
+    rng = np.random.default_rng(4)
+    xb, wb, _ = _blocked(rng, use_bias=False, **DEEP_SHAPE)
+    dy = jnp.asarray(
+        rng.normal(size=(2, 1, 4, 4, 32)).astype(np.float32))   # VALID out
+    with pytest.raises(VmemMisfitError):
+        direct_conv2d_dgrad_pallas(dy, wb, machine=DEEP, stream=False,
+                                   interpret=True)
+    with pytest.raises(VmemMisfitError):
+        direct_conv2d_wgrad_pallas(xb, dy, 3, 3, machine=DEEP, stream=False,
+                                   interpret=True)
+    dx_auto = direct_conv2d_dgrad_pallas(dy, wb, machine=DEEP,
+                                         interpret=True)
+    dx_forced = direct_conv2d_dgrad_pallas(dy, wb, machine=DEEP, stream=True,
+                                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(dx_auto), np.asarray(dx_forced))
+    dw_auto = direct_conv2d_wgrad_pallas(xb, dy, 3, 3, machine=DEEP,
+                                         interpret=True)
+    dw_forced = direct_conv2d_wgrad_pallas(xb, dy, 3, 3, machine=DEEP,
+                                           stream=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(dw_auto), np.asarray(dw_forced))
+
+
+# ---------------------------------------------------------------------------
+# stream blocking model units
+# ---------------------------------------------------------------------------
+
+def test_stream_resident_bytes_formula_and_monotonicity():
+    # hand-checked point: hso=1, hob=2, wob=2, cob=cib=8, 3x3, stride 1
+    #   wgt 3*3*8*8*4 = 2304;  ring 2 * (3*4*8) * 4 = 768
+    #   out 2 * (2*2*8) * 4 = 256;  acc (2*2*8) * 4 = 128
+    assert stream_resident_bytes(1, 2, 2, 8, 8, 3, 3) == 2304 + 768 + 256 + 128
+    # monotone (strictly, for these shapes) in every free variable
+    base = stream_resident_bytes(2, 4, 4, 8, 8, 3, 3)
+    assert stream_resident_bytes(4, 4, 4, 8, 8, 3, 3) > base      # hso
+    assert stream_resident_bytes(2, 8, 4, 8, 8, 3, 3) > base      # hob
+    assert stream_resident_bytes(2, 4, 8, 8, 8, 3, 3) > base      # wob
+    # bf16 operands halve everything but the f32 accumulator
+    f32 = stream_resident_bytes(2, 4, 4, 8, 8, 3, 3, in_dtype_bytes=4)
+    bf16 = stream_resident_bytes(2, 4, 4, 8, 8, 3, 3, in_dtype_bytes=2)
+    acc = 4 * 4 * 8 * 4
+    assert bf16 - acc == (f32 - acc) // 2
+    # wgrad flavor: the f32 weight-gradient accumulator is the floor
+    assert stream_wgrad_resident_bytes(1, 1, 8, 8, 3, 3) > 3 * 3 * 8 * 8 * 4
+
+
+def test_choose_stream_blocking_invariants_and_monotonicity():
+    prev = None
+    for vmem in (40_000, 50_000, 80_000, 200_000):
+        m = MachineModel(name="m", n_vec=32, n_fma=1, l_fma=8, n_reg=64,
+                         vmem_bytes=vmem)
+        blk = choose_stream_blocking(8, 8, 32, 32, 3, 3, machine=m,
+                                     cob=32, cib=32)
+        ho = wo = 6
+        assert ho % blk.hob == 0 and blk.hob % blk.hso == 0
+        assert wo % blk.wob == 0
+        assert blk.n_strips == blk.hob // blk.hso
+        assert stream_resident_bytes(blk.hso, blk.hob, blk.wob, blk.cob,
+                                     blk.cib, 3, 3) <= vmem
+        if prev is not None:
+            assert (blk.hso, blk.hob, blk.wob) >= prev    # more VMEM, >= tiles
+        prev = (blk.hso, blk.hob, blk.wob)
+    # at the largest budget the defaults win: whole map, one strip
+    assert prev == (6, 6, 6)
+
+
+def test_choose_stream_blocking_bf16_admits_larger_tiles():
+    m = MachineModel(name="m", n_vec=32, n_fma=1, l_fma=8, n_reg=64,
+                     vmem_bytes=50_000)
+    f32 = choose_stream_blocking(8, 8, 32, 32, 3, 3, machine=m,
+                                 cob=32, cib=32)
+    bf16 = choose_stream_blocking(8, 8, 32, 32, 3, 3, machine=m,
+                                  cob=32, cib=32, precision="bf16")
+    assert (bf16.hso, bf16.hob, bf16.wob) >= (f32.hso, f32.hob, f32.wob)
+    assert (bf16.hob, bf16.wob) == (6, 6)      # bf16 fits the whole map
+
+
+def test_choose_stream_blocking_pins_and_floor():
+    with pytest.raises(ValueError, match="hob=4 must divide"):
+        choose_stream_blocking(8, 8, 8, 8, 3, 3, hob=4)           # ho = 6
+    with pytest.raises(ValueError, match="wob=4 must divide"):
+        choose_stream_blocking(8, 8, 8, 8, 3, 3, wob=4)
+    with pytest.raises(ValueError, match="hso=4 must divide"):
+        choose_stream_blocking(8, 8, 8, 8, 3, 3, hob=3, hso=4)
+    micro = MachineModel(name="micro", n_vec=8, n_fma=1, l_fma=1, n_reg=8,
+                         vmem_bytes=512)
+    with pytest.raises(VmemMisfitError, match="streamed floor"):
+        choose_stream_blocking(8, 8, 8, 8, 3, 3, machine=micro,
+                               cob=8, cib=8)
+    with pytest.raises(VmemMisfitError, match="streamed wgrad"):
+        choose_stream_wgrad_blocking(6, 6, 3, 3, machine=micro,
+                                     cob=8, cib=8)
+    # pinned strip survives the fit untouched
+    blk = choose_stream_blocking(8, 8, 8, 8, 3, 3, hso=3)
+    assert blk.hso == 3 and blk.hob % 3 == 0
+
+
+def test_stream_wgrad_blocking_shrinks_hso_first():
+    m = MachineModel(name="m", n_vec=32, n_fma=1, l_fma=8, n_reg=64,
+                     vmem_bytes=42_000)
+    blk = choose_stream_wgrad_blocking(6, 6, 3, 3, machine=m, cob=32, cib=32)
+    assert blk.hob == 6                      # wgrad never row-tiles the grid
+    assert blk.hso < 6                       # ring pressure: strips shrank
+    assert stream_wgrad_resident_bytes(blk.hso, blk.wob, 32, 32, 3,
+                                       3) <= 42_000
+
+
+# ---------------------------------------------------------------------------
+# halo-traffic accounting
+# ---------------------------------------------------------------------------
+
+def test_bytes_halo_refetch_accounting():
+    s = ConvShape("t", 2, 18, 18, 8, 16, 3, 3, pad=1)      # ho = wo = 18
+    # one tile covering the map: the zero-overhead ideal
+    assert bytes_halo_refetch(s, Blocking(cob=16, cib=8, hob=18,
+                                          wob=18)) == 0
+    # row tiling only: 6 bands of hib=5 fetch 30 rows for an 20-row extent
+    got = bytes_halo_refetch(s, Blocking(cob=16, cib=8, hob=3, wob=18))
+    assert got == 2 * 1 * (6 * 5 * 20 - 20 * 20) * 8 * 4
+    # StreamBlocking is accepted interchangeably (duck-typed on hob/wob/cob)
+    # and strips do NOT add traffic: only the band/tile geometry counts
+    a = bytes_halo_refetch(s, StreamBlocking(cob=16, cib=8, hob=3, wob=18,
+                                             hso=1))
+    assert a == got
+    # the ISSUE 5 delta: the streamed path's larger feasible band kills the
+    # window path's re-fetch tax for the deep-pencil configuration
+    patho = ConvShape("patho", 1, 6, 6, 32, 32, 3, 3, pad=1)
+    window_at_floor = Blocking(cob=32, cib=32, hob=1, wob=1)
+    streamed = choose_stream_blocking(8, 8, 32, 32, 3, 3, machine=DEEP,
+                                      cob=32, cib=32)
+    saved = (bytes_halo_refetch(patho, window_at_floor)
+             - bytes_halo_refetch(patho, streamed))
+    assert saved > 0
+
+
+# ---------------------------------------------------------------------------
+# check_regression: unseeded rows note, missing baseline rows fail
+# ---------------------------------------------------------------------------
+
+def _load_check_regression():
+    path = (pathlib.Path(__file__).resolve().parents[1] / "benchmarks"
+            / "check_regression.py")
+    spec = importlib.util.spec_from_file_location("check_regression", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_regression_new_rows_note_not_fail():
+    cr = _load_check_regression()
+    base = {"backward": [{"layer": "a", "dtype": "f32", "t_us": 100.0}]}
+    cand = {"backward": [{"layer": "a", "dtype": "f32", "t_us": 110.0}],
+            "stream": [{"layer": "patho", "dtype": "f32", "t_us": 900.0}]}
+    failures, notes = cr.compare(base, cand, threshold=2.0, atol_us=250.0)
+    assert not failures
+    assert any("new (unseeded)" in n for n in notes)
+
+
+def test_check_regression_missing_baseline_row_fails():
+    cr = _load_check_regression()
+    base = {"backward": [{"layer": "a", "dtype": "f32", "t_us": 100.0},
+                         {"layer": "b", "dtype": "f32", "t_us": 100.0}]}
+    cand = {"backward": [{"layer": "a", "dtype": "f32", "t_us": 100.0}]}
+    failures, _ = cr.compare(base, cand, threshold=2.0, atol_us=250.0)
+    assert any("missing from candidate" in f for f in failures)
+
+
+def test_check_regression_gate_needs_both_bars():
+    cr = _load_check_regression()
+    base = {"backward": [{"layer": "a", "dtype": "f32", "t_us": 40.0}]}
+    # 3x but only +80us: runner wobble, not a regression
+    cand = {"backward": [{"layer": "a", "dtype": "f32", "t_us": 120.0}]}
+    failures, notes = cr.compare(base, cand, threshold=2.0, atol_us=250.0)
+    assert not failures and notes
+    # 3x AND +800us: gates
+    cand = {"backward": [{"layer": "a", "dtype": "f32", "t_us": 1200.0}]}
+    failures, _ = cr.compare(
+        {"backward": [{"layer": "a", "dtype": "f32", "t_us": 400.0}]},
+        cand, threshold=2.0, atol_us=250.0)
+    assert failures

@@ -135,8 +135,8 @@ def test_pinned_hob_constrains_wob_choice():
     blk = choose_blocking(514, 514, 256, 256, 3, 3, cob=128, cib=128,
                           hob=512)
     assert blk.hob == 512 and blk.wob < 512 and 512 % blk.wob == 0
-    assert resident_bytes(blk.hob, blk.wob, blk.cob, blk.cib, 3, 3) \
-        <= TPU_V5E.vmem_bytes
+    assert (resident_bytes(blk.hob, blk.wob, blk.cob, blk.cib, 3, 3)
+            <= TPU_V5E.vmem_bytes)
     with pytest.raises(ValueError, match="does not fit VMEM"):
         choose_blocking(18, 18, 8, 8, 3, 3, machine=TINY, cob=8, cib=8,
                         hob=16, wob=16)

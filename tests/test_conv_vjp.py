@@ -368,13 +368,13 @@ def test_dgrad_blocking_divides_extents():
 def test_wgrad_blocking_inequality_and_errors():
     blk = choose_wgrad_blocking(16, 16, 3, 3, machine=TINY, cob=8, cib=8)
     assert 16 % blk.hob == 0 and 16 % blk.wob == 0
-    assert wgrad_resident_bytes(blk.hob, blk.wob, 8, 8, 3, 3) \
-        <= TINY.vmem_bytes
+    assert (wgrad_resident_bytes(blk.hob, blk.wob, 8, 8, 3, 3)
+            <= TINY.vmem_bytes)
     # the resident accumulator makes the inequality strictly harder than
     # the forward's at the same tile
     from repro.core.blocking import resident_bytes
-    assert wgrad_resident_bytes(4, 4, 8, 8, 3, 3) > \
-        resident_bytes(4, 4, 8, 8, 3, 3)
+    assert (wgrad_resident_bytes(4, 4, 8, 8, 3, 3)
+            > resident_bytes(4, 4, 8, 8, 3, 3))
     with pytest.raises(ValueError, match="hob=5 must divide"):
         choose_wgrad_blocking(16, 16, 3, 3, hob=5)
     micro = MachineModel(name="micro", n_vec=8, n_fma=1, l_fma=1, n_reg=8,

@@ -50,8 +50,8 @@ def _blocked_inputs(seed, n=2, hi=10, wi=9, ci=4, co=8, hf=3, wf=3, lane=4):
     x = jnp.asarray(rng.normal(size=(n, hi, wi, ci)).astype(np.float32))
     w = jnp.asarray(rng.normal(size=(hf, wf, ci, co)).astype(np.float32))
     lay = L.BlockedConvLayout.choose(ci, co, lane=lane)
-    return L.nhwc_to_blocked(x, lay.cb_in), \
-        L.hwio_to_blocked(w, lay.cb_in, lay.cb_out)
+    return (L.nhwc_to_blocked(x, lay.cb_in),
+            L.hwio_to_blocked(w, lay.cb_in, lay.cb_out))
 
 
 # ---------------------------------------------------------------------------
@@ -137,7 +137,7 @@ def test_vjp_residuals_stored_at_policy_dtype():
 
     xb, wb = _blocked_inputs(3)
     out, res = _conv_fwd(xb, wb, None, 1, ((1, 1), (1, 1)), "relu",
-                         None, None, TPU_V5E, True, BF16)
+                         None, None, TPU_V5E, True, BF16, None, None)
     xp, wq, bias, z, x_token, w_token = res
     assert out.dtype == jnp.bfloat16
     assert xp.dtype == jnp.bfloat16          # operand-cast padded input
@@ -242,6 +242,29 @@ def test_kernel_blocking_follows_operand_dtype():
 # ---------------------------------------------------------------------------
 # training end to end + accounting
 # ---------------------------------------------------------------------------
+
+def test_default_train_settings_defer_to_layer_policy():
+    """TrainSettings.precision defaults to None = defer: a per-layer bf16
+    policy survives the training entry point instead of being silently
+    overridden back to f32 (layers chain in their operand dtype, so the
+    logits arrive bf16 iff the layer policy engaged)."""
+    from repro.train.trainstep import TrainSettings, forward
+
+    model = BlockedCNN(
+        convs=(BlockedConv2D(ci=4, co=8, lane=4, precision="bf16"),),
+        n_classes=3)
+    p = init_tree(model.specs(), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"images": jnp.asarray(
+        rng.normal(size=(2, 8, 8, 4)).astype(np.float32))}
+    settings = TrainSettings()
+    assert settings.precision is None
+    logits, _ = forward(model, p, batch, precision=settings.precision)
+    assert logits.dtype == jnp.bfloat16
+    # and a concrete settings value still overrides every layer
+    logits, _ = forward(model, p, batch, precision="f32")
+    assert logits.dtype == jnp.float32
+
 
 def test_blocked_cnn_trains_bf16_through_pallas_vjp():
     """The acceptance criterion: BlockedCNN + TrainSettings(use_pallas=True,

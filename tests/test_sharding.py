@@ -67,24 +67,24 @@ def test_dense_tp_loss_equivalence():
 
 def test_moe_ep_loss_equivalence():
     run_probe(_loss_equivalence_body(
-        'dataclasses.replace(BASE, moe=MoEConfig(n_experts=4, top_k=2, '
-        'd_ff=64, capacity_factor=8.0))', needs_remap=True))
+        "dataclasses.replace(BASE, moe=MoEConfig(n_experts=4, top_k=2, "
+        "d_ff=64, capacity_factor=8.0))", needs_remap=True))
 
 
 def test_moe_ep_tp_loss_equivalence():
     # E=2 < model=4 -> ep=2, tp=2 (the mixtral case)
     run_probe(_loss_equivalence_body(
-        'dataclasses.replace(BASE, moe=MoEConfig(n_experts=2, top_k=1, '
-        'd_ff=64, capacity_factor=8.0))', needs_remap=True))
+        "dataclasses.replace(BASE, moe=MoEConfig(n_experts=2, top_k=1, "
+        "d_ff=64, capacity_factor=8.0))", needs_remap=True))
 
 
 def test_hybrid_loss_equivalence():
     run_probe(_loss_equivalence_body(
-        'dataclasses.replace(BASE, use_rope=False, n_layers=4, '
+        "dataclasses.replace(BASE, use_rope=False, n_layers=4, "
         'family="hybrid", ssm=SSMConfig(d_state=8, d_conv=4, expand=2, '
-        'head_dim=16, n_groups=1, chunk=8), attn_period=4, attn_offset=2, '
-        'moe=MoEConfig(n_experts=4, top_k=2, d_ff=64, period=2, '
-        'capacity_factor=8.0))', needs_remap=True))
+        "head_dim=16, n_groups=1, chunk=8), attn_period=4, attn_offset=2, "
+        "moe=MoEConfig(n_experts=4, top_k=2, d_ff=64, period=2, "
+        "capacity_factor=8.0))", needs_remap=True))
 
 
 def test_sharded_flash_decode_equivalence():
