@@ -18,8 +18,17 @@ same order as the signal, so a violation must clear BOTH bars: the ratio
 threshold AND an absolute delta (``--atol-us``).  A 40us -> 90us wobble is
 runner noise; a sustained 100us -> 400us median-of-5 is a real regression.
 
+With ``--dispatch-table`` the gate also checks dispatch coverage
+(DESIGN.md §12): every benched (layer, dtype) must carry rows in the
+candidate's ``dispatch`` section, and every dispatch row's key must resolve
+through the checked-in ``dispatch_table.json`` — a benched shape whose
+routing silently fell back to the analytical prior *without* a table entry
+fails (tune it, or seed it with ``seed_prior``); shapes the table routes by
+prior (``source: "prior"``) are reported as "untuned" but never gate.
+
 Usage:  python benchmarks/check_regression.py BENCH_baseline.json \
-            BENCH_ci.json [--threshold 2.0] [--atol-us 250]
+            BENCH_ci.json [--threshold 2.0] [--atol-us 250] \
+            [--dispatch-table src/repro/configs/dispatch_table.json]
 """
 from __future__ import annotations
 
@@ -69,6 +78,52 @@ def compare(baseline: dict, candidate: dict, threshold: float,
     return failures, notes
 
 
+def check_dispatch_coverage(candidate: dict, table: dict):
+    """-> (failures, notes): cross-reference the candidate's ``dispatch``
+    rows against the checked-in dispatch table.
+
+    Gate: every benched (layer, dtype) has dispatch rows, and every
+    dispatch row's key either has a table entry or is explicitly
+    prior-routed.  FYI: prior-routed shapes (no measurement backing the
+    choice) are listed as "untuned" so someone eventually tunes them.
+    """
+    entries = table.get("entries", {})
+    failures, notes = [], []
+
+    dispatch_rows = candidate.get("dispatch", [])
+    covered = {(r.get("layer"), r.get("dtype", "f32"))
+               for r in dispatch_rows}
+    for section, rows in candidate.items():
+        if section == "dispatch":
+            continue
+        for row in rows:
+            pair = (row.get("layer"), row.get("dtype", "f32"))
+            if pair not in covered:
+                failures.append(
+                    f"dispatch: {pair} benched but no dispatch row records "
+                    "its routing — rerun fig_conv with the dispatch section")
+
+    for row in dispatch_rows:
+        ident = row.get("key")
+        where = (f"{row.get('layer')}/{row.get('dtype', 'f32')}/"
+                 f"{row.get('direction')}")
+        entry = entries.get(ident)
+        source = row.get("source", "")
+        if entry is None:
+            if source.startswith("prior"):
+                notes.append(f"dispatch: {where} untuned (prior-routed, "
+                             "no table entry)")
+            else:
+                failures.append(
+                    f"dispatch: {where} resolved via {source!r} but "
+                    f"{ident!r} has no dispatch_table entry — tune it or "
+                    "seed it (benchmarks.tune_dispatch)")
+        elif entry.get("source") == "prior":
+            notes.append(f"dispatch: {where} untuned (table entry is "
+                         "prior-seeded, not measured)")
+    return failures, notes
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="fail if any benchmark step time regresses past the "
@@ -83,6 +138,10 @@ def main(argv=None) -> int:
                     help="a ratio violation only gates if the absolute "
                          "regression also exceeds this many microseconds "
                          "(keeps tens-of-us runner wobble out of the gate)")
+    ap.add_argument("--dispatch-table", default=None,
+                    help="also check dispatch coverage: every benched shape "
+                         "must route through this table (or be explicitly "
+                         "prior-routed; those report as untuned)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -92,6 +151,12 @@ def main(argv=None) -> int:
 
     failures, notes = compare(baseline, candidate, args.threshold,
                               args.atol_us)
+    if args.dispatch_table:
+        with open(args.dispatch_table) as f:
+            table = json.load(f)
+        d_failures, d_notes = check_dispatch_coverage(candidate, table)
+        failures += d_failures
+        notes += d_notes
     for n in notes:
         print(f"note: {n}")
     if failures:

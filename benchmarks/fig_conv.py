@@ -86,9 +86,12 @@ def bench_fig4(shapes=None, iters=3):
                         x, w, iters=iters)
         t_lax = time_fn(lambda x, w: B.conv_lax(x, w, s.stride, pad),
                         x, w, iters=iters)
+        # unrounded: the CI shapes are ~1e-4 GFLOP, which round(_, 3) used
+        # to flatten to 0.0 while direct_gflops was computed from the real
+        # value — the two fields must agree (gflop == direct_gflops * t)
         gf = s.flops() / 1e9
         rows.append({
-            "layer": s.name, "gflop": round(gf, 3),
+            "layer": s.name, "gflop": gf,
             "direct_us": t_direct * 1e6, "im2col_us": t_im2col * 1e6,
             "fft_us": t_fft * 1e6, "lax_us": t_lax * 1e6,
             "direct_vs_im2col": t_im2col / t_direct,
@@ -214,6 +217,38 @@ def bench_stream(shapes=None, iters=3, dtype_name="f32"):
     return rows
 
 
+def dispatch_report(pairs=None, dtypes=("f32",)):
+    """Which impl the dispatcher picks, and why, for every benched shape.
+
+    One row per (shape, machine) x dtype x direction: the winning ``Impl``,
+    its source (``table``/``tuned`` = measured entry, ``prior`` = analytical
+    blocking model, ``*-fallback`` = table winner infeasible here), and the
+    canonical table key.  No ``*_us`` fields — these rows never gate; they
+    are the record ``check_regression --dispatch-table`` cross-references
+    for coverage (every benched shape must resolve through the table or be
+    explicitly prior-routed).
+    """
+    from repro.core.dispatch import (DIRECTIONS, DispatchKey, get_dispatcher,
+                                     register_machine)
+    disp = get_dispatcher()
+    rows = []
+    for s, machine in pairs or [(c, TPU_V5E) for c in CI_SHAPES]:
+        register_machine(machine)
+        lay = LAY.BlockedConvLayout.choose(s.ci, s.co)
+        for dtype_name in dtypes:
+            for direction in DIRECTIONS:
+                key = DispatchKey.from_shape(s, dtype_name, machine,
+                                             direction)
+                dec = disp.decide(key, cob=lay.cb_out, cib=lay.cb_in)
+                rows.append({
+                    "layer": s.name, "dtype": dtype_name,
+                    "machine": machine.name, "direction": direction,
+                    "impl": dec.impl.value, "source": dec.source,
+                    "key": key.ident,
+                })
+    return rows
+
+
 def bench_fig1_packing_split(shapes=None, iters=3):
     """Fig. 1: how much of im2col+GEMM is pure packing overhead."""
     rows = []
@@ -285,11 +320,18 @@ if __name__ == "__main__":
             row for d in dtypes
             for row in bench_stream(iters=iters, dtype_name=d)]
 
+    # the routing record: which impl the dispatcher chose for every benched
+    # (shape, machine) pair and why (table/tuned/prior) — DESIGN.md §12
+    pairs = [(s, TPU_V5E) for s in shapes]
+    if args.stream:
+        pairs += [p for p in STREAM_SHAPES if p not in pairs]
+    report["dispatch"] = dispatch_report(pairs, dtypes=dtypes)
+
     for section, rows in report.items():
         print(f"== {section} ==")
         for row in rows:
             print("  " + " ".join(
-                f"{k}={v:.1f}" if isinstance(v, float) else f"{k}={v}"
+                f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}"
                 for k, v in row.items()))
     if args.json:
         with open(args.json, "w") as f:

@@ -1,0 +1,900 @@
+"""Measured conv dispatch: one decision point for every conv entry (§12).
+
+The repo grew five ways to run the same convolution — the window Pallas
+kernel, the streamed halo-DMA Pallas kernel, im2col+GEMM, ``lax.conv`` and
+the blocked jnp oracle — and until ISSUE 6 the choice between them was
+scattered boolean plumbing (``use_pallas``, ``stream``, ``interpret``,
+``machine``) threaded through kernels, layers, the train step and the
+serving tier, with routing decided by *feasibility only* ("does the window
+inequality fit VMEM").  ``BENCH_baseline.json`` shows why that is wrong:
+im2col beats the window path on the smoke shapes while only the streamed
+path survives the deep-pencil pathology — the right impl is a property of
+the (shape, dtype, machine, direction) point, and it should be *measured*.
+
+This module is the replacement: a first-class dispatch subsystem.
+
+  ``DispatchKey``      frozen/hashable (ConvShape numbers, precision name,
+                       machine name, direction ∈ {fwd, dgrad, wgrad}).
+  ``Impl``             the open-ended candidate enum (The Indirect
+                       Convolution Algorithm argues for exactly this:
+                       keep the set extensible, don't bake one kernel in).
+  ``ConvDispatcher``   resolves key -> impl by precedence:
+                         1. per-call override (tests, forced paths),
+                         2. the persistent JSON dispatch table
+                            (``repro/configs/dispatch_table.json``,
+                            checked in; ``tune()`` writes winners back),
+                         3. the analytical prior — blocking-model
+                            feasibility (``choose_blocking`` /
+                            ``choose_stream_blocking``) with
+                            ``resident_bytes`` as the cost annotation —
+                            exactly the pre-ISSUE-6 routing, now one rung
+                            of a ladder instead of the whole story.
+                       Every decision is observable: ``explain(key)``
+                       returns the chosen impl, its source
+                       (override/table/tuned/prior/fallback) and the losing
+                       candidates' measured or predicted numbers.
+
+The ``VmemMisfitError`` fallback chain that used to live as try/except
+around each kernel launch lives here now: feasibility is *probed* against
+the same blocking model the kernel will use (same pencil pins, same
+itemsize), so an infeasible candidate is never launched — a stale table
+entry or a misfitting window route degrades along window -> stream -> jnp
+with the degradation recorded in the decision's source.
+
+Numerics contract: WINDOW, STREAM and JNP are interchangeable bit for bit
+(the streamed/window bitwise property is test-pinned since ISSUE 5; the
+oracle defines the semantics both kernels implement).  IM2COL and LAX agree
+to float tolerance — their contraction order differs — so the prior never
+selects them; they win only by measurement, and the equivalence sweep in
+``tests/test_dispatch.py`` pins the agreement at the dispatch layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+import pathlib
+from typing import Callable, Dict, Iterable, Optional, Tuple, Union
+
+from .blocking import (MachineModel, TPU_V5E, CPU_HASWELL, VmemMisfitError,
+                       choose_blocking, choose_dgrad_blocking,
+                       choose_stream_blocking, choose_stream_dgrad_blocking,
+                       choose_stream_wgrad_blocking, choose_wgrad_blocking,
+                       resident_bytes, stream_resident_bytes,
+                       stream_wgrad_resident_bytes, wgrad_resident_bytes)
+from .conv_baselines import Padding, normalize_padding, out_size
+from .layout import choose_pencil
+from .precision import resolve_precision
+
+__all__ = [
+    "Impl", "Direction", "DispatchKey", "KernelRoute", "Decision",
+    "ConvDispatcher", "get_dispatcher", "set_dispatcher",
+    "register_machine", "get_machine", "default_table_path",
+    "stream_flag", "route_pallas", "run_conv_impl",
+]
+
+Direction = str          # "fwd" | "dgrad" | "wgrad"
+DIRECTIONS: Tuple[Direction, ...] = ("fwd", "dgrad", "wgrad")
+
+SCHEMA_VERSION = 1
+
+
+class Impl(enum.Enum):
+    """The conv implementation candidates.  Open-ended by design — adding a
+    member (plus its runner/probe) is the whole cost of a new candidate."""
+
+    WINDOW = "window"        # window Pallas kernel (BlockSpec halo windows)
+    STREAM = "stream"        # streamed halo-DMA Pallas kernel (HBM ring)
+    IM2COL = "im2col"        # pack + GEMM baseline (memory-overhead-ful)
+    LAX = "lax"              # XLA's own conv (lax.conv_general_dilated)
+    JNP = "jnp"              # blocked jnp oracle (XLA-scheduled direct form)
+
+    def __str__(self) -> str:            # JSON-friendly
+        return self.value
+
+
+def _as_impl(impl: Union["Impl", str, None]) -> Optional["Impl"]:
+    if impl is None or isinstance(impl, Impl):
+        return impl
+    try:
+        return Impl(impl)
+    except ValueError:
+        raise ValueError(
+            f"unknown conv impl {impl!r}; have "
+            f"{[m.value for m in Impl]}") from None
+
+
+# The Pallas kernel family: bitwise-interchangeable tiled variants the
+# kernel-level router picks between (dgrad/wgrad can only route here — the
+# custom VJP's backward *is* these kernels).
+PALLAS_IMPLS = (Impl.WINDOW, Impl.STREAM)
+
+# Bitwise-equivalent impls: routing between these can never change numerics
+# (test-pinned).  IM2COL/LAX agree to float tolerance only.
+EXACT_IMPLS = (Impl.WINDOW, Impl.STREAM, Impl.JNP)
+
+# Candidates per direction.  Backward directions keep to the exact set: the
+# custom VJP cannot splice a packing baseline into one leg of its backward,
+# and the oracle's vjp is the reference the kernels are diffed against.
+CANDIDATES: Dict[Direction, Tuple[Impl, ...]] = {
+    "fwd": (Impl.WINDOW, Impl.STREAM, Impl.IM2COL, Impl.LAX, Impl.JNP),
+    "dgrad": (Impl.WINDOW, Impl.STREAM, Impl.JNP),
+    "wgrad": (Impl.WINDOW, Impl.STREAM, Impl.JNP),
+}
+
+
+# ---------------------------------------------------------------------------
+# machine registry — DispatchKey stores the *name* (hashable, JSON-able);
+# probes need the object back
+# ---------------------------------------------------------------------------
+
+_MACHINES: Dict[str, MachineModel] = {
+    TPU_V5E.name: TPU_V5E,
+    CPU_HASWELL.name: CPU_HASWELL,
+}
+
+
+def register_machine(machine: MachineModel) -> MachineModel:
+    """Make a MachineModel resolvable by name (tuner CLIs, table reload)."""
+    _MACHINES[machine.name] = machine
+    return machine
+
+
+def get_machine(name: str) -> MachineModel:
+    try:
+        return _MACHINES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown machine {name!r}; registered: {sorted(_MACHINES)} "
+            f"(register_machine() makes custom models resolvable)") from None
+
+
+# ---------------------------------------------------------------------------
+# the key
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DispatchKey:
+    """One routing decision's identity: the convolution's numbers, the
+    precision policy's short name, the machine model's name and the pass
+    direction.  Frozen + hashable (dict key, jit-static safe); ``ident``
+    is the canonical string the persistent table is keyed by."""
+
+    n: int
+    hi: int
+    wi: int
+    ci: int
+    co: int
+    hf: int
+    wf: int
+    stride: int
+    pads: Tuple[Tuple[int, int], Tuple[int, int]]
+    dtype: str                      # precision policy short name (f32/bf16)
+    machine: str                    # MachineModel.name
+    direction: Direction            # fwd | dgrad | wgrad
+
+    def __post_init__(self):
+        if self.direction not in DIRECTIONS:
+            raise ValueError(f"direction must be one of {DIRECTIONS}, "
+                             f"got {self.direction!r}")
+        # normalize pads to hashable nested tuples whatever the caller built
+        object.__setattr__(self, "pads",
+                           tuple(tuple(int(p) for p in side)
+                                 for side in self.pads))
+
+    @classmethod
+    def make(cls, n: int, hi: int, wi: int, ci: int, co: int, hf: int,
+             wf: int, stride: int = 1, padding: Padding = "VALID",
+             precision=None, machine: MachineModel = TPU_V5E,
+             direction: Direction = "fwd") -> "DispatchKey":
+        """Build a key from call-site vocabulary (padding normalized here so
+        SAME/int/explicit pads all land on one canonical identity).  The
+        machine model is registered as a side effect, so custom models
+        (tests, pathological budgets) resolve by name in the probes."""
+        register_machine(machine)
+        pads = normalize_padding(padding, hf, wf, stride, hi, wi)
+        return cls(n=n, hi=hi, wi=wi, ci=ci, co=co, hf=hf, wf=wf,
+                   stride=stride, pads=pads,
+                   dtype=resolve_precision(precision).name,
+                   machine=machine.name, direction=direction)
+
+    @classmethod
+    def from_shape(cls, s, precision=None, machine: MachineModel = TPU_V5E,
+                   direction: Direction = "fwd") -> "DispatchKey":
+        """From a ``memory_model.ConvShape`` (the benchmark vocabulary)."""
+        return cls.make(s.n, s.hi, s.wi, s.ci, s.co, s.hf, s.wf, s.stride,
+                        s.pad, precision, machine, direction)
+
+    def with_direction(self, direction: Direction) -> "DispatchKey":
+        return dataclasses.replace(self, direction=direction)
+
+    # --- derived geometry (the probes' vocabulary) ---
+
+    @property
+    def padded_hi(self) -> int:
+        return self.hi + self.pads[0][0] + self.pads[0][1]
+
+    @property
+    def padded_wi(self) -> int:
+        return self.wi + self.pads[1][0] + self.pads[1][1]
+
+    @property
+    def ho(self) -> int:
+        return out_size(self.padded_hi, self.hf, self.stride)
+
+    @property
+    def wo(self) -> int:
+        return out_size(self.padded_wi, self.wf, self.stride)
+
+    def flops(self) -> int:
+        return (2 * self.n * self.ho * self.wo * self.co
+                * self.hf * self.wf * self.ci)
+
+    @property
+    def ident(self) -> str:
+        """Canonical table key, stable across processes."""
+        (ph0, ph1), (pw0, pw1) = self.pads
+        return (f"{self.direction}|n{self.n}hi{self.hi}wi{self.wi}"
+                f"ci{self.ci}co{self.co}f{self.hf}x{self.wf}s{self.stride}"
+                f"p{ph0}.{ph1}.{pw0}.{pw1}|{self.dtype}|{self.machine}")
+
+    def to_json(self) -> dict:
+        return {
+            "n": self.n, "hi": self.hi, "wi": self.wi, "ci": self.ci,
+            "co": self.co, "hf": self.hf, "wf": self.wf,
+            "stride": self.stride,
+            "pads": [list(side) for side in self.pads],
+            "dtype": self.dtype, "machine": self.machine,
+            "direction": self.direction,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "DispatchKey":
+        return cls(n=d["n"], hi=d["hi"], wi=d["wi"], ci=d["ci"], co=d["co"],
+                   hf=d["hf"], wf=d["wf"], stride=d["stride"],
+                   pads=tuple(tuple(side) for side in d["pads"]),
+                   dtype=d["dtype"], machine=d["machine"],
+                   direction=d["direction"])
+
+
+# ---------------------------------------------------------------------------
+# the resolved kernel route — what the Pallas wrapper family consumes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelRoute:
+    """Per-direction window/stream resolution for one Pallas conv launch.
+
+    Rides in the wrappers' ``stream`` slot (frozen/hashable — jit-static and
+    custom-vjp-nondiff safe), so the dispatcher can route forward, dgrad and
+    wgrad *independently* (a key is per-direction) while the legacy
+    ``stream=True/False/None`` bool keeps meaning "force all three" /
+    "probe each".  Each field: True = streamed, False = window, None = probe
+    feasibility at launch (the analytical prior)."""
+
+    fwd: Optional[bool] = None
+    dgrad: Optional[bool] = None
+    wgrad: Optional[bool] = None
+
+    def get(self, direction: Direction) -> Optional[bool]:
+        return getattr(self, direction)
+
+
+def stream_flag(stream, direction: Direction):
+    """Extract one direction's stream knob from bool/None/KernelRoute —
+    the single reader every kernel wrapper uses."""
+    if isinstance(stream, KernelRoute):
+        return stream.get(direction)
+    return stream
+
+
+def policy_name_for(dtype) -> str:
+    """Map an operand dtype to its precision-policy short name (the
+    DispatchKey dtype vocabulary)."""
+    import numpy as np
+    return "bf16" if np.dtype(dtype).itemsize == 2 else "f32"
+
+
+def route_pallas(direction: Direction, *, n: int, hi: int, wi: int, ci: int,
+                 co: int, hf: int, wf: int, stride: int,
+                 machine: MachineModel, dtype, cob: int, cib: int,
+                 hob: Optional[int] = None,
+                 wob: Optional[int] = None) -> bool:
+    """Kernel-level window/stream resolution for one launch: ``True`` =
+    streamed.  This is the relocated ``VmemMisfitError`` fallback chain —
+    instead of launching the window kernel and catching its blocking-model
+    raise, the wrapper asks the same model *first* (same pencil pins, same
+    itemsizes) and launches only the variant that fits; a shape misfitting
+    both models raises here with the full chain named.  ``hi``/``wi`` are
+    the *padded* input extents (wrappers operate post-padding, VALID);
+    for dgrad/wgrad pass the touched extents ``(out-1)*stride + filter``
+    so the derived ``ho``/``wo`` match the cotangent.  Pure function of
+    static shapes/machine/dtype — safe at jit trace time."""
+    key = DispatchKey(n=n, hi=hi, wi=wi, ci=ci, co=co, hf=hf, wf=wf,
+                      stride=stride, pads=((0, 0), (0, 0)),
+                      dtype=policy_name_for(dtype), machine=machine.name,
+                      direction=direction)
+    if probe_impl(key, Impl.WINDOW, cob, cib, hob, wob,
+                  machine=machine)["feasible"]:
+        return False
+    probe = probe_impl(key, Impl.STREAM, cob, cib, hob, wob, machine=machine)
+    if probe["feasible"]:
+        return True
+    raise VmemMisfitError(
+        f"{direction} conv misfits both Pallas variants on "
+        f"{machine.name}: the window inequality fails even at "
+        f"hob = wob = 1 and the streamed floor fails too "
+        f"({probe.get('error')})")
+
+
+# ---------------------------------------------------------------------------
+# feasibility probes + cost prior — the analytical blocking model, asked
+# *before* launch (this is where the VmemMisfitError fallback now lives)
+# ---------------------------------------------------------------------------
+
+def _probe(chooser: Callable, bytes_fn: Callable, **kw) -> dict:
+    """Run one blocking model; -> {feasible, resident_bytes | error}."""
+    try:
+        blk = chooser(**kw)
+    except VmemMisfitError as e:
+        return {"feasible": False, "error": str(e).split(".")[0]}
+    except ValueError:
+        raise                      # invalid arguments must always propagate
+    return {"feasible": True, "resident_bytes": bytes_fn(blk, kw)}
+
+
+def probe_impl(key: DispatchKey, impl: Impl,
+               cob: Optional[int] = None, cib: Optional[int] = None,
+               hob: Optional[int] = None, wob: Optional[int] = None,
+               machine: Optional[MachineModel] = None) -> dict:
+    """Feasibility + cost prior for one candidate at one key.
+
+    WINDOW/STREAM ask the same blocking model (same pencil pins, same
+    policy itemsize) the kernel wrapper will ask at launch, so "feasible
+    here" means "will not raise there".  The reference impls are always
+    feasible (no VMEM inequality) and carry no resident-bytes prior.
+    ``cob``/``cib`` default to the machine-lane pencils the blocked layout
+    would choose — pass the operands' real pencils when you have them.
+    ``machine`` overrides the registry lookup (kernel wrappers hold the
+    model object; the key only names it).
+    """
+    if machine is None:
+        machine = get_machine(key.machine)
+    if impl not in PALLAS_IMPLS:
+        return {"feasible": True}
+    if cob is None:
+        cob = choose_pencil(key.co, machine.n_vec)
+    if cib is None:
+        cib = choose_pencil(key.ci, machine.n_vec)
+    pol = resolve_precision(key.dtype)
+    common = dict(machine=machine, precision=pol)
+
+    if key.direction == "fwd":
+        args = dict(hi=key.padded_hi, wi=key.padded_wi, ci=key.ci, co=key.co,
+                    hf=key.hf, wf=key.wf, stride=key.stride,
+                    cob=cob, cib=cib, hob=hob, wob=wob, **common)
+        if impl is Impl.WINDOW:
+            return _probe(
+                choose_blocking,
+                lambda b, kw: resident_bytes(
+                    b.hob, b.wob, b.cob, b.cib, key.hf, key.wf, key.stride,
+                    pol.operand_itemsize, pol.accum_itemsize), **args)
+        return _probe(
+            choose_stream_blocking,
+            lambda b, kw: stream_resident_bytes(
+                b.hso, b.hob, b.wob, b.cob, b.cib, key.hf, key.wf,
+                key.stride, pol.operand_itemsize, pol.accum_itemsize),
+            **args)
+
+    if key.direction == "dgrad":
+        args = dict(ho=key.ho, wo=key.wo, ci=key.ci, co=key.co,
+                    hf=key.hf, wf=key.wf, stride=key.stride,
+                    cib=cib, cob=cob, hob=hob, wob=wob, **common)
+        if impl is Impl.WINDOW:
+            return _probe(
+                choose_dgrad_blocking,
+                lambda b, kw: resident_bytes(
+                    b.hob, b.wob, b.cob, b.cib, key.hf, key.wf, 1,
+                    pol.operand_itemsize, pol.accum_itemsize), **args)
+        return _probe(
+            choose_stream_dgrad_blocking,
+            lambda b, kw: stream_resident_bytes(
+                b.hso, b.hob, b.wob, b.cob, b.cib, key.hf, key.wf, 1,
+                pol.operand_itemsize, pol.accum_itemsize), **args)
+
+    # wgrad: channel pencils are pinned by the operand layouts
+    args = dict(ho=key.ho, wo=key.wo, hf=key.hf, wf=key.wf,
+                stride=key.stride, cob=cob, cib=cib, **common)
+    if impl is Impl.WINDOW:
+        return _probe(
+            choose_wgrad_blocking,
+            lambda b, kw: wgrad_resident_bytes(
+                b.hob, b.wob, b.cob, b.cib, key.hf, key.wf, key.stride,
+                pol.operand_itemsize, pol.accum_itemsize),
+            hob=hob, wob=wob, **args)
+    return _probe(
+        choose_stream_wgrad_blocking,
+        lambda b, kw: stream_wgrad_resident_bytes(
+            b.hso, b.wob, b.cob, b.cib, key.hf, key.wf, key.stride,
+            pol.operand_itemsize, pol.accum_itemsize),
+        wob=wob, **args)
+
+
+def _pallas_costly() -> bool:
+    """True when a Pallas launch would run in interpret mode (non-TPU
+    backend): the prior then prefers the XLA-scheduled oracle, preserving
+    the pre-dispatcher default for untouched call sites."""
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+def prior_order(key: DispatchKey,
+                candidates: Tuple[Impl, ...]) -> Tuple[Impl, ...]:
+    """The analytical prior's preference order over ``candidates``.
+
+    Direct impls first (the paper's thesis: avoid the packing tax);
+    window before stream (the streamed ring pays manual-DMA orchestration
+    the window path gets from the Pallas pipeliner); the jnp oracle leads
+    on non-TPU backends where a kernel launch would be interpret-mode.
+    IM2COL/LAX are never prior-chosen — they win only by measurement.
+    """
+    if key.direction == "fwd" and _pallas_costly():
+        pref = (Impl.JNP, Impl.WINDOW, Impl.STREAM)
+    else:
+        pref = (Impl.WINDOW, Impl.STREAM, Impl.JNP)
+    return tuple(i for i in pref if i in candidates) + tuple(
+        i for i in candidates if i not in pref)
+
+
+# ---------------------------------------------------------------------------
+# decisions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One resolved routing: the impl, where the choice came from
+    (override | table | tuned | prior | prior-fallback | table-fallback),
+    and the evidence (measured times for table/tuned, probe results for
+    prior)."""
+
+    impl: Impl
+    source: str
+    key: DispatchKey
+    times_us: Optional[Dict[str, float]] = None
+    probes: Optional[Dict[str, dict]] = None
+
+    @property
+    def stream(self) -> Optional[bool]:
+        """The legacy kernel knob this decision implies (None = not a
+        Pallas-family decision)."""
+        if self.impl is Impl.STREAM:
+            return True
+        if self.impl is Impl.WINDOW:
+            return False
+        return None
+
+
+def default_table_path() -> pathlib.Path:
+    """The checked-in persistent dispatch table (repro/configs/)."""
+    return (pathlib.Path(__file__).resolve().parent.parent
+            / "configs" / "dispatch_table.json")
+
+
+class ConvDispatcher:
+    """key -> impl, by override > table > analytical prior.
+
+    The table is a plain dict ``ident -> entry`` mirroring the JSON schema;
+    ``tune()`` measures the feasible candidates and writes the winner back
+    (in memory — ``save()`` persists).  Instances hash by identity, so they
+    ride through ``lru_cache``'d serving wrappers; the module-level default
+    (``get_dispatcher()``) lazy-loads the checked-in table.
+    """
+
+    def __init__(self, table: Optional[dict] = None,
+                 path: Optional[pathlib.Path] = None):
+        self.table: Dict[str, dict] = dict(table or {})
+        self.path = pathlib.Path(path) if path is not None else None
+        self._tuned: set = set()         # idents measured in this process
+
+    # --- persistence ---
+
+    @classmethod
+    def from_file(cls, path=None, missing_ok: bool = True
+                  ) -> "ConvDispatcher":
+        path = pathlib.Path(path) if path is not None else default_table_path()
+        if not path.exists():
+            if missing_ok:
+                return cls(path=path)
+            raise FileNotFoundError(path)
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("schema") != SCHEMA_VERSION:
+            raise ValueError(
+                f"dispatch table {path} has schema {doc.get('schema')!r}, "
+                f"expected {SCHEMA_VERSION}")
+        return cls(table=doc.get("entries", {}), path=path)
+
+    def to_json(self) -> dict:
+        return {"schema": SCHEMA_VERSION,
+                "entries": {k: self.table[k] for k in sorted(self.table)}}
+
+    def save(self, path=None) -> pathlib.Path:
+        path = pathlib.Path(path) if path is not None else self.path
+        if path is None:
+            raise ValueError("no path: pass save(path=...) or construct the "
+                             "dispatcher with one")
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        self.path = path
+        return path
+
+    # --- resolution ---
+
+    def lookup(self, key: DispatchKey) -> Optional[dict]:
+        return self.table.get(key.ident)
+
+    def decide(self, key: DispatchKey, override=None,
+               candidates: Optional[Tuple[Impl, ...]] = None,
+               cob: Optional[int] = None, cib: Optional[int] = None,
+               hob: Optional[int] = None,
+               wob: Optional[int] = None) -> Decision:
+        """Resolve one key.  Precedence: ``override`` (an ``Impl`` or its
+        name — per-call forcing always wins, feasibility included: a forced
+        misfit raises at launch, exactly the old pinned-path contract) >
+        table entry (checked-in or tuned this process) > analytical prior.
+        A table winner outside ``candidates`` or infeasible under the
+        *actual* pencil pins degrades to the best measured in-set candidate,
+        then to the prior (source records the degradation).
+        """
+        candidates = candidates or CANDIDATES[key.direction]
+        override = _as_impl(override)
+        if override is not None:
+            return Decision(impl=override, source="override", key=key)
+
+        entry = self.lookup(key)
+        if entry is not None:
+            impl = Impl(entry["impl"])
+            source = "tuned" if key.ident in self._tuned else "table"
+            times = entry.get("times_us")
+            if impl in candidates and self._usable(key, impl, cob, cib,
+                                                   hob, wob):
+                return Decision(impl=impl, source=source, key=key,
+                                times_us=times)
+            # degrade inside the measured set before giving up on the data
+            if times:
+                ranked = sorted(
+                    (t, name) for name, t in times.items()
+                    if Impl(name) in candidates
+                    and self._usable(key, Impl(name), cob, cib, hob, wob))
+                if ranked:
+                    return Decision(impl=Impl(ranked[0][1]),
+                                    source=f"{source}-fallback", key=key,
+                                    times_us=times)
+
+        probes = {i.value: probe_impl(key, i, cob, cib, hob, wob)
+                  for i in candidates}
+        for impl in prior_order(key, candidates):
+            if probes[impl.value]["feasible"]:
+                return Decision(impl=impl, source="prior", key=key,
+                                probes=probes)
+        raise VmemMisfitError(
+            f"no feasible conv impl for {key.ident}: every candidate in "
+            f"{[c.value for c in candidates]} misfits its blocking model")
+
+    def _usable(self, key, impl, cob, cib, hob, wob) -> bool:
+        return probe_impl(key, impl, cob, cib, hob, wob)["feasible"]
+
+    def kernel_route(self, key: DispatchKey, stream=None, hso=None,
+                     cob: Optional[int] = None, cib: Optional[int] = None,
+                     hob: Optional[int] = None,
+                     wob: Optional[int] = None) -> KernelRoute:
+        """Resolve all three directions of one Pallas launch to a frozen
+        :class:`KernelRoute` (window/stream per direction).
+
+        ``stream``/``hso`` are the legacy knobs: an explicit bool (or a
+        strip height, which implies streaming) forces all three directions
+        — the old contract — and a ``KernelRoute`` passes through.  With
+        ``stream=None`` each direction resolves independently through
+        ``decide()`` over the Pallas candidates.  ``hob``/``wob`` are the
+        *forward* tile pins: backward tile sizes are per-kernel model
+        choices over their own (dgrad-extent / cotangent) geometry, so the
+        pins never reach the dgrad/wgrad probes — mirroring ``_conv_bwd``,
+        which launches both backward kernels unpinned."""
+        if isinstance(stream, KernelRoute):
+            return stream
+        if hso is not None:
+            stream = True
+        if stream is not None:
+            return KernelRoute(fwd=stream, dgrad=stream, wgrad=stream)
+        flags = {}
+        for d in DIRECTIONS:
+            fwd = d == "fwd"
+            dec = self.decide(key.with_direction(d),
+                              candidates=PALLAS_IMPLS, cob=cob, cib=cib,
+                              hob=hob if fwd else None,
+                              wob=wob if fwd else None)
+            flags[d] = dec.stream
+        return KernelRoute(**flags)
+
+    # --- observability ---
+
+    def explain(self, key: DispatchKey, override=None,
+                candidates: Optional[Tuple[Impl, ...]] = None) -> dict:
+        """The decision plus every candidate's evidence: measured times
+        where the table has them, feasibility + resident-bytes prior
+        everywhere (the losing candidates' predicted or measured numbers,
+        per the ISSUE contract)."""
+        candidates = candidates or CANDIDATES[key.direction]
+        dec = self.decide(key, override=override, candidates=candidates)
+        entry = self.lookup(key) or {}
+        times = entry.get("times_us") or {}
+        cands = {}
+        for impl in candidates:
+            info = dict(probe_impl(key, impl))
+            if impl.value in times:
+                info["measured_us"] = times[impl.value]
+            cands[impl.value] = info
+        return {"key": key.ident, "impl": dec.impl.value,
+                "source": dec.source, "candidates": cands}
+
+    # --- measurement ---
+
+    def tune(self, key: DispatchKey, iters: int = 3,
+             timer: Optional[Callable] = None, persist: bool = False,
+             interpret: Optional[bool] = None) -> Decision:
+        """Time every feasible candidate at ``key`` and record the winner.
+
+        The timings use ``benchmarks.timing.time_fn`` (jit + warmup +
+        median-of-k) on synthetic operands at the key's dtype; Pallas
+        candidates run interpret-mode off-TPU, so off-TPU tables measure
+        relative kernel trajectory, not TPU wall-clock (same contract as
+        ``BENCH_*.json``).  The winning entry lands in the in-memory table
+        (source "tuned"); ``persist=True`` saves the file too.
+        """
+        timer = timer or _default_timer()
+        if interpret is None:
+            interpret = _pallas_costly()
+        ops = _tune_operands(key)
+        times: Dict[str, float] = {}
+        for impl in CANDIDATES[key.direction]:
+            if not probe_impl(key, impl)["feasible"]:
+                continue
+            fn, args = _tune_closure(key, impl, ops, interpret)
+            times[impl.value] = float(timer(fn, *args, iters=iters) * 1e6)
+        if not times:
+            raise VmemMisfitError(
+                f"no feasible candidate to tune at {key.ident}")
+        winner = min(times, key=times.get)
+        self.table[key.ident] = {
+            "key": key.to_json(),
+            "impl": winner,
+            "source": "tuned",
+            "times_us": {k: round(v, 3) for k, v in times.items()},
+        }
+        self._tuned.add(key.ident)
+        if persist:
+            self.save()
+        return Decision(impl=Impl(winner), source="tuned", key=key,
+                        times_us=self.table[key.ident]["times_us"])
+
+    def seed_prior(self, key: DispatchKey) -> Decision:
+        """Record the analytical prior's choice as a table entry (source
+        "prior") — coverage without measurement, for shapes too large to
+        time in CI; ``check_regression`` reports them as "untuned"."""
+        dec = self.decide(key)
+        self.table[key.ident] = {
+            "key": key.to_json(),
+            "impl": dec.impl.value,
+            "source": "prior",
+            "probes": dec.probes or {i.value: probe_impl(key, i)
+                                     for i in CANDIDATES[key.direction]},
+        }
+        return dec
+
+    def coverage(self, keys: Iterable[DispatchKey]) -> dict:
+        """Partition ``keys`` by table status: measured / prior-seeded /
+        missing (the check_regression dispatch-coverage vocabulary)."""
+        out = {"tuned": [], "prior": [], "missing": []}
+        for key in keys:
+            entry = self.lookup(key)
+            if entry is None:
+                out["missing"].append(key.ident)
+            elif entry.get("source") == "prior":
+                out["prior"].append(key.ident)
+            else:
+                out["tuned"].append(key.ident)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# impl runners — the one place each candidate's calling convention lives
+# ---------------------------------------------------------------------------
+
+def run_conv_impl(impl: Impl, xb, wb, bias=None, *, stride: int = 1,
+                  padding: Padding = "VALID", activation=None,
+                  precision=None, machine: MachineModel = TPU_V5E,
+                  interpret: Optional[bool] = None,
+                  hob: Optional[int] = None, wob: Optional[int] = None,
+                  hso: Optional[int] = None, route=None):
+    """Execute one candidate on blocked operands, blocked output.
+
+    All five impls share this signature — blocked ``[N, Ci/Cib, H, W, Cib]``
+    in, blocked ``[N, Co/Cob, Ho, Wo, Cob]`` out, fused bias + activation
+    semantics, ``precision`` policy honored (operands cast once, f32
+    accumulation, operand-dtype output) — so the dispatcher can swap them
+    without the call site noticing anything but time.  IM2COL/LAX pay a
+    layout round-trip (they are NHWC algorithms); that cost is *theirs to
+    lose* in tune(), not hidden.  ``route`` (a :class:`KernelRoute`) rides
+    into the Pallas wrappers' ``stream`` slot for per-direction backward
+    routing."""
+    import jax
+    import jax.numpy as jnp
+
+    impl = _as_impl(impl)
+    pol = resolve_precision(precision)
+    if impl in PALLAS_IMPLS:
+        from repro.kernels.direct_conv2d import direct_conv2d_blocked_pallas
+        if interpret is None:
+            interpret = _pallas_costly()
+        stream = route if route is not None else (impl is Impl.STREAM)
+        return direct_conv2d_blocked_pallas(
+            xb, wb, bias, stride=stride, padding=padding,
+            activation=activation, hob=hob, wob=wob, machine=machine,
+            interpret=interpret, precision=pol, stream=stream, hso=hso)
+    if impl is Impl.JNP:
+        from repro.core.direct_conv import direct_conv_blocked
+        return direct_conv_blocked(xb, wb, stride, padding, bias,
+                                   activation, hob=hob, wob=wob,
+                                   precision=pol)
+
+    # NHWC reference algorithms: layout sandwich + the same fused epilogue
+    # semantics (bias added on the f32 result, activation, operand dtype out)
+    from repro.core import layout as L
+    from repro.core import conv_baselines as B
+    from repro.core.direct_conv import apply_activation
+    x = L.blocked_to_nhwc(xb).astype(pol.op_dtype)
+    w = L.blocked_to_hwio(wb).astype(pol.op_dtype)
+    fn = B.conv_im2col if impl is Impl.IM2COL else B.conv_lax
+    y = fn(x, w, stride, padding).astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.reshape(-1).astype(jnp.float32)
+    y = apply_activation(y, activation).astype(pol.op_dtype)
+    return L.nhwc_to_blocked(y, xb_out_pencil(wb))
+
+
+def xb_out_pencil(wb) -> int:
+    """Output-channel pencil baked into a blocked weight tensor."""
+    return wb.shape[-1]
+
+
+# ---------------------------------------------------------------------------
+# tune plumbing
+# ---------------------------------------------------------------------------
+
+def _default_timer() -> Callable:
+    """``benchmarks.timing.time_fn`` when the benchmarks package is on the
+    path (repo checkouts), else a minimal local equivalent (installed
+    trees)."""
+    try:
+        from benchmarks.timing import time_fn
+        return time_fn
+    except ImportError:
+        return _local_time_fn
+
+
+def _local_time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    import time as _time
+    import jax
+    import numpy as np
+    jfn = jax.jit(fn)
+    for _ in range(warmup):
+        jax.block_until_ready(jfn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(jfn(*args))
+        ts.append(_time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _tune_operands(key: DispatchKey) -> dict:
+    """Synthetic blocked operands (+ cotangent) at the key's dtype."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import layout as L
+
+    machine = get_machine(key.machine)
+    pol = resolve_precision(key.dtype)
+    cib = choose_pencil(key.ci, machine.n_vec)
+    cob = choose_pencil(key.co, machine.n_vec)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(key.n, key.hi, key.wi, key.ci)),
+                    pol.op_dtype)
+    w = jnp.asarray(rng.normal(size=(key.hf, key.wf, key.ci, key.co)),
+                    pol.op_dtype)
+    xb = L.nhwc_to_blocked(x, cib)
+    wb = L.hwio_to_blocked(w, cib, cob)
+    dy = jnp.asarray(rng.normal(
+        size=(key.n, key.co // cob, key.ho, key.wo, cob)), pol.op_dtype)
+    from repro.core.direct_conv import pad_blocked
+    xp = pad_blocked(xb, *key.pads)
+    return {"xb": xb, "wb": wb, "dy": dy, "xp": xp,
+            "cib": cib, "cob": cob, "machine": machine, "pol": pol}
+
+
+def _tune_closure(key: DispatchKey, impl: Impl, ops: dict,
+                  interpret: bool):
+    """(callable, args) pair ``tune()`` hands to the timer for one
+    candidate at one direction."""
+    import jax
+    machine, pol = ops["machine"], ops["pol"]
+
+    if key.direction == "fwd":
+        def fwd(xb_, wb_):
+            return run_conv_impl(impl, xb_, wb_, stride=key.stride,
+                                 padding=key.pads, precision=pol,
+                                 machine=machine, interpret=interpret)
+        return fwd, (ops["xb"], ops["wb"])
+
+    if key.direction == "dgrad":
+        if impl in PALLAS_IMPLS:
+            from repro.kernels.direct_conv2d import direct_conv2d_dgrad_pallas
+
+            def dgrad(dy_, wb_):
+                return direct_conv2d_dgrad_pallas(
+                    dy_, wb_, stride=key.stride, machine=machine,
+                    interpret=interpret, stream=(impl is Impl.STREAM))
+            return dgrad, (ops["dy"], ops["wb"])
+
+        from repro.core.direct_conv import direct_conv_blocked
+
+        def dgrad_jnp(dy_, xp_, wb_):
+            _, vjp = jax.vjp(
+                lambda x: direct_conv_blocked(x, wb_, key.stride, "VALID",
+                                              precision=pol), xp_)
+            return vjp(dy_)[0]
+        return dgrad_jnp, (ops["dy"], ops["xp"], ops["wb"])
+
+    # wgrad
+    if impl in PALLAS_IMPLS:
+        from repro.kernels.direct_conv2d import direct_conv2d_wgrad_pallas
+
+        def wgrad(xp_, dy_):
+            return direct_conv2d_wgrad_pallas(
+                xp_, dy_, key.hf, key.wf, stride=key.stride,
+                machine=machine, interpret=interpret,
+                stream=(impl is Impl.STREAM))
+        return wgrad, (ops["xp"], ops["dy"])
+
+    from repro.core.direct_conv import direct_conv_blocked
+
+    def wgrad_jnp(dy_, xp_, wb_):
+        _, vjp = jax.vjp(
+            lambda w: direct_conv_blocked(xp_, w, key.stride, "VALID",
+                                          precision=pol), wb_)
+        return vjp(dy_)[0]
+    return wgrad_jnp, (ops["dy"], ops["xp"], ops["wb"])
+
+
+# ---------------------------------------------------------------------------
+# the default dispatcher (checked-in table, lazy)
+# ---------------------------------------------------------------------------
+
+_DEFAULT: Optional[ConvDispatcher] = None
+
+
+def get_dispatcher() -> ConvDispatcher:
+    """The process-wide dispatcher over the checked-in table.  Call sites
+    that don't pass their own ``dispatch=`` resolve through this one."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = ConvDispatcher.from_file()
+    return _DEFAULT
+
+
+def set_dispatcher(dispatcher: Optional[ConvDispatcher]) -> None:
+    """Swap the process-wide dispatcher (None resets to the checked-in
+    table on next use) — test seam and serving-config hook."""
+    global _DEFAULT
+    _DEFAULT = dispatcher

@@ -50,14 +50,20 @@ params without a bf16 round-trip).  bf16 operands also halve the VMEM
 inequality, so the blocking model admits larger tiles (the itemsize is taken
 from the actual operand arrays — the policy and the fit can't drift).
 
-Every entry point also takes a ``stream`` knob (DESIGN.md §11): each of the
-three kernels has a streamed halo-DMA twin in ``kernels/conv2d_stream.py``
+Every entry point also takes a ``stream`` knob (DESIGN.md §11–§12): each of
+the three kernels has a streamed halo-DMA twin in ``kernels/conv2d_stream.py``
 (input kept in HBM, double-buffered ``make_async_copy`` ring of row-strips,
-singly-resident weight tile), and the wrappers here route between the two —
-window path by default, streamed on an explicit ``stream=True`` or
-automatically when the window blocking model raises ``VmemMisfitError``.
-What used to be the family's one hard failure (deep pinned pencils misfitting
-at ``hob = wob = 1``) is now a served configuration.
+singly-resident weight tile), and the wrappers here route between the two.
+The slot accepts ``True``/``False`` (force all three directions onto one
+family — the legacy contract), ``None`` (resolve per launch), or a
+``core.dispatch.KernelRoute`` (per-direction resolution, what
+``ConvDispatcher`` hands down).  Resolution is a *pre-launch probe* of the
+same blocking model the kernel fits against (``core.dispatch.route_pallas``)
+— the old launch-and-catch-``VmemMisfitError`` chain, moved out of these
+wrappers and into the dispatch subsystem — so what used to be the family's
+one hard failure (deep pinned pencils misfitting at ``hob = wob = 1``) is a
+served configuration, and a forced path (``stream=False``/``True``) still
+lets its own misfit propagate.
 """
 from __future__ import annotations
 
@@ -69,10 +75,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.blocking import (MachineModel, TPU_V5E, VmemMisfitError,
-                                 choose_blocking, choose_dgrad_blocking,
+from repro.core.blocking import (MachineModel, TPU_V5E, choose_blocking,
+                                 choose_dgrad_blocking,
                                  choose_wgrad_blocking, dgrad_extents)
 from repro.core.conv_baselines import Padding, normalize_padding
+from repro.core.dispatch import KernelRoute, route_pallas, stream_flag
 from repro.core.direct_conv import apply_activation, pad_blocked
 from repro.core.precision import F32, Precision, resolve_precision
 from .conv2d_common import (bias_spec, epilogue_flush, first_step, halo_dims,
@@ -157,38 +164,44 @@ def _wgrad_kernel(x_ref, dy_ref, o_ref, acc_ref, *, hf, wf, hob, wob,
 # forward launch (operates on an already-padded input — always VALID)
 # ---------------------------------------------------------------------------
 
-def _resolve_stream(stream: Optional[bool], hso: Optional[int]
-                    ) -> Optional[bool]:
-    """Normalize the routing knob: an explicit strip height implies the
-    streamed path (``hso`` has no meaning on the window path)."""
+def _resolve_stream(stream, hso: Optional[int],
+                    direction: str) -> Optional[bool]:
+    """Normalize the routing knob to this direction's flag: a
+    ``KernelRoute`` contributes its per-direction field, and an explicit
+    strip height implies the streamed path (``hso`` has no meaning on the
+    window path)."""
+    flag = stream_flag(stream, direction)
     if hso is not None:
-        if stream is False:
+        if flag is False:
             raise ValueError("hso= is the streamed variant's strip height; "
                              "it cannot combine with stream=False")
         return True
-    return stream
+    return flag
 
 
 def _forward_impl(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
                   activation, hob, wob, machine: MachineModel,
-                  interpret: bool, stream: Optional[bool] = None,
+                  interpret: bool, stream=None,
                   hso: Optional[int] = None) -> jnp.ndarray:
-    """Route one forward launch: the window path by default, the streamed
-    halo-DMA path (``kernels/conv2d_stream``) when forced (``stream=True``
-    or an explicit ``hso``) or when the window inequality misfits and
-    ``stream`` is None — the old ``hob = wob = 1`` hard-raise is now a
-    routed fallback.  ``stream=False`` pins the window path (its misfit
-    propagates)."""
-    stream = _resolve_stream(stream, hso)
-    if stream is not True:
-        try:
-            return _forward_windowed(xp, w, bias, stride, activation, hob,
-                                     wob, machine, interpret)
-        except VmemMisfitError:
-            if stream is False:
-                raise
-    return stream_forward(xp, w, bias, stride, activation, hob, wob, hso,
-                          machine, interpret)
+    """Route one forward launch.  An explicit flag (``stream`` bool, a
+    ``KernelRoute.fwd``, or ``hso``) pins the variant — a forced path's
+    misfit propagates; with ``None`` the dispatch probe
+    (``route_pallas``) asks the window inequality first and degrades to
+    the streamed family when it misfits — the old ``hob = wob = 1``
+    hard-raise, served."""
+    flag = _resolve_stream(stream, hso, "fwd")
+    if flag is None:
+        n, ciblk, hi, wi, cib = xp.shape
+        coblk, _, hf, wf, _, cob = w.shape
+        flag = route_pallas("fwd", n=n, hi=hi, wi=wi, ci=ciblk * cib,
+                            co=coblk * cob, hf=hf, wf=wf, stride=stride,
+                            machine=machine, dtype=xp.dtype, cob=cob,
+                            cib=cib, hob=hob, wob=wob)
+    if flag:
+        return stream_forward(xp, w, bias, stride, activation, hob, wob,
+                              hso, machine, interpret)
+    return _forward_windowed(xp, w, bias, stride, activation, hob, wob,
+                             machine, interpret)
 
 
 def _forward_windowed(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
@@ -267,19 +280,24 @@ def direct_conv2d_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray,
     The dilated copy is the one backward-only memory concession — accounted
     in ``memory_model``-style terms in DESIGN.md §9.
 
-    ``stream`` routes like the forward: None auto-falls-back to the streamed
-    transposed kernel when ``choose_dgrad_blocking`` misfits, True forces
-    it (``hso`` stripes the dgrad extents), False pins the window path.
+    ``stream`` routes like the forward: None probes the transposed window
+    inequality and falls to the streamed kernel when it misfits, True
+    forces it (``hso`` stripes the dgrad extents), False pins the window
+    path (its misfit propagates), and a ``KernelRoute`` contributes its
+    ``dgrad`` field.
     """
-    stream = _resolve_stream(stream, hso)
-    if stream is not True:
-        try:
-            return _dgrad_windowed(dy, w, stride, hob, wob, machine,
-                                   interpret)
-        except VmemMisfitError:
-            if stream is False:
-                raise
-    return stream_dgrad(dy, w, stride, hob, wob, hso, machine, interpret)
+    flag = _resolve_stream(stream, hso, "dgrad")
+    if flag is None:
+        n, coblk, ho, wo, cob = dy.shape
+        _, ciblk, hf, wf, cib, _ = w.shape
+        flag = route_pallas("dgrad", n=n, hi=(ho - 1) * stride + hf,
+                            wi=(wo - 1) * stride + wf, ci=ciblk * cib,
+                            co=coblk * cob, hf=hf, wf=wf, stride=stride,
+                            machine=machine, dtype=dy.dtype, cob=cob,
+                            cib=cib, hob=hob, wob=wob)
+    if flag:
+        return stream_dgrad(dy, w, stride, hob, wob, hso, machine, interpret)
+    return _dgrad_windowed(dy, w, stride, hob, wob, machine, interpret)
 
 
 def _dgrad_windowed(dy: jnp.ndarray, w: jnp.ndarray, stride: int,
@@ -345,21 +363,26 @@ def direct_conv2d_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
     block's [Hf, Wf, Cib, Cob] accumulator stays resident in f32 VMEM
     scratch across all their steps and is stored exactly once.
 
-    ``stream`` routes like the forward: None auto-falls-back to the streamed
-    wgrad (both operands ringed, the accumulator flushed by manual DMA) when
-    ``choose_wgrad_blocking`` misfits, True forces it, False pins the
-    window path.
+    ``stream`` routes like the forward: None probes the accumulator-widened
+    window inequality and falls to the streamed wgrad (both operands
+    ringed, the accumulator flushed by manual DMA) when it misfits, True
+    forces it, False pins the window path, and a ``KernelRoute``
+    contributes its ``wgrad`` field.
     """
-    stream = _resolve_stream(stream, hso)
-    if stream is not True:
-        try:
-            return _wgrad_windowed(xp, dy, hf, wf, stride, hob, wob, machine,
-                                   interpret, out_dtype)
-        except VmemMisfitError:
-            if stream is False:
-                raise
-    return stream_wgrad(xp, dy, hf, wf, stride, wob, hso, machine, interpret,
-                        out_dtype)
+    flag = _resolve_stream(stream, hso, "wgrad")
+    if flag is None:
+        n, coblk, ho, wo, cob = dy.shape
+        _, ciblk, _, _, cib = xp.shape
+        flag = route_pallas("wgrad", n=n, hi=(ho - 1) * stride + hf,
+                            wi=(wo - 1) * stride + wf, ci=ciblk * cib,
+                            co=coblk * cob, hf=hf, wf=wf, stride=stride,
+                            machine=machine, dtype=xp.dtype, cob=cob,
+                            cib=cib, hob=hob, wob=wob)
+    if flag:
+        return stream_wgrad(xp, dy, hf, wf, stride, wob, hso, machine,
+                            interpret, out_dtype)
+    return _wgrad_windowed(xp, dy, hf, wf, stride, hob, wob, machine,
+                           interpret, out_dtype)
 
 
 def _wgrad_windowed(xp: jnp.ndarray, dy: jnp.ndarray, hf: int, wf: int,
@@ -529,13 +552,15 @@ def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
     residuals at the policy dtype, one cotangent up-cast on exit —
     see the module docstring and DESIGN.md §10.
 
-    ``stream`` selects the kernel variant (DESIGN.md §11): None (default)
-    runs the window path and **auto-falls-back** to the streamed halo-DMA
-    variant when the window VMEM inequality misfits even at
-    ``hob = wob = 1`` (what used to be a hard raise); True forces the
-    streamed path (``hso`` optionally pins its strip height); False pins
-    the window path, letting the misfit propagate.  The override rides the
-    custom VJP too, so dgrad/wgrad route consistently.
+    ``stream`` selects the kernel variant (DESIGN.md §11–§12): None
+    (default) probes the window VMEM inequality pre-launch and serves the
+    streamed halo-DMA variant when it misfits even at ``hob = wob = 1``
+    (what used to be a hard raise); True forces the streamed path (``hso``
+    optionally pins its strip height); False pins the window path, letting
+    the misfit propagate; a ``core.dispatch.KernelRoute`` resolves each
+    direction independently (what ``ConvDispatcher`` passes when it routes
+    a layer).  The knob rides the custom VJP too, so dgrad/wgrad route
+    consistently.
     """
     hi, wi = x.shape[2], x.shape[3]
     hf, wf = w.shape[2], w.shape[3]

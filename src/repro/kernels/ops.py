@@ -1,11 +1,17 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Dispatch policy: on TPU backends the Pallas kernels run compiled; everywhere
-else (this container: CPU) they run in ``interpret=True`` mode, which executes
-the same kernel body for correctness validation.  ``use_pallas=False`` falls
-back to the pure-JAX direct formulation in ``repro.core.direct_conv`` — same
-math, XLA-scheduled; this is also what the LM models use under ``vmap``/
-``scan`` where a fixed kernel grid would fight the batching transform.
+Dispatch policy (DESIGN.md §12): ``direct_conv2d`` resolves its
+implementation through the conv dispatch subsystem — per-call ``impl``
+override, then the persistent measured table, then the analytical prior —
+over the full candidate set (window/streamed Pallas, im2col, lax, jnp
+oracle).  On TPU backends the Pallas kernels run compiled; everywhere else
+(this container: CPU) they run in ``interpret=True`` mode, which executes
+the same kernel body for correctness validation.  ``use_pallas`` survives
+as a deprecated alias: ``False`` pins the pure-JAX direct formulation in
+``repro.core.direct_conv`` — same math, XLA-scheduled; this is also what
+the LM models use under ``vmap``/``scan`` where a fixed kernel grid would
+fight the batching transform — and ``True`` (the legacy default, kept)
+restricts the dispatcher to the Pallas family.
 """
 from __future__ import annotations
 
@@ -15,9 +21,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import layout as L
-from repro.core.conv_baselines import Padding
-from repro.core.direct_conv import (bias_to_blocked, direct_conv_nhwc,
+from repro.core.blocking import TPU_V5E
+from repro.core.conv_baselines import (Padding, conv_im2col, conv_lax)
+from repro.core.direct_conv import (apply_activation, bias_to_blocked,
+                                    direct_conv_nhwc,
                                     direct_conv1d_depthwise)
+from repro.core.dispatch import (DispatchKey, Impl, PALLAS_IMPLS,
+                                 get_dispatcher)
 from .conv1d_depthwise import conv1d_depthwise_blocked_pallas
 from .direct_conv2d import direct_conv2d_blocked_pallas
 
@@ -34,29 +44,62 @@ def direct_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
                   padding: Padding = "VALID", *,
                   bias: Optional[jnp.ndarray] = None,
                   activation: Optional[str] = None,
-                  use_pallas: bool = True,
-                  interpret: Optional[bool] = None) -> jnp.ndarray:
+                  use_pallas: Optional[bool] = True,
+                  interpret: Optional[bool] = None,
+                  dispatch=None, impl=None) -> jnp.ndarray:
     """Direct convolution, NHWC/HWIO interface, zero memory overhead inside.
 
     x: [N, Hi, Wi, Ci]; w: [Hf, Wf, Ci, Co]; bias: [Co] -> [N, Ho, Wo, Co]
 
     Padding is stride-aware (TF SAME semantics); bias + activation are fused
     into the kernel epilogue (applied once, on the final Ci block's flush).
-    Differentiable on both paths (the Pallas kernel carries a custom VJP).
+    Differentiable on every path (the Pallas kernels carry a custom VJP).
+
+    ``dispatch``/``impl`` route through the dispatch subsystem; the legacy
+    ``use_pallas`` knob keeps its old meaning as an alias (True — still the
+    default here — restricts to the Pallas family, False pins the jnp
+    path, None lets the dispatcher choose freely).
     """
-    if not use_pallas:
+    override = impl
+    if override is None and use_pallas is False:
+        override = Impl.JNP
+    if override is not None and Impl(override) is Impl.JNP:
         return direct_conv_nhwc(x, w, stride, padding, bias, activation)
-    ci, co = w.shape[2], w.shape[3]
-    # pure layout sandwich: padding is normalized exactly once, inside the
-    # kernel wrapper (the blocked map keeps the same H/W), and the bias is
-    # reblocked by the shared helper — no per-call re-derivation
+
+    n, hi, wi, ci = x.shape
+    co = w.shape[3]
+    disp = dispatch if dispatch is not None else get_dispatcher()
+    key = DispatchKey.make(n, hi, wi, ci, co, w.shape[0], w.shape[1],
+                           stride, padding, None, TPU_V5E, "fwd")
     lay = L.BlockedConvLayout.choose(ci, co)
+    candidates = PALLAS_IMPLS if (override is None and use_pallas) else None
+    dec = disp.decide(key, override=override, candidates=candidates,
+                      cob=lay.cb_out, cib=lay.cb_in)
+
+    if dec.impl is Impl.JNP:
+        return direct_conv_nhwc(x, w, stride, padding, bias, activation)
+    if dec.impl in (Impl.IM2COL, Impl.LAX):
+        fn = conv_im2col if dec.impl is Impl.IM2COL else conv_lax
+        y = fn(x, w, stride, padding)
+        if bias is not None:
+            y = y + bias
+        return apply_activation(y, activation) if activation else y
+
+    # Pallas family: pure layout sandwich — padding is normalized exactly
+    # once, inside the kernel wrapper (the blocked map keeps the same H/W),
+    # and the bias is reblocked by the shared helper; the dispatcher's
+    # per-direction route rides the custom VJP (forward pinned to this
+    # decision, dgrad/wgrad resolved independently)
+    from repro.core.dispatch import KernelRoute
+    kr = disp.kernel_route(key, cob=lay.cb_out, cib=lay.cb_in)
+    route = KernelRoute(fwd=dec.impl is Impl.STREAM,
+                        dgrad=kr.dgrad, wgrad=kr.wgrad)
     xb = L.nhwc_to_blocked(x, lay.cb_in)
     wb = L.hwio_to_blocked(w, lay.cb_in, lay.cb_out)
     bb = None if bias is None else bias_to_blocked(bias, lay.cb_out)
     yb = direct_conv2d_blocked_pallas(
         xb, wb, bb, stride=stride, padding=padding, activation=activation,
-        interpret=_interpret_default(interpret))
+        interpret=_interpret_default(interpret), stream=route)
     return L.blocked_to_nhwc(yb)
 
 

@@ -29,23 +29,31 @@ __all__ = ["make_sharded_cnn_forward", "sharded_cnn_predict"]
 
 @functools.lru_cache(maxsize=None)
 def make_sharded_cnn_forward(model, mesh, axis: str = "data", *,
-                             use_pallas: bool = False,
-                             interpret: Optional[bool] = None):
+                             use_pallas: Optional[bool] = False,
+                             interpret: Optional[bool] = None,
+                             dispatch=None, impl=None):
     """-> jitted ``f(params, x_nhwc) -> logits`` sharding the batch over
     ``axis`` of ``mesh`` (e.g. ``launch.mesh.make_test_mesh()``'s "data").
 
     Params are replicated (``P()``); the batch dim must be divisible by the
     axis size (use :func:`sharded_cnn_predict` for ragged batches).  Inside
     the shard the forward pass is the unmodified single-device ``BlockedCNN``
-    call, so layouts, tiling and the fused epilogue are per-shard.
+    call, so layouts, tiling and the fused epilogue are per-shard — and so is
+    conv routing: each shard's convs resolve their *per-shard* batch size
+    through the dispatch subsystem (``dispatch`` pins a ``ConvDispatcher``,
+    ``impl`` forces one candidate, ``use_pallas`` is the deprecated alias;
+    DESIGN.md §12).  Routing happens at trace time, so the decision is baked
+    into the compiled executable — re-tune, re-make to pick up new winners.
 
     Memoized on ``(model, mesh, axis, ...)`` — ``BlockedCNN`` and ``Mesh``
-    are hashable — so a serving loop calling this (or
-    :func:`sharded_cnn_predict`) per batch reuses one jitted function and
-    hits the compile cache instead of retracing every request.
+    are hashable (a ``ConvDispatcher`` hashes by identity) — so a serving
+    loop calling this (or :func:`sharded_cnn_predict`) per batch reuses one
+    jitted function and hits the compile cache instead of retracing every
+    request.
     """
     def fwd(p, x):
-        return model(p, x, use_pallas=use_pallas, interpret=interpret)
+        return model(p, x, dispatch=dispatch, impl=impl,
+                     use_pallas=use_pallas, interpret=interpret)
 
     sharded = shard_map(fwd, mesh, in_specs=(P(), P(axis)),
                         out_specs=P(axis))
@@ -53,8 +61,9 @@ def make_sharded_cnn_forward(model, mesh, axis: str = "data", *,
 
 
 def sharded_cnn_predict(model, params, x_nhwc, mesh, axis: str = "data", *,
-                        use_pallas: bool = False,
-                        interpret: Optional[bool] = None):
+                        use_pallas: Optional[bool] = False,
+                        interpret: Optional[bool] = None,
+                        dispatch=None, impl=None):
     """Serve one (possibly ragged) batch: pad N up to a multiple of the data
     axis, run the sharded forward, slice the padding back off."""
     n = x_nhwc.shape[0]
@@ -65,6 +74,7 @@ def sharded_cnn_predict(model, params, x_nhwc, mesh, axis: str = "data", *,
         x_nhwc = jnp.concatenate(
             [x_nhwc, jnp.zeros((pad,) + x_nhwc.shape[1:], x_nhwc.dtype)])
     f = make_sharded_cnn_forward(model, mesh, axis, use_pallas=use_pallas,
-                                 interpret=interpret)
+                                 interpret=interpret, dispatch=dispatch,
+                                 impl=impl)
     logits = f(params, x_nhwc)
     return logits[:n]

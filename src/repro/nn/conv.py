@@ -9,13 +9,20 @@ repacking" claim.  Weights are *stored* in the paper's kernel layout
 as channel pencils ``[Co/Cob, Cob]``.  Bias + activation are fused into the
 convolution epilogue (DESIGN.md §5).
 
-Two execution paths share one semantics, and both are fully differentiable:
-  * ``use_pallas=False`` (default): the pure-JAX direct formulation (the
-    XLA-scheduled oracle);
-  * ``use_pallas=True``: the tiled Pallas kernel family (interpret mode
-    off-TPU) — forward, plus its custom VJP routing ``jax.grad`` through
-    the transposed-window dgrad and per-tile wgrad kernels (DESIGN.md §9),
-    so training runs entirely inside the blocked layout too.
+Execution routes through the conv dispatch subsystem (DESIGN.md §12): every
+call resolves a ``core.dispatch.DispatchKey`` (shape x dtype x machine x
+direction) through a ``ConvDispatcher`` — per-call override, then the
+persistent measured table, then the analytical blocking-model prior — and
+runs the winning ``Impl`` (window/streamed Pallas, im2col, lax, or the
+XLA-scheduled jnp oracle).  All candidates share one semantics and are
+fully differentiable; the Pallas family carries a custom VJP routing
+``jax.grad`` through the transposed-window dgrad and per-tile wgrad kernels
+(DESIGN.md §9), so training runs entirely inside the blocked layout too.
+
+``use_pallas`` survives as a thin deprecated alias: ``False`` pins the jnp
+oracle (the old default path), ``True`` restricts the dispatcher to the
+Pallas family — both now route *through* the dispatcher rather than around
+it.
 """
 from __future__ import annotations
 
@@ -29,6 +36,9 @@ import jax.numpy as jnp
 from repro.core.blocking import MachineModel, TPU_V5E
 from repro.core.conv_baselines import Padding
 from repro.core.direct_conv import direct_conv_blocked
+from repro.core.dispatch import (ConvDispatcher, DispatchKey, Impl,
+                                 KernelRoute, PALLAS_IMPLS, get_dispatcher,
+                                 run_conv_impl)
 from repro.core.layout import BlockedConvLayout, nhwc_to_blocked
 from repro.core.precision import Precision, resolve_precision
 from .module import ParamSpec
@@ -73,11 +83,11 @@ class BlockedConv2D:
                                          # (DESIGN.md §10)
     machine: MachineModel = TPU_V5E      # VMEM budget the blocking models
                                          # fit against (Pallas path)
-    stream: Optional[bool] = None        # kernel variant (DESIGN.md §11):
-                                         # None auto-falls-back to the
-                                         # streamed halo-DMA path on a
-                                         # window-inequality misfit; True/
-                                         # False force one path
+    stream: Optional[bool] = None        # Pallas kernel variant override
+                                         # (DESIGN.md §11): None lets the
+                                         # dispatcher resolve window-vs-
+                                         # stream per direction; True/False
+                                         # force one family
 
     @property
     def layout(self) -> BlockedConvLayout:
@@ -95,41 +105,85 @@ class BlockedConv2D:
                                (None, None), init="zeros")
         return s
 
-    def __call__(self, p, xb: jnp.ndarray, *, use_pallas: bool = False,
+    def __call__(self, p, xb: jnp.ndarray, *,
+                 dispatch: Optional[ConvDispatcher] = None,
+                 impl: Union[Impl, str, None] = None,
+                 use_pallas: Optional[bool] = None,
                  interpret: Optional[bool] = None,
                  precision: Union[str, Precision, None] = None,
                  stream: Optional[bool] = None) -> jnp.ndarray:
-        """Both paths are differentiable: the Pallas path carries a custom
-        VJP (dgrad/wgrad kernels), so this layer trains through the kernel
-        with no fallback to the jnp formulation.
+        """Run this layer through the conv dispatch subsystem.
+
+        ``dispatch`` supplies the :class:`ConvDispatcher` (default: the
+        process-wide one over the checked-in table); ``impl`` is the
+        per-call override that beats every table entry (tests and forced
+        paths).  The legacy knobs are thin aliases: ``use_pallas=False``
+        pins the jnp oracle, ``use_pallas=True`` restricts the candidates
+        to the Pallas family, and ``stream`` (or the layer field) forces
+        window-vs-stream inside that family.  Every candidate is
+        differentiable — the Pallas impls through their custom VJP, whose
+        dgrad/wgrad directions the dispatcher routes independently.
 
         ``precision`` overrides the layer's policy for this call (the
-        ``BlockedCNN``/``TrainSettings`` pass-down); params stay f32 masters
-        either way — the cast to the operand dtype happens inside the conv,
-        and its transpose up-casts the weight cotangent back to f32.
-
-        ``stream`` (call override of the layer field) picks the Pallas
-        kernel variant; by default a window-inequality misfit on
-        ``self.machine`` routes to the streamed halo-DMA kernels instead of
-        raising, so deep-pencil layers train end to end.  The jnp path is
-        schedule-agnostic — the knob is a no-op there, like ``hob``/``wob``.
+        ``BlockedCNN``/``TrainSettings`` pass-down); params stay f32
+        masters either way — the cast to the operand dtype happens inside
+        the conv, and its transpose up-casts the weight cotangent back to
+        f32.
         """
         pol = resolve_precision(
             self.precision if precision is None else precision)
         bias = p["b"] if self.use_bias else None
-        if use_pallas:
-            from repro.kernels.direct_conv2d import direct_conv2d_blocked_pallas
-            if interpret is None:
-                interpret = jax.default_backend() != "tpu"
-            return direct_conv2d_blocked_pallas(
-                xb, p["w"], bias, stride=self.stride, padding=self.padding,
-                activation=self.activation, hob=self.hob, wob=self.wob,
-                machine=self.machine, interpret=interpret, precision=pol,
-                stream=self.stream if stream is None else stream)
-        return direct_conv_blocked(xb, p["w"], self.stride, self.padding,
-                                   bias, self.activation,
-                                   hob=self.hob, wob=self.wob,
-                                   precision=pol)
+        stream = self.stream if stream is None else stream
+
+        override, candidates = impl, None
+        if override is None and use_pallas is not None:
+            if use_pallas:
+                candidates = PALLAS_IMPLS
+            else:
+                override = Impl.JNP
+
+        decision_impl, route = Impl.JNP, None
+        if override is not None and Impl(override) is Impl.JNP:
+            decision_impl = Impl.JNP        # no dispatcher consult needed
+        else:
+            disp = dispatch if dispatch is not None else get_dispatcher()
+            n, _, hi, wi, _ = xb.shape
+            lay = self.layout
+            key = DispatchKey.make(
+                n, hi, wi, self.ci, self.co, self.hf, self.wf, self.stride,
+                self.padding, pol, self.machine, "fwd")
+            dec = disp.decide(key, override=override, candidates=candidates,
+                              cob=lay.cb_out, cib=lay.cb_in,
+                              hob=self.hob, wob=self.wob)
+            decision_impl = dec.impl
+            if decision_impl in PALLAS_IMPLS:
+                # resolve the backward directions too — one frozen route
+                # rides the custom VJP (an explicit stream bool forces all
+                # three; otherwise the forward leg is pinned to this
+                # decision and dgrad/wgrad resolve independently)
+                if stream is not None:
+                    route = KernelRoute(fwd=stream, dgrad=stream,
+                                        wgrad=stream)
+                else:
+                    kr = disp.kernel_route(key, cob=lay.cb_out,
+                                           cib=lay.cb_in, hob=self.hob,
+                                           wob=self.wob)
+                    route = KernelRoute(
+                        fwd=decision_impl is Impl.STREAM,
+                        dgrad=kr.dgrad, wgrad=kr.wgrad)
+
+        if decision_impl is Impl.JNP:
+            return direct_conv_blocked(xb, p["w"], self.stride, self.padding,
+                                       bias, self.activation,
+                                       hob=self.hob, wob=self.wob,
+                                       precision=pol)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return run_conv_impl(decision_impl, xb, p["w"], bias,
+                             stride=self.stride, padding=self.padding,
+                             activation=self.activation, precision=pol,
+                             machine=self.machine, interpret=interpret,
+                             hob=self.hob, wob=self.wob, route=route)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,21 +213,27 @@ class BlockedCNN:
                               (None, None))
         return s
 
-    def __call__(self, p, x_nhwc: jnp.ndarray, *, use_pallas: bool = False,
+    def __call__(self, p, x_nhwc: jnp.ndarray, *,
+                 dispatch: Optional[ConvDispatcher] = None,
+                 impl: Union[Impl, str, None] = None,
+                 use_pallas: Optional[bool] = None,
                  interpret: Optional[bool] = None,
                  precision: Union[str, Precision, None] = None,
                  stream: Optional[bool] = None) -> jnp.ndarray:
-        """``precision`` (if given) overrides every conv's policy for this
-        forward — under bf16 the layers *chain in bf16* (each conv emits its
-        operand dtype), GAP pools in f32, and the head matmul casts its f32
-        master to the feature dtype; logits come back in the compute dtype
-        and the loss up-casts them once.  ``stream`` (if given) overrides
-        every conv's kernel-variant routing the same way."""
+        """``dispatch``/``impl`` ride down to every conv (each layer still
+        resolves its *own* key — shapes shrink through the chain, so the
+        winning impl may differ per layer).  ``precision`` (if given)
+        overrides every conv's policy for this forward — under bf16 the
+        layers *chain in bf16* (each conv emits its operand dtype), GAP
+        pools in f32, and the head matmul casts its f32 master to the
+        feature dtype; logits come back in the compute dtype and the loss
+        up-casts them once.  ``use_pallas``/``stream`` (if given) override
+        every conv's routing the same way."""
         # the single layout transform of the whole forward pass
         h = nhwc_to_blocked(x_nhwc, self.convs[0].layout.cb_in)
         for i, conv in enumerate(self.convs):
-            h = conv(p[f"conv{i}"], h, use_pallas=use_pallas,
-                     interpret=interpret, precision=precision,
-                     stream=stream)
+            h = conv(p[f"conv{i}"], h, dispatch=dispatch, impl=impl,
+                     use_pallas=use_pallas, interpret=interpret,
+                     precision=precision, stream=stream)
         feat = blocked_global_avg_pool(h)
         return feat @ p["head"].astype(feat.dtype)
