@@ -78,16 +78,26 @@ def compare(baseline: dict, candidate: dict, threshold: float,
     return failures, notes
 
 
-def check_dispatch_coverage(candidate: dict, table: dict):
+def load_dispatch_entries(path: str) -> dict:
+    """Load a dispatch table's entries through the dispatcher's own reader:
+    schema-2 files load as-is, schema-1 files auto-migrate in memory (dense
+    entries gain ``groups=1, dilation=1`` idents), and an unknown schema
+    raises the dispatcher's clear regenerate-me ValueError instead of this
+    script KeyError-ing on a half-parsed dict."""
+    from repro.core.dispatch import ConvDispatcher
+    return ConvDispatcher.from_file(path, missing_ok=False).table
+
+
+def check_dispatch_coverage(candidate: dict, entries: dict):
     """-> (failures, notes): cross-reference the candidate's ``dispatch``
-    rows against the checked-in dispatch table.
+    rows against the checked-in dispatch table's entries (keyed by ident —
+    use :func:`load_dispatch_entries`, which normalizes the schema).
 
     Gate: every benched (layer, dtype) has dispatch rows, and every
     dispatch row's key either has a table entry or is explicitly
     prior-routed.  FYI: prior-routed shapes (no measurement backing the
     choice) are listed as "untuned" so someone eventually tunes them.
     """
-    entries = table.get("entries", {})
     failures, notes = [], []
 
     dispatch_rows = candidate.get("dispatch", [])
@@ -152,9 +162,12 @@ def main(argv=None) -> int:
     failures, notes = compare(baseline, candidate, args.threshold,
                               args.atol_us)
     if args.dispatch_table:
-        with open(args.dispatch_table) as f:
-            table = json.load(f)
-        d_failures, d_notes = check_dispatch_coverage(candidate, table)
+        try:
+            entries = load_dispatch_entries(args.dispatch_table)
+        except (FileNotFoundError, ValueError) as e:
+            print(f"FAIL: dispatch table unusable: {e}")
+            return 1
+        d_failures, d_notes = check_dispatch_coverage(candidate, entries)
         failures += d_failures
         notes += d_notes
     for n in notes:

@@ -16,7 +16,11 @@ producer's output and the consumer's input are counted even where an
 (also blocked-layout) pooling stage sits between them.  The live chain check
 below, by contrast, is exact.
 """
-from repro.core.blocking import TPU_V5E, choose_blocking, resident_bytes
+from repro.core.blocking import (TPU_V5E, choose_blocking,
+                                 choose_depthwise_blocking,
+                                 choose_pointwise_blocking,
+                                 depthwise_resident_bytes,
+                                 pointwise_resident_bytes, resident_bytes)
 from repro.core.memory_model import (ConvShape, bytes_repack_boundary,
                                      chain_repack_bytes)
 
@@ -47,9 +51,27 @@ GOOGLENET = [
     ConvShape("googlenet.i5b.1x1", 1, 7, 7, 832, 384, 1, 1),
 ]
 
-ZOO = ALEXNET + VGG + GOOGLENET
+# MobileNet (Howard et al. 2017) — the depthwise-separable factorization:
+# sampled dw/pw pairs from three stages, plus AlexNet conv2 in its
+# *historical* two-tower form (groups=2, the original dual-GPU split).
+# These entries exercise the grouped/depthwise/pointwise kernel zoo — the
+# dispatcher routes each to its specialized blocked kernel, and because dw
+# and pw legs share the [N, C/Cb, H, W, Cb] layout the interior boundary of
+# every separable pair repacks zero bytes.
+MOBILENET = [
+    ConvShape("mobilenet.conv1", 1, 224, 224, 3, 32, 3, 3, stride=2, pad=1),
+    ConvShape("mobilenet.dw2", 1, 112, 112, 32, 32, 3, 3, pad=1, groups=32),
+    ConvShape("mobilenet.pw2", 1, 112, 112, 32, 64, 1, 1),
+    ConvShape("mobilenet.dw4", 1, 56, 56, 128, 128, 3, 3, stride=2, pad=1,
+              groups=128),
+    ConvShape("mobilenet.pw4", 1, 28, 28, 128, 256, 1, 1),
+    ConvShape("alexnet.conv2g", 1, 27, 27, 96, 256, 5, 5, pad=2, groups=2),
+]
 
-CHAINS = {"alexnet": ALEXNET, "vgg": VGG, "googlenet": GOOGLENET}
+ZOO = ALEXNET + VGG + GOOGLENET + MOBILENET
+
+CHAINS = {"alexnet": ALEXNET, "vgg": VGG, "googlenet": GOOGLENET,
+          "mobilenet": MOBILENET[:5]}
 
 
 def bench_chain_repack(chains=None, dtype_bytes: int = 4):
@@ -76,21 +98,48 @@ def bench_chain_repack(chains=None, dtype_bytes: int = 4):
 def bench_zoo_blocking(shapes=None, machine=TPU_V5E, dtype_bytes: int = 4):
     """-> rows: the 2-D spatial tiling the analytical model picks per zoo
     layer (paper Alg. 3's H_o,b x W_o,b on TPU), with the VMEM bytes the
-    Pallas kernel holds resident per grid step.  For machines with a VMEM
-    budget, ``choose_blocking`` itself enforces the §3 inequality (it raises
-    rather than return a misfit), so producing this table at all *is* the
-    fit check; the rows report the remaining headroom (None for budget-less
-    CPU models, where no fitting happens)."""
+    Pallas kernel holds resident per grid step.  Each layer routes to the
+    sizing model of the kernel that would actually run it (the ``kind``
+    column): ``dw`` = depthwise, ``pw`` = pointwise 1x1-as-matmul, ``grp`` =
+    block-diagonal grouped, ``conv`` = dense window.  For machines with a
+    VMEM budget the choosers themselves enforce the §3 inequality (they
+    raise rather than return a misfit), so producing this table at all *is*
+    the fit check; the rows report the remaining headroom (None for
+    budget-less CPU models, where no fitting happens)."""
     rows = []
     for s in shapes or ZOO:
-        blk = choose_blocking(s.padded_hi, s.padded_wi, s.ci, s.co,
-                              s.hf, s.wf, s.stride, machine=machine,
-                              in_dtype_bytes=dtype_bytes)
-        resident = resident_bytes(blk.hob, blk.wob, blk.cob, blk.cib,
-                                  s.hf, s.wf, s.stride,
-                                  in_dtype_bytes=dtype_bytes)
+        depthwise = s.groups > 1 and s.groups == s.ci == s.co
+        pointwise = (s.hf == s.wf == 1 and s.stride == 1 and s.groups == 1
+                     and s.padded_hi == s.hi and s.padded_wi == s.wi)
+        if depthwise:
+            kind = "dw"
+            blk = choose_depthwise_blocking(
+                s.padded_hi, s.padded_wi, s.ci, s.hf, s.wf, s.stride,
+                machine=machine, in_dtype_bytes=dtype_bytes,
+                dilation=s.dil)
+            resident = depthwise_resident_bytes(
+                blk.hob, blk.wob, blk.cob, s.hf, s.wf, s.stride,
+                in_dtype_bytes=dtype_bytes, dilation=s.dil)
+        elif pointwise:
+            kind = "pw"
+            blk = choose_pointwise_blocking(
+                s.hi, s.wi, s.ci, s.co, machine=machine,
+                in_dtype_bytes=dtype_bytes)
+            resident = pointwise_resident_bytes(
+                blk.hob, blk.wob, blk.cob, blk.cib,
+                in_dtype_bytes=dtype_bytes)
+        else:
+            kind = "grp" if s.groups > 1 else "conv"
+            blk = choose_blocking(s.padded_hi, s.padded_wi, s.ci, s.co,
+                                  s.hf, s.wf, s.stride, machine=machine,
+                                  in_dtype_bytes=dtype_bytes,
+                                  groups=s.groups, dilation=s.dil)
+            resident = resident_bytes(blk.hob, blk.wob, blk.cob, blk.cib,
+                                      s.hf, s.wf, s.stride,
+                                      in_dtype_bytes=dtype_bytes,
+                                      dilation=s.dil)
         rows.append({
-            "layer": s.name,
+            "layer": s.name, "kind": kind,
             "cob": blk.cob, "cib": blk.cib,
             "tile": f"{blk.hob}x{blk.wob}",
             "out": f"{s.ho}x{s.wo}",
@@ -146,13 +195,13 @@ if __name__ == "__main__":
         print(f"{row['chain']:10s} {row['boundary']:42s} "
               f"{row['eliminated_MiB']:14.2f}")
 
-    print(f"\n{'layer':20s} {'cob':>4s} {'cib':>4s} {'tile':>9s} "
-          f"{'out':>9s} {'res KiB':>9s} {'headroom':>9s}")
-    # choose_blocking raises on any misfit, so completing this loop proves
+    print(f"\n{'layer':20s} {'kind':>4s} {'cob':>4s} {'cib':>4s} "
+          f"{'tile':>9s} {'out':>9s} {'res KiB':>9s} {'headroom':>9s}")
+    # the choosers raise on any misfit, so completing this loop proves
     # every zoo layer gets a tile satisfying the VMEM inequality
     for row in bench_zoo_blocking():
-        print(f"{row['layer']:20s} {row['cob']:4d} {row['cib']:4d} "
-              f"{row['tile']:>9s} {row['out']:>9s} "
+        print(f"{row['layer']:20s} {row['kind']:>4s} {row['cob']:4d} "
+              f"{row['cib']:4d} {row['tile']:>9s} {row['out']:>9s} "
               f"{row['resident_KiB']:9.1f} {row['vmem_headroom']:8.1%}")
     print("all zoo tiles satisfy the VMEM inequality: OK")
 

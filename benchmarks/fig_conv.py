@@ -45,6 +45,11 @@ from .timing import resolve_bench_dtype, time_fn
 CI_SHAPES = [
     ConvShape("smoke.3x3", 1, 12, 12, 4, 8, 3, 3, pad=1),
     ConvShape("smoke.s2", 1, 12, 12, 8, 8, 3, 3, stride=2, pad="SAME"),
+    # the kernel zoo (DESIGN.md §13): depthwise, block-diagonal grouped,
+    # and the 1x1-as-matmul fast path — each routes to its specialized impl
+    ConvShape("smoke.dw", 1, 12, 12, 8, 8, 3, 3, pad=1, groups=8),
+    ConvShape("smoke.grp", 1, 12, 12, 8, 8, 3, 3, pad=1, groups=2),
+    ConvShape("smoke.1x1", 1, 12, 12, 8, 16, 1, 1),
 ]
 
 # The streamed section's machine for the pathological rows: pinned 32-deep
@@ -68,35 +73,53 @@ STREAM_SHAPES = [
 def _inputs(s: ConvShape, dtype=jnp.float32):
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(s.n, s.hi, s.wi, s.ci)), dtype)
-    w = jnp.asarray(rng.normal(size=(s.hf, s.wf, s.ci, s.co)), dtype)
+    # grouped weights carry the per-group input extent (HWIO with
+    # w.shape[2] == Ci // groups — the lax feature_group_count convention
+    # every consumer here shares)
+    w = jnp.asarray(rng.normal(size=(s.hf, s.wf, s.cig, s.co)), dtype)
     return x, w
 
 
 def bench_fig4(shapes=None, iters=3):
-    """-> rows: per-layer seconds for direct / im2col+GEMM / FFT / lax."""
+    """-> rows: per-layer seconds for direct / im2col+GEMM / FFT / lax.
+
+    im2col and FFT are dense-only formulations (packing a block-diagonal
+    weight would benchmark a different algorithm), so grouped/depthwise
+    rows omit those columns — the regression gate keys per-field and
+    simply has no im2col/fft trajectory for them.
+    """
     rows = []
     for s in shapes or ZOO:
         x, w = _inputs(s)
         pad = s.pad
-        t_direct = time_fn(lambda x, w: D.direct_conv_nhwc(x, w, s.stride, pad),
-                           x, w, iters=iters)
-        t_im2col = time_fn(lambda x, w: B.conv_im2col(x, w, s.stride, pad),
-                           x, w, iters=iters)
-        t_fft = time_fn(lambda x, w: B.conv_fft(x, w, s.stride, pad),
-                        x, w, iters=iters)
-        t_lax = time_fn(lambda x, w: B.conv_lax(x, w, s.stride, pad),
-                        x, w, iters=iters)
+        t_direct = time_fn(
+            lambda x, w: D.direct_conv_nhwc(x, w, s.stride, pad,
+                                            groups=s.groups,
+                                            dilation=s.dilation),
+            x, w, iters=iters)
+        t_lax = time_fn(
+            lambda x, w: B.conv_lax(x, w, s.stride, pad, groups=s.groups,
+                                    dilation=s.dilation),
+            x, w, iters=iters)
         # unrounded: the CI shapes are ~1e-4 GFLOP, which round(_, 3) used
         # to flatten to 0.0 while direct_gflops was computed from the real
         # value — the two fields must agree (gflop == direct_gflops * t)
         gf = s.flops() / 1e9
-        rows.append({
+        row = {
             "layer": s.name, "gflop": gf,
-            "direct_us": t_direct * 1e6, "im2col_us": t_im2col * 1e6,
-            "fft_us": t_fft * 1e6, "lax_us": t_lax * 1e6,
-            "direct_vs_im2col": t_im2col / t_direct,
+            "direct_us": t_direct * 1e6, "lax_us": t_lax * 1e6,
             "direct_gflops": gf / t_direct,
-        })
+        }
+        if s.groups == 1 and s.dil == (1, 1):
+            t_im2col = time_fn(
+                lambda x, w: B.conv_im2col(x, w, s.stride, pad),
+                x, w, iters=iters)
+            t_fft = time_fn(lambda x, w: B.conv_fft(x, w, s.stride, pad),
+                            x, w, iters=iters)
+            row["im2col_us"] = t_im2col * 1e6
+            row["fft_us"] = t_fft * 1e6
+            row["direct_vs_im2col"] = t_im2col / t_direct
+        rows.append(row)
     return rows
 
 
@@ -118,14 +141,21 @@ def bench_backward(shapes=None, iters=3, dtype_name="f32"):
     for s in shapes or ZOO:
         x, w = _inputs(s)
         pad = s.pad
-        t_fwd = time_fn(lambda x, w: D.direct_conv_nhwc(x, w, s.stride, pad),
-                        x, w, iters=iters, dtype=dtype)
-        t_step = time_fn(lambda x, w: D.direct_conv_nhwc(x, w, s.stride, pad),
-                         x, w, iters=iters, backward=True, dtype=dtype)
-        t_lax_fwd = time_fn(lambda x, w: B.conv_lax(x, w, s.stride, pad),
-                            x, w, iters=iters, dtype=dtype)
-        t_lax_step = time_fn(lambda x, w: B.conv_lax(x, w, s.stride, pad),
-                             x, w, iters=iters, backward=True, dtype=dtype)
+
+        def direct_fn(x, w):
+            return D.direct_conv_nhwc(x, w, s.stride, pad, groups=s.groups,
+                                      dilation=s.dilation)
+
+        def lax_fn(x, w):
+            return B.conv_lax(x, w, s.stride, pad, groups=s.groups,
+                              dilation=s.dilation)
+
+        t_fwd = time_fn(direct_fn, x, w, iters=iters, dtype=dtype)
+        t_step = time_fn(direct_fn, x, w, iters=iters, backward=True,
+                         dtype=dtype)
+        t_lax_fwd = time_fn(lax_fn, x, w, iters=iters, dtype=dtype)
+        t_lax_step = time_fn(lax_fn, x, w, iters=iters, backward=True,
+                             dtype=dtype)
         rows.append({
             "layer": s.name,
             "dtype": dtype_name,
@@ -142,10 +172,11 @@ def bench_backward(shapes=None, iters=3, dtype_name="f32"):
 def _blocked_operands(s: ConvShape, lane: int = 128):
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(s.n, s.hi, s.wi, s.ci)), jnp.float32)
-    w = jnp.asarray(rng.normal(size=(s.hf, s.wf, s.ci, s.co)), jnp.float32)
-    lay = LAY.BlockedConvLayout.choose(s.ci, s.co, lane=lane)
+    w = jnp.asarray(rng.normal(size=(s.hf, s.wf, s.cig, s.co)), jnp.float32)
+    lay = LAY.BlockedConvLayout.choose(s.ci, s.co, lane=lane,
+                                       groups=s.groups)
     return (LAY.nhwc_to_blocked(x, lay.cb_in),
-            LAY.hwio_to_blocked(w, lay.cb_in, lay.cb_out), lay)
+            LAY.hwio_to_blocked(w, lay.cb_weight, lay.cb_out), lay)
 
 
 def _halo_bytes(s: ConvShape, machine, lay, dtype_name: str):
@@ -234,7 +265,7 @@ def dispatch_report(pairs=None, dtypes=("f32",)):
     rows = []
     for s, machine in pairs or [(c, TPU_V5E) for c in CI_SHAPES]:
         register_machine(machine)
-        lay = LAY.BlockedConvLayout.choose(s.ci, s.co)
+        lay = LAY.BlockedConvLayout.choose(s.ci, s.co, groups=s.groups)
         for dtype_name in dtypes:
             for direction in DIRECTIONS:
                 key = DispatchKey.from_shape(s, dtype_name, machine,

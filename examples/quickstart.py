@@ -50,7 +50,7 @@ def main():
     impls = {
         "direct (paper)": lambda: D.direct_conv_nhwc(x, w, s.stride, s.pad),
         "pallas kernel (interpret)": lambda: ops.direct_conv2d(
-            x, w, s.stride, s.pad, interpret=True),
+            x, w, s.stride, s.pad, interpret=True, impl="window"),
         "im2col+GEMM": lambda: B.conv_im2col(x, w, s.stride, s.pad),
         "FFT": lambda: B.conv_fft(x, w, s.stride, s.pad),
     }

@@ -2,19 +2,29 @@
 through the zero-memory-overhead direct path (blocked layouts end to end —
 layers chain without repacking, exactly the paper's §4 design point).
 
-The model is ``repro.nn.BlockedCNN``: conv(relu, SAME) -> conv(relu, SAME,
-stride 2) -> GAP -> linear head.  Input images are blocked once at entry;
-every layer boundary after that stays in ``[N, C/Cb, H, W, Cb]`` — no
-``nhwc_to_blocked``/``blocked_to_nhwc`` calls between layers.
+Two models (``--model``):
+
+  dense      ``BlockedCNN`` of plain convs: conv(relu, SAME) -> conv(relu,
+             SAME, stride 2) -> GAP -> linear head.
+  separable  the MobileNet factorization on the same layout: two
+             ``DepthwiseSeparableBlock``s (depthwise 3x3 + pointwise 1x1),
+             exercising the grouped/depthwise/pointwise kernel zoo — the
+             dispatcher routes each leg to its specialized Pallas kernel.
+
+Input images are blocked once at entry; every layer boundary after that —
+including the separable blocks' interior depthwise->pointwise boundary —
+stays in ``[N, C/Cb, H, W, Cb]``.
 
 Synthetic 16x16 task: each class is a fixed 3x3 stamp pattern placed at a
 *random* position (translation-invariant — which is why GAP classifies it).
 
-``--pallas`` trains *through the Pallas kernel family*: the forward kernel
-plus its custom VJP (transposed-window dgrad, per-tile wgrad — DESIGN.md
-§9), so not even the backward pass leaves the blocked layout.  Whichever
-path trains, the final-batch loss is cross-checked against the other path
-(same params, same batch — the two formulations must agree to rounding).
+``--pallas`` trains *through the Pallas kernel families*: the forward
+kernels plus their custom VJPs (dgrad + wgrad in the blocked layout too —
+DESIGN.md §9, §13).  The dense model pins ``impl="window"``; the separable
+model routes through a prior-tier dispatcher, whose geometry-aware prior
+selects the depthwise and pointwise kernels.  Whichever path trains, the
+final-batch loss is cross-checked against the jnp-oracle path (same params,
+same batch — the formulations must agree to rounding).
 
 ``--dtype bf16`` engages the mixed-precision policy (DESIGN.md §10): bf16
 operands/residuals, f32 accumulators and master params.  The final-loss
@@ -24,7 +34,7 @@ rounding, not f32 rounding.
 Usage:  PYTHONPATH=src python examples/train_conv_net.py --steps 150
         PYTHONPATH=src python examples/train_conv_net.py --steps 3 --pallas
         PYTHONPATH=src python examples/train_conv_net.py --steps 3 --pallas \
-            --dtype bf16
+            --model separable --dtype bf16
 (accuracy assertions only engage for runs long enough to learn, >= 100
 steps; short runs are CI training smokes.)
 """
@@ -34,25 +44,39 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.nn.conv import BlockedCNN, BlockedConv2D
+from repro.core.dispatch import ConvDispatcher
+from repro.nn.conv import BlockedCNN, BlockedConv2D, DepthwiseSeparableBlock
 from repro.nn.module import init_tree
 from repro.train.optimizer import AdamW, cosine_schedule
 
 CB = 8   # channel pencil for this toy net (lane=128 on real TPU)
 
-MODEL = BlockedCNN(
-    convs=(
-        BlockedConv2D(ci=8, co=16, hf=3, wf=3, stride=1, padding="SAME",
-                      activation="relu", lane=CB),
-        BlockedConv2D(ci=16, co=32, hf=3, wf=3, stride=2, padding="SAME",
-                      activation="relu", lane=CB),
+MODELS = {
+    "dense": BlockedCNN(
+        convs=(
+            BlockedConv2D(ci=8, co=16, hf=3, wf=3, stride=1, padding="SAME",
+                          activation="relu", lane=CB),
+            BlockedConv2D(ci=16, co=32, hf=3, wf=3, stride=2, padding="SAME",
+                          activation="relu", lane=CB),
+        ),
+        n_classes=8,
     ),
-    n_classes=8,
-)
+    "separable": BlockedCNN(
+        convs=(
+            DepthwiseSeparableBlock(ci=8, co=16, hf=3, wf=3, stride=1,
+                                    padding="SAME", activation="relu",
+                                    lane=CB),
+            DepthwiseSeparableBlock(ci=16, co=32, hf=3, wf=3, stride=2,
+                                    padding="SAME", activation="relu",
+                                    lane=CB),
+        ),
+        n_classes=8,
+    ),
+}
 
 # final-loss parity tolerance per policy: two f32 formulations agree to
 # float32 rounding; two bf16 formulations each quantize operands/outputs to
-# 8 mantissa bits (eps ~ 2^-8 ≈ 4e-3), compounded over two conv layers +
+# 8 mantissa bits (eps ~ 2^-8 ≈ 4e-3), compounded over the conv layers +
 # the head — an f32-tuned 1e-4 would spuriously fail a *correct* bf16 run.
 PARITY_TOL = {"f32": 1e-4, "bf16": 5e-2}
 
@@ -71,9 +95,24 @@ def make_batch(rng, n=128):
     return jnp.asarray(xs.repeat(8, axis=-1)), jnp.asarray(ys)
 
 
-def make_loss(use_pallas, precision="f32"):
+def pallas_routing(model_name):
+    """(impl, dispatch) that trains this model through the Pallas kernels.
+
+    The dense model pins the window kernel.  The separable model leaves the
+    impl free and routes through an empty (prior-tier) dispatcher: the
+    geometry-aware prior puts the depthwise and pointwise Pallas kernels
+    first for their layers, so every leg runs its specialized kernel +
+    custom VJP.
+    """
+    if model_name == "dense":
+        return "window", None
+    return None, ConvDispatcher()
+
+
+def make_loss(model, impl, dispatch=None, precision="f32"):
     def loss_fn(p, x, y):
-        logits = MODEL(p, x, use_pallas=use_pallas, precision=precision)
+        logits = model(p, x, impl=impl, dispatch=dispatch,
+                       precision=precision)
         # the policy's single up-cast: CE in f32 whatever the compute dtype
         ll = jax.nn.log_softmax(logits.astype(jnp.float32))
         loss = -jnp.take_along_axis(ll, y[:, None], 1).mean()
@@ -88,15 +127,23 @@ def main():
     ap.add_argument("--pallas", action="store_true",
                     help="train through the Pallas kernels (custom VJP: "
                          "dgrad + wgrad run in the blocked layout too)")
+    ap.add_argument("--model", choices=sorted(MODELS), default="dense",
+                    help="dense convs, or depthwise-separable blocks "
+                         "(the grouped/depthwise/pointwise kernel zoo)")
     ap.add_argument("--dtype", choices=sorted(PARITY_TOL), default="f32",
                     help="mixed-precision policy: bf16 operands/residuals "
                          "with f32 accumulators + master params")
     args = ap.parse_args()
 
-    p = init_tree(MODEL.specs(), jax.random.PRNGKey(0))
+    model = MODELS[args.model]
+    p = init_tree(model.specs(), jax.random.PRNGKey(0))
     opt = AdamW(lr=cosine_schedule(1e-2, 10, args.steps), weight_decay=0.0)
     st = opt.init(p)
-    loss_fn = make_loss(args.pallas, args.dtype)
+    if args.pallas:
+        impl, dispatch = pallas_routing(args.model)
+    else:
+        impl, dispatch = "jnp", None
+    loss_fn = make_loss(model, impl, dispatch, args.dtype)
 
     @jax.jit
     def step(p, st, x, y):
@@ -105,7 +152,7 @@ def main():
         return p, st, loss, acc
 
     path = "pallas" if args.pallas else "jnp"
-    path = f"{path}/{args.dtype}"
+    path = f"{args.model}/{path}/{args.dtype}"
     rng = np.random.default_rng(0)
     for s in range(args.steps):
         x, y = make_batch(rng)
@@ -114,11 +161,15 @@ def main():
             print(f"[{path}] step {s + 1}: loss={float(loss):.4f} "
                   f"acc={float(acc):.2f}")
 
-    # the two formulations are one semantics: the final-batch loss through
-    # the *other* path must agree to float tolerance on the trained params
+    # the formulations are one semantics: the final-batch loss through the
+    # *other* path must agree to float tolerance on the trained params
     # (tolerance is policy-aware — bf16 agreement is bf16-rounding-tight)
     mine, _ = loss_fn(p, x, y)
-    other, _ = make_loss(not args.pallas, args.dtype)(p, x, y)
+    if args.pallas:
+        other_fn = make_loss(model, "jnp", None, args.dtype)
+    else:
+        other_fn = make_loss(model, *pallas_routing(args.model), args.dtype)
+    other, _ = other_fn(p, x, y)
     tol = PARITY_TOL[args.dtype]
     print(f"final loss parity: {path}={float(mine):.6f} "
           f"other={float(other):.6f} (tol={tol:g})")
@@ -131,11 +182,14 @@ def main():
 
     # trained params run unchanged through the fused Pallas inference path
     x, y = make_batch(rng)
-    logits = MODEL(p, x, use_pallas=True)
+    logits = model(p, x, impl=pallas_routing(args.model)[0],
+                   dispatch=pallas_routing(args.model)[1])
     pacc = float((logits.argmax(-1) == y).mean())
     print(f"pallas-kernel inference path: acc={pacc:.2f}")
     if args.steps >= 100:
         assert pacc > 0.9
+
+    return 0
 
 
 if __name__ == "__main__":

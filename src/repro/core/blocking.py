@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from .convspec import as_dilation
 from .layout import choose_pencil, divisors, largest_divisor_leq
 from .precision import resolve_precision
 
@@ -36,6 +37,10 @@ __all__ = [
     "stream_resident_bytes", "choose_stream_blocking",
     "choose_stream_dgrad_blocking",
     "stream_wgrad_resident_bytes", "choose_stream_wgrad_blocking",
+    "depthwise_resident_bytes", "choose_depthwise_blocking",
+    "depthwise_wgrad_resident_bytes", "choose_depthwise_wgrad_blocking",
+    "pointwise_resident_bytes", "choose_pointwise_blocking",
+    "pointwise_wgrad_resident_bytes", "choose_pointwise_wgrad_blocking",
 ]
 
 
@@ -114,15 +119,18 @@ class Blocking:
 
 def resident_bytes(hob: int, wob: int, cob: int, cib: int, hf: int, wf: int,
                    stride: int = 1, in_dtype_bytes: int = 4,
-                   acc_dtype_bytes: int = 4) -> int:
+                   acc_dtype_bytes: int = 4, dilation=(1, 1)) -> int:
     """VMEM bytes one Pallas grid step holds resident (DESIGN.md §7):
     double-buffered halo'd input window, weight tile and output tile
     (Pallas pipelines all operand blocks), plus the persistent f32
     accumulator scratch.  The single source of the inequality
     ``choose_blocking`` fits against — benchmarks and tests must use this,
-    not a copy."""
-    hib = (hob - 1) * stride + hf                         # halo'd input rows
-    wib = (wob - 1) * stride + wf                         # halo'd input cols
+    not a copy.  ``dilation`` widens the halo: the window spans the
+    *effective* filter extent ``(hf-1)*dh + 1`` while the weight tile stays
+    ``hf x wf`` taps."""
+    dh, dw = as_dilation(dilation)
+    hib = (hob - 1) * stride + (hf - 1) * dh + 1          # halo'd input rows
+    wib = (wob - 1) * stride + (wf - 1) * dw + 1          # halo'd input cols
     win = hib * wib * cib * in_dtype_bytes
     wgt = hf * wf * cib * cob * in_dtype_bytes
     out = hob * wob * cob * in_dtype_bytes                # output block
@@ -151,7 +159,7 @@ def choose_blocking(
     in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
     cob: int | None = None, cib: int | None = None,
     hob: int | None = None, wob: int | None = None,
-    precision=None,
+    precision=None, groups: int = 1, dilation=(1, 1),
 ) -> Blocking:
     """Pick (Cob, Cib, Hob, Wob) per the adapted Eq. 1/2 + VMEM budget.
 
@@ -188,21 +196,42 @@ def choose_blocking(
     raw ``in_dtype_bytes``/``acc_dtype_bytes``: bf16 operands halve every
     term of the inequality except the f32 accumulator, so the model admits
     larger (never smaller) tiles than the f32 fit for the same budget.
+
+    ``groups`` makes the channel sizing block-diagonal: default pencils are
+    chosen per group (``cib`` caps at ``ci // groups`` — the reduction a
+    grouped kernel ever contracts is one group's input blocks), and a pinned
+    pencil must divide the per-group channel count.  ``dilation`` widens the
+    input-window term of the inequality (see :func:`resident_bytes`) and the
+    output extents use the effective filter span.
     """
     in_dtype_bytes, acc_dtype_bytes = _policy_itemsizes(
         precision, in_dtype_bytes, acc_dtype_bytes)
-    ho = (hi - hf) // stride + 1
-    wo = (wi - wf) // stride + 1
+    dil = as_dilation(dilation)
+    hf_eff = (hf - 1) * dil[0] + 1
+    wf_eff = (wf - 1) * dil[1] + 1
+    ho = (hi - hf_eff) // stride + 1
+    wo = (wi - wf_eff) // stride + 1
     if ho <= 0 or wo <= 0:
         raise ValueError(f"empty output for input {hi}x{wi}, filter {hf}x{wf}")
+    if groups < 1 or ci % groups or co % groups:
+        raise ValueError(f"groups={groups} must divide ci={ci} and co={co}")
+    cig, cog = ci // groups, co // groups                 # per-group channels
 
     cib_pinned = cib is not None
     hob_pinned = hob is not None
     wob_pinned = wob is not None
     if cob is None:
-        cob = choose_pencil(co, machine.n_vec)            # lane dim
+        cob = choose_pencil(co, machine.n_vec, groups=groups)   # lane dim
+    elif groups > 1 and cog % cob:
+        raise ValueError(
+            f"cob={cob} must divide the per-group output channels "
+            f"{cog} (co={co}, groups={groups})")
     if cib is None:
-        cib = choose_pencil(ci, machine.n_vec)            # contraction depth
+        cib = choose_pencil(ci, machine.n_vec, groups=groups)   # contraction
+    elif groups > 1 and cig % cib:
+        raise ValueError(
+            f"cib={cib} must divide the per-group input channels "
+            f"{cig} (ci={ci}, groups={groups})")
     if hob_pinned and (hob < 1 or ho % hob):
         raise ValueError(f"hob={hob} must divide Ho={ho}")
     if wob_pinned and (wob < 1 or wo % wob):
@@ -221,8 +250,8 @@ def choose_blocking(
     if machine.vmem_bytes:
         def fits(cib_, hob_, wob_):
             return resident_bytes(hob_, wob_, cob, cib_, hf, wf, stride,
-                                  in_dtype_bytes,
-                                  acc_dtype_bytes) <= machine.vmem_bytes
+                                  in_dtype_bytes, acc_dtype_bytes,
+                                  dilation=dil) <= machine.vmem_bytes
 
         hob = _shrink_to_fit(ho, hob, hob_pinned,
                              lambda h: fits(cib, h, wob))
@@ -231,8 +260,9 @@ def choose_blocking(
         wob = _shrink_to_fit(wo, wob, wob_pinned,
                              lambda w: fits(cib, hob, w))
         # huge channel blocks: shallower contraction (the paper's cache-level
-        # Ci blocking) until the resident window fits VMEM
-        cib = _shrink_to_fit(ci, cib, cib_pinned,
+        # Ci blocking — per group: the kernel only ever contracts one group's
+        # input blocks) until the resident window fits VMEM
+        cib = _shrink_to_fit(cig, cib, cib_pinned,
                              lambda c: fits(c, hob, wob))
         if not fits(cib, hob, wob):
             raise VmemMisfitError(
@@ -271,11 +301,14 @@ def choose_blocking(
 # ---------------------------------------------------------------------------
 
 def dgrad_extents(ho: int, wo: int, hf: int, wf: int,
-                  stride: int = 1) -> tuple[int, int]:
+                  stride: int = 1, dilation=(1, 1)) -> tuple[int, int]:
     """Spatial extents of the dgrad kernel's output: the input-gradient rows
     a VALID forward conv ever touched, ``E = (out - 1) * stride + filter``
-    (trailing rows of the padded input beyond E have zero gradient)."""
-    return (ho - 1) * stride + hf, (wo - 1) * stride + wf
+    with the *effective* (dilated) filter extent (trailing rows of the
+    padded input beyond E have zero gradient)."""
+    dh, dw = as_dilation(dilation)
+    return ((ho - 1) * stride + (hf - 1) * dh + 1,
+            (wo - 1) * stride + (wf - 1) * dw + 1)
 
 
 def choose_dgrad_blocking(
@@ -284,7 +317,7 @@ def choose_dgrad_blocking(
     in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
     cib: int | None = None, cob: int | None = None,
     hob: int | None = None, wob: int | None = None,
-    precision=None,
+    precision=None, groups: int = 1, dilation=(1, 1),
 ) -> Blocking:
     """Tile the transposed-window dgrad kernel (input gradient).
 
@@ -305,19 +338,24 @@ def choose_dgrad_blocking(
     ``cib``/``cob`` pin the pencils baked into the caller's operand layouts
     (x's channel block / w's output pencil).  ``precision`` has the forward
     model's meaning (bf16 cotangent windows halve the inequality).
+    ``groups``/``dilation`` transpose with the problem: the dgrad of a
+    grouped conv is grouped the same way (channel roles swapped within each
+    group) and its taps stay dilation-strided over the padded cotangent.
     """
-    eh, ew = dgrad_extents(ho, wo, hf, wf, stride)
+    dh, dw = as_dilation(dilation)
+    eh, ew = dgrad_extents(ho, wo, hf, wf, stride, (dh, dw))
     return choose_blocking(
-        eh + hf - 1, ew + wf - 1, co, ci, hf, wf, stride=1,
+        eh + (hf - 1) * dh, ew + (wf - 1) * dw, co, ci, hf, wf, stride=1,
         machine=machine, in_dtype_bytes=in_dtype_bytes,
         acc_dtype_bytes=acc_dtype_bytes,
-        cob=cib, cib=cob, hob=hob, wob=wob, precision=precision)
+        cob=cib, cib=cob, hob=hob, wob=wob, precision=precision,
+        groups=groups, dilation=(dh, dw))
 
 
 def wgrad_resident_bytes(hob: int, wob: int, cob: int, cib: int,
                          hf: int, wf: int, stride: int = 1,
                          in_dtype_bytes: int = 4,
-                         acc_dtype_bytes: int = 4) -> int:
+                         acc_dtype_bytes: int = 4, dilation=(1, 1)) -> int:
     """VMEM bytes one wgrad grid step holds resident (DESIGN.md §9).
 
     Same double-buffered operand accounting as :func:`resident_bytes`, but
@@ -325,8 +363,9 @@ def wgrad_resident_bytes(hob: int, wob: int, cob: int, cib: int,
     and the persistent f32 accumulator matches it — ``Hf*Wf`` times larger
     than the forward's ``[hob*wob, Cob]`` scratch, which is what changes the
     inequality."""
-    hib = (hob - 1) * stride + hf
-    wib = (wob - 1) * stride + wf
+    dh, dw = as_dilation(dilation)
+    hib = (hob - 1) * stride + (hf - 1) * dh + 1
+    wib = (wob - 1) * stride + (wf - 1) * dw + 1
     win = hib * wib * cib * in_dtype_bytes                # x window (halo'd)
     cot = hob * wob * cob * in_dtype_bytes                # cotangent tile
     wgt = hf * wf * cib * cob * in_dtype_bytes            # dw output block
@@ -340,7 +379,7 @@ def choose_wgrad_blocking(
     cob: int = 128, cib: int = 128,
     in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
     hob: int | None = None, wob: int | None = None,
-    precision=None,
+    precision=None, dilation=(1, 1),
 ) -> Blocking:
     """Tile the per-tile accumulating wgrad kernel (weight gradient).
 
@@ -374,7 +413,8 @@ def choose_wgrad_blocking(
         def fits(hob_, wob_):
             return wgrad_resident_bytes(
                 hob_, wob_, cob, cib, hf, wf, stride,
-                in_dtype_bytes, acc_dtype_bytes) <= machine.vmem_bytes
+                in_dtype_bytes, acc_dtype_bytes,
+                dilation=dilation) <= machine.vmem_bytes
 
         hob = _shrink_to_fit(ho, hob, hob_pinned, lambda h: fits(h, wob))
         wob = _shrink_to_fit(wo, wob, wob_pinned, lambda w: fits(hob, w))
@@ -625,3 +665,251 @@ def choose_stream_wgrad_blocking(
                 f"accumulator plus two minimal strips needs more than "
                 f"{machine.vmem_bytes} bytes resident")
     return StreamBlocking(cob=cob, cib=cib, hob=ho, wob=wob, hso=hso)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise tile sizing (DESIGN.md §13).  A depthwise conv contracts nothing:
+# each lane of the channel pencil is its own group, so the "weight tile" is a
+# [Hf, Wf, Cb] tap stack (no Cib x Cob matrix) and the kernel is VPU
+# multiply-accumulate over taps.  The inequality is the window inequality
+# with the weight term collapsed by a factor of Cb.
+# ---------------------------------------------------------------------------
+
+def depthwise_resident_bytes(hob: int, wob: int, cb: int, hf: int, wf: int,
+                             stride: int = 1, in_dtype_bytes: int = 4,
+                             acc_dtype_bytes: int = 4,
+                             dilation=(1, 1)) -> int:
+    """VMEM bytes one depthwise grid step holds resident: double-buffered
+    halo'd window, [Hf, Wf, Cb] tap stack and output tile, plus the f32
+    accumulator."""
+    dh, dw = as_dilation(dilation)
+    hib = (hob - 1) * stride + (hf - 1) * dh + 1
+    wib = (wob - 1) * stride + (wf - 1) * dw + 1
+    win = hib * wib * cb * in_dtype_bytes
+    wgt = hf * wf * cb * in_dtype_bytes
+    out = hob * wob * cb * in_dtype_bytes
+    acc = hob * wob * cb * acc_dtype_bytes
+    return 2 * (win + wgt + out) + acc
+
+
+def choose_depthwise_blocking(
+    hi: int, wi: int, c: int, hf: int, wf: int, stride: int = 1,
+    machine: MachineModel = TPU_V5E, cb: int | None = None,
+    in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
+    hob: int | None = None, wob: int | None = None,
+    precision=None, dilation=(1, 1),
+) -> Blocking:
+    """Tile the depthwise forward kernel (and, over the padded cotangent at
+    stride 1, its dgrad).  The channel pencil ``cb`` is pinned by the
+    operand layout (``cob == cib == cb`` in the returned Blocking); under
+    VMEM pressure only the spatial tile shrinks, ``hob`` then ``wob``,
+    divisors of Ho/Wo as everywhere else."""
+    in_dtype_bytes, acc_dtype_bytes = _policy_itemsizes(
+        precision, in_dtype_bytes, acc_dtype_bytes)
+    dil = as_dilation(dilation)
+    ho = (hi - ((hf - 1) * dil[0] + 1)) // stride + 1
+    wo = (wi - ((wf - 1) * dil[1] + 1)) // stride + 1
+    if ho <= 0 or wo <= 0:
+        raise ValueError(f"empty output for input {hi}x{wi}, filter {hf}x{wf}")
+    if cb is None:
+        cb = choose_pencil(c, machine.n_vec)
+    hob_pinned, wob_pinned = hob is not None, wob is not None
+    if hob_pinned and (hob < 1 or ho % hob):
+        raise ValueError(f"hob={hob} must divide Ho={ho}")
+    if wob_pinned and (wob < 1 or wo % wob):
+        raise ValueError(f"wob={wob} must divide Wo={wo}")
+    if not hob_pinned:
+        hob = ho
+    if not wob_pinned:
+        wob = wo
+
+    if machine.vmem_bytes:
+        def fits(hob_, wob_):
+            return depthwise_resident_bytes(
+                hob_, wob_, cb, hf, wf, stride, in_dtype_bytes,
+                acc_dtype_bytes, dilation=dil) <= machine.vmem_bytes
+
+        hob = _shrink_to_fit(ho, hob, hob_pinned, lambda h: fits(h, wob))
+        wob = _shrink_to_fit(wo, wob, wob_pinned, lambda w: fits(hob, w))
+        if not fits(hob, wob):
+            raise VmemMisfitError(
+                f"depthwise tile does not fit VMEM at hob={hob}, wob={wob}, "
+                f"cb={cb}: filter {hf}x{wf} needs more than "
+                f"{machine.vmem_bytes} bytes resident")
+    return Blocking(cob=cb, cib=cb, hob=hob, wob=wob)
+
+
+def depthwise_wgrad_resident_bytes(hob: int, wob: int, cb: int,
+                                   hf: int, wf: int, stride: int = 1,
+                                   in_dtype_bytes: int = 4,
+                                   acc_dtype_bytes: int = 4,
+                                   dilation=(1, 1)) -> int:
+    """Depthwise wgrad residency: halo'd x window, cotangent tile, and the
+    per-channel [Hf*Wf, Cb] tap-gradient accumulator."""
+    dh, dw = as_dilation(dilation)
+    hib = (hob - 1) * stride + (hf - 1) * dh + 1
+    wib = (wob - 1) * stride + (wf - 1) * dw + 1
+    win = hib * wib * cb * in_dtype_bytes
+    cot = hob * wob * cb * in_dtype_bytes
+    wgt = hf * wf * cb * in_dtype_bytes
+    acc = hf * wf * cb * acc_dtype_bytes
+    return 2 * (win + cot + wgt) + acc
+
+
+def choose_depthwise_wgrad_blocking(
+    ho: int, wo: int, hf: int, wf: int, stride: int = 1,
+    machine: MachineModel = TPU_V5E, cb: int = 128,
+    in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
+    hob: int | None = None, wob: int | None = None,
+    precision=None, dilation=(1, 1),
+) -> Blocking:
+    """Tile the depthwise wgrad kernel: the [Hf*Wf, Cb] accumulator is tiny,
+    so this almost always returns the full map; the shrink loop exists for
+    the pathological machines the tests probe."""
+    in_dtype_bytes, acc_dtype_bytes = _policy_itemsizes(
+        precision, in_dtype_bytes, acc_dtype_bytes)
+    if ho <= 0 or wo <= 0:
+        raise ValueError(f"empty cotangent {ho}x{wo}")
+    hob_pinned, wob_pinned = hob is not None, wob is not None
+    if hob_pinned and (hob < 1 or ho % hob):
+        raise ValueError(f"hob={hob} must divide Ho={ho}")
+    if wob_pinned and (wob < 1 or wo % wob):
+        raise ValueError(f"wob={wob} must divide Wo={wo}")
+    if not hob_pinned:
+        hob = ho
+    if not wob_pinned:
+        wob = wo
+
+    if machine.vmem_bytes:
+        def fits(hob_, wob_):
+            return depthwise_wgrad_resident_bytes(
+                hob_, wob_, cb, hf, wf, stride, in_dtype_bytes,
+                acc_dtype_bytes, dilation=dilation) <= machine.vmem_bytes
+
+        hob = _shrink_to_fit(ho, hob, hob_pinned, lambda h: fits(h, wob))
+        wob = _shrink_to_fit(wo, wob, wob_pinned, lambda w: fits(hob, w))
+        if not fits(hob, wob):
+            raise VmemMisfitError(
+                f"depthwise wgrad tile does not fit VMEM at hob={hob}, "
+                f"wob={wob}, cb={cb}: needs more than {machine.vmem_bytes} "
+                f"bytes resident")
+    return Blocking(cob=cb, cib=cb, hob=hob, wob=wob)
+
+
+# ---------------------------------------------------------------------------
+# Pointwise (1x1) tile sizing.  No halo, no taps: the conv is a channel
+# matmul per spatial tile, so the window term collapses to the tile itself
+# and the weight tile is a plain [Cib, Cob] matrix.
+# ---------------------------------------------------------------------------
+
+def pointwise_resident_bytes(hob: int, wob: int, cob: int, cib: int,
+                             in_dtype_bytes: int = 4,
+                             acc_dtype_bytes: int = 4) -> int:
+    """VMEM bytes one pointwise grid step holds resident: double-buffered
+    input tile, [Cib, Cob] weight matrix and output tile, plus the f32
+    accumulator."""
+    xin = hob * wob * cib * in_dtype_bytes
+    wgt = cib * cob * in_dtype_bytes
+    out = hob * wob * cob * in_dtype_bytes
+    acc = hob * wob * cob * acc_dtype_bytes
+    return 2 * (xin + wgt + out) + acc
+
+
+def choose_pointwise_blocking(
+    hi: int, wi: int, ci: int, co: int,
+    machine: MachineModel = TPU_V5E,
+    cob: int | None = None, cib: int | None = None,
+    in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
+    hob: int | None = None, wob: int | None = None,
+    precision=None,
+) -> Blocking:
+    """Tile the 1x1-as-matmul kernel (forward, and dgrad with the channel
+    pencils swapped by the caller).  Output extents equal input extents
+    (stride 1, no pads — the pointwise feasibility gate); shrink order is
+    ``hob`` -> ``wob`` -> ``cib``, the window model's order minus the halo
+    terms that no longer exist."""
+    in_dtype_bytes, acc_dtype_bytes = _policy_itemsizes(
+        precision, in_dtype_bytes, acc_dtype_bytes)
+    ho, wo = hi, wi
+    cib_pinned = cib is not None
+    hob_pinned, wob_pinned = hob is not None, wob is not None
+    if cob is None:
+        cob = choose_pencil(co, machine.n_vec)
+    if cib is None:
+        cib = choose_pencil(ci, machine.n_vec)
+    if hob_pinned and (hob < 1 or ho % hob):
+        raise ValueError(f"hob={hob} must divide Ho={ho}")
+    if wob_pinned and (wob < 1 or wo % wob):
+        raise ValueError(f"wob={wob} must divide Wo={wo}")
+    if not hob_pinned:
+        hob = ho
+    if not wob_pinned:
+        wob = wo
+
+    if machine.vmem_bytes:
+        def fits(cib_, hob_, wob_):
+            return pointwise_resident_bytes(
+                hob_, wob_, cob, cib_, in_dtype_bytes,
+                acc_dtype_bytes) <= machine.vmem_bytes
+
+        hob = _shrink_to_fit(ho, hob, hob_pinned, lambda h: fits(cib, h, wob))
+        wob = _shrink_to_fit(wo, wob, wob_pinned, lambda w: fits(cib, hob, w))
+        cib = _shrink_to_fit(ci, cib, cib_pinned, lambda c: fits(c, hob, wob))
+        if not fits(cib, hob, wob):
+            raise VmemMisfitError(
+                f"pointwise tile does not fit VMEM at hob={hob}, wob={wob}, "
+                f"cib={cib}, cob={cob}: needs more than {machine.vmem_bytes} "
+                f"bytes resident")
+    return Blocking(cob=cob, cib=cib, hob=hob, wob=wob)
+
+
+def pointwise_wgrad_resident_bytes(hob: int, wob: int, cob: int, cib: int,
+                                   in_dtype_bytes: int = 4,
+                                   acc_dtype_bytes: int = 4) -> int:
+    """Pointwise wgrad residency: x tile, cotangent tile, and the [Cib, Cob]
+    weight-gradient block + matching f32 accumulator."""
+    xin = hob * wob * cib * in_dtype_bytes
+    cot = hob * wob * cob * in_dtype_bytes
+    wgt = cib * cob * in_dtype_bytes
+    acc = cib * cob * acc_dtype_bytes
+    return 2 * (xin + cot + wgt) + acc
+
+
+def choose_pointwise_wgrad_blocking(
+    ho: int, wo: int, machine: MachineModel = TPU_V5E,
+    cob: int = 128, cib: int = 128,
+    in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
+    hob: int | None = None, wob: int | None = None,
+    precision=None,
+) -> Blocking:
+    """Tile the pointwise wgrad kernel: pencils pinned by the operand
+    layouts (the [Cib, Cob] accumulator is the output block), spatial tile
+    shrinks ``hob`` -> ``wob`` under pressure."""
+    in_dtype_bytes, acc_dtype_bytes = _policy_itemsizes(
+        precision, in_dtype_bytes, acc_dtype_bytes)
+    if ho <= 0 or wo <= 0:
+        raise ValueError(f"empty cotangent {ho}x{wo}")
+    hob_pinned, wob_pinned = hob is not None, wob is not None
+    if hob_pinned and (hob < 1 or ho % hob):
+        raise ValueError(f"hob={hob} must divide Ho={ho}")
+    if wob_pinned and (wob < 1 or wo % wob):
+        raise ValueError(f"wob={wob} must divide Wo={wo}")
+    if not hob_pinned:
+        hob = ho
+    if not wob_pinned:
+        wob = wo
+
+    if machine.vmem_bytes:
+        def fits(hob_, wob_):
+            return pointwise_wgrad_resident_bytes(
+                hob_, wob_, cob, cib, in_dtype_bytes,
+                acc_dtype_bytes) <= machine.vmem_bytes
+
+        hob = _shrink_to_fit(ho, hob, hob_pinned, lambda h: fits(h, wob))
+        wob = _shrink_to_fit(wo, wob, wob_pinned, lambda w: fits(hob, w))
+        if not fits(hob, wob):
+            raise VmemMisfitError(
+                f"pointwise wgrad tile does not fit VMEM at hob={hob}, "
+                f"wob={wob}: needs more than {machine.vmem_bytes} bytes "
+                f"resident")
+    return Blocking(cob=cob, cib=cib, hob=hob, wob=wob)

@@ -29,12 +29,20 @@ def pad_input(x: jnp.ndarray, padding: Padding, hf: int, wf: int,
 
 
 def conv_lax(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
-             padding: Padding = "VALID") -> jnp.ndarray:
-    """Oracle: XLA's own convolution.  x: NHWC, w: HWIO."""
-    (ph, pw) = normalize_padding(padding, w.shape[0], w.shape[1], stride,
+             padding: Padding = "VALID", groups: int = 1,
+             dilation: int | tuple = 1) -> jnp.ndarray:
+    """Oracle: XLA's own convolution.  x: NHWC, w: HWIO (grouped: the input
+    extent is per-group, ``w.shape[2] == Ci // groups`` — lax's
+    ``feature_group_count`` convention).  SAME padding resolves against the
+    effective (dilated) filter extent."""
+    dil = dilation if isinstance(dilation, tuple) else (dilation, dilation)
+    hf_eff = (w.shape[0] - 1) * dil[0] + 1
+    wf_eff = (w.shape[1] - 1) * dil[1] + 1
+    (ph, pw) = normalize_padding(padding, hf_eff, wf_eff, stride,
                                  x.shape[1], x.shape[2])
     return jax.lax.conv_general_dilated(
         x, w, window_strides=(stride, stride), padding=(ph, pw),
+        rhs_dilation=dil, feature_group_count=groups,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
 

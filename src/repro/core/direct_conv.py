@@ -76,11 +76,14 @@ def direct_conv_blocked(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
                         activation: Optional[str] = None,
                         hob: Optional[int] = None,
                         wob: Optional[int] = None,
-                        precision=None) -> jnp.ndarray:
+                        precision=None, groups: int = 1,
+                        dilation: int | tuple = 1) -> jnp.ndarray:
     """Direct convolution on blocked layouts, fused bias + activation.
 
     x: [N, Ci/Cib, Hi, Wi, Cib]      (paper input layout)
-    w: [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob]  (paper kernel layout)
+    w: [Co/Cob, Cig/Cib, Hf, Wf, Cib, Cob]  (grouped-HWIO kernel layout:
+                                      the input extent is per-group,
+                                      Cig = Ci // groups; dense is groups=1)
     bias: [Co/Cob, Cob] or None      (blocked channel pencils)
     -> [N, Co/Cob, Ho, Wo, Cob]      (same layout as input: layers chain)
 
@@ -100,45 +103,84 @@ def direct_conv_blocked(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
     einsum accumulates f32 (``preferred_element_type``) and the output is
     the operand dtype — so this formulation stays the oracle for the bf16
     kernels too (bias stays master-dtype; the epilogue adds it in f32).
+
+    ``groups``/``dilation`` (DESIGN.md §13): the per-offset contraction
+    becomes block-diagonal (each group of output blocks contracts only its
+    own group of input blocks) and the strided views start at dilated tap
+    offsets.  The depthwise lane layout — full-channel pencils on the maps,
+    ``Cib = 1`` on the weight — is recognized and served as a per-lane
+    multiply, the same structure as the depthwise Pallas kernel.
     """
     if precision is not None:
         pol = resolve_precision(precision)
         x = x.astype(pol.op_dtype)
         w = w.astype(pol.op_dtype)
+    dil = dilation if isinstance(dilation, tuple) else (dilation, dilation)
     hi, wi = x.shape[2], x.shape[3]
     hf, wf = w.shape[2], w.shape[3]
+    hf_eff, wf_eff = (hf - 1) * dil[0] + 1, (wf - 1) * dil[1] + 1
     if hob is not None or wob is not None:
-        ph, pw = normalize_padding(padding, hf, wf, stride, hi, wi)
-        ho = out_size(hi + ph[0] + ph[1], hf, stride)
-        wo = out_size(wi + pw[0] + pw[1], wf, stride)
+        ph, pw = normalize_padding(padding, hf_eff, wf_eff, stride, hi, wi)
+        ho = out_size(hi + ph[0] + ph[1], hf_eff, stride)
+        wo = out_size(wi + pw[0] + pw[1], wf_eff, stride)
         if hob is not None and (hob < 1 or ho % hob):
             raise ValueError(f"hob={hob} must divide Ho={ho}")
         if wob is not None and (wob < 1 or wo % wob):
             raise ValueError(f"wob={wob} must divide Wo={wo}")
-    return _direct_conv_blocked_jit(x, w, stride, padding, bias, activation)
+    return _direct_conv_blocked_jit(x, w, stride, padding, bias, activation,
+                                    groups, dil)
 
 
-@partial(jax.jit, static_argnames=("stride", "padding", "activation"))
+@partial(jax.jit, static_argnames=("stride", "padding", "activation",
+                                   "groups", "dilation"))
 def _direct_conv_blocked_jit(x: jnp.ndarray, w: jnp.ndarray, stride: int,
                              padding: Padding,
                              bias: Optional[jnp.ndarray],
-                             activation: Optional[str]) -> jnp.ndarray:
+                             activation: Optional[str],
+                             groups: int = 1,
+                             dilation: tuple = (1, 1)) -> jnp.ndarray:
     n, ciblk, hi, wi, cib = x.shape
-    coblk, ciblk2, hf, wf, cib2, cob = w.shape
-    assert (ciblk, cib) == (ciblk2, cib2), (x.shape, w.shape)
-    ph, pw = normalize_padding(padding, hf, wf, stride, hi, wi)
+    coblk, cigblk, hf, wf, cibw, cob = w.shape
+    dil_h, dil_w = dilation
+    hf_eff, wf_eff = (hf - 1) * dil_h + 1, (wf - 1) * dil_w + 1
+    ph, pw = normalize_padding(padding, hf_eff, wf_eff, stride, hi, wi)
     x = pad_blocked(x, ph, pw)
     hi, wi = x.shape[2], x.shape[3]
-    ho, wo = out_size(hi, hf, stride), out_size(wi, wf, stride)
+    ho, wo = out_size(hi, hf_eff, stride), out_size(wi, wf_eff, stride)
+
+    # the depthwise lane layout: full-channel pencils on the feature maps,
+    # a collapsed (Cig = 1) input extent on the weight — each lane carries
+    # its own group, so the contraction is a per-lane product
+    depthwise_lanes = (groups > 1 and cibw == 1 and cib > 1
+                       and groups == ciblk * cib)
+    if not depthwise_lanes:
+        assert cib == cibw and ciblk == cigblk * groups, (x.shape, w.shape,
+                                                          groups)
 
     acc = jnp.zeros((n, coblk, ho, wo, cob), jnp.float32)
     for dh in range(hf):
         for dw in range(wf):
-            win = _shifted_window(x, dh, dw, ho, wo, stride)
-            # [N, ci, Ho, Wo, Cib] x [Co, ci, Cib, Cob] -> [N, Co, Ho, Wo, Cob]
-            acc = acc + jnp.einsum(
-                "nchwb,ocbk->nohwk", win, w[:, :, dh, dw],
-                preferred_element_type=jnp.float32)
+            win = _shifted_window(x, dh * dil_h, dw * dil_w, ho, wo, stride)
+            if depthwise_lanes:
+                acc = acc + (win.astype(jnp.float32)
+                             * w[:, 0, dh, dw, 0].astype(jnp.float32)
+                             [None, :, None, None, :])
+            elif groups == 1:
+                # [N, ci, Ho, Wo, Cib] x [Co, ci, Cib, Cob]
+                #   -> [N, Co, Ho, Wo, Cob]
+                acc = acc + jnp.einsum(
+                    "nchwb,ocbk->nohwk", win, w[:, :, dh, dw],
+                    preferred_element_type=jnp.float32)
+            else:
+                # block-diagonal contraction: group g's output blocks see
+                # only group g's input blocks
+                wing = win.reshape(n, groups, cigblk, ho, wo, cib)
+                wg = w[:, :, dh, dw].reshape(groups, coblk // groups,
+                                             cigblk, cibw, cob)
+                acc = acc + jnp.einsum(
+                    "ngchwb,gocbk->ngohwk", wing, wg,
+                    preferred_element_type=jnp.float32,
+                ).reshape(n, coblk, ho, wo, cob)
     if bias is not None:
         acc = acc + bias.astype(jnp.float32)[None, :, None, None, :]
     return apply_activation(acc, activation).astype(x.dtype)
@@ -158,7 +200,8 @@ def direct_conv_nhwc(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
                      bias: Optional[jnp.ndarray] = None,
                      activation: Optional[str] = None,
                      pad_to_block: bool = False,
-                     lane: int = 128) -> jnp.ndarray:
+                     lane: int = 128, groups: int = 1,
+                     dilation: int | tuple = 1) -> jnp.ndarray:
     """Convenience wrapper: NHWC/HWIO in, NHWC out, via the blocked layouts.
 
     A pure layout sandwich around :func:`direct_conv_blocked` — permute in,
@@ -173,15 +216,31 @@ def direct_conv_nhwc(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
 
     ``pad_to_block=True`` engages the first-class channel-padding layout op
     for non-divisible channel counts (zero-pad in, strip out; the traded
-    bytes are ``memory_model.bytes_channel_pad``).
+    bytes are ``memory_model.bytes_channel_pad``); dense-only, like the
+    packing it wraps.  ``groups``/``dilation`` ride straight down to the
+    blocked core (grouped weights are HWIO with the per-group input extent,
+    ``w.shape[2] == Ci // groups``).
     """
-    hf, wf, ci, co = w.shape
-    cb_in = L.choose_pencil(ci, lane, pad_to_block=pad_to_block)
-    cb_out = L.choose_pencil(co, lane, pad_to_block=pad_to_block)
+    hf, wf, cig, co = w.shape
+    ci = x.shape[-1]
+    if ci != cig * groups:
+        raise ValueError(
+            f"weight input extent {cig} x groups {groups} != input "
+            f"channels {ci}")
+    if pad_to_block:
+        if groups != 1:
+            raise ValueError("pad_to_block supports dense convs only")
+        cb_in = L.choose_pencil(ci, lane, pad_to_block=True)
+        cb_out = L.choose_pencil(co, lane, pad_to_block=True)
+        cb_w = cb_in
+    else:
+        lay = L.BlockedConvLayout.choose(ci, co, lane, groups=groups)
+        cb_in, cb_out, cb_w = lay.cb_in, lay.cb_out, lay.cb_weight
     xb = L.nhwc_to_blocked(x, cb_in, pad_to_block=pad_to_block)
-    wb = L.hwio_to_blocked(w, cb_in, cb_out, pad_to_block=pad_to_block)
+    wb = L.hwio_to_blocked(w, cb_w, cb_out, pad_to_block=pad_to_block)
     bb = None if bias is None else bias_to_blocked(bias, cb_out)
-    yb = direct_conv_blocked(xb, wb, stride, padding, bb, activation)
+    yb = direct_conv_blocked(xb, wb, stride, padding, bb, activation,
+                             groups=groups, dilation=dilation)
     return L.blocked_to_nhwc(yb, co)
 
 

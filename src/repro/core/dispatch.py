@@ -1,20 +1,23 @@
 """Measured conv dispatch: one decision point for every conv entry (§12).
 
-The repo grew five ways to run the same convolution — the window Pallas
-kernel, the streamed halo-DMA Pallas kernel, im2col+GEMM, ``lax.conv`` and
-the blocked jnp oracle — and until ISSUE 6 the choice between them was
-scattered boolean plumbing (``use_pallas``, ``stream``, ``interpret``,
-``machine``) threaded through kernels, layers, the train step and the
-serving tier, with routing decided by *feasibility only* ("does the window
+The repo grew many ways to run the same convolution — the window Pallas
+kernel, the streamed halo-DMA Pallas kernel, the depthwise / grouped /
+pointwise specializations, im2col+GEMM, ``lax.conv`` and the blocked jnp
+oracle — and until ISSUE 6 the choice between them was scattered boolean
+plumbing threaded through kernels, layers, the train step and the serving
+tier, with routing decided by *feasibility only* ("does the window
 inequality fit VMEM").  ``BENCH_baseline.json`` shows why that is wrong:
 im2col beats the window path on the smoke shapes while only the streamed
 path survives the deep-pencil pathology — the right impl is a property of
-the (shape, dtype, machine, direction) point, and it should be *measured*.
+the (geometry, dtype, machine, direction) point, and it should be
+*measured*.
 
 This module is the replacement: a first-class dispatch subsystem.
 
-  ``DispatchKey``      frozen/hashable (ConvShape numbers, precision name,
-                       machine name, direction ∈ {fwd, dgrad, wgrad}).
+  ``DispatchKey``      frozen/hashable; wraps a :class:`ConvSpec` (the one
+                       geometry object — extents, groups, dilation, pads)
+                       plus precision name, machine name and direction
+                       ∈ {fwd, dgrad, wgrad}.
   ``Impl``             the open-ended candidate enum (The Indirect
                        Convolution Algorithm argues for exactly this:
                        keep the set extensible, don't bake one kernel in).
@@ -24,22 +27,30 @@ This module is the replacement: a first-class dispatch subsystem.
                             (``repro/configs/dispatch_table.json``,
                             checked in; ``tune()`` writes winners back),
                          3. the analytical prior — blocking-model
-                            feasibility (``choose_blocking`` /
-                            ``choose_stream_blocking``) with
-                            ``resident_bytes`` as the cost annotation —
-                            exactly the pre-ISSUE-6 routing, now one rung
-                            of a ladder instead of the whole story.
+                            feasibility (``choose_blocking`` and friends)
+                            with ``resident_bytes`` as the cost annotation.
                        Every decision is observable: ``explain(key)``
                        returns the chosen impl, its source
                        (override/table/tuned/prior/fallback) and the losing
                        candidates' measured or predicted numbers.
 
+The candidate set is geometry-dependent (``candidates_for``): dense convs
+keep the ISSUE-6 set; depthwise geometry routes to the blocked depthwise
+kernel, grouped geometry to the block-diagonal grouped window kernel, and
+1x1/stride-1/unpadded geometry to the pointwise channel-matmul fast path —
+each the *direct* form of its geometry (the paper's thesis), with the jnp
+oracle and ``lax`` as the always-feasible references.
+
 The ``VmemMisfitError`` fallback chain that used to live as try/except
 around each kernel launch lives here now: feasibility is *probed* against
 the same blocking model the kernel will use (same pencil pins, same
-itemsize), so an infeasible candidate is never launched — a stale table
-entry or a misfitting window route degrades along window -> stream -> jnp
-with the degradation recorded in the decision's source.
+itemsize), so an infeasible candidate is never launched.
+
+Persistence is schema 2 (``SCHEMA_VERSION``): entries carry ``groups`` and
+``dilation``.  Schema-1 tables (dense-only keys) load through an automatic
+migration — every legacy entry *is* a dense conv, so ``groups=1`` /
+``dilation=(1,1)`` are filled in and idents re-derived; any other schema
+raises with the schema named (the CI gate's clear-failure contract).
 
 Numerics contract: WINDOW, STREAM and JNP are interchangeable bit for bit
 (the streamed/window bitwise property is test-pinned since ISSUE 5; the
@@ -57,12 +68,20 @@ import pathlib
 from typing import Callable, Dict, Iterable, Optional, Tuple, Union
 
 from .blocking import (MachineModel, TPU_V5E, CPU_HASWELL, VmemMisfitError,
-                       choose_blocking, choose_dgrad_blocking,
+                       choose_blocking, choose_depthwise_blocking,
+                       choose_depthwise_wgrad_blocking, choose_dgrad_blocking,
+                       choose_pointwise_blocking,
+                       choose_pointwise_wgrad_blocking,
                        choose_stream_blocking, choose_stream_dgrad_blocking,
                        choose_stream_wgrad_blocking, choose_wgrad_blocking,
+                       depthwise_resident_bytes,
+                       depthwise_wgrad_resident_bytes,
+                       pointwise_resident_bytes,
+                       pointwise_wgrad_resident_bytes,
                        resident_bytes, stream_resident_bytes,
                        stream_wgrad_resident_bytes, wgrad_resident_bytes)
-from .conv_baselines import Padding, normalize_padding, out_size
+from .conv_baselines import Padding
+from .convspec import ConvSpec, as_dilation
 from .layout import choose_pencil
 from .precision import resolve_precision
 
@@ -70,13 +89,13 @@ __all__ = [
     "Impl", "Direction", "DispatchKey", "KernelRoute", "Decision",
     "ConvDispatcher", "get_dispatcher", "set_dispatcher",
     "register_machine", "get_machine", "default_table_path",
-    "stream_flag", "route_pallas", "run_conv_impl",
+    "stream_flag", "route_pallas", "run_conv_impl", "candidates_for",
 ]
 
 Direction = str          # "fwd" | "dgrad" | "wgrad"
 DIRECTIONS: Tuple[Direction, ...] = ("fwd", "dgrad", "wgrad")
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 
 class Impl(enum.Enum):
@@ -85,6 +104,9 @@ class Impl(enum.Enum):
 
     WINDOW = "window"        # window Pallas kernel (BlockSpec halo windows)
     STREAM = "stream"        # streamed halo-DMA Pallas kernel (HBM ring)
+    DEPTHWISE = "depthwise"  # blocked depthwise Pallas kernel (per-lane taps)
+    GROUPED = "grouped"      # window kernel w/ block-diagonal weight tiles
+    POINTWISE = "pointwise"  # 1x1-as-matmul Pallas kernel (no halo machinery)
     IM2COL = "im2col"        # pack + GEMM baseline (memory-overhead-ful)
     LAX = "lax"              # XLA's own conv (lax.conv_general_dilated)
     JNP = "jnp"              # blocked jnp oracle (XLA-scheduled direct form)
@@ -104,23 +126,60 @@ def _as_impl(impl: Union["Impl", str, None]) -> Optional["Impl"]:
             f"{[m.value for m in Impl]}") from None
 
 
-# The Pallas kernel family: bitwise-interchangeable tiled variants the
+# The dense Pallas kernel family: bitwise-interchangeable tiled variants the
 # kernel-level router picks between (dgrad/wgrad can only route here — the
 # custom VJP's backward *is* these kernels).
 PALLAS_IMPLS = (Impl.WINDOW, Impl.STREAM)
+
+# The geometry specializations: each is the direct blocked form of its
+# geometry, with its own custom-VJP kernel family.
+SPECIALIZED_IMPLS = (Impl.DEPTHWISE, Impl.GROUPED, Impl.POINTWISE)
+
+# Everything that launches a Pallas kernel (and therefore answers to a VMEM
+# blocking model in probe_impl).
+PALLAS_FAMILY = PALLAS_IMPLS + SPECIALIZED_IMPLS
 
 # Bitwise-equivalent impls: routing between these can never change numerics
 # (test-pinned).  IM2COL/LAX agree to float tolerance only.
 EXACT_IMPLS = (Impl.WINDOW, Impl.STREAM, Impl.JNP)
 
-# Candidates per direction.  Backward directions keep to the exact set: the
-# custom VJP cannot splice a packing baseline into one leg of its backward,
-# and the oracle's vjp is the reference the kernels are diffed against.
+# Candidates per direction for *dense* geometry (groups=1, dilation=1, not
+# pointwise) — the ISSUE-6 set, unchanged.  Backward directions keep to the
+# exact set: the custom VJP cannot splice a packing baseline into one leg of
+# its backward, and the oracle's vjp is the reference the kernels are diffed
+# against.  Non-dense geometry resolves through candidates_for().
 CANDIDATES: Dict[Direction, Tuple[Impl, ...]] = {
     "fwd": (Impl.WINDOW, Impl.STREAM, Impl.IM2COL, Impl.LAX, Impl.JNP),
     "dgrad": (Impl.WINDOW, Impl.STREAM, Impl.JNP),
     "wgrad": (Impl.WINDOW, Impl.STREAM, Impl.JNP),
 }
+
+
+def candidates_for(key: "DispatchKey") -> Tuple[Impl, ...]:
+    """The geometry-aware candidate set for one key.
+
+    Dense non-pointwise geometry keeps the ISSUE-6 ``CANDIDATES`` table
+    verbatim.  Otherwise the geometry's specialized impl leads, followed by
+    the always-feasible references (``lax`` handles every geometry XLA
+    does; the jnp oracle handles everything; im2col and the streamed
+    kernels are dense-only, so neither appears off the dense path).  Dense
+    *dilated* convs stay with the window kernel — its taps are
+    dilation-strided — minus the stream/im2col members that are not.
+    """
+    spec = key.spec
+    dense = spec.groups == 1 and spec.dilation == (1, 1)
+    if spec.is_pointwise:
+        return (Impl.POINTWISE,) + CANDIDATES[key.direction]
+    if dense:
+        return CANDIDATES[key.direction]
+    if spec.is_depthwise:
+        special: Tuple[Impl, ...] = (Impl.DEPTHWISE,)
+    elif spec.groups > 1:
+        special = (Impl.GROUPED,)
+    else:                                   # dense geometry, dilated taps
+        special = (Impl.WINDOW,)
+    refs = (Impl.LAX, Impl.JNP) if key.direction == "fwd" else (Impl.JNP,)
+    return special + refs
 
 
 # ---------------------------------------------------------------------------
@@ -155,20 +214,13 @@ def get_machine(name: str) -> MachineModel:
 
 @dataclasses.dataclass(frozen=True)
 class DispatchKey:
-    """One routing decision's identity: the convolution's numbers, the
+    """One routing decision's identity: the convolution's full geometry (a
+    :class:`ConvSpec` — extents, groups, dilation, normalized pads), the
     precision policy's short name, the machine model's name and the pass
     direction.  Frozen + hashable (dict key, jit-static safe); ``ident``
     is the canonical string the persistent table is keyed by."""
 
-    n: int
-    hi: int
-    wi: int
-    ci: int
-    co: int
-    hf: int
-    wf: int
-    stride: int
-    pads: Tuple[Tuple[int, int], Tuple[int, int]]
+    spec: ConvSpec
     dtype: str                      # precision policy short name (f32/bf16)
     machine: str                    # MachineModel.name
     direction: Direction            # fwd | dgrad | wgrad
@@ -177,25 +229,24 @@ class DispatchKey:
         if self.direction not in DIRECTIONS:
             raise ValueError(f"direction must be one of {DIRECTIONS}, "
                              f"got {self.direction!r}")
-        # normalize pads to hashable nested tuples whatever the caller built
-        object.__setattr__(self, "pads",
-                           tuple(tuple(int(p) for p in side)
-                                 for side in self.pads))
 
     @classmethod
     def make(cls, n: int, hi: int, wi: int, ci: int, co: int, hf: int,
              wf: int, stride: int = 1, padding: Padding = "VALID",
              precision=None, machine: MachineModel = TPU_V5E,
-             direction: Direction = "fwd") -> "DispatchKey":
-        """Build a key from call-site vocabulary (padding normalized here so
-        SAME/int/explicit pads all land on one canonical identity).  The
-        machine model is registered as a side effect, so custom models
-        (tests, pathological budgets) resolve by name in the probes."""
+             direction: Direction = "fwd", *, groups: int = 1,
+             dilation=1) -> "DispatchKey":
+        """Build a key from call-site vocabulary (padding normalized by
+        ``ConvSpec.make``, so SAME/int/explicit pads all land on one
+        canonical identity — SAME resolves against the *dilated* filter
+        extent).  The machine model is registered as a side effect, so
+        custom models (tests, pathological budgets) resolve by name in the
+        probes."""
         register_machine(machine)
-        pads = normalize_padding(padding, hf, wf, stride, hi, wi)
-        return cls(n=n, hi=hi, wi=wi, ci=ci, co=co, hf=hf, wf=wf,
-                   stride=stride, pads=pads,
-                   dtype=resolve_precision(precision).name,
+        spec = ConvSpec.make(n, hi, wi, ci, co, hf, wf, stride=stride,
+                             padding=padding, groups=groups,
+                             dilation=dilation)
+        return cls(spec=spec, dtype=resolve_precision(precision).name,
                    machine=machine.name, direction=direction)
 
     @classmethod
@@ -203,57 +254,112 @@ class DispatchKey:
                    direction: Direction = "fwd") -> "DispatchKey":
         """From a ``memory_model.ConvShape`` (the benchmark vocabulary)."""
         return cls.make(s.n, s.hi, s.wi, s.ci, s.co, s.hf, s.wf, s.stride,
-                        s.pad, precision, machine, direction)
+                        s.pad, precision, machine, direction,
+                        groups=getattr(s, "groups", 1),
+                        dilation=getattr(s, "dilation", 1))
 
     def with_direction(self, direction: Direction) -> "DispatchKey":
         return dataclasses.replace(self, direction=direction)
 
-    # --- derived geometry (the probes' vocabulary) ---
+    # --- geometry delegation (the probes' vocabulary is the spec's) ---
+
+    @property
+    def n(self) -> int:
+        return self.spec.n
+
+    @property
+    def hi(self) -> int:
+        return self.spec.hi
+
+    @property
+    def wi(self) -> int:
+        return self.spec.wi
+
+    @property
+    def ci(self) -> int:
+        return self.spec.ci
+
+    @property
+    def co(self) -> int:
+        return self.spec.co
+
+    @property
+    def hf(self) -> int:
+        return self.spec.hf
+
+    @property
+    def wf(self) -> int:
+        return self.spec.wf
+
+    @property
+    def stride(self) -> int:
+        return self.spec.stride
+
+    @property
+    def pads(self):
+        return self.spec.pads
+
+    @property
+    def groups(self) -> int:
+        return self.spec.groups
+
+    @property
+    def dilation(self) -> Tuple[int, int]:
+        return self.spec.dilation
 
     @property
     def padded_hi(self) -> int:
-        return self.hi + self.pads[0][0] + self.pads[0][1]
+        return self.spec.padded_hi
 
     @property
     def padded_wi(self) -> int:
-        return self.wi + self.pads[1][0] + self.pads[1][1]
+        return self.spec.padded_wi
 
     @property
     def ho(self) -> int:
-        return out_size(self.padded_hi, self.hf, self.stride)
+        return self.spec.ho
 
     @property
     def wo(self) -> int:
-        return out_size(self.padded_wi, self.wf, self.stride)
+        return self.spec.wo
 
     def flops(self) -> int:
-        return (2 * self.n * self.ho * self.wo * self.co
-                * self.hf * self.wf * self.ci)
+        return self.spec.flops()
 
     @property
     def ident(self) -> str:
         """Canonical table key, stable across processes."""
-        (ph0, ph1), (pw0, pw1) = self.pads
-        return (f"{self.direction}|n{self.n}hi{self.hi}wi{self.wi}"
-                f"ci{self.ci}co{self.co}f{self.hf}x{self.wf}s{self.stride}"
-                f"p{ph0}.{ph1}.{pw0}.{pw1}|{self.dtype}|{self.machine}")
+        s = self.spec
+        (ph0, ph1), (pw0, pw1) = s.pads
+        dh, dw = s.dilation
+        return (f"{self.direction}|n{s.n}hi{s.hi}wi{s.wi}"
+                f"ci{s.ci}co{s.co}f{s.hf}x{s.wf}s{s.stride}"
+                f"p{ph0}.{ph1}.{pw0}.{pw1}g{s.groups}d{dh}.{dw}"
+                f"|{self.dtype}|{self.machine}")
 
     def to_json(self) -> dict:
+        s = self.spec
         return {
-            "n": self.n, "hi": self.hi, "wi": self.wi, "ci": self.ci,
-            "co": self.co, "hf": self.hf, "wf": self.wf,
-            "stride": self.stride,
-            "pads": [list(side) for side in self.pads],
+            "n": s.n, "hi": s.hi, "wi": s.wi, "ci": s.ci,
+            "co": s.co, "hf": s.hf, "wf": s.wf,
+            "stride": s.stride,
+            "pads": [list(side) for side in s.pads],
+            "groups": s.groups, "dilation": list(s.dilation),
             "dtype": self.dtype, "machine": self.machine,
             "direction": self.direction,
         }
 
     @classmethod
     def from_json(cls, d: dict) -> "DispatchKey":
-        return cls(n=d["n"], hi=d["hi"], wi=d["wi"], ci=d["ci"], co=d["co"],
-                   hf=d["hf"], wf=d["wf"], stride=d["stride"],
-                   pads=tuple(tuple(side) for side in d["pads"]),
-                   dtype=d["dtype"], machine=d["machine"],
+        """Schema-2 entries carry groups/dilation; schema-1 entries (dense
+        convs by construction) default them — this is the migration."""
+        spec = ConvSpec(
+            n=d["n"], hi=d["hi"], wi=d["wi"], ci=d["ci"], co=d["co"],
+            hf=d["hf"], wf=d["wf"], stride=d["stride"],
+            pads=tuple(tuple(side) for side in d["pads"]),
+            groups=d.get("groups", 1),
+            dilation=as_dilation(tuple(d.get("dilation", (1, 1)))))
+        return cls(spec=spec, dtype=d["dtype"], machine=d["machine"],
                    direction=d["direction"])
 
 
@@ -300,18 +406,20 @@ def route_pallas(direction: Direction, *, n: int, hi: int, wi: int, ci: int,
                  machine: MachineModel, dtype, cob: int, cib: int,
                  hob: Optional[int] = None,
                  wob: Optional[int] = None) -> bool:
-    """Kernel-level window/stream resolution for one launch: ``True`` =
-    streamed.  This is the relocated ``VmemMisfitError`` fallback chain —
-    instead of launching the window kernel and catching its blocking-model
-    raise, the wrapper asks the same model *first* (same pencil pins, same
-    itemsizes) and launches only the variant that fits; a shape misfitting
-    both models raises here with the full chain named.  ``hi``/``wi`` are
-    the *padded* input extents (wrappers operate post-padding, VALID);
-    for dgrad/wgrad pass the touched extents ``(out-1)*stride + filter``
-    so the derived ``ho``/``wo`` match the cotangent.  Pure function of
-    static shapes/machine/dtype — safe at jit trace time."""
-    key = DispatchKey(n=n, hi=hi, wi=wi, ci=ci, co=co, hf=hf, wf=wf,
-                      stride=stride, pads=((0, 0), (0, 0)),
+    """Kernel-level window/stream resolution for one *dense* launch:
+    ``True`` = streamed.  This is the relocated ``VmemMisfitError`` fallback
+    chain — instead of launching the window kernel and catching its
+    blocking-model raise, the wrapper asks the same model *first* (same
+    pencil pins, same itemsizes) and launches only the variant that fits; a
+    shape misfitting both models raises here with the full chain named.
+    ``hi``/``wi`` are the *padded* input extents (wrappers operate
+    post-padding, VALID); for dgrad/wgrad pass the touched extents
+    ``(out-1)*stride + filter`` so the derived ``ho``/``wo`` match the
+    cotangent.  Pure function of static shapes/machine/dtype — safe at jit
+    trace time.  Non-dense launches never call this: the streamed kernels
+    are dense-only, so the wrappers pin the window family directly."""
+    key = DispatchKey(spec=ConvSpec(n=n, hi=hi, wi=wi, ci=ci, co=co,
+                                    hf=hf, wf=wf, stride=stride),
                       dtype=policy_name_for(dtype), machine=machine.name,
                       direction=direction)
     if probe_impl(key, Impl.WINDOW, cob, cib, hob, wob,
@@ -343,42 +451,144 @@ def _probe(chooser: Callable, bytes_fn: Callable, **kw) -> dict:
     return {"feasible": True, "resident_bytes": bytes_fn(blk, kw)}
 
 
+def _geometry_gate(key: "DispatchKey", impl: Impl) -> Optional[str]:
+    """Why ``impl`` cannot serve ``key``'s geometry at all (None = it can).
+
+    This is the structural layer of the probe: the VMEM inequality only
+    gets asked for (impl, geometry) pairs the kernel actually implements.
+    """
+    spec = key.spec
+    dense = spec.groups == 1 and spec.dilation == (1, 1)
+    if impl is Impl.STREAM and not dense:
+        return ("streamed halo-DMA kernels are dense-only "
+                "(groups=1, dilation=1)")
+    if impl is Impl.IM2COL and not dense:
+        return "im2col baseline is dense-only (groups=1, dilation=1)"
+    if impl is Impl.WINDOW and spec.groups > 1:
+        return "grouped geometry routes through the grouped impl"
+    if impl is Impl.GROUPED and (spec.groups == 1 or spec.is_depthwise):
+        return ("grouped impl serves 1 < groups < C geometry (dense has "
+                "window, depthwise its own kernel)")
+    if impl is Impl.DEPTHWISE and not spec.is_depthwise:
+        return "depthwise kernel needs groups == ci == co"
+    if impl is Impl.POINTWISE and not spec.is_pointwise:
+        return "pointwise fast path needs 1x1/stride-1/unpadded dense geometry"
+    return None
+
+
+def _default_pencils(key: "DispatchKey",
+                     machine: MachineModel) -> Tuple[int, int]:
+    """(cob, cib) the blocked layout would choose for this geometry —
+    per-group for grouped convs, full-lane for depthwise maps."""
+    spec = key.spec
+    if spec.is_depthwise:
+        cb = choose_pencil(key.ci, machine.n_vec)
+        return cb, cb
+    return (choose_pencil(key.co, machine.n_vec, groups=spec.groups),
+            choose_pencil(key.ci, machine.n_vec, groups=spec.groups))
+
+
 def probe_impl(key: DispatchKey, impl: Impl,
                cob: Optional[int] = None, cib: Optional[int] = None,
                hob: Optional[int] = None, wob: Optional[int] = None,
                machine: Optional[MachineModel] = None) -> dict:
     """Feasibility + cost prior for one candidate at one key.
 
-    WINDOW/STREAM ask the same blocking model (same pencil pins, same
+    Pallas-family impls ask the same blocking model (same pencil pins, same
     policy itemsize) the kernel wrapper will ask at launch, so "feasible
-    here" means "will not raise there".  The reference impls are always
-    feasible (no VMEM inequality) and carry no resident-bytes prior.
-    ``cob``/``cib`` default to the machine-lane pencils the blocked layout
-    would choose — pass the operands' real pencils when you have them.
-    ``machine`` overrides the registry lookup (kernel wrappers hold the
-    model object; the key only names it).
+    here" means "will not raise there" — after a structural gate rejecting
+    (impl, geometry) pairs the kernel does not implement (e.g. streamed
+    kernels on grouped geometry).  The reference impls are always feasible
+    (no VMEM inequality) and carry no resident-bytes prior.  ``cob``/``cib``
+    default to the pencils the blocked layout would choose — pass the
+    operands' real pencils when you have them.  ``machine`` overrides the
+    registry lookup (kernel wrappers hold the model object; the key only
+    names it).
     """
     if machine is None:
         machine = get_machine(key.machine)
-    if impl not in PALLAS_IMPLS:
+    why_not = _geometry_gate(key, impl)
+    if why_not is not None:
+        return {"feasible": False, "error": why_not}
+    if impl not in PALLAS_FAMILY:
         return {"feasible": True}
-    if cob is None:
-        cob = choose_pencil(key.co, machine.n_vec)
-    if cib is None:
-        cib = choose_pencil(key.ci, machine.n_vec)
+    if cob is None or cib is None:
+        dcob, dcib = _default_pencils(key, machine)
+        cob = dcob if cob is None else cob
+        cib = dcib if cib is None else cib
     pol = resolve_precision(key.dtype)
+    spec = key.spec
+    dil = spec.dilation
     common = dict(machine=machine, precision=pol)
 
+    if impl is Impl.DEPTHWISE:
+        if key.direction == "fwd":
+            return _probe(
+                choose_depthwise_blocking,
+                lambda b, kw: depthwise_resident_bytes(
+                    b.hob, b.wob, b.cob, key.hf, key.wf, key.stride,
+                    pol.operand_itemsize, pol.accum_itemsize, dil),
+                hi=key.padded_hi, wi=key.padded_wi, c=key.ci,
+                hf=key.hf, wf=key.wf, stride=key.stride, cb=cib,
+                hob=hob, wob=wob, dilation=dil, **common)
+        if key.direction == "dgrad":
+            # the dgrad IS the forward kernel over the stride-dilated,
+            # halo-padded cotangent at stride 1 (taps still dilated)
+            eh = (key.ho - 1) * key.stride + 1 + 2 * (key.hf - 1) * dil[0]
+            ew = (key.wo - 1) * key.stride + 1 + 2 * (key.wf - 1) * dil[1]
+            return _probe(
+                choose_depthwise_blocking,
+                lambda b, kw: depthwise_resident_bytes(
+                    b.hob, b.wob, b.cob, key.hf, key.wf, 1,
+                    pol.operand_itemsize, pol.accum_itemsize, dil),
+                hi=eh, wi=ew, c=key.ci, hf=key.hf, wf=key.wf, stride=1,
+                cb=cib, hob=hob, wob=wob, dilation=dil, **common)
+        return _probe(
+            choose_depthwise_wgrad_blocking,
+            lambda b, kw: depthwise_wgrad_resident_bytes(
+                b.hob, b.wob, b.cob, key.hf, key.wf, key.stride,
+                pol.operand_itemsize, pol.accum_itemsize, dil),
+            ho=key.ho, wo=key.wo, hf=key.hf, wf=key.wf, stride=key.stride,
+            cb=cib, hob=hob, wob=wob, dilation=dil, **common)
+
+    if impl is Impl.POINTWISE:
+        if key.direction == "fwd":
+            return _probe(
+                choose_pointwise_blocking,
+                lambda b, kw: pointwise_resident_bytes(
+                    b.hob, b.wob, b.cob, b.cib,
+                    pol.operand_itemsize, pol.accum_itemsize),
+                hi=key.padded_hi, wi=key.padded_wi, ci=key.ci, co=key.co,
+                cob=cob, cib=cib, hob=hob, wob=wob, **common)
+        if key.direction == "dgrad":
+            # transposed channel matmul: pencils swap roles
+            return _probe(
+                choose_pointwise_blocking,
+                lambda b, kw: pointwise_resident_bytes(
+                    b.hob, b.wob, b.cob, b.cib,
+                    pol.operand_itemsize, pol.accum_itemsize),
+                hi=key.ho, wi=key.wo, ci=key.co, co=key.ci,
+                cob=cib, cib=cob, hob=hob, wob=wob, **common)
+        return _probe(
+            choose_pointwise_wgrad_blocking,
+            lambda b, kw: pointwise_wgrad_resident_bytes(
+                b.hob, b.wob, b.cob, b.cib,
+                pol.operand_itemsize, pol.accum_itemsize),
+            ho=key.ho, wo=key.wo, cob=cob, cib=cib, hob=hob, wob=wob,
+            **common)
+
+    groups = spec.groups                 # WINDOW (dense) / GROUPED / STREAM
     if key.direction == "fwd":
         args = dict(hi=key.padded_hi, wi=key.padded_wi, ci=key.ci, co=key.co,
                     hf=key.hf, wf=key.wf, stride=key.stride,
                     cob=cob, cib=cib, hob=hob, wob=wob, **common)
-        if impl is Impl.WINDOW:
+        if impl in (Impl.WINDOW, Impl.GROUPED):
             return _probe(
                 choose_blocking,
                 lambda b, kw: resident_bytes(
                     b.hob, b.wob, b.cob, b.cib, key.hf, key.wf, key.stride,
-                    pol.operand_itemsize, pol.accum_itemsize), **args)
+                    pol.operand_itemsize, pol.accum_itemsize, dil),
+                groups=groups, dilation=dil, **args)
         return _probe(
             choose_stream_blocking,
             lambda b, kw: stream_resident_bytes(
@@ -390,12 +600,13 @@ def probe_impl(key: DispatchKey, impl: Impl,
         args = dict(ho=key.ho, wo=key.wo, ci=key.ci, co=key.co,
                     hf=key.hf, wf=key.wf, stride=key.stride,
                     cib=cib, cob=cob, hob=hob, wob=wob, **common)
-        if impl is Impl.WINDOW:
+        if impl in (Impl.WINDOW, Impl.GROUPED):
             return _probe(
                 choose_dgrad_blocking,
                 lambda b, kw: resident_bytes(
                     b.hob, b.wob, b.cob, b.cib, key.hf, key.wf, 1,
-                    pol.operand_itemsize, pol.accum_itemsize), **args)
+                    pol.operand_itemsize, pol.accum_itemsize, dil),
+                groups=groups, dilation=dil, **args)
         return _probe(
             choose_stream_dgrad_blocking,
             lambda b, kw: stream_resident_bytes(
@@ -405,13 +616,13 @@ def probe_impl(key: DispatchKey, impl: Impl,
     # wgrad: channel pencils are pinned by the operand layouts
     args = dict(ho=key.ho, wo=key.wo, hf=key.hf, wf=key.wf,
                 stride=key.stride, cob=cob, cib=cib, **common)
-    if impl is Impl.WINDOW:
+    if impl in (Impl.WINDOW, Impl.GROUPED):
         return _probe(
             choose_wgrad_blocking,
             lambda b, kw: wgrad_resident_bytes(
                 b.hob, b.wob, b.cob, b.cib, key.hf, key.wf, key.stride,
-                pol.operand_itemsize, pol.accum_itemsize),
-            hob=hob, wob=wob, **args)
+                pol.operand_itemsize, pol.accum_itemsize, dil),
+            hob=hob, wob=wob, dilation=dil, **args)
     return _probe(
         choose_stream_wgrad_blocking,
         lambda b, kw: stream_wgrad_resident_bytes(
@@ -432,16 +643,29 @@ def prior_order(key: DispatchKey,
                 candidates: Tuple[Impl, ...]) -> Tuple[Impl, ...]:
     """The analytical prior's preference order over ``candidates``.
 
-    Direct impls first (the paper's thesis: avoid the packing tax);
+    The geometry's specialized impl first where one exists (depthwise /
+    grouped / pointwise — each is the *direct* blocked form of its
+    geometry, the paper's thesis applied to the kernel zoo; measurement can
+    still demote it through the table tier).  Then direct dense impls:
     window before stream (the streamed ring pays manual-DMA orchestration
     the window path gets from the Pallas pipeliner); the jnp oracle leads
-    on non-TPU backends where a kernel launch would be interpret-mode.
-    IM2COL/LAX are never prior-chosen — they win only by measurement.
+    the dense forward on non-TPU backends where a kernel launch would be
+    interpret-mode.  IM2COL/LAX are never prior-chosen — they win only by
+    measurement.
     """
-    if key.direction == "fwd" and _pallas_costly():
-        pref = (Impl.JNP, Impl.WINDOW, Impl.STREAM)
+    spec = key.spec
+    if spec.is_pointwise:
+        special: Tuple[Impl, ...] = (Impl.POINTWISE,)
+    elif spec.is_depthwise:
+        special = (Impl.DEPTHWISE,)
+    elif spec.groups > 1:
+        special = (Impl.GROUPED,)
     else:
-        pref = (Impl.WINDOW, Impl.STREAM, Impl.JNP)
+        special = ()
+    if key.direction == "fwd" and _pallas_costly():
+        pref = special + (Impl.JNP, Impl.WINDOW, Impl.STREAM)
+    else:
+        pref = special + (Impl.WINDOW, Impl.STREAM, Impl.JNP)
     return tuple(i for i in pref if i in candidates) + tuple(
         i for i in candidates if i not in pref)
 
@@ -466,7 +690,7 @@ class Decision:
     @property
     def stream(self) -> Optional[bool]:
         """The legacy kernel knob this decision implies (None = not a
-        Pallas-family decision)."""
+        window/stream-family decision)."""
         if self.impl is Impl.STREAM:
             return True
         if self.impl is Impl.WINDOW:
@@ -478,6 +702,21 @@ def default_table_path() -> pathlib.Path:
     """The checked-in persistent dispatch table (repro/configs/)."""
     return (pathlib.Path(__file__).resolve().parent.parent
             / "configs" / "dispatch_table.json")
+
+
+def _migrate_v1(entries: Dict[str, dict]) -> Dict[str, dict]:
+    """Schema-1 -> schema-2 table migration.
+
+    Every schema-1 entry is a dense conv by construction (the key had no
+    groups/dilation fields), so ``DispatchKey.from_json``'s defaults fill
+    in ``groups=1`` / ``dilation=(1,1)`` and the entry is re-keyed by the
+    re-derived (schema-2) ident.  The measured evidence rides along
+    untouched."""
+    out: Dict[str, dict] = {}
+    for entry in entries.values():
+        key = DispatchKey.from_json(entry["key"])
+        out[key.ident] = dict(entry, key=key.to_json())
+    return out
 
 
 class ConvDispatcher:
@@ -508,11 +747,16 @@ class ConvDispatcher:
             raise FileNotFoundError(path)
         with open(path) as f:
             doc = json.load(f)
-        if doc.get("schema") != SCHEMA_VERSION:
+        schema = doc.get("schema")
+        entries = doc.get("entries", {})
+        if schema == 1:
+            entries = _migrate_v1(entries)      # dense-only legacy table
+        elif schema != SCHEMA_VERSION:
             raise ValueError(
-                f"dispatch table {path} has schema {doc.get('schema')!r}, "
-                f"expected {SCHEMA_VERSION}")
-        return cls(table=doc.get("entries", {}), path=path)
+                f"dispatch table {path} has schema {schema!r}, expected "
+                f"{SCHEMA_VERSION} (or 1, which auto-migrates); regenerate "
+                f"it with `python -m benchmarks.tune_dispatch`")
+        return cls(table=entries, path=path)
 
     def to_json(self) -> dict:
         return {"schema": SCHEMA_VERSION,
@@ -543,11 +787,12 @@ class ConvDispatcher:
         name — per-call forcing always wins, feasibility included: a forced
         misfit raises at launch, exactly the old pinned-path contract) >
         table entry (checked-in or tuned this process) > analytical prior.
-        A table winner outside ``candidates`` or infeasible under the
+        ``candidates`` defaults to the geometry-aware ``candidates_for``
+        set.  A table winner outside ``candidates`` or infeasible under the
         *actual* pencil pins degrades to the best measured in-set candidate,
         then to the prior (source records the degradation).
         """
-        candidates = candidates or CANDIDATES[key.direction]
+        candidates = candidates or candidates_for(key)
         override = _as_impl(override)
         if override is not None:
             return Decision(impl=override, source="override", key=key)
@@ -589,24 +834,30 @@ class ConvDispatcher:
                      cob: Optional[int] = None, cib: Optional[int] = None,
                      hob: Optional[int] = None,
                      wob: Optional[int] = None) -> KernelRoute:
-        """Resolve all three directions of one Pallas launch to a frozen
-        :class:`KernelRoute` (window/stream per direction).
+        """Resolve all three directions of one window/stream-family Pallas
+        launch to a frozen :class:`KernelRoute` (window/stream per
+        direction).
 
         ``stream``/``hso`` are the legacy knobs: an explicit bool (or a
         strip height, which implies streaming) forces all three directions
         — the old contract — and a ``KernelRoute`` passes through.  With
         ``stream=None`` each direction resolves independently through
-        ``decide()`` over the Pallas candidates.  ``hob``/``wob`` are the
-        *forward* tile pins: backward tile sizes are per-kernel model
-        choices over their own (dgrad-extent / cotangent) geometry, so the
-        pins never reach the dgrad/wgrad probes — mirroring ``_conv_bwd``,
-        which launches both backward kernels unpinned."""
+        ``decide()`` over the Pallas candidates; non-dense geometry
+        (grouped/dilated) pins the window family outright, since the
+        streamed kernels are dense-only.  ``hob``/``wob`` are the *forward*
+        tile pins: backward tile sizes are per-kernel model choices over
+        their own (dgrad-extent / cotangent) geometry, so the pins never
+        reach the dgrad/wgrad probes — mirroring ``_conv_bwd``, which
+        launches both backward kernels unpinned."""
         if isinstance(stream, KernelRoute):
             return stream
         if hso is not None:
             stream = True
         if stream is not None:
             return KernelRoute(fwd=stream, dgrad=stream, wgrad=stream)
+        spec = key.spec
+        if spec.groups > 1 or spec.dilation != (1, 1):
+            return KernelRoute(fwd=False, dgrad=False, wgrad=False)
         flags = {}
         for d in DIRECTIONS:
             fwd = d == "fwd"
@@ -625,7 +876,7 @@ class ConvDispatcher:
         where the table has them, feasibility + resident-bytes prior
         everywhere (the losing candidates' predicted or measured numbers,
         per the ISSUE contract)."""
-        candidates = candidates or CANDIDATES[key.direction]
+        candidates = candidates or candidates_for(key)
         dec = self.decide(key, override=override, candidates=candidates)
         entry = self.lookup(key) or {}
         times = entry.get("times_us") or {}
@@ -657,7 +908,7 @@ class ConvDispatcher:
             interpret = _pallas_costly()
         ops = _tune_operands(key)
         times: Dict[str, float] = {}
-        for impl in CANDIDATES[key.direction]:
+        for impl in candidates_for(key):
             if not probe_impl(key, impl)["feasible"]:
                 continue
             fn, args = _tune_closure(key, impl, ops, interpret)
@@ -688,7 +939,7 @@ class ConvDispatcher:
             "impl": dec.impl.value,
             "source": "prior",
             "probes": dec.probes or {i.value: probe_impl(key, i)
-                                     for i in CANDIDATES[key.direction]},
+                                     for i in candidates_for(key)},
         }
         return dec
 
@@ -711,42 +962,82 @@ class ConvDispatcher:
 # impl runners — the one place each candidate's calling convention lives
 # ---------------------------------------------------------------------------
 
+def _blocked_groups(xb, wb) -> int:
+    """The group count baked into a blocked (x, w) operand pair: the maps
+    carry Ci, the grouped-HWIO weight carries Cig — their ratio is static
+    shape information, never separate plumbing."""
+    ci = xb.shape[1] * xb.shape[4]
+    cig = wb.shape[1] * wb.shape[4]
+    if ci % cig:
+        raise ValueError(
+            f"blocked weight input extent {cig} does not divide the maps' "
+            f"channel count {ci} — not a grouped-HWIO pair")
+    return ci // cig
+
+
 def run_conv_impl(impl: Impl, xb, wb, bias=None, *, stride: int = 1,
                   padding: Padding = "VALID", activation=None,
                   precision=None, machine: MachineModel = TPU_V5E,
                   interpret: Optional[bool] = None,
                   hob: Optional[int] = None, wob: Optional[int] = None,
-                  hso: Optional[int] = None, route=None):
+                  hso: Optional[int] = None, route=None, dilation=1):
     """Execute one candidate on blocked operands, blocked output.
 
-    All five impls share this signature — blocked ``[N, Ci/Cib, H, W, Cib]``
+    All impls share this signature — blocked ``[N, Ci/Cib, H, W, Cib]``
     in, blocked ``[N, Co/Cob, Ho, Wo, Cob]`` out, fused bias + activation
     semantics, ``precision`` policy honored (operands cast once, f32
     accumulation, operand-dtype output) — so the dispatcher can swap them
-    without the call site noticing anything but time.  IM2COL/LAX pay a
-    layout round-trip (they are NHWC algorithms); that cost is *theirs to
-    lose* in tune(), not hidden.  ``route`` (a :class:`KernelRoute`) rides
-    into the Pallas wrappers' ``stream`` slot for per-direction backward
+    without the call site noticing anything but time.  The group count is
+    *derived* from the operand shapes (grouped-HWIO weights carry Cig);
+    only ``dilation`` needs stating.  IM2COL/LAX pay a layout round-trip
+    (they are NHWC algorithms); that cost is *theirs to lose* in tune(),
+    not hidden.  ``route`` (a :class:`KernelRoute`) rides into the
+    window/stream wrappers' ``stream`` slot for per-direction backward
     routing."""
-    import jax
     import jax.numpy as jnp
 
     impl = _as_impl(impl)
     pol = resolve_precision(precision)
-    if impl in PALLAS_IMPLS:
+    groups = _blocked_groups(xb, wb)
+    dilation = as_dilation(dilation)
+    if interpret is None and impl in PALLAS_FAMILY:
+        interpret = _pallas_costly()
+
+    if impl in PALLAS_IMPLS or impl is Impl.GROUPED:
         from repro.kernels.direct_conv2d import direct_conv2d_blocked_pallas
-        if interpret is None:
-            interpret = _pallas_costly()
-        stream = route if route is not None else (impl is Impl.STREAM)
+        if impl is Impl.GROUPED:
+            stream = route if route is not None else False
+        else:
+            stream = route if route is not None else (impl is Impl.STREAM)
         return direct_conv2d_blocked_pallas(
             xb, wb, bias, stride=stride, padding=padding,
             activation=activation, hob=hob, wob=wob, machine=machine,
-            interpret=interpret, precision=pol, stream=stream, hso=hso)
+            interpret=interpret, precision=pol, stream=stream, hso=hso,
+            groups=groups, dilation=dilation)
+    if impl is Impl.DEPTHWISE:
+        from repro.kernels.conv2d_depthwise import (
+            depthwise_conv2d_blocked_pallas)
+        return depthwise_conv2d_blocked_pallas(
+            xb, wb, bias, stride=stride, padding=padding,
+            activation=activation, hob=hob, wob=wob, machine=machine,
+            interpret=interpret, precision=pol, dilation=dilation)
+    if impl is Impl.POINTWISE:
+        from repro.kernels.conv2d_pointwise import (
+            pointwise_conv2d_blocked_pallas)
+        return pointwise_conv2d_blocked_pallas(
+            xb, wb, bias, stride=stride, padding=padding,
+            activation=activation, hob=hob, wob=wob, machine=machine,
+            interpret=interpret, precision=pol)
     if impl is Impl.JNP:
         from repro.core.direct_conv import direct_conv_blocked
         return direct_conv_blocked(xb, wb, stride, padding, bias,
                                    activation, hob=hob, wob=wob,
-                                   precision=pol)
+                                   precision=pol, groups=groups,
+                                   dilation=dilation)
+    if impl is Impl.IM2COL and (groups > 1 or dilation != (1, 1)):
+        raise ValueError("im2col baseline is dense-only (groups=1, "
+                         "dilation=1); the dispatcher's geometry gate "
+                         "should have filtered it")
 
     # NHWC reference algorithms: layout sandwich + the same fused epilogue
     # semantics (bias added on the f32 result, activation, operand dtype out)
@@ -755,8 +1046,11 @@ def run_conv_impl(impl: Impl, xb, wb, bias=None, *, stride: int = 1,
     from repro.core.direct_conv import apply_activation
     x = L.blocked_to_nhwc(xb).astype(pol.op_dtype)
     w = L.blocked_to_hwio(wb).astype(pol.op_dtype)
-    fn = B.conv_im2col if impl is Impl.IM2COL else B.conv_lax
-    y = fn(x, w, stride, padding).astype(jnp.float32)
+    if impl is Impl.IM2COL:
+        y = B.conv_im2col(x, w, stride, padding).astype(jnp.float32)
+    else:
+        y = B.conv_lax(x, w, stride, padding, groups=groups,
+                       dilation=dilation).astype(jnp.float32)
     if bias is not None:
         y = y + bias.reshape(-1).astype(jnp.float32)
     y = apply_activation(y, activation).astype(pol.op_dtype)
@@ -799,28 +1093,33 @@ def _local_time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
 
 
 def _tune_operands(key: DispatchKey) -> dict:
-    """Synthetic blocked operands (+ cotangent) at the key's dtype."""
+    """Synthetic blocked operands (+ cotangent) at the key's dtype, in the
+    geometry's layout (grouped-HWIO weights, per-group pencils; depthwise
+    weights at Cig=1 with full-lane maps)."""
     import jax.numpy as jnp
     import numpy as np
     from repro.core import layout as L
 
     machine = get_machine(key.machine)
     pol = resolve_precision(key.dtype)
-    cib = choose_pencil(key.ci, machine.n_vec)
-    cob = choose_pencil(key.co, machine.n_vec)
+    spec = key.spec
+    lay = L.BlockedConvLayout.choose(key.ci, key.co, machine.n_vec,
+                                     groups=spec.groups)
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(key.n, key.hi, key.wi, key.ci)),
                     pol.op_dtype)
-    w = jnp.asarray(rng.normal(size=(key.hf, key.wf, key.ci, key.co)),
+    w = jnp.asarray(rng.normal(size=(key.hf, key.wf, spec.cig, key.co)),
                     pol.op_dtype)
-    xb = L.nhwc_to_blocked(x, cib)
-    wb = L.hwio_to_blocked(w, cib, cob)
+    xb = L.nhwc_to_blocked(x, lay.cb_in)
+    wb = L.hwio_to_blocked(w, lay.cb_weight, lay.cb_out)
     dy = jnp.asarray(rng.normal(
-        size=(key.n, key.co // cob, key.ho, key.wo, cob)), pol.op_dtype)
+        size=(key.n, key.co // lay.cb_out, key.ho, key.wo, lay.cb_out)),
+        pol.op_dtype)
     from repro.core.direct_conv import pad_blocked
     xp = pad_blocked(xb, *key.pads)
     return {"xb": xb, "wb": wb, "dy": dy, "xp": xp,
-            "cib": cib, "cob": cob, "machine": machine, "pol": pol}
+            "cib": lay.cb_in, "cob": lay.cb_out, "machine": machine,
+            "pol": pol}
 
 
 def _tune_closure(key: DispatchKey, impl: Impl, ops: dict,
@@ -829,50 +1128,86 @@ def _tune_closure(key: DispatchKey, impl: Impl, ops: dict,
     candidate at one direction."""
     import jax
     machine, pol = ops["machine"], ops["pol"]
+    groups, dilation = key.groups, key.dilation
 
     if key.direction == "fwd":
         def fwd(xb_, wb_):
             return run_conv_impl(impl, xb_, wb_, stride=key.stride,
                                  padding=key.pads, precision=pol,
-                                 machine=machine, interpret=interpret)
+                                 machine=machine, interpret=interpret,
+                                 dilation=dilation)
         return fwd, (ops["xb"], ops["wb"])
 
     if key.direction == "dgrad":
-        if impl in PALLAS_IMPLS:
+        if impl in PALLAS_IMPLS or impl is Impl.GROUPED:
             from repro.kernels.direct_conv2d import direct_conv2d_dgrad_pallas
 
             def dgrad(dy_, wb_):
                 return direct_conv2d_dgrad_pallas(
                     dy_, wb_, stride=key.stride, machine=machine,
-                    interpret=interpret, stream=(impl is Impl.STREAM))
+                    interpret=interpret, stream=(impl is Impl.STREAM),
+                    groups=groups, dilation=dilation)
             return dgrad, (ops["dy"], ops["wb"])
+        if impl is Impl.DEPTHWISE:
+            from repro.kernels.conv2d_depthwise import depthwise_dgrad_pallas
+
+            def dgrad_dw(dy_, wb_):
+                return depthwise_dgrad_pallas(
+                    dy_, wb_, stride=key.stride, machine=machine,
+                    interpret=interpret, dilation=dilation)
+            return dgrad_dw, (ops["dy"], ops["wb"])
+        if impl is Impl.POINTWISE:
+            from repro.kernels.conv2d_pointwise import pointwise_dgrad_pallas
+
+            def dgrad_pw(dy_, wb_):
+                return pointwise_dgrad_pallas(
+                    dy_, wb_, machine=machine, interpret=interpret)
+            return dgrad_pw, (ops["dy"], ops["wb"])
 
         from repro.core.direct_conv import direct_conv_blocked
 
         def dgrad_jnp(dy_, xp_, wb_):
             _, vjp = jax.vjp(
                 lambda x: direct_conv_blocked(x, wb_, key.stride, "VALID",
-                                              precision=pol), xp_)
+                                              precision=pol, groups=groups,
+                                              dilation=dilation), xp_)
             return vjp(dy_)[0]
         return dgrad_jnp, (ops["dy"], ops["xp"], ops["wb"])
 
     # wgrad
-    if impl in PALLAS_IMPLS:
+    if impl in PALLAS_IMPLS or impl is Impl.GROUPED:
         from repro.kernels.direct_conv2d import direct_conv2d_wgrad_pallas
 
         def wgrad(xp_, dy_):
             return direct_conv2d_wgrad_pallas(
                 xp_, dy_, key.hf, key.wf, stride=key.stride,
                 machine=machine, interpret=interpret,
-                stream=(impl is Impl.STREAM))
+                stream=(impl is Impl.STREAM), groups=groups,
+                dilation=dilation)
         return wgrad, (ops["xp"], ops["dy"])
+    if impl is Impl.DEPTHWISE:
+        from repro.kernels.conv2d_depthwise import depthwise_wgrad_pallas
+
+        def wgrad_dw(xp_, dy_):
+            return depthwise_wgrad_pallas(
+                xp_, dy_, key.hf, key.wf, stride=key.stride,
+                machine=machine, interpret=interpret, dilation=dilation)
+        return wgrad_dw, (ops["xp"], ops["dy"])
+    if impl is Impl.POINTWISE:
+        from repro.kernels.conv2d_pointwise import pointwise_wgrad_pallas
+
+        def wgrad_pw(xp_, dy_):
+            return pointwise_wgrad_pallas(
+                xp_, dy_, machine=machine, interpret=interpret)
+        return wgrad_pw, (ops["xp"], ops["dy"])
 
     from repro.core.direct_conv import direct_conv_blocked
 
     def wgrad_jnp(dy_, xp_, wb_):
         _, vjp = jax.vjp(
             lambda w: direct_conv_blocked(xp_, w, key.stride, "VALID",
-                                          precision=pol), wb_)
+                                          precision=pol, groups=groups,
+                                          dilation=dilation), wb_)
         return vjp(dy_)[0]
     return wgrad_jnp, (ops["dy"], ops["xp"], ops["wb"])
 

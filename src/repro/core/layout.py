@@ -74,22 +74,35 @@ def largest_divisor_leq(n: int, cap: int) -> int:
 
 
 def choose_pencil(n: int, cap: int, *, min_util: float = 0.25,
-                  pad_to_block: bool = False) -> int:
+                  pad_to_block: bool = False, groups: int = 1) -> int:
     """Channel pencil (block) size with a lane-utilization floor.
 
     Returns the largest divisor of ``n`` that is ``<= cap``.  When that
-    divisor uses less than ``min_util`` of the achievable lane width
-    ``min(n, cap)`` — e.g. a prime channel count, whose only divisor under
-    the cap is 1 — the silent degradation would waste almost the entire
-    vector unit, so it is surfaced:
+    divisor uses less than ``min_util`` of the achievable lane width —
+    e.g. a prime channel count, whose only divisor under the cap is 1 —
+    the silent degradation would waste almost the entire vector unit, so
+    it is surfaced:
 
       * default: a ``UserWarning`` naming the utilization and the escape
         hatch;
-      * ``pad_to_block=True``: return ``min(n, cap)`` instead — the caller
-        must zero-pad the channel dim up to a multiple of the returned block
-        (trading the paper's zero-overhead invariant for lane utilization,
-        which is why it is explicit and never the default).
+      * ``pad_to_block=True``: return the achievable width instead — the
+        caller must zero-pad the channel dim up to a multiple of the
+        returned block (trading the paper's zero-overhead invariant for
+        lane utilization, which is why it is explicit and never the
+        default).
+
+    ``groups > 1`` makes both the divisor and the utilization check
+    **per-group**: a grouped conv's pencil must divide the per-group
+    channel count ``n // groups`` (so no pencil straddles a group
+    boundary of the block-diagonal weight), and the achievable lane width
+    is ``min(n // groups, cap)`` — judging a 4-channel-per-group pencil
+    against the full 64-channel tensor would warn on every grouped layer
+    even though 4 lanes is all the geometry *can* fill.
     """
+    if groups > 1:
+        if n % groups:
+            raise ValueError(f"groups={groups} must divide C={n}")
+        n = n // groups
     target = min(n, cap)
     if pad_to_block:
         return target
@@ -114,13 +127,34 @@ class BlockedConvLayout:
 
     cb_in: int
     cb_out: int
+    # weight input-channel pencil: the blocked weight's Cib extent.  None
+    # means "same as cb_in" (every dense/grouped conv); depthwise weights
+    # have input extent Cig=1 and pin it to 1 while the feature maps keep
+    # their full lane pencil.
+    cb_w: int | None = None
+
+    @property
+    def cb_weight(self) -> int:
+        return self.cb_in if self.cb_w is None else self.cb_w
 
     @staticmethod
-    def choose(ci: int, co: int, lane: int = 128,
-               min_util: float = 0.25) -> "BlockedConvLayout":
+    def choose(ci: int, co: int, lane: int = 128, min_util: float = 0.25,
+               groups: int = 1) -> "BlockedConvLayout":
+        """Pencils for a (possibly grouped) conv layer.
+
+        Grouped convs choose **per-group** pencils (a pencil must stay
+        inside one group of the block-diagonal weight; see
+        :func:`choose_pencil`).  Depthwise convs (groups == ci == co) are
+        the exception: every lane is its own group, so the feature maps
+        keep the full-channel pencil and only the weight's input extent
+        (Cig = 1) collapses to 1.
+        """
+        if groups > 1 and groups == ci == co:        # depthwise
+            cb = choose_pencil(ci, lane, min_util=min_util)
+            return BlockedConvLayout(cb_in=cb, cb_out=cb, cb_w=1)
         return BlockedConvLayout(
-            cb_in=choose_pencil(ci, lane, min_util=min_util),
-            cb_out=choose_pencil(co, lane, min_util=min_util),
+            cb_in=choose_pencil(ci, lane, min_util=min_util, groups=groups),
+            cb_out=choose_pencil(co, lane, min_util=min_util, groups=groups),
         )
 
 

@@ -43,12 +43,33 @@ class ConvShape:
     wf: int
     stride: int = 1
     pad: Padding = 0
+    groups: int = 1
+    dilation: int | tuple = 1
+
+    @property
+    def dil(self) -> tuple:
+        d = self.dilation
+        return d if isinstance(d, tuple) else (d, d)
+
+    @property
+    def hf_eff(self) -> int:
+        """Dilated filter extent — what padding and outputs resolve against."""
+        return (self.hf - 1) * self.dil[0] + 1
+
+    @property
+    def wf_eff(self) -> int:
+        return (self.wf - 1) * self.dil[1] + 1
+
+    @property
+    def cig(self) -> int:
+        """Per-group input channels — the weight's real input extent."""
+        return self.ci // self.groups
 
     @property
     def pads(self):
         """Explicit per-edge pads ``((ph_lo, ph_hi), (pw_lo, pw_hi))``."""
-        return normalize_padding(self.pad, self.hf, self.wf, self.stride,
-                                 self.hi, self.wi)
+        return normalize_padding(self.pad, self.hf_eff, self.wf_eff,
+                                 self.stride, self.hi, self.wi)
 
     @property
     def padded_hi(self) -> int:
@@ -62,18 +83,19 @@ class ConvShape:
 
     @property
     def ho(self) -> int:
-        return out_size(self.padded_hi, self.hf, self.stride)
+        return out_size(self.padded_hi, self.hf_eff, self.stride)
 
     @property
     def wo(self) -> int:
-        return out_size(self.padded_wi, self.wf, self.stride)
+        return out_size(self.padded_wi, self.wf_eff, self.stride)
 
     def flops(self) -> int:
-        return 2 * self.n * self.ho * self.wo * self.co * self.hf * self.wf * self.ci
+        return (2 * self.n * self.ho * self.wo * self.co
+                * self.hf * self.wf * self.cig)
 
     def base_bytes(self, dtype_bytes: int = 4) -> int:
         x = self.n * self.hi * self.wi * self.ci
-        w = self.hf * self.wf * self.ci * self.co
+        w = self.hf * self.wf * self.cig * self.co
         y = self.n * self.ho * self.wo * self.co
         return (x + w + y) * dtype_bytes
 
@@ -143,7 +165,7 @@ def bytes_precision_split(s: ConvShape, precision="bf16",
     ob, rb = pol.operand_itemsize, pol.residual_dtype.itemsize
     x = s.n * s.hi * s.wi * s.ci
     y = s.n * s.ho * s.wo * s.co
-    w = s.hf * s.wf * s.ci * s.co
+    w = s.hf * s.wf * s.cig * s.co
     xp = s.n * s.padded_hi * s.padded_wi * s.ci           # VJP's stored input
     acts = (x + y) * ob
     master = w * master_bytes
@@ -184,9 +206,9 @@ def bytes_halo_refetch(s: ConvShape, blk, dtype_bytes: int = 4) -> int:
     """
     st = s.stride
     ho, wo = s.ho, s.wo
-    hib = (blk.hob - 1) * st + s.hf
-    wib = (blk.wob - 1) * st + s.wf
-    eh, ew = (ho - 1) * st + s.hf, (wo - 1) * st + s.wf
+    hib = (blk.hob - 1) * st + s.hf_eff
+    wib = (blk.wob - 1) * st + s.wf_eff
+    eh, ew = (ho - 1) * st + s.hf_eff, (wo - 1) * st + s.wf_eff
     fetched = (ho // blk.hob) * (wo // blk.wob) * hib * wib
     passes = s.n * -(-s.co // blk.cob)
     return passes * (fetched - eh * ew) * s.ci * dtype_bytes

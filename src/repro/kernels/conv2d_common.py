@@ -55,10 +55,16 @@ __all__ = [
 GridPick = Callable[..., Tuple]
 
 
-def halo_dims(hob: int, wob: int, hf: int, wf: int,
-              stride: int = 1) -> Tuple[int, int]:
-    """Input rows/cols feeding one (hob x wob) output tile, halo included."""
-    return (hob - 1) * stride + hf, (wob - 1) * stride + wf
+def halo_dims(hob: int, wob: int, hf: int, wf: int, stride: int = 1,
+              dilation: Tuple[int, int] = (1, 1)) -> Tuple[int, int]:
+    """Input rows/cols feeding one (hob x wob) output tile, halo included.
+
+    Dilation widens the halo to the *effective* filter extent
+    ``(hf-1)*dh + 1`` — the taps are spread out, the window must cover the
+    outermost one."""
+    dh, dw = dilation
+    return ((hob - 1) * stride + (hf - 1) * dh + 1,
+            (wob - 1) * stride + (wf - 1) * dw + 1)
 
 
 def halo_window_spec(hib: int, wib: int, cb: int, hstep: int, wstep: int,
@@ -114,21 +120,27 @@ def bias_spec(cob: int, pick: GridPick) -> pl.BlockSpec:
 
 
 def tap_windows(x: jnp.ndarray, hf: int, wf: int, hob: int, wob: int,
-                stride: int = 1) -> Iterator[Tuple[Tuple[int, int],
-                                                   jnp.ndarray]]:
+                stride: int = 1,
+                dilation: Tuple[int, int] = (1, 1),
+                ) -> Iterator[Tuple[Tuple[int, int], jnp.ndarray]]:
     """Yield ``((dh, dw), window[hob*wob, cb])`` for every filter tap.
 
     ``x`` is the resident ``[Hib, Wib, Cb]`` input patch; each window is a
     *strided VMEM view* (``lax.slice``) — these are the rows of the im2col
     matrix, never copied out of the already-resident patch.  The unrolled
-    (dh, dw) loop is the paper's n, m loops (``Hf*Wf`` is small).
+    (dh, dw) loop is the paper's n, m loops (``Hf*Wf`` is small).  Tap
+    ``(dh, dw)`` starts at element offset ``(dh*dil_h, dw*dil_w)`` — the
+    whole dilation story for forward kernels is this one stride on the tap
+    origin.
     """
     cb = x.shape[-1]
+    dil_h, dil_w = dilation
     for dh in range(hf):
         for dw in range(wf):
+            oh, ow = dh * dil_h, dw * dil_w
             win = jax.lax.slice(
-                x, (dh, dw, 0),
-                (dh + (hob - 1) * stride + 1, dw + (wob - 1) * stride + 1,
+                x, (oh, ow, 0),
+                (oh + (hob - 1) * stride + 1, ow + (wob - 1) * stride + 1,
                  cb),
                 (stride, stride, 1))
             yield (dh, dw), win.reshape(hob * wob, cb)

@@ -1,0 +1,335 @@
+"""Pallas TPU kernels: blocked 2-D depthwise convolution (DESIGN.md §13).
+
+The depthwise conv is the degenerate group conv — ``groups == Ci == Co``,
+one channel per group — so the channel contraction disappears entirely: each
+lane of the channel pencil multiplies its own ``Hf x Wf`` tap stack.  That
+kills the MXU matmul (there is nothing to contract) and with it the window
+kernel's reduction grid axis; what remains is a pure VPU shift-multiply-
+accumulate over taps, the 2-D promotion of ``kernels/conv1d_depthwise.py``'s
+K-tap shift-and-add.
+
+Layouts: feature maps keep the full-channel pencil ``[N, C/Cb, H, W, Cb]``;
+weights are the grouped-HWIO blocked layout at its ``Cig = 1`` extreme,
+``[C/Cb, 1, Hf, Wf, 1, Cb]`` — the same six-axis shape as every other conv
+weight in the stack (one ``nn.ParamSpec`` covers all of them), with the two
+unit axes carrying the "block-diagonal with 1x1 blocks" structure.
+
+Forward grid — note: *no reduction axis*, so there is no accumulator
+revisit, no init/flush guard, and no scratch; the f32 accumulator lives in
+registers for the lifetime of one grid step:
+
+  grid = (N, C/Cb, Ho/Hob, Wo/Wob)
+  x block   [1, 1, Hib, Wib, Cb]      # halo'd patch (dilation-widened)
+  w block   [1, 1, Hf, Wf, 1, Cb]     # the whole per-pencil tap stack
+  b block   [1, Cb]                   # when bias is given
+  out block [1, 1, Hob, Wob, Cb]
+
+dgrad is the forward kernel run on the stride-dilated, ``(Hf-1)*dil``-halo-
+padded cotangent with the tap stack spatially flipped (``w[..., ::-1, ::-1,
+...]``) — exactly the transposed-conv identity, with no pencil swap because
+there is no pencil contraction to transpose.  wgrad walks ``(C/Cb, N,
+Ho/Hob, Wo/Wob)`` with the last three axes reduced into a resident
+``[Hf*Wf, Cb]`` f32 scratch — the per-channel tap gradients — flushed once
+into the ``[C/Cb, 1, Hf, Wf, 1, Cb]`` weight-gradient block.
+
+``depthwise_conv2d_blocked_pallas`` carries the family's ``jax.custom_vjp``
+(same residual/precision discipline as ``direct_conv2d``: operand casts on
+entry, f32 accumulation, pre-activation residual at the policy dtype, one
+cotangent up-cast on exit), so a MobileNet-style dw layer trains through
+the Pallas path end to end.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.blocking import (MachineModel, TPU_V5E,
+                                 choose_depthwise_blocking,
+                                 choose_depthwise_wgrad_blocking,
+                                 dgrad_extents)
+from repro.core.conv_baselines import Padding
+from repro.core.convspec import ConvSpec
+from repro.core.direct_conv import apply_activation, pad_blocked
+from repro.core.precision import F32, Precision, resolve_precision
+from .conv2d_common import (bias_spec, epilogue_flush, first_step, halo_dims,
+                            halo_window_spec, last_step, tap_windows,
+                            tile_spec, weight_spec)
+
+__all__ = ["depthwise_conv2d_blocked_pallas", "depthwise_dgrad_pallas",
+           "depthwise_wgrad_pallas"]
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _dw_fwd_kernel(x_ref, w_ref, *rest, hf, wf, hob, wob, stride, dilation,
+                   activation, has_bias):
+    if has_bias:
+        b_ref, (o_ref,) = rest[0], rest[1:]
+    else:
+        b_ref, (o_ref,) = None, rest
+
+    # no reduction axis: the accumulator is born and flushed in one step
+    acc = jnp.zeros((hob * wob, x_ref.shape[-1]), jnp.float32)
+    for (dh, dw), win in tap_windows(x_ref[0, 0], hf, wf, hob, wob, stride,
+                                     dilation):
+        wtap = w_ref[0, 0, dh, dw, 0]                    # [Cb] — own lane only
+        acc = acc + win.astype(jnp.float32) * wtap.astype(jnp.float32)[None, :]
+    epilogue_flush(o_ref, acc, hob, wob, b_ref, activation)
+
+
+def _dw_wgrad_kernel(x_ref, dy_ref, o_ref, acc_ref, *, hf, wf, hob, wob,
+                     stride, dilation):
+    """Per-channel tap gradients: each tap's window, elementwise against the
+    cotangent tile, summed over spatial positions — a [Hf*Wf, Cb] resident
+    accumulator instead of the dense kernel's [Hf, Wf, Cib, Cob]."""
+    @pl.when(first_step((1, 2, 3)))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dy = dy_ref[0, 0].reshape(hob * wob, dy_ref.shape[-1]).astype(jnp.float32)
+    for (dh, dw), win in tap_windows(x_ref[0, 0], hf, wf, hob, wob, stride,
+                                     dilation):
+        acc_ref[dh * wf + dw] = acc_ref[dh * wf + dw] + jnp.sum(
+            win.astype(jnp.float32) * dy, axis=0)
+
+    @pl.when(last_step((1, 2, 3)))
+    def _flush():
+        cb = o_ref.shape[-1]
+        o_ref[0, 0] = acc_ref[...].reshape(hf, wf, 1, cb).astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# launches
+# ---------------------------------------------------------------------------
+
+def _dw_forward(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
+                activation, hob, wob, machine: MachineModel,
+                interpret: bool, dilation=(1, 1)) -> jnp.ndarray:
+    n, cblk, hi, wi, cb = xp.shape
+    cblk2, one, hf, wf, one2, cb2 = w.shape
+    assert (cblk, cb) == (cblk2, cb2) and one == one2 == 1, \
+        (xp.shape, w.shape)
+    dil_h, dil_w = dilation
+    ho = (hi - ((hf - 1) * dil_h + 1)) // stride + 1
+    wo = (wi - ((wf - 1) * dil_w + 1)) // stride + 1
+
+    blk = choose_depthwise_blocking(hi, wi, cblk * cb, hf, wf, stride,
+                                    machine=machine, cb=cb, hob=hob, wob=wob,
+                                    in_dtype_bytes=xp.dtype.itemsize,
+                                    dilation=dilation)
+    hob, wob = blk.hob, blk.wob
+    hib, wib = halo_dims(hob, wob, hf, wf, stride, dilation)
+
+    has_bias = bias is not None
+    operands = [xp, w]
+    in_specs = [
+        halo_window_spec(hib, wib, cb, hob * stride, wob * stride,
+                         lambda b, c, th, tw: (b, c, th, tw)),
+        # the weight "matrix" axes are the two unit dims; same blocked
+        # layout, Cig=1 extreme
+        pl.BlockSpec((1, 1, hf, wf, 1, cb),
+                     lambda b, c, th, tw: (c, 0, 0, 0, 0, 0)),
+    ]
+    if has_bias:
+        operands.append(bias)
+        in_specs.append(bias_spec(cb, lambda b, c, th, tw: (c,)))
+
+    grid = (n, cblk, ho // hob, wo // wob)
+    return pl.pallas_call(
+        partial(_dw_fwd_kernel, hf=hf, wf=wf, hob=hob, wob=wob,
+                stride=stride, dilation=dilation, activation=activation,
+                has_bias=has_bias),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=tile_spec(hob, wob, cb,
+                            lambda b, c, th, tw: (b, c, th, tw)),
+        out_shape=jax.ShapeDtypeStruct((n, cblk, ho, wo, cb), xp.dtype),
+        interpret=interpret,
+    )(*operands)
+
+
+@partial(jax.jit, static_argnames=("stride", "hob", "wob", "machine",
+                                   "interpret", "dilation"))
+def depthwise_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                           hob: Optional[int] = None,
+                           wob: Optional[int] = None,
+                           machine: MachineModel = TPU_V5E,
+                           interpret: bool = False,
+                           dilation=(1, 1)) -> jnp.ndarray:
+    """Input gradient of the VALID blocked depthwise conv.
+
+    The transposed depthwise conv is itself a depthwise conv: stride-dilate
+    the cotangent, halo-pad by the effective filter reach, flip the tap
+    stack spatially, and run the forward kernel at stride 1 (forward filter
+    dilation still strides the taps).  Returns the gradient w.r.t. the
+    padded input, truncated at the touched extents
+    (``blocking.dgrad_extents``)."""
+    n, cblk, ho, wo, cb = dy.shape
+    _, _, hf, wf, _, _ = w.shape
+    dil_h, dil_w = dilation
+    if stride > 1:
+        dyd = jnp.zeros((n, cblk, (ho - 1) * stride + 1,
+                         (wo - 1) * stride + 1, cb), dy.dtype)
+        dyd = dyd.at[:, :, ::stride, ::stride, :].set(dy)
+    else:
+        dyd = dy
+    dyp = pad_blocked(dyd, ((hf - 1) * dil_h, (hf - 1) * dil_h),
+                      ((wf - 1) * dil_w, (wf - 1) * dil_w))
+    wf_flip = w[:, :, ::-1, ::-1, :, :]
+    return _dw_forward(dyp, wf_flip, None, 1, None, hob, wob, machine,
+                       interpret, dilation)
+
+
+@partial(jax.jit, static_argnames=("hf", "wf", "stride", "hob", "wob",
+                                   "machine", "interpret", "out_dtype",
+                                   "dilation"))
+def depthwise_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
+                           hf: int, wf: int, stride: int = 1,
+                           hob: Optional[int] = None,
+                           wob: Optional[int] = None,
+                           machine: MachineModel = TPU_V5E,
+                           interpret: bool = False,
+                           out_dtype=None,
+                           dilation=(1, 1)) -> jnp.ndarray:
+    """Weight gradient of the VALID blocked depthwise conv.
+
+    xp: [N, C/Cb, Hi, Wi, Cb] the forward's *padded* input;
+    dy: [N, C/Cb, Ho, Wo, Cb] cotangent
+    -> [C/Cb, 1, Hf, Wf, 1, Cb] in the grouped-HWIO blocked layout.
+    (N, Ho/Hob, Wo/Wob) are the reduction axes; the [Hf*Wf, Cb] accumulator
+    stays resident per channel block."""
+    n, cblk, hi, wi, cb = xp.shape
+    n2, cblk2, ho, wo, cb2 = dy.shape
+    assert (n, cblk, cb) == (n2, cblk2, cb2), (xp.shape, dy.shape)
+
+    blk = choose_depthwise_wgrad_blocking(
+        ho, wo, hf, wf, stride, machine=machine, cb=cb, hob=hob, wob=wob,
+        in_dtype_bytes=xp.dtype.itemsize, dilation=dilation)
+    hob, wob = blk.hob, blk.wob
+    hib, wib = halo_dims(hob, wob, hf, wf, stride, dilation)
+
+    grid = (cblk, n, ho // hob, wo // wob)
+    return pl.pallas_call(
+        partial(_dw_wgrad_kernel, hf=hf, wf=wf, hob=hob, wob=wob,
+                stride=stride, dilation=dilation),
+        grid=grid,
+        in_specs=[
+            halo_window_spec(hib, wib, cb, hob * stride, wob * stride,
+                             lambda c, b, th, tw: (b, c, th, tw)),
+            tile_spec(hob, wob, cb, lambda c, b, th, tw: (b, c, th, tw)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hf, wf, 1, cb),
+                               lambda c, b, th, tw: (c, 0, 0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((cblk, 1, hf, wf, 1, cb),
+                                       out_dtype or xp.dtype),
+        scratch_shapes=[pltpu.VMEM((hf * wf, cb), jnp.float32)],
+        interpret=interpret,
+    )(xp, dy)
+
+
+# ---------------------------------------------------------------------------
+# custom VJP + public entry point
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _dwconv(x, w, bias, spec, activation, hob, wob, machine, interpret,
+            precision):
+    op = precision.op_dtype
+    xp = pad_blocked(x.astype(op), *spec.pads)
+    return _dw_forward(xp, w.astype(op), bias, spec.stride, activation,
+                       hob, wob, machine, interpret, spec.dilation)
+
+
+def _dwconv_fwd(x, w, bias, spec, activation, hob, wob, machine, interpret,
+                precision):
+    op = precision.op_dtype
+    xp = pad_blocked(x.astype(op), *spec.pads)
+    wq = w.astype(op)
+    z = _dw_forward(xp, wq, bias, spec.stride, None, hob, wob, machine,
+                    interpret, spec.dilation)
+    linear = activation in (None, "linear")
+    out = z if linear else apply_activation(
+        z.astype(jnp.float32), activation).astype(z.dtype)
+    res = (xp, wq, bias,
+           None if linear else z.astype(precision.residual_dtype),
+           jnp.zeros((0,), x.dtype), jnp.zeros((0,), w.dtype))
+    return out, res
+
+
+def _dwconv_bwd(spec, activation, hob, wob, machine, interpret, precision,
+                res, g):
+    xp, wq, bias, z, x_token, w_token = res
+    hf, wf = wq.shape[2], wq.shape[3]
+    stride, dilation = spec.stride, spec.dilation
+
+    if z is None:
+        dz = g
+    else:
+        def act(t):
+            return apply_activation(t.astype(jnp.float32),
+                                    activation).astype(t.dtype)
+        dz = jax.vjp(act, z)[1](g.astype(z.dtype))[0]
+    dz = dz.astype(precision.op_dtype)
+
+    db = (None if bias is None else
+          dz.astype(jnp.float32).sum(axis=(0, 2, 3)).astype(bias.dtype))
+
+    (ph_lo, ph_hi), (pw_lo, pw_hi) = spec.pads
+    hi_p, wi_p = xp.shape[2], xp.shape[3]
+    hi, wi = hi_p - ph_lo - ph_hi, wi_p - pw_lo - pw_hi
+    dxp = depthwise_dgrad_pallas(dz, wq, stride=stride, machine=machine,
+                                 interpret=interpret, dilation=dilation)
+    eh, ew = dxp.shape[2], dxp.shape[3]
+    dxp = jnp.pad(dxp, ((0, 0), (0, 0), (0, hi_p - eh), (0, wi_p - ew),
+                        (0, 0)))
+    dx = dxp[:, :, ph_lo:ph_lo + hi, pw_lo:pw_lo + wi, :].astype(x_token.dtype)
+
+    dw = depthwise_wgrad_pallas(
+        xp, dz, hf, wf, stride=stride, machine=machine, interpret=interpret,
+        out_dtype=jnp.float32, dilation=dilation).astype(w_token.dtype)
+    return dx, dw, db
+
+
+_dwconv.defvjp(_dwconv_fwd, _dwconv_bwd)
+
+
+@partial(jax.jit,
+         static_argnames=("stride", "padding", "activation", "hob", "wob",
+                          "machine", "interpret", "precision", "dilation"))
+def depthwise_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
+                                    bias: Optional[jnp.ndarray] = None,
+                                    stride: int = 1,
+                                    padding: Padding = "VALID",
+                                    activation: Optional[str] = None,
+                                    hob: Optional[int] = None,
+                                    wob: Optional[int] = None,
+                                    machine: MachineModel = TPU_V5E,
+                                    interpret: bool = False,
+                                    precision: Precision | str = F32,
+                                    dilation: int | tuple = 1,
+                                    ) -> jnp.ndarray:
+    """Tiled + fused blocked depthwise convolution, differentiable end to
+    end through its own Pallas dgrad/wgrad kernels.
+
+    x: [N, C/Cb, Hi, Wi, Cb]; w: [C/Cb, 1, Hf, Wf, 1, Cb] (grouped-HWIO
+    blocked at Cig=1); bias: [C/Cb, Cb] or None
+    -> [N, C/Cb, Ho, Wo, Cb] in the policy's operand dtype.
+
+    Same padding/precision contracts as ``direct_conv2d_blocked_pallas``;
+    no ``stream`` knob — the depthwise working set (no weight matrix, no
+    reduction) fits VMEM wherever the dense window kernel's does.
+    """
+    n, cblk, hi, wi, cb = x.shape
+    c = cblk * cb
+    spec = ConvSpec.make(n, hi, wi, c, c, w.shape[2], w.shape[3],
+                         stride=stride, padding=padding, groups=c,
+                         dilation=dilation)
+    return _dwconv(x, w, bias, spec, activation, hob, wob, machine,
+                   interpret, resolve_precision(precision))

@@ -1,0 +1,319 @@
+"""Pallas TPU kernels: the 1x1-as-matmul fast path (DESIGN.md §13).
+
+A 1x1 stride-1 unpadded dense conv is a channel matmul applied at every
+spatial position — ``ConvSpec.is_pointwise``.  The window kernel computes
+it correctly but drags the halo machinery along for a halo of size zero:
+``pl.Unblocked`` element-offset indexing, one strided ``tap_windows`` view,
+a ``(Hob-1)*stride + 1`` window that is exactly the tile.  This family
+strips all of it: plain Blocked BlockSpecs, one MXU matmul per grid step.
+
+Forward grid (the window schedule minus the taps):
+
+  grid = (N, Co/Cob, Ho/Hob, Wo/Wob, Ci/Cib)   # last axis is the reduction
+  x block   [1, 1, Hob, Wob, Cib]     # the tile IS the window
+  w block   [1, 1, 1, 1, Cib, Cob]    # a [Cib, Cob] matrix in conv clothing
+  b block   [1, Cob]
+  out block [1, 1, Hob, Wob, Cob]     # f32 scratch accumulator across Ci
+
+dgrad swaps the pencils (``dy @ w`` contracting Cob — the transposed
+matmul; no cotangent dilation, no halo pad, no mirrored taps), wgrad makes
+(N, Ho/Hob, Wo/Wob) the reduction into a resident ``[Cib, Cob]`` f32 block
+(``x_tileᵀ @ dy_tile`` contracting spatial positions).
+
+``pointwise_conv2d_blocked_pallas`` carries the family's ``jax.custom_vjp``
+with the same precision discipline as the other families.  The entry point
+*requires* pointwise geometry (stride 1, no pads, groups 1, dilation 1) —
+the dispatcher only routes it where ``ConvSpec.is_pointwise`` holds.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.blocking import (MachineModel, TPU_V5E,
+                                 choose_pointwise_blocking,
+                                 choose_pointwise_wgrad_blocking)
+from repro.core.direct_conv import apply_activation
+from repro.core.padding import normalize_padding
+from repro.core.precision import F32, Precision, resolve_precision
+from .conv2d_common import (bias_spec, epilogue_flush, first_step, last_step,
+                            tile_spec, weight_spec)
+
+__all__ = ["pointwise_conv2d_blocked_pallas", "pointwise_dgrad_pallas",
+           "pointwise_wgrad_pallas"]
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _pw_fwd_kernel(x_ref, w_ref, *rest, hob, wob, activation, has_bias):
+    if has_bias:
+        b_ref, (o_ref, acc_ref) = rest[0], rest[1:]
+    else:
+        b_ref, (o_ref, acc_ref) = None, rest
+
+    @pl.when(first_step((4,)))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0, 0].reshape(hob * wob, x_ref.shape[-1])
+    acc_ref[...] = acc_ref[...] + jnp.dot(
+        x, w_ref[0, 0, 0, 0], preferred_element_type=jnp.float32)
+
+    @pl.when(last_step((4,)))
+    def _flush():
+        epilogue_flush(o_ref, acc_ref[...], hob, wob, b_ref, activation)
+
+
+def _pw_dgrad_kernel(dy_ref, w_ref, o_ref, acc_ref, *, hob, wob):
+    """Transposed channel matmul: contract the Cob lanes of the cotangent
+    against the weight matrix's output axis."""
+    @pl.when(first_step((4,)))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dy = dy_ref[0, 0].reshape(hob * wob, dy_ref.shape[-1])
+    # [Hob*Wob, Cob] x [Cib, Cob] -> [Hob*Wob, Cib]
+    acc_ref[...] = acc_ref[...] + jax.lax.dot_general(
+        dy, w_ref[0, 0, 0, 0], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(last_step((4,)))
+    def _flush():
+        epilogue_flush(o_ref, acc_ref[...], hob, wob)
+
+
+def _pw_wgrad_kernel(x_ref, dy_ref, o_ref, acc_ref, *, hob, wob):
+    """Weight gradient: contract the spatial positions of the x tile against
+    the cotangent tile into a resident [Cib, Cob] block."""
+    @pl.when(first_step((2, 3, 4)))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0, 0].reshape(hob * wob, x_ref.shape[-1])
+    dy = dy_ref[0, 0].reshape(hob * wob, dy_ref.shape[-1])
+    # [Hob*Wob, Cib] x [Hob*Wob, Cob] -> [Cib, Cob]
+    acc_ref[...] = acc_ref[...] + jax.lax.dot_general(
+        x, dy, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(last_step((2, 3, 4)))
+    def _flush():
+        o_ref[0, 0, 0, 0] = acc_ref[...].astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# launches
+# ---------------------------------------------------------------------------
+
+def _pw_forward(x: jnp.ndarray, w: jnp.ndarray, bias, activation, hob, wob,
+                machine: MachineModel, interpret: bool) -> jnp.ndarray:
+    n, ciblk, hi, wi, cib = x.shape
+    coblk, ciblk2, one, one2, cib2, cob = w.shape
+    assert (ciblk, cib) == (ciblk2, cib2) and one == one2 == 1, \
+        (x.shape, w.shape)
+
+    blk = choose_pointwise_blocking(hi, wi, ciblk * cib, coblk * cob,
+                                    machine=machine, cob=cob, cib=cib,
+                                    hob=hob, wob=wob,
+                                    in_dtype_bytes=x.dtype.itemsize)
+    hob, wob = blk.hob, blk.wob
+
+    has_bias = bias is not None
+    operands = [x, w]
+    in_specs = [
+        # plain Blocked tiles — the whole point of the fast path: no
+        # Unblocked element-offset window, no halo
+        tile_spec(hob, wob, cib, lambda b, co, th, tw, ci: (b, ci, th, tw)),
+        weight_spec(1, 1, cib, cob, lambda b, co, th, tw, ci: (co, ci)),
+    ]
+    if has_bias:
+        operands.append(bias)
+        in_specs.append(bias_spec(cob, lambda b, co, th, tw, ci: (co,)))
+
+    grid = (n, coblk, hi // hob, wi // wob, ciblk)
+    return pl.pallas_call(
+        partial(_pw_fwd_kernel, hob=hob, wob=wob, activation=activation,
+                has_bias=has_bias),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=tile_spec(hob, wob, cob,
+                            lambda b, co, th, tw, ci: (b, co, th, tw)),
+        out_shape=jax.ShapeDtypeStruct((n, coblk, hi, wi, cob), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hob * wob, cob), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+
+
+@partial(jax.jit, static_argnames=("hob", "wob", "machine", "interpret"))
+def pointwise_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray,
+                           hob: Optional[int] = None,
+                           wob: Optional[int] = None,
+                           machine: MachineModel = TPU_V5E,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Input gradient of the pointwise conv — the transposed channel matmul.
+    No dilation, no halo pad: dx has the input's spatial extents already."""
+    n, coblk, ho, wo, cob = dy.shape
+    coblk2, ciblk, one, one2, cib, cob2 = w.shape
+    assert (coblk, cob) == (coblk2, cob2) and one == one2 == 1, \
+        (dy.shape, w.shape)
+
+    # the transposed matmul's pencils swap: cib becomes the lane (output)
+    # pencil, cob the contraction depth
+    blk = choose_pointwise_blocking(ho, wo, coblk * cob, ciblk * cib,
+                                    machine=machine, cob=cib, cib=cob,
+                                    hob=hob, wob=wob,
+                                    in_dtype_bytes=dy.dtype.itemsize)
+    hob, wob = blk.hob, blk.wob
+
+    grid = (n, ciblk, ho // hob, wo // wob, coblk)
+    return pl.pallas_call(
+        partial(_pw_dgrad_kernel, hob=hob, wob=wob),
+        grid=grid,
+        in_specs=[
+            tile_spec(hob, wob, cob,
+                      lambda b, ci, th, tw, co: (b, co, th, tw)),
+            weight_spec(1, 1, cib, cob,
+                        lambda b, ci, th, tw, co: (co, ci)),
+        ],
+        out_specs=tile_spec(hob, wob, cib,
+                            lambda b, ci, th, tw, co: (b, ci, th, tw)),
+        out_shape=jax.ShapeDtypeStruct((n, ciblk, ho, wo, cib), dy.dtype),
+        scratch_shapes=[pltpu.VMEM((hob * wob, cib), jnp.float32)],
+        interpret=interpret,
+    )(dy, w)
+
+
+@partial(jax.jit, static_argnames=("hob", "wob", "machine", "interpret",
+                                   "out_dtype"))
+def pointwise_wgrad_pallas(x: jnp.ndarray, dy: jnp.ndarray,
+                           hob: Optional[int] = None,
+                           wob: Optional[int] = None,
+                           machine: MachineModel = TPU_V5E,
+                           interpret: bool = False,
+                           out_dtype=None) -> jnp.ndarray:
+    """Weight gradient of the pointwise conv: Σ_tiles x_tileᵀ @ dy_tile into
+    the [Co/Cob, Ci/Cib, 1, 1, Cib, Cob] blocked weight layout."""
+    n, ciblk, hi, wi, cib = x.shape
+    n2, coblk, ho, wo, cob = dy.shape
+    assert (n, hi, wi) == (n2, ho, wo), (x.shape, dy.shape)
+
+    blk = choose_pointwise_wgrad_blocking(
+        ho, wo, machine=machine, cob=cob, cib=cib, hob=hob, wob=wob,
+        in_dtype_bytes=x.dtype.itemsize)
+    hob, wob = blk.hob, blk.wob
+
+    grid = (coblk, ciblk, n, ho // hob, wo // wob)
+    return pl.pallas_call(
+        partial(_pw_wgrad_kernel, hob=hob, wob=wob),
+        grid=grid,
+        in_specs=[
+            tile_spec(hob, wob, cib,
+                      lambda co, ci, b, th, tw: (b, ci, th, tw)),
+            tile_spec(hob, wob, cob,
+                      lambda co, ci, b, th, tw: (b, co, th, tw)),
+        ],
+        out_specs=weight_spec(1, 1, cib, cob,
+                              lambda co, ci, b, th, tw: (co, ci)),
+        out_shape=jax.ShapeDtypeStruct((coblk, ciblk, 1, 1, cib, cob),
+                                       out_dtype or x.dtype),
+        scratch_shapes=[pltpu.VMEM((cib, cob), jnp.float32)],
+        interpret=interpret,
+    )(x, dy)
+
+
+# ---------------------------------------------------------------------------
+# custom VJP + public entry point
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _pwconv(x, w, bias, activation, hob, wob, machine, interpret, precision):
+    op = precision.op_dtype
+    return _pw_forward(x.astype(op), w.astype(op), bias, activation, hob,
+                       wob, machine, interpret)
+
+
+def _pwconv_fwd(x, w, bias, activation, hob, wob, machine, interpret,
+                precision):
+    op = precision.op_dtype
+    xq, wq = x.astype(op), w.astype(op)
+    z = _pw_forward(xq, wq, bias, None, hob, wob, machine, interpret)
+    linear = activation in (None, "linear")
+    out = z if linear else apply_activation(
+        z.astype(jnp.float32), activation).astype(z.dtype)
+    res = (xq, wq, bias,
+           None if linear else z.astype(precision.residual_dtype),
+           jnp.zeros((0,), x.dtype), jnp.zeros((0,), w.dtype))
+    return out, res
+
+
+def _pwconv_bwd(activation, hob, wob, machine, interpret, precision, res, g):
+    """No pad/dilate bookkeeping anywhere: the pointwise backward is two
+    more channel matmuls over the same tiles."""
+    xq, wq, bias, z, x_token, w_token = res
+
+    if z is None:
+        dz = g
+    else:
+        def act(t):
+            return apply_activation(t.astype(jnp.float32),
+                                    activation).astype(t.dtype)
+        dz = jax.vjp(act, z)[1](g.astype(z.dtype))[0]
+    dz = dz.astype(precision.op_dtype)
+
+    db = (None if bias is None else
+          dz.astype(jnp.float32).sum(axis=(0, 2, 3)).astype(bias.dtype))
+
+    dx = pointwise_dgrad_pallas(dz, wq, machine=machine,
+                                interpret=interpret).astype(x_token.dtype)
+    dw = pointwise_wgrad_pallas(
+        xq, dz, machine=machine, interpret=interpret,
+        out_dtype=jnp.float32).astype(w_token.dtype)
+    return dx, dw, db
+
+
+_pwconv.defvjp(_pwconv_fwd, _pwconv_bwd)
+
+
+@partial(jax.jit,
+         static_argnames=("stride", "padding", "activation", "hob", "wob",
+                          "machine", "interpret", "precision"))
+def pointwise_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
+                                    bias: Optional[jnp.ndarray] = None,
+                                    stride: int = 1,
+                                    padding="VALID",
+                                    activation: Optional[str] = None,
+                                    hob: Optional[int] = None,
+                                    wob: Optional[int] = None,
+                                    machine: MachineModel = TPU_V5E,
+                                    interpret: bool = False,
+                                    precision: Precision | str = F32,
+                                    ) -> jnp.ndarray:
+    """Fused 1x1-as-matmul blocked conv, differentiable end to end.
+
+    x: [N, Ci/Cib, H, W, Cib]; w: [Co/Cob, Ci/Cib, 1, 1, Cib, Cob];
+    bias: [Co/Cob, Cob] or None -> [N, Co/Cob, H, W, Cob].
+
+    Only pointwise geometry is served — stride 1 and VALID/zero padding
+    (``ConvSpec.is_pointwise``); anything else belongs to the window
+    family and raises here.
+    """
+    if w.shape[2] != 1 or w.shape[3] != 1:
+        raise ValueError(f"pointwise kernel needs a 1x1 filter, got "
+                         f"{w.shape[2]}x{w.shape[3]}")
+    # normalize before judging: SAME on a 1x1 filter *is* zero pad, and the
+    # dispatcher's is_pointwise predicate (which routes here) says so
+    pads = normalize_padding(padding, 1, 1, stride,
+                             x.shape[2], x.shape[3])
+    if stride != 1 or pads != ((0, 0), (0, 0)):
+        raise ValueError(
+            f"pointwise fast path serves stride=1, zero-pad only; got "
+            f"stride={stride}, padding={padding!r} — route the window "
+            f"kernel instead")
+    return _pwconv(x, w, bias, activation, hob, wob, machine, interpret,
+                   resolve_precision(precision))

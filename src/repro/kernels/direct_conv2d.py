@@ -78,7 +78,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.blocking import (MachineModel, TPU_V5E, choose_blocking,
                                  choose_dgrad_blocking,
                                  choose_wgrad_blocking, dgrad_extents)
-from repro.core.conv_baselines import Padding, normalize_padding
+from repro.core.conv_baselines import Padding
+from repro.core.convspec import ConvSpec
 from repro.core.dispatch import KernelRoute, route_pallas, stream_flag
 from repro.core.direct_conv import apply_activation, pad_blocked
 from repro.core.precision import F32, Precision, resolve_precision
@@ -97,7 +98,7 @@ __all__ = ["direct_conv2d_blocked_pallas", "direct_conv2d_dgrad_pallas",
 # ---------------------------------------------------------------------------
 
 def _fwd_kernel(x_ref, w_ref, *rest, hf, wf, hob, wob, stride, activation,
-                has_bias):
+                has_bias, dilation=(1, 1)):
     if has_bias:
         b_ref, o_ref, acc_ref = rest
     else:
@@ -108,7 +109,8 @@ def _fwd_kernel(x_ref, w_ref, *rest, hf, wf, hob, wob, stride, activation,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc = acc_ref[...]
-    for (dh, dw), win in tap_windows(x_ref[0, 0], hf, wf, hob, wob, stride):
+    for (dh, dw), win in tap_windows(x_ref[0, 0], hf, wf, hob, wob, stride,
+                                     dilation):
         acc = acc + jnp.dot(win, w_ref[0, 0, dh, dw],
                             preferred_element_type=jnp.float32)
     acc_ref[...] = acc
@@ -118,16 +120,19 @@ def _fwd_kernel(x_ref, w_ref, *rest, hf, wf, hob, wob, stride, activation,
         epilogue_flush(o_ref, acc, hob, wob, b_ref, activation)
 
 
-def _dgrad_kernel(dy_ref, w_ref, o_ref, acc_ref, *, hf, wf, hob, wob):
+def _dgrad_kernel(dy_ref, w_ref, o_ref, acc_ref, *, hf, wf, hob, wob,
+                  dilation=(1, 1)):
     """Transposed-window input gradient: mirrored taps over the (already
-    dilated + halo-padded) cotangent, contracting the Cob pencil.  Windows
-    slide by 1 — the forward stride lives in the dilation."""
+    stride-dilated + halo-padded) cotangent, contracting the Cob pencil.
+    Windows slide by 1 — the forward stride lives in the cotangent's
+    dilation; a forward *filter* dilation keeps striding the taps."""
     @pl.when(first_step((4,)))
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc = acc_ref[...]
-    for (dh, dw), win in tap_windows(dy_ref[0, 0], hf, wf, hob, wob, 1):
+    for (dh, dw), win in tap_windows(dy_ref[0, 0], hf, wf, hob, wob, 1,
+                                     dilation):
         # [Hob*Wob, Cob] x [Cib, Cob] -> [Hob*Wob, Cib]  (contract lanes)
         acc = acc + jax.lax.dot_general(
             win, w_ref[0, 0, hf - 1 - dh, wf - 1 - dw],
@@ -140,7 +145,7 @@ def _dgrad_kernel(dy_ref, w_ref, o_ref, acc_ref, *, hf, wf, hob, wob):
 
 
 def _wgrad_kernel(x_ref, dy_ref, o_ref, acc_ref, *, hf, wf, hob, wob,
-                  stride):
+                  stride, dilation=(1, 1)):
     """Per-tile accumulating weight gradient: the whole [Hf, Wf, Cib, Cob]
     block stays resident while the (N, Ho/Hob, Wo/Wob) reduction axes walk;
     each step contracts the Hob*Wob spatial positions."""
@@ -149,7 +154,8 @@ def _wgrad_kernel(x_ref, dy_ref, o_ref, acc_ref, *, hf, wf, hob, wob,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     dy = dy_ref[0, 0].reshape(hob * wob, dy_ref.shape[-1])
-    for (dh, dw), win in tap_windows(x_ref[0, 0], hf, wf, hob, wob, stride):
+    for (dh, dw), win in tap_windows(x_ref[0, 0], hf, wf, hob, wob, stride,
+                                     dilation):
         # [Hob*Wob, Cib] x [Hob*Wob, Cob] -> [Cib, Cob]  (contract positions)
         acc_ref[dh, dw] = acc_ref[dh, dw] + jax.lax.dot_general(
             win, dy, (((0,), (0,)), ((), ())),
@@ -182,36 +188,52 @@ def _resolve_stream(stream, hso: Optional[int],
 def _forward_impl(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
                   activation, hob, wob, machine: MachineModel,
                   interpret: bool, stream=None,
-                  hso: Optional[int] = None) -> jnp.ndarray:
+                  hso: Optional[int] = None, groups: int = 1,
+                  dilation=(1, 1)) -> jnp.ndarray:
     """Route one forward launch.  An explicit flag (``stream`` bool, a
     ``KernelRoute.fwd``, or ``hso``) pins the variant — a forced path's
     misfit propagates; with ``None`` the dispatch probe
     (``route_pallas``) asks the window inequality first and degrades to
     the streamed family when it misfits — the old ``hob = wob = 1``
-    hard-raise, served."""
+    hard-raise, served.  The streamed family is dense-only: grouped or
+    dilated geometry pins the window path (and rejects a forced
+    ``stream=True``)."""
     flag = _resolve_stream(stream, hso, "fwd")
+    dense = groups == 1 and tuple(dilation) == (1, 1)
+    if flag and not dense:
+        raise ValueError(
+            f"the streamed halo-DMA kernels are dense-only; got "
+            f"groups={groups}, dilation={tuple(dilation)}")
     if flag is None:
-        n, ciblk, hi, wi, cib = xp.shape
-        coblk, _, hf, wf, _, cob = w.shape
-        flag = route_pallas("fwd", n=n, hi=hi, wi=wi, ci=ciblk * cib,
-                            co=coblk * cob, hf=hf, wf=wf, stride=stride,
-                            machine=machine, dtype=xp.dtype, cob=cob,
-                            cib=cib, hob=hob, wob=wob)
+        if not dense:
+            flag = False
+        else:
+            n, ciblk, hi, wi, cib = xp.shape
+            coblk, _, hf, wf, _, cob = w.shape
+            flag = route_pallas("fwd", n=n, hi=hi, wi=wi, ci=ciblk * cib,
+                                co=coblk * cob, hf=hf, wf=wf, stride=stride,
+                                machine=machine, dtype=xp.dtype, cob=cob,
+                                cib=cib, hob=hob, wob=wob)
     if flag:
         return stream_forward(xp, w, bias, stride, activation, hob, wob,
                               hso, machine, interpret)
     return _forward_windowed(xp, w, bias, stride, activation, hob, wob,
-                             machine, interpret)
+                             machine, interpret, groups, dilation)
 
 
 def _forward_windowed(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
                       activation, hob, wob, machine: MachineModel,
-                      interpret: bool) -> jnp.ndarray:
+                      interpret: bool, groups: int = 1,
+                      dilation=(1, 1)) -> jnp.ndarray:
     n, ciblk, hi, wi, cib = xp.shape
-    coblk, ciblk2, hf, wf, cib2, cob = w.shape
-    assert (ciblk, cib) == (ciblk2, cib2), (xp.shape, w.shape)
-    ho = (hi - hf) // stride + 1
-    wo = (wi - wf) // stride + 1
+    coblk, cigblk, hf, wf, cib2, cob = w.shape
+    # grouped-HWIO weights: the blocked input extent is the *per-group*
+    # channel count; dense is the groups=1 special case (cigblk == ciblk)
+    assert cib == cib2 and ciblk == cigblk * groups and coblk % groups == 0, \
+        (xp.shape, w.shape, groups)
+    dil_h, dil_w = dilation
+    ho = (hi - ((hf - 1) * dil_h + 1)) // stride + 1
+    wo = (wi - ((wf - 1) * dil_w + 1)) // stride + 1
 
     # pin cob/cib to this call's actual pencil sizes (and any explicit
     # hob/wob) so the VMEM fit is evaluated against the blocks the kernel
@@ -221,15 +243,21 @@ def _forward_windowed(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
     blk = choose_blocking(hi, wi, ciblk * cib, coblk * cob, hf, wf,
                           stride, machine=machine, cob=cob, cib=cib,
                           hob=hob, wob=wob,
-                          in_dtype_bytes=xp.dtype.itemsize)
+                          in_dtype_bytes=xp.dtype.itemsize,
+                          groups=groups, dilation=dilation)
     hob, wob = blk.hob, blk.wob
-    hib, wib = halo_dims(hob, wob, hf, wf, stride)
+    hib, wib = halo_dims(hob, wob, hf, wf, stride, dilation)
+    cogblk = coblk // groups
 
     has_bias = bias is not None
     operands = [xp, w]
     in_specs = [
+        # block-diagonal reach into x: output block `co` belongs to group
+        # co // cogblk, whose input blocks start at (co // cogblk) * cigblk.
+        # groups=1 degenerates to plain `ci` — dense launches are untouched.
         halo_window_spec(hib, wib, cib, hob * stride, wob * stride,
-                         lambda b, co, th, tw, ci: (b, ci, th, tw)),
+                         lambda b, co, th, tw, ci:
+                         (b, (co // cogblk) * cigblk + ci, th, tw)),
         weight_spec(hf, wf, cib, cob,
                     lambda b, co, th, tw, ci: (co, ci)),
     ]
@@ -237,10 +265,10 @@ def _forward_windowed(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
         operands.append(bias)
         in_specs.append(bias_spec(cob, lambda b, co, th, tw, ci: (co,)))
 
-    grid = (n, coblk, ho // hob, wo // wob, ciblk)
+    grid = (n, coblk, ho // hob, wo // wob, cigblk)
     return pl.pallas_call(
         partial(_fwd_kernel, hf=hf, wf=wf, hob=hob, wob=wob, stride=stride,
-                activation=activation, has_bias=has_bias),
+                activation=activation, has_bias=has_bias, dilation=dilation),
         grid=grid,
         in_specs=in_specs,
         out_specs=tile_spec(hob, wob, cob,
@@ -256,7 +284,8 @@ def _forward_windowed(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("stride", "hob", "wob", "machine",
-                                   "interpret", "stream", "hso"))
+                                   "interpret", "stream", "hso", "groups",
+                                   "dilation"))
 def direct_conv2d_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray,
                                stride: int = 1,
                                hob: Optional[int] = None,
@@ -264,7 +293,9 @@ def direct_conv2d_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray,
                                machine: MachineModel = TPU_V5E,
                                interpret: bool = False,
                                stream: Optional[bool] = None,
-                               hso: Optional[int] = None) -> jnp.ndarray:
+                               hso: Optional[int] = None,
+                               groups: int = 1,
+                               dilation=(1, 1)) -> jnp.ndarray:
     """Input gradient of the VALID blocked conv, as a direct convolution.
 
     dy: [N, Co/Cob, Ho, Wo, Cob] cotangent; w: the forward's blocked weights
@@ -284,28 +315,43 @@ def direct_conv2d_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray,
     inequality and falls to the streamed kernel when it misfits, True
     forces it (``hso`` stripes the dgrad extents), False pins the window
     path (its misfit propagates), and a ``KernelRoute`` contributes its
-    ``dgrad`` field.
+    ``dgrad`` field.  Grouped/dilated geometry pins the window path (the
+    streamed family is dense-only).
     """
     flag = _resolve_stream(stream, hso, "dgrad")
+    dense = groups == 1 and tuple(dilation) == (1, 1)
+    if flag and not dense:
+        raise ValueError(
+            f"the streamed halo-DMA kernels are dense-only; got "
+            f"groups={groups}, dilation={tuple(dilation)}")
     if flag is None:
-        n, coblk, ho, wo, cob = dy.shape
-        _, ciblk, hf, wf, cib, _ = w.shape
-        flag = route_pallas("dgrad", n=n, hi=(ho - 1) * stride + hf,
-                            wi=(wo - 1) * stride + wf, ci=ciblk * cib,
-                            co=coblk * cob, hf=hf, wf=wf, stride=stride,
-                            machine=machine, dtype=dy.dtype, cob=cob,
-                            cib=cib, hob=hob, wob=wob)
+        if not dense:
+            flag = False
+        else:
+            n, coblk, ho, wo, cob = dy.shape
+            _, ciblk, hf, wf, cib, _ = w.shape
+            flag = route_pallas("dgrad", n=n, hi=(ho - 1) * stride + hf,
+                                wi=(wo - 1) * stride + wf, ci=ciblk * cib,
+                                co=coblk * cob, hf=hf, wf=wf, stride=stride,
+                                machine=machine, dtype=dy.dtype, cob=cob,
+                                cib=cib, hob=hob, wob=wob)
     if flag:
         return stream_dgrad(dy, w, stride, hob, wob, hso, machine, interpret)
-    return _dgrad_windowed(dy, w, stride, hob, wob, machine, interpret)
+    return _dgrad_windowed(dy, w, stride, hob, wob, machine, interpret,
+                           groups, dilation)
 
 
 def _dgrad_windowed(dy: jnp.ndarray, w: jnp.ndarray, stride: int,
                     hob: Optional[int], wob: Optional[int],
-                    machine: MachineModel, interpret: bool) -> jnp.ndarray:
+                    machine: MachineModel, interpret: bool,
+                    groups: int = 1, dilation=(1, 1)) -> jnp.ndarray:
     n, coblk, ho, wo, cob = dy.shape
-    coblk2, ciblk, hf, wf, cib, cob2 = w.shape
+    coblk2, cigblk, hf, wf, cib, cob2 = w.shape
     assert (coblk, cob) == (coblk2, cob2), (dy.shape, w.shape)
+    assert coblk % groups == 0, (w.shape, groups)
+    dil_h, dil_w = dilation
+    ciblk = cigblk * groups
+    cogblk = coblk // groups
 
     if stride > 1:
         dyd = jnp.zeros((n, coblk, (ho - 1) * stride + 1,
@@ -313,25 +359,36 @@ def _dgrad_windowed(dy: jnp.ndarray, w: jnp.ndarray, stride: int,
         dyd = dyd.at[:, :, ::stride, ::stride, :].set(dy)
     else:
         dyd = dy
-    dyp = pad_blocked(dyd, (hf - 1, hf - 1), (wf - 1, wf - 1))
+    # the full-conv halo pad spans the *effective* (dilated) filter reach
+    dyp = pad_blocked(dyd, ((hf - 1) * dil_h, (hf - 1) * dil_h),
+                      ((wf - 1) * dil_w, (wf - 1) * dil_w))
 
-    eh, ew = dgrad_extents(ho, wo, hf, wf, stride)
+    eh, ew = dgrad_extents(ho, wo, hf, wf, stride, dilation)
     blk = choose_dgrad_blocking(ho, wo, ciblk * cib, coblk * cob, hf, wf,
                                 stride, machine=machine, cib=cib, cob=cob,
                                 hob=hob, wob=wob,
-                                in_dtype_bytes=dy.dtype.itemsize)
+                                in_dtype_bytes=dy.dtype.itemsize,
+                                groups=groups, dilation=dilation)
     hob, wob = blk.hob, blk.wob
-    hib, wib = halo_dims(hob, wob, hf, wf, 1)        # stride lives in dilation
+    # windows slide by 1 (stride lives in the cotangent's dilation); filter
+    # dilation still strides the taps
+    hib, wib = halo_dims(hob, wob, hf, wf, 1, dilation)
 
-    grid = (n, ciblk, eh // hob, ew // wob, coblk)
+    grid = (n, ciblk, eh // hob, ew // wob, cogblk)
     return pl.pallas_call(
-        partial(_dgrad_kernel, hf=hf, wf=wf, hob=hob, wob=wob),
+        partial(_dgrad_kernel, hf=hf, wf=wf, hob=hob, wob=wob,
+                dilation=dilation),
         grid=grid,
         in_specs=[
+            # input block `ci` belongs to group ci // cigblk; its group's
+            # cotangent blocks start at (ci // cigblk) * cogblk and the
+            # matching weight block row is the same offset + the reduction id
             halo_window_spec(hib, wib, cob, hob, wob,
-                             lambda b, ci, th, tw, co: (b, co, th, tw)),
+                             lambda b, ci, th, tw, co:
+                             (b, (ci // cigblk) * cogblk + co, th, tw)),
             weight_spec(hf, wf, cib, cob,
-                        lambda b, ci, th, tw, co: (co, ci)),
+                        lambda b, ci, th, tw, co:
+                        ((ci // cigblk) * cogblk + co, ci % cigblk)),
         ],
         out_specs=tile_spec(hob, wob, cib,
                             lambda b, ci, th, tw, co: (b, ci, th, tw)),
@@ -343,7 +400,7 @@ def _dgrad_windowed(dy: jnp.ndarray, w: jnp.ndarray, stride: int,
 
 @partial(jax.jit, static_argnames=("hf", "wf", "stride", "hob", "wob",
                                    "machine", "interpret", "out_dtype",
-                                   "stream", "hso"))
+                                   "stream", "hso", "groups", "dilation"))
 def direct_conv2d_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
                                hf: int, wf: int, stride: int = 1,
                                hob: Optional[int] = None,
@@ -352,7 +409,9 @@ def direct_conv2d_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
                                interpret: bool = False,
                                out_dtype=None,
                                stream: Optional[bool] = None,
-                               hso: Optional[int] = None) -> jnp.ndarray:
+                               hso: Optional[int] = None,
+                               groups: int = 1,
+                               dilation=(1, 1)) -> jnp.ndarray:
     """Weight gradient of the VALID blocked conv, accumulated per tile.
 
     xp: [N, Ci/Cib, Hi, Wi, Cib] the forward's *padded* input;
@@ -370,49 +429,68 @@ def direct_conv2d_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
     contributes its ``wgrad`` field.
     """
     flag = _resolve_stream(stream, hso, "wgrad")
+    dense = groups == 1 and tuple(dilation) == (1, 1)
+    if flag and not dense:
+        raise ValueError(
+            f"the streamed halo-DMA kernels are dense-only; got "
+            f"groups={groups}, dilation={tuple(dilation)}")
     if flag is None:
-        n, coblk, ho, wo, cob = dy.shape
-        _, ciblk, _, _, cib = xp.shape
-        flag = route_pallas("wgrad", n=n, hi=(ho - 1) * stride + hf,
-                            wi=(wo - 1) * stride + wf, ci=ciblk * cib,
-                            co=coblk * cob, hf=hf, wf=wf, stride=stride,
-                            machine=machine, dtype=xp.dtype, cob=cob,
-                            cib=cib, hob=hob, wob=wob)
+        if not dense:
+            flag = False
+        else:
+            n, coblk, ho, wo, cob = dy.shape
+            _, ciblk, _, _, cib = xp.shape
+            flag = route_pallas("wgrad", n=n, hi=(ho - 1) * stride + hf,
+                                wi=(wo - 1) * stride + wf, ci=ciblk * cib,
+                                co=coblk * cob, hf=hf, wf=wf, stride=stride,
+                                machine=machine, dtype=xp.dtype, cob=cob,
+                                cib=cib, hob=hob, wob=wob)
     if flag:
         return stream_wgrad(xp, dy, hf, wf, stride, wob, hso, machine,
                             interpret, out_dtype)
     return _wgrad_windowed(xp, dy, hf, wf, stride, hob, wob, machine,
-                           interpret, out_dtype)
+                           interpret, out_dtype, groups, dilation)
 
 
 def _wgrad_windowed(xp: jnp.ndarray, dy: jnp.ndarray, hf: int, wf: int,
                     stride: int, hob: Optional[int], wob: Optional[int],
                     machine: MachineModel, interpret: bool,
-                    out_dtype) -> jnp.ndarray:
+                    out_dtype, groups: int = 1,
+                    dilation=(1, 1)) -> jnp.ndarray:
     n, ciblk, hi, wi, cib = xp.shape
     n2, coblk, ho, wo, cob = dy.shape
     assert n == n2, (xp.shape, dy.shape)
+    assert ciblk % groups == 0 and coblk % groups == 0, \
+        (xp.shape, dy.shape, groups)
+    cigblk = ciblk // groups
+    cogblk = coblk // groups
 
     blk = choose_wgrad_blocking(ho, wo, hf, wf, stride, machine=machine,
                                 cob=cob, cib=cib, hob=hob, wob=wob,
-                                in_dtype_bytes=xp.dtype.itemsize)
+                                in_dtype_bytes=xp.dtype.itemsize,
+                                dilation=dilation)
     hob, wob = blk.hob, blk.wob
-    hib, wib = halo_dims(hob, wob, hf, wf, stride)
+    hib, wib = halo_dims(hob, wob, hf, wf, stride, dilation)
 
-    grid = (coblk, ciblk, n, ho // hob, wo // wob)
+    # the weight-gradient block walk is per group: only the cigblk input
+    # blocks of output block co's own group are contracted (the other
+    # cross-group products are structural zeros of the block-diagonal weight
+    # and are simply never computed)
+    grid = (coblk, cigblk, n, ho // hob, wo // wob)
     return pl.pallas_call(
         partial(_wgrad_kernel, hf=hf, wf=wf, hob=hob, wob=wob,
-                stride=stride),
+                stride=stride, dilation=dilation),
         grid=grid,
         in_specs=[
             halo_window_spec(hib, wib, cib, hob * stride, wob * stride,
-                             lambda co, ci, b, th, tw: (b, ci, th, tw)),
+                             lambda co, ci, b, th, tw:
+                             (b, (co // cogblk) * cigblk + ci, th, tw)),
             tile_spec(hob, wob, cob,
                       lambda co, ci, b, th, tw: (b, co, th, tw)),
         ],
         out_specs=weight_spec(hf, wf, cib, cob,
                               lambda co, ci, b, th, tw: (co, ci)),
-        out_shape=jax.ShapeDtypeStruct((coblk, ciblk, hf, wf, cib, cob),
+        out_shape=jax.ShapeDtypeStruct((coblk, cigblk, hf, wf, cib, cob),
                                        out_dtype or xp.dtype),
         scratch_shapes=[pltpu.VMEM((hf, wf, cib, cob), jnp.float32)],
         interpret=interpret,
@@ -423,21 +501,24 @@ def _wgrad_windowed(xp: jnp.ndarray, dy: jnp.ndarray, hf: int, wf: int,
 # custom VJP: jax.grad flows through the kernel family
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11, 12))
-def _conv(x, w, bias, stride, pads, activation, hob, wob, machine,
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11))
+def _conv(x, w, bias, spec, activation, hob, wob, machine,
           interpret, precision, stream, hso):
     """Primal: the fully fused forward kernel (inference takes this path —
-    bias + activation inside the epilogue, output written once).  Operands
-    are cast to the policy dtype here — the one down-cast of the forward;
-    bias stays in its master dtype (the epilogue adds it on the f32
-    accumulator anyway)."""
+    bias + activation inside the epilogue, output written once).  The
+    geometry — stride, normalized pads, groups, dilation — rides as one
+    frozen ``ConvSpec`` (hashable, so it is a valid nondiff/static arg).
+    Operands are cast to the policy dtype here — the one down-cast of the
+    forward; bias stays in its master dtype (the epilogue adds it on the
+    f32 accumulator anyway)."""
     op = precision.op_dtype
-    xp = pad_blocked(x.astype(op), *pads)
-    return _forward_impl(xp, w.astype(op), bias, stride, activation, hob,
-                         wob, machine, interpret, stream, hso)
+    xp = pad_blocked(x.astype(op), *spec.pads)
+    return _forward_impl(xp, w.astype(op), bias, spec.stride, activation,
+                         hob, wob, machine, interpret, stream, hso,
+                         spec.groups, spec.dilation)
 
 
-def _conv_fwd(x, w, bias, stride, pads, activation, hob, wob, machine,
+def _conv_fwd(x, w, bias, spec, activation, hob, wob, machine,
               interpret, precision, stream, hso):
     """VJP forward: the same kernel computes the *pre-activation* tile z (the
     epilogue residual the backward needs — relu/gelu cotangents are functions
@@ -450,10 +531,10 @@ def _conv_fwd(x, w, bias, stride, pads, activation, hob, wob, machine,
     its cotangents exactly once, at the very end.
     """
     op = precision.op_dtype
-    xp = pad_blocked(x.astype(op), *pads)
+    xp = pad_blocked(x.astype(op), *spec.pads)
     wq = w.astype(op)
-    z = _forward_impl(xp, wq, bias, stride, None, hob, wob, machine,
-                      interpret, stream, hso)
+    z = _forward_impl(xp, wq, bias, spec.stride, None, hob, wob, machine,
+                      interpret, stream, hso, spec.groups, spec.dilation)
     linear = activation in (None, "linear")
     out = z if linear else apply_activation(
         z.astype(jnp.float32), activation).astype(z.dtype)
@@ -463,7 +544,7 @@ def _conv_fwd(x, w, bias, stride, pads, activation, hob, wob, machine,
     return out, res
 
 
-def _conv_bwd(stride, pads, activation, hob, wob, machine, interpret,
+def _conv_bwd(spec, activation, hob, wob, machine, interpret,
               precision, stream, hso, res, g):
     """The backward kernels inherit the ``stream`` routing (an explicit
     override forces all three kernels onto one path; None lets each kernel
@@ -471,6 +552,8 @@ def _conv_bwd(stride, pads, activation, hob, wob, machine, interpret,
     are per-kernel model choices — the forward's ``hso`` is not theirs."""
     xp, wq, bias, z, x_token, w_token = res
     hf, wf = wq.shape[2], wq.shape[3]
+    stride, pads = spec.stride, spec.pads
+    groups, dilation = spec.groups, spec.dilation
 
     # activation cotangent from the epilogue residual (act' evaluated in f32)
     if z is None:
@@ -493,7 +576,8 @@ def _conv_bwd(stride, pads, activation, hob, wob, machine, interpret,
     hi_p, wi_p = xp.shape[2], xp.shape[3]
     hi, wi = hi_p - ph_lo - ph_hi, wi_p - pw_lo - pw_hi
     dxp = direct_conv2d_dgrad_pallas(dz, wq, stride=stride, machine=machine,
-                                     interpret=interpret, stream=stream)
+                                     interpret=interpret, stream=stream,
+                                     groups=groups, dilation=dilation)
     eh, ew = dxp.shape[2], dxp.shape[3]
     dxp = jnp.pad(dxp, ((0, 0), (0, 0), (0, hi_p - eh), (0, wi_p - ew),
                         (0, 0)))
@@ -504,7 +588,8 @@ def _conv_bwd(stride, pads, activation, hob, wob, machine, interpret,
     # dtype directly — never round-tripped through the operand dtype
     dw = direct_conv2d_wgrad_pallas(
         xp, dz, hf, wf, stride=stride, machine=machine, interpret=interpret,
-        out_dtype=jnp.float32, stream=stream).astype(w_token.dtype)
+        out_dtype=jnp.float32, stream=stream, groups=groups,
+        dilation=dilation).astype(w_token.dtype)
     return dx, dw, db
 
 
@@ -518,7 +603,7 @@ _conv.defvjp(_conv_fwd, _conv_bwd)
 @partial(jax.jit,
          static_argnames=("stride", "padding", "activation", "hob", "wob",
                           "machine", "interpret", "precision", "stream",
-                          "hso"))
+                          "hso", "groups", "dilation"))
 def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
                                  bias: Optional[jnp.ndarray] = None,
                                  stride: int = 1,
@@ -530,7 +615,9 @@ def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
                                  interpret: bool = False,
                                  precision: Precision | str = F32,
                                  stream: Optional[bool] = None,
-                                 hso: Optional[int] = None
+                                 hso: Optional[int] = None,
+                                 groups: int = 1,
+                                 dilation: int | tuple = 1,
                                  ) -> jnp.ndarray:
     """Tiled + fused direct convolution on the paper's blocked layouts,
     differentiable end to end (custom VJP -> the dgrad/wgrad kernels).
@@ -561,9 +648,20 @@ def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
     direction independently (what ``ConvDispatcher`` passes when it routes
     a layer).  The knob rides the custom VJP too, so dgrad/wgrad route
     consistently.
+
+    ``groups``/``dilation`` (DESIGN.md §13): weights are grouped-HWIO
+    blocked — ``[Co/Cob, Cig/Cib, Hf, Wf, Cib, Cob]`` with ``Cig = Ci //
+    groups`` — and the grid walks a block-diagonal reduction (each output
+    block contracts only its own group's input blocks); dilation strides
+    the filter taps and widens the halo, with SAME padding resolved against
+    the effective extent.  Both ride the custom VJP (block-diagonal dgrad/
+    wgrad).  The streamed variant stays dense — grouped/dilated launches
+    pin the window path.
     """
-    hi, wi = x.shape[2], x.shape[3]
-    hf, wf = w.shape[2], w.shape[3]
-    pads = normalize_padding(padding, hf, wf, stride, hi, wi)
-    return _conv(x, w, bias, stride, pads, activation, hob, wob, machine,
+    n, ciblk_x, hi, wi, cib_x = x.shape
+    coblk, _, hf, wf, _, cob = w.shape
+    spec = ConvSpec.make(n, hi, wi, ciblk_x * cib_x, coblk * cob, hf, wf,
+                         stride=stride, padding=padding, groups=groups,
+                         dilation=dilation)
+    return _conv(x, w, bias, spec, activation, hob, wob, machine,
                  interpret, resolve_precision(precision), stream, hso)

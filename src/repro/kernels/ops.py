@@ -6,12 +6,10 @@ override, then the persistent measured table, then the analytical prior —
 over the full candidate set (window/streamed Pallas, im2col, lax, jnp
 oracle).  On TPU backends the Pallas kernels run compiled; everywhere else
 (this container: CPU) they run in ``interpret=True`` mode, which executes
-the same kernel body for correctness validation.  ``use_pallas`` survives
-as a deprecated alias: ``False`` pins the pure-JAX direct formulation in
-``repro.core.direct_conv`` — same math, XLA-scheduled; this is also what
-the LM models use under ``vmap``/``scan`` where a fixed kernel grid would
-fight the batching transform — and ``True`` (the legacy default, kept)
-restricts the dispatcher to the Pallas family.
+the same kernel body for correctness validation.  ``impl="jnp"`` pins the
+pure-JAX direct formulation in ``repro.core.direct_conv`` — same math,
+XLA-scheduled; this is also what the LM models use under ``vmap``/``scan``
+where a fixed kernel grid would fight the batching transform.
 """
 from __future__ import annotations
 
@@ -26,8 +24,7 @@ from repro.core.conv_baselines import (Padding, conv_im2col, conv_lax)
 from repro.core.direct_conv import (apply_activation, bias_to_blocked,
                                     direct_conv_nhwc,
                                     direct_conv1d_depthwise)
-from repro.core.dispatch import (DispatchKey, Impl, PALLAS_IMPLS,
-                                 get_dispatcher)
+from repro.core.dispatch import DispatchKey, Impl, get_dispatcher
 from .conv1d_depthwise import conv1d_depthwise_blocked_pallas
 from .direct_conv2d import direct_conv2d_blocked_pallas
 
@@ -44,7 +41,6 @@ def direct_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
                   padding: Padding = "VALID", *,
                   bias: Optional[jnp.ndarray] = None,
                   activation: Optional[str] = None,
-                  use_pallas: Optional[bool] = True,
                   interpret: Optional[bool] = None,
                   dispatch=None, impl=None) -> jnp.ndarray:
     """Direct convolution, NHWC/HWIO interface, zero memory overhead inside.
@@ -55,15 +51,11 @@ def direct_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
     into the kernel epilogue (applied once, on the final Ci block's flush).
     Differentiable on every path (the Pallas kernels carry a custom VJP).
 
-    ``dispatch``/``impl`` route through the dispatch subsystem; the legacy
-    ``use_pallas`` knob keeps its old meaning as an alias (True — still the
-    default here — restricts to the Pallas family, False pins the jnp
-    path, None lets the dispatcher choose freely).
+    ``dispatch``/``impl`` route through the dispatch subsystem: ``impl``
+    forces one candidate ("window"/"stream"/"im2col"/"lax"/"jnp"), otherwise
+    the dispatcher resolves the key through its table and prior.
     """
-    override = impl
-    if override is None and use_pallas is False:
-        override = Impl.JNP
-    if override is not None and Impl(override) is Impl.JNP:
+    if impl is not None and Impl(impl) is Impl.JNP:
         return direct_conv_nhwc(x, w, stride, padding, bias, activation)
 
     n, hi, wi, ci = x.shape
@@ -72,8 +64,7 @@ def direct_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
     key = DispatchKey.make(n, hi, wi, ci, co, w.shape[0], w.shape[1],
                            stride, padding, None, TPU_V5E, "fwd")
     lay = L.BlockedConvLayout.choose(ci, co)
-    candidates = PALLAS_IMPLS if (override is None and use_pallas) else None
-    dec = disp.decide(key, override=override, candidates=candidates,
+    dec = disp.decide(key, override=impl,
                       cob=lay.cb_out, cib=lay.cb_in)
 
     if dec.impl is Impl.JNP:

@@ -14,17 +14,25 @@ from repro.core import layout as L
 __all__ = ["direct_conv2d_ref", "conv1d_depthwise_ref"]
 
 
-def direct_conv2d_ref(xb: jnp.ndarray, wb: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+def direct_conv2d_ref(xb: jnp.ndarray, wb: jnp.ndarray, stride: int = 1,
+                      groups: int = 1,
+                      dilation: tuple = (1, 1)) -> jnp.ndarray:
     """Oracle on blocked layouts via lax.conv on the un-blocked ones.
 
-    xb: [N, Ci/Cib, Hi, Wi, Cib]; wb: [Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob]
+    xb: [N, Ci/Cib, Hi, Wi, Cib]; wb: [Co/Cob, Cig/Cib, Hf, Wf, Cib, Cob]
     -> [N, Co/Cob, Ho, Wo, Cob]
+
+    The grouped-HWIO blocked weight un-blocks straight into lax's
+    ``feature_group_count`` convention ([Hf, Wf, Cig, Co] — the depthwise
+    layout's unit axes collapse to Cig = 1), so groups and dilation map
+    1:1 onto ``conv_general_dilated``.
     """
     x = L.blocked_to_nhwc(xb)
     w = L.blocked_to_hwio(wb)
     y = jax.lax.conv_general_dilated(
         x.astype(jnp.float32), w.astype(jnp.float32),
         window_strides=(stride, stride), padding="VALID",
+        rhs_dilation=dilation, feature_group_count=groups,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     cob = wb.shape[-1]
     return L.nhwc_to_blocked(y.astype(xb.dtype), cob)

@@ -29,7 +29,6 @@ __all__ = ["make_sharded_cnn_forward", "sharded_cnn_predict"]
 
 @functools.lru_cache(maxsize=None)
 def make_sharded_cnn_forward(model, mesh, axis: str = "data", *,
-                             use_pallas: Optional[bool] = False,
                              interpret: Optional[bool] = None,
                              dispatch=None, impl=None):
     """-> jitted ``f(params, x_nhwc) -> logits`` sharding the batch over
@@ -41,8 +40,7 @@ def make_sharded_cnn_forward(model, mesh, axis: str = "data", *,
     call, so layouts, tiling and the fused epilogue are per-shard — and so is
     conv routing: each shard's convs resolve their *per-shard* batch size
     through the dispatch subsystem (``dispatch`` pins a ``ConvDispatcher``,
-    ``impl`` forces one candidate, ``use_pallas`` is the deprecated alias;
-    DESIGN.md §12).  Routing happens at trace time, so the decision is baked
+    ``impl`` forces one candidate; DESIGN.md §12).  Routing happens at trace time, so the decision is baked
     into the compiled executable — re-tune, re-make to pick up new winners.
 
     Memoized on ``(model, mesh, axis, ...)`` — ``BlockedCNN`` and ``Mesh``
@@ -53,7 +51,7 @@ def make_sharded_cnn_forward(model, mesh, axis: str = "data", *,
     """
     def fwd(p, x):
         return model(p, x, dispatch=dispatch, impl=impl,
-                     use_pallas=use_pallas, interpret=interpret)
+                     interpret=interpret)
 
     sharded = shard_map(fwd, mesh, in_specs=(P(), P(axis)),
                         out_specs=P(axis))
@@ -61,7 +59,6 @@ def make_sharded_cnn_forward(model, mesh, axis: str = "data", *,
 
 
 def sharded_cnn_predict(model, params, x_nhwc, mesh, axis: str = "data", *,
-                        use_pallas: Optional[bool] = False,
                         interpret: Optional[bool] = None,
                         dispatch=None, impl=None):
     """Serve one (possibly ragged) batch: pad N up to a multiple of the data
@@ -73,7 +70,7 @@ def sharded_cnn_predict(model, params, x_nhwc, mesh, axis: str = "data", *,
         import jax.numpy as jnp
         x_nhwc = jnp.concatenate(
             [x_nhwc, jnp.zeros((pad,) + x_nhwc.shape[1:], x_nhwc.dtype)])
-    f = make_sharded_cnn_forward(model, mesh, axis, use_pallas=use_pallas,
+    f = make_sharded_cnn_forward(model, mesh, axis,
                                  interpret=interpret, dispatch=dispatch,
                                  impl=impl)
     logits = f(params, x_nhwc)

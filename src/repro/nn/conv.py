@@ -4,25 +4,28 @@
 ``[N, C/Cb, H, W, Cb]``; stacking layers therefore chains convolutions with
 zero NHWC round-trips — no ``nhwc_to_blocked``/``blocked_to_nhwc`` between
 layers, which is exactly the "layers compose in the blocked layout without
-repacking" claim.  Weights are *stored* in the paper's kernel layout
-``[Co/Cob, Ci/Cib, Hf, Wf, Cib, Cob]`` (no transform at call time), and bias
-as channel pencils ``[Co/Cob, Cob]``.  Bias + activation are fused into the
-convolution epilogue (DESIGN.md §5).
+repacking" claim.  Weights are *stored* in the paper's kernel layout —
+grouped-HWIO blocked ``[Co/Cob, Cig/Cbw, Hf, Wf, Cbw, Cob]`` with
+``Cig = Ci // groups`` (dense convs have ``Cig = Ci``; depthwise ones
+``Cig = 1``) — no transform at call time; bias as channel pencils
+``[Co/Cob, Cob]``.  Bias + activation are fused into the convolution
+epilogue (DESIGN.md §5).
+
+The full geometry vocabulary rides the layer: ``groups`` opens grouped and
+depthwise convolutions (``groups == ci == co``), ``dilation`` opens dilated
+taps, and a 1x1/stride-1/unpadded layer routes to the pointwise
+channel-matmul fast path — all in the same blocked layout, so a depthwise-
+separable block (``DepthwiseSeparableBlock``) chains its two convs with
+zero repacks like any other pair of layers (DESIGN.md §13).
 
 Execution routes through the conv dispatch subsystem (DESIGN.md §12): every
-call resolves a ``core.dispatch.DispatchKey`` (shape x dtype x machine x
+call resolves a ``core.dispatch.DispatchKey`` (geometry x dtype x machine x
 direction) through a ``ConvDispatcher`` — per-call override, then the
 persistent measured table, then the analytical blocking-model prior — and
-runs the winning ``Impl`` (window/streamed Pallas, im2col, lax, or the
-XLA-scheduled jnp oracle).  All candidates share one semantics and are
-fully differentiable; the Pallas family carries a custom VJP routing
-``jax.grad`` through the transposed-window dgrad and per-tile wgrad kernels
-(DESIGN.md §9), so training runs entirely inside the blocked layout too.
-
-``use_pallas`` survives as a thin deprecated alias: ``False`` pins the jnp
-oracle (the old default path), ``True`` restricts the dispatcher to the
-Pallas family — both now route *through* the dispatcher rather than around
-it.
+runs the winning ``Impl``.  All candidates share one semantics and are
+fully differentiable; the Pallas families carry custom VJPs routing
+``jax.grad`` through their dgrad/wgrad kernels (DESIGN.md §9), so training
+runs entirely inside the blocked layout too.
 """
 from __future__ import annotations
 
@@ -35,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.core.blocking import MachineModel, TPU_V5E
 from repro.core.conv_baselines import Padding
+from repro.core.convspec import as_dilation
 from repro.core.direct_conv import direct_conv_blocked
 from repro.core.dispatch import (ConvDispatcher, DispatchKey, Impl,
                                  KernelRoute, PALLAS_IMPLS, get_dispatcher,
@@ -43,7 +47,8 @@ from repro.core.layout import BlockedConvLayout, nhwc_to_blocked
 from repro.core.precision import Precision, resolve_precision
 from .module import ParamSpec
 
-__all__ = ["BlockedConv2D", "BlockedCNN", "blocked_global_avg_pool"]
+__all__ = ["BlockedConv2D", "DepthwiseSeparableBlock", "BlockedCNN",
+           "blocked_global_avg_pool"]
 
 
 def blocked_global_avg_pool(xb: jnp.ndarray) -> jnp.ndarray:
@@ -72,6 +77,9 @@ class BlockedConv2D:
     padding: Padding = "SAME"
     activation: Optional[str] = "relu"
     use_bias: bool = True
+    groups: int = 1                      # channel groups; groups == ci == co
+                                         # is the depthwise special case
+    dilation: Union[int, Tuple[int, int]] = 1
     lane: int = 128                      # channel pencil target (TPU: 128)
     hob: Optional[int] = None            # output rows per spatial tile
     wob: Optional[int] = None            # output cols per spatial tile
@@ -87,18 +95,38 @@ class BlockedConv2D:
                                          # (DESIGN.md §11): None lets the
                                          # dispatcher resolve window-vs-
                                          # stream per direction; True/False
-                                         # force one family
+                                         # force one family (dense only)
+
+    def __post_init__(self):
+        if self.ci % self.groups or self.co % self.groups:
+            raise ValueError(
+                f"groups={self.groups} must divide ci={self.ci} and "
+                f"co={self.co}")
+
+    @property
+    def cig(self) -> int:
+        """Per-group input channels — the stored weight's input extent."""
+        return self.ci // self.groups
 
     @property
     def layout(self) -> BlockedConvLayout:
-        return BlockedConvLayout.choose(self.ci, self.co, self.lane)
+        return BlockedConvLayout.choose(self.ci, self.co, self.lane,
+                                        groups=self.groups)
+
+    @property
+    def in_pencil(self) -> int:
+        return self.layout.cb_in
+
+    @property
+    def out_pencil(self) -> int:
+        return self.layout.cb_out
 
     def specs(self):
         lay = self.layout
-        fan_in = self.hf * self.wf * self.ci
+        fan_in = self.hf * self.wf * self.cig
         s = {"w": ParamSpec(
-            (self.co // lay.cb_out, self.ci // lay.cb_in, self.hf, self.wf,
-             lay.cb_in, lay.cb_out),
+            (self.co // lay.cb_out, self.cig // lay.cb_weight, self.hf,
+             self.wf, lay.cb_weight, lay.cb_out),
             (None,) * 6, init="normal", scale=1.0 / math.sqrt(fan_in))}
         if self.use_bias:
             s["b"] = ParamSpec((self.co // lay.cb_out, lay.cb_out),
@@ -108,7 +136,6 @@ class BlockedConv2D:
     def __call__(self, p, xb: jnp.ndarray, *,
                  dispatch: Optional[ConvDispatcher] = None,
                  impl: Union[Impl, str, None] = None,
-                 use_pallas: Optional[bool] = None,
                  interpret: Optional[bool] = None,
                  precision: Union[str, Precision, None] = None,
                  stream: Optional[bool] = None) -> jnp.ndarray:
@@ -117,12 +144,11 @@ class BlockedConv2D:
         ``dispatch`` supplies the :class:`ConvDispatcher` (default: the
         process-wide one over the checked-in table); ``impl`` is the
         per-call override that beats every table entry (tests and forced
-        paths).  The legacy knobs are thin aliases: ``use_pallas=False``
-        pins the jnp oracle, ``use_pallas=True`` restricts the candidates
-        to the Pallas family, and ``stream`` (or the layer field) forces
-        window-vs-stream inside that family.  Every candidate is
-        differentiable — the Pallas impls through their custom VJP, whose
-        dgrad/wgrad directions the dispatcher routes independently.
+        paths — ``impl="jnp"`` pins the oracle, ``impl="window"`` a Pallas
+        family, and so on).  ``stream`` (or the layer field) forces
+        window-vs-stream inside the dense Pallas family.  Every candidate
+        is differentiable — the Pallas impls through their custom VJPs,
+        whose dgrad/wgrad directions the dispatcher routes independently.
 
         ``precision`` overrides the layer's policy for this call (the
         ``BlockedCNN``/``TrainSettings`` pass-down); params stay f32
@@ -135,15 +161,8 @@ class BlockedConv2D:
         bias = p["b"] if self.use_bias else None
         stream = self.stream if stream is None else stream
 
-        override, candidates = impl, None
-        if override is None and use_pallas is not None:
-            if use_pallas:
-                candidates = PALLAS_IMPLS
-            else:
-                override = Impl.JNP
-
         decision_impl, route = Impl.JNP, None
-        if override is not None and Impl(override) is Impl.JNP:
+        if impl is not None and Impl(impl) is Impl.JNP:
             decision_impl = Impl.JNP        # no dispatcher consult needed
         else:
             disp = dispatch if dispatch is not None else get_dispatcher()
@@ -151,8 +170,9 @@ class BlockedConv2D:
             lay = self.layout
             key = DispatchKey.make(
                 n, hi, wi, self.ci, self.co, self.hf, self.wf, self.stride,
-                self.padding, pol, self.machine, "fwd")
-            dec = disp.decide(key, override=override, candidates=candidates,
+                self.padding, pol, self.machine, "fwd",
+                groups=self.groups, dilation=self.dilation)
+            dec = disp.decide(key, override=impl,
                               cob=lay.cb_out, cib=lay.cb_in,
                               hob=self.hob, wob=self.wob)
             decision_impl = dec.impl
@@ -176,14 +196,83 @@ class BlockedConv2D:
             return direct_conv_blocked(xb, p["w"], self.stride, self.padding,
                                        bias, self.activation,
                                        hob=self.hob, wob=self.wob,
-                                       precision=pol)
+                                       precision=pol, groups=self.groups,
+                                       dilation=self.dilation)
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         return run_conv_impl(decision_impl, xb, p["w"], bias,
                              stride=self.stride, padding=self.padding,
                              activation=self.activation, precision=pol,
                              machine=self.machine, interpret=interpret,
-                             hob=self.hob, wob=self.wob, route=route)
+                             hob=self.hob, wob=self.wob, route=route,
+                             dilation=as_dilation(self.dilation))
+
+
+@dataclasses.dataclass(frozen=True)
+class DepthwiseSeparableBlock:
+    """Depthwise conv + pointwise (1x1) conv, chained in the blocked layout.
+
+    The MobileNet factorization on the paper's layout: the depthwise conv
+    filters spatially per channel (``groups == ci``, weight ``Cig = 1``) and
+    the pointwise conv mixes channels (1x1, the channel-matmul fast path).
+    Both legs share the full-lane channel pencil, so the block's interior
+    boundary — like its exterior ones — is repack-free; the dispatcher
+    routes each leg to its specialized kernel.  Activation convention
+    follows MobileNet: nonlinearity after each of the two convs.
+    """
+
+    ci: int
+    co: int
+    hf: int = 3
+    wf: int = 3
+    stride: int = 1
+    padding: Padding = "SAME"
+    activation: Optional[str] = "relu"
+    use_bias: bool = True
+    dilation: Union[int, Tuple[int, int]] = 1
+    lane: int = 128
+    precision: Union[str, Precision] = "f32"
+    machine: MachineModel = TPU_V5E
+
+    @property
+    def depthwise(self) -> BlockedConv2D:
+        return BlockedConv2D(
+            ci=self.ci, co=self.ci, hf=self.hf, wf=self.wf,
+            stride=self.stride, padding=self.padding,
+            activation=self.activation, use_bias=self.use_bias,
+            groups=self.ci, dilation=self.dilation, lane=self.lane,
+            precision=self.precision, machine=self.machine)
+
+    @property
+    def pointwise(self) -> BlockedConv2D:
+        return BlockedConv2D(
+            ci=self.ci, co=self.co, hf=1, wf=1, stride=1, padding="VALID",
+            activation=self.activation, use_bias=self.use_bias,
+            lane=self.lane, precision=self.precision, machine=self.machine)
+
+    @property
+    def in_pencil(self) -> int:
+        return self.depthwise.in_pencil
+
+    @property
+    def out_pencil(self) -> int:
+        return self.pointwise.out_pencil
+
+    def specs(self):
+        return {"dw": self.depthwise.specs(), "pw": self.pointwise.specs()}
+
+    def __call__(self, p, xb: jnp.ndarray, *,
+                 dispatch: Optional[ConvDispatcher] = None,
+                 impl: Union[Impl, str, None] = None,
+                 interpret: Optional[bool] = None,
+                 precision: Union[str, Precision, None] = None,
+                 stream: Optional[bool] = None) -> jnp.ndarray:
+        h = self.depthwise(p["dw"], xb, dispatch=dispatch, impl=impl,
+                           interpret=interpret, precision=precision,
+                           stream=stream)
+        return self.pointwise(p["pw"], h, dispatch=dispatch, impl=impl,
+                              interpret=interpret, precision=precision,
+                              stream=stream)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,7 +281,9 @@ class BlockedCNN:
 
     NHWC images are blocked exactly once at entry; every layer boundary after
     that stays in ``[N, C/Cb, H, W, Cb]`` — zero pack/unpack traffic between
-    layers (``benchmarks/cnn_zoo.py`` accounts the eliminated bytes).
+    layers (``benchmarks/cnn_zoo.py`` accounts the eliminated bytes).  Layers
+    are anything with the blocked-conv calling convention: ``BlockedConv2D``
+    or ``DepthwiseSeparableBlock`` mix freely.
     """
 
     convs: Tuple[BlockedConv2D, ...]
@@ -202,9 +293,9 @@ class BlockedCNN:
         for a, b in zip(self.convs, self.convs[1:]):
             if a.co != b.ci:
                 raise ValueError(f"conv chain breaks: co={a.co} -> ci={b.ci}")
-            if a.layout.cb_out != b.layout.cb_in:
+            if a.out_pencil != b.in_pencil:
                 raise ValueError(
-                    f"pencil mismatch: {a.layout.cb_out} -> {b.layout.cb_in}; "
+                    f"pencil mismatch: {a.out_pencil} -> {b.in_pencil}; "
                     "layers must agree on the channel block to chain")
 
     def specs(self):
@@ -216,7 +307,6 @@ class BlockedCNN:
     def __call__(self, p, x_nhwc: jnp.ndarray, *,
                  dispatch: Optional[ConvDispatcher] = None,
                  impl: Union[Impl, str, None] = None,
-                 use_pallas: Optional[bool] = None,
                  interpret: Optional[bool] = None,
                  precision: Union[str, Precision, None] = None,
                  stream: Optional[bool] = None) -> jnp.ndarray:
@@ -227,13 +317,12 @@ class BlockedCNN:
         layers *chain in bf16* (each conv emits its operand dtype), GAP
         pools in f32, and the head matmul casts its f32 master to the
         feature dtype; logits come back in the compute dtype and the loss
-        up-casts them once.  ``use_pallas``/``stream`` (if given) override
-        every conv's routing the same way."""
+        up-casts them once.  ``stream`` (if given) overrides every conv's
+        routing the same way."""
         # the single layout transform of the whole forward pass
-        h = nhwc_to_blocked(x_nhwc, self.convs[0].layout.cb_in)
+        h = nhwc_to_blocked(x_nhwc, self.convs[0].in_pencil)
         for i, conv in enumerate(self.convs):
             h = conv(p[f"conv{i}"], h, dispatch=dispatch, impl=impl,
-                     use_pallas=use_pallas, interpret=interpret,
-                     precision=precision, stream=stream)
+                     interpret=interpret, precision=precision, stream=stream)
         feat = blocked_global_avg_pool(h)
         return feat @ p["head"].astype(feat.dtype)

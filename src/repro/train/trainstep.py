@@ -25,22 +25,17 @@ class TrainSettings:
     unroll: bool = False             # unroll the layer scan (cost extraction)
     fused_loss: bool = False         # chunked CE: never materialize logits
     loss_chunks: int = 8
-    use_pallas: Optional[bool] = False
-                                     # conv models — deprecated alias over
-                                     # the dispatch subsystem (DESIGN.md
-                                     # §12): True restricts routing to the
-                                     # Pallas custom-VJP kernel family,
-                                     # False pins the XLA-scheduled jnp
-                                     # oracle (the legacy default), None
-                                     # lets the dispatcher choose per layer
     dispatch: Optional[Any] = None   # conv models: the ConvDispatcher to
                                      # route every conv through (None ->
                                      # the process-wide one over the
                                      # checked-in table); per-run impl
                                      # override via ``impl``
     impl: Optional[str] = None       # conv models: force one Impl for every
-                                     # conv ("window"/"stream"/"im2col"/
-                                     # "lax"/"jnp") — beats table and prior
+                                     # conv ("window"/"stream"/"depthwise"/
+                                     # "grouped"/"pointwise"/"im2col"/"lax"/
+                                     # "jnp") — beats table and prior;
+                                     # "jnp" pins the XLA-scheduled oracle
+                                     # (the legacy default path)
     precision: Optional[str] = None  # conv models: mixed-precision policy
                                      # ("f32" | "bf16") — bf16 operands/
                                      # residuals, f32 accumulators + master
@@ -52,15 +47,15 @@ class TrainSettings:
 
 def forward(model, params, batch: Dict[str, Any], *, train=True,
             remat="full", chunk=2048, unroll=False, return_hidden=False,
-            use_pallas=False, precision=None, dispatch=None, impl=None):
+            precision=None, dispatch=None, impl=None):
     """Uniform forward over model families."""
     if isinstance(model, BlockedCNN):
         # blocked-layout image classifier: NHWC batch in, class logits out;
         # every conv (fwd AND bwd) routes through the dispatch subsystem
-        # (dispatch/impl/use_pallas pass straight down, DESIGN.md §12);
-        # precision sets the operand/residual dtypes (params stay f32)
+        # (dispatch/impl pass straight down, DESIGN.md §12); precision sets
+        # the operand/residual dtypes (params stay f32)
         return (model(params, batch["images"], dispatch=dispatch, impl=impl,
-                      use_pallas=use_pallas, precision=precision),
+                      precision=precision),
                 jnp.zeros((), jnp.float32))
     if isinstance(model, EncDec):
         return model(params, batch["tokens"], batch["frames"], train=train,
@@ -78,7 +73,6 @@ def make_loss_fn(model, cfg: Optional[ModelConfig], settings: TrainSettings):
         # the model); cross_entropy over a singleton "sequence" axis
         def conv_loss_fn(params, batch):
             logits, aux = forward(model, params, batch, train=True,
-                                  use_pallas=settings.use_pallas,
                                   precision=settings.precision,
                                   dispatch=settings.dispatch,
                                   impl=settings.impl)
@@ -133,9 +127,8 @@ def make_train_step(model, cfg: Optional[ModelConfig], optimizer: AdamW,
     Works for LM/EncDec token models and for ``BlockedCNN`` image
     classifiers (``cfg`` may be None there; batches carry ``images`` +
     ``targets``, and every conv routes through the dispatch subsystem —
-    ``settings.dispatch``/``impl``/``use_pallas``, DESIGN.md §12 — so
-    training through the Pallas custom-VJP kernel family includes gradient
-    accumulation).
+    ``settings.dispatch``/``impl``, DESIGN.md §12 — so training through the
+    Pallas custom-VJP kernel families includes gradient accumulation).
     """
     loss_fn = make_loss_fn(model, cfg, settings)
     grad_fn = jax.grad(loss_fn, has_aux=True)

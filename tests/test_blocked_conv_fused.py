@@ -84,6 +84,61 @@ def test_tiled_fused_pallas_vs_lax(case, stride, padding, use_bias, activation):
                                np.asarray(want), rtol=2e-4, atol=2e-4)
 
 
+ZOO_SWEEP = [
+    # hi, wi, ci, co, hf, wf, groups, dilation, lane
+    (10, 10, 8, 8, 3, 3, 8, 1, 8),     # depthwise
+    (10, 10, 8, 8, 3, 3, 8, 2, 8),     # dilated depthwise
+    (11, 9, 8, 12, 3, 3, 4, 1, 4),     # grouped (cig=2, cog=3)
+    (9, 9, 6, 10, 3, 3, 2, 2, 4),      # dilated grouped
+    (8, 9, 6, 8, 1, 1, 1, 1, 4),       # pointwise 1x1
+    (10, 10, 4, 8, 3, 3, 1, 2, 4),     # dense dilated (window kernel taps)
+]
+
+
+@pytest.mark.parametrize("case", ZOO_SWEEP)
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_kernel_zoo_vs_lax(case, stride, padding):
+    """The grouped/depthwise/dilated/1x1 geometry axes against the XLA
+    grouped-conv oracle, through both front doors: the NHWC jnp formulation
+    and the routed blocked path with its specialized Pallas kernel forced
+    (interpret mode) wherever the geometry has one."""
+    from repro.core.conv_baselines import conv_lax
+    from repro.core.direct_conv import direct_conv_nhwc
+
+    hi, wi, ci, co, hf, wf, groups, dil, lane = case
+    rng = np.random.default_rng(
+        zlib.crc32(repr((case, stride, padding)).encode()))
+    x = jnp.asarray(rng.normal(size=(2, hi, wi, ci)).astype(np.float32))
+    w = jnp.asarray(
+        rng.normal(size=(hf, wf, ci // groups, co)).astype(np.float32))
+    want = np.asarray(conv_lax(x, w, stride, padding, groups=groups,
+                               dilation=dil))
+
+    got = direct_conv_nhwc(x, w, stride, padding, lane=lane, groups=groups,
+                           dilation=dil)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+    layer = BlockedConv2D(ci=ci, co=co, hf=hf, wf=wf, stride=stride,
+                          padding=padding, activation=None, use_bias=False,
+                          groups=groups, dilation=dil, lane=lane)
+    lay = layer.layout
+    xb = L.nhwc_to_blocked(x, lay.cb_in)
+    wb = L.hwio_to_blocked(w, lay.cb_weight, lay.cb_out)
+
+    if groups > 1 and groups == ci == co:
+        spec_impl = "depthwise"
+    elif groups > 1:
+        spec_impl = "grouped"
+    elif hf == wf == 1 and stride == 1:
+        spec_impl = "pointwise"           # 1x1 pads are 0 under SAME too
+    else:
+        spec_impl = "window"              # dense (incl. dilated taps)
+    got2 = layer({"w": wb}, xb, impl=spec_impl, interpret=True)
+    np.testing.assert_allclose(np.asarray(L.blocked_to_nhwc(got2, co)),
+                               want, rtol=2e-4, atol=2e-4)
+
+
 def test_multiple_spatial_tiles_actually_used():
     """The sweep's explicit hob/wob really split the output into several
     tiles, and choose_blocking returns divisors of Ho/Wo under pressure."""
@@ -155,8 +210,8 @@ def test_blocked_cnn_pallas_path_matches_jax_path():
     p = init_tree(model.specs(), jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(2, 9, 9, 4)).astype(np.float32))
-    a = model(p, x, use_pallas=False)
-    b = model(p, x, use_pallas=True, interpret=True)
+    a = model(p, x, impl="jnp")
+    b = model(p, x, impl="window", interpret=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                rtol=1e-5, atol=1e-5)
 

@@ -53,10 +53,10 @@ def test_sharded_cnn_matches_single_device_pallas_path():
     """The Pallas kernel runs inside each shard with per-shard blocked
     layouts (interpret mode on CPU), including an explicit hob/wob layer."""
     run_probe("""
-f = make_sharded_cnn_forward(model, mesh, "data", use_pallas=True,
+f = make_sharded_cnn_forward(model, mesh, "data", impl="window",
                              interpret=True)
 got = np.asarray(f(p, x))
-want = np.asarray(model(p, x, use_pallas=True, interpret=True))
+want = np.asarray(model(p, x, impl="window", interpret=True))
 np.testing.assert_array_equal(got, want)
 print("OK")
 """)
@@ -68,5 +68,44 @@ got = np.asarray(sharded_cnn_predict(model, p, x[:3], mesh))
 want = np.asarray(model(p, x[:3]))
 assert got.shape == (3, 5), got.shape
 np.testing.assert_array_equal(got, want)
+print("OK")
+""")
+
+
+def test_sharded_separable_cnn_serves_kernel_zoo_zero_repack():
+    """The depthwise-separable model serves through conv_serve with every
+    leg on its specialized Pallas kernel (prior-tier dispatcher) and zero
+    interior repacks: each shard blocks its sub-batch exactly once."""
+    run_probe("""
+from repro.core import layout as LL
+from repro.core.dispatch import ConvDispatcher
+from repro.nn.conv import DepthwiseSeparableBlock
+sep = BlockedCNN(convs=(
+    DepthwiseSeparableBlock(ci=8, co=16, lane=8),
+    DepthwiseSeparableBlock(ci=16, co=32, stride=2, lane=8)), n_classes=5)
+ps = init_tree(sep.specs(), jax.random.PRNGKey(1))
+want = np.asarray(sep(ps, x, impl="jnp"))
+
+calls = {"pack": 0, "unpack": 0}
+orig_pack = LL.nhwc_to_blocked
+def counting_pack(*a, **k):
+    calls["pack"] += 1
+    return orig_pack(*a, **k)
+def counting_unpack(*a, **k):
+    calls["unpack"] += 1
+    raise AssertionError("blocked serve path must never unpack")
+import repro.nn.conv as NN
+NN.nhwc_to_blocked = counting_pack
+LL.blocked_to_nhwc = counting_unpack
+
+# empty (prior-tier) dispatcher: the geometry-aware prior routes the
+# depthwise legs to the depthwise kernel and the 1x1 legs to the
+# pointwise kernel, even in interpret mode on CPU
+f = make_sharded_cnn_forward(sep, mesh, "data",
+                             dispatch=ConvDispatcher(), interpret=True)
+got = np.asarray(f(ps, x))
+np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+assert calls["pack"] == 1, calls       # traced once, blocked once per trace
+assert calls["unpack"] == 0, calls
 print("OK")
 """)

@@ -213,8 +213,9 @@ def test_deep_pencil_cnn_train_step_through_fallback():
     opt = AdamW(lr=lambda s: jnp.float32(1e-2), weight_decay=0.0)
     outs = {}
     for pallas in (False, True):
-        step = make_train_step(model, None, opt,
-                               TrainSettings(use_pallas=pallas))
+        step = make_train_step(
+            model, None, opt,
+            TrainSettings(impl="stream" if pallas else "jnp"))
         pp, _, _ = jax.jit(step)(params, opt.init(params), batch)
         outs[pallas] = np.asarray(jax.tree.leaves(pp)[0])
     np.testing.assert_allclose(outs[True], outs[False], rtol=2e-4, atol=1e-5)

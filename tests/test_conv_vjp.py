@@ -8,7 +8,7 @@ convolution.
   tiles;
 * the backward kernels honor the backward blocking model: a small VMEM
   budget forces multi-tile dgrad/wgrad grids that still match the oracle;
-* ``BlockedConv2D(use_pallas=True)`` is differentiable, and a
+* ``BlockedConv2D(impl="window")`` is differentiable, and a
   ``make_train_step`` gradient-accumulation step through the Pallas path
   equals the jnp path / the unaccumulated step;
 * ``direct_conv_nhwc``'s gradient is the blocked path's gradient bit for
@@ -192,7 +192,7 @@ def test_backward_kernels_directly_match_jnp_vjp():
 
 
 def test_blocked_conv2d_layer_trains_through_pallas():
-    """jax.grad through BlockedConv2D(use_pallas=True) == the jnp path."""
+    """jax.grad through BlockedConv2D(impl="window") == the jnp path."""
     conv = BlockedConv2D(ci=4, co=8, stride=2, padding="SAME",
                          activation="relu", lane=4)
     p = init_tree(conv.specs(), jax.random.PRNGKey(0))
@@ -200,12 +200,94 @@ def test_blocked_conv2d_layer_trains_through_pallas():
     xb = L.nhwc_to_blocked(
         jnp.asarray(rng.normal(size=(2, 9, 9, 4)).astype(np.float32)), 4)
 
-    def loss(p, use_pallas):
-        out = conv(p, xb, use_pallas=use_pallas, interpret=True)
+    def loss(p, impl):
+        out = conv(p, xb, impl=impl, interpret=True)
         return jnp.sum(out * out)
 
-    gp = jax.grad(loss)(p, True)
-    gj = jax.grad(loss)(p, False)
+    gp = jax.grad(loss)(p, "window")
+    gj = jax.grad(loss)(p, "jnp")
+    for a, b in zip(jax.tree.leaves(gp), jax.tree.leaves(gj)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# hi, wi, ci, co, hf, wf, groups, dilation, lane — the kernel-zoo geometry
+# axes (mirrors ZOO_SWEEP in test_blocked_conv_fused.py, backward side)
+ZOO_VJP = [
+    (10, 10, 8, 8, 3, 3, 8, 1, 8),      # depthwise
+    (10, 10, 8, 8, 3, 3, 8, 2, 8),      # dilated depthwise
+    (11, 9, 8, 12, 3, 3, 4, 1, 4),     # grouped (cig=2, cog=3)
+    (9, 9, 6, 10, 3, 3, 2, 2, 4),      # dilated grouped
+    (8, 9, 6, 8, 1, 1, 1, 1, 4),       # pointwise 1x1
+    (10, 10, 4, 8, 3, 3, 1, 2, 4),     # dense dilated (window kernel taps)
+]
+
+
+def _zoo_impl(hf, wf, ci, co, groups, stride):
+    if groups > 1 and groups == ci == co:
+        return "depthwise"
+    if groups > 1:
+        return "grouped"
+    if hf == wf == 1 and stride == 1:
+        return "pointwise"                # 1x1 pads are 0 under SAME too
+    return "window"
+
+
+@pytest.mark.parametrize("case", ZOO_VJP)
+@pytest.mark.parametrize("stride", [1, 2])
+def test_zoo_grads_match_jnp_path(case, stride):
+    """jax.grad through every specialized kernel's custom VJP — depthwise,
+    grouped, pointwise, dilated window — equals the jnp blocked path, for
+    the parameter tree AND the blocked input."""
+    hi, wi, ci, co, hf, wf, groups, dil, lane = case
+    impl = _zoo_impl(hf, wf, ci, co, groups, stride)
+    conv = BlockedConv2D(ci=ci, co=co, hf=hf, wf=wf, stride=stride,
+                         padding="SAME", activation="relu", groups=groups,
+                         dilation=dil, lane=lane)
+    p = init_tree(conv.specs(), jax.random.PRNGKey(3))
+    rng = np.random.default_rng(zlib.crc32(repr((case, stride)).encode()))
+    xb = L.nhwc_to_blocked(
+        jnp.asarray(rng.normal(size=(2, hi, wi, ci)).astype(np.float32)),
+        conv.layout.cb_in)
+
+    def loss(p_, xb_, impl_):
+        out = conv(p_, xb_, impl=impl_, interpret=True)
+        return jnp.sum(out * out)
+
+    gp = jax.grad(loss, argnums=(0, 1))(p, xb, impl)
+    gj = jax.grad(loss, argnums=(0, 1))(p, xb, "jnp")
+    for a, b in zip(jax.tree.leaves(gp), jax.tree.leaves(gj)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("case_impl", [
+    ((16, 16, 8, 8, 3, 3, 8, 2, 8), "depthwise"),
+    ((16, 16, 8, 8, 1, 1, 1, 1, 8), "pointwise"),
+    ((16, 16, 8, 8, 3, 3, 2, 1, 4), "grouped"),
+])
+def test_zoo_backward_tiles_under_vmem_pressure(case_impl):
+    """The zoo kernels' backward choosers engage under the TINY budget
+    (multi-tile dgrad/wgrad grids at 16x16 — the dense case above proves
+    these extents misfit a single tile) and the grads still match jnp."""
+    case, impl = case_impl
+    hi, wi, ci, co, hf, wf, groups, dil, lane = case
+    conv = BlockedConv2D(ci=ci, co=co, hf=hf, wf=wf, stride=1,
+                         padding="SAME", activation=None, use_bias=False,
+                         groups=groups, dilation=dil, lane=lane,
+                         machine=TINY)
+    p = init_tree(conv.specs(), jax.random.PRNGKey(4))
+    rng = np.random.default_rng(zlib.crc32(repr(case_impl).encode()))
+    xb = L.nhwc_to_blocked(
+        jnp.asarray(rng.normal(size=(2, hi, wi, ci)).astype(np.float32)),
+        conv.layout.cb_in)
+
+    def loss(p_, xb_, impl_):
+        out = conv(p_, xb_, impl=impl_, interpret=True)
+        return jnp.sum(out * out)
+
+    gp = jax.grad(loss, argnums=(0, 1))(p, xb, impl)
+    gj = jax.grad(loss, argnums=(0, 1))(p, xb, "jnp")
     for a, b in zip(jax.tree.leaves(gp), jax.tree.leaves(gj)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-4, atol=2e-4)
@@ -233,7 +315,8 @@ def test_train_step_grad_accum_through_pallas():
         for accum in (1, 2):
             step = make_train_step(
                 model, None, opt,
-                TrainSettings(accum_steps=accum, use_pallas=pallas))
+                TrainSettings(accum_steps=accum,
+                              impl="window" if pallas else "jnp"))
             pp, _, _ = jax.jit(step)(p, opt.init(p), batch)
             outs[(pallas, accum)] = np.asarray(jax.tree.leaves(pp)[0])
     np.testing.assert_allclose(outs[(True, 2)], outs[(True, 1)],
@@ -257,8 +340,9 @@ def test_short_training_same_loss_both_paths():
     for pallas in (False, True):
         p = init_tree(model.specs(), jax.random.PRNGKey(0))
         st = opt.init(p)
-        step = jax.jit(make_train_step(model, None, opt,
-                                       TrainSettings(use_pallas=pallas)))
+        step = jax.jit(make_train_step(
+            model, None, opt,
+            TrainSettings(impl="window" if pallas else "jnp")))
         rng = np.random.default_rng(1)          # same batches for both
         ls = []
         for _ in range(3):

@@ -1,0 +1,198 @@
+"""ConvSpec + the kernel zoo's routing contracts (ISSUE 7, DESIGN.md §13).
+
+* ``ConvSpec`` is frozen/hashable, normalizes SAME against the *dilated*
+  filter extent, exposes the structural predicates the dispatcher routes
+  on, and rejects malformed geometry loudly;
+* the layout choosers are per-group aware: a grouped pencil never
+  straddles a group of the block-diagonal weight and utilization is
+  judged against what the group *can* fill; depthwise weights collapse to
+  ``cb_w=1`` while the feature maps keep the full-lane pencil;
+* ``candidates_for`` leads with the specialized impl for each geometry
+  class and keeps the dense table verbatim;
+* persistence: schema-1 tables auto-migrate (re-keyed with ``g1d1.1``),
+  unknown schemas fail with the schema named, and the checked-in table
+  covers every CI shape (the ``fig_conv`` x ``check_regression`` gate's
+  ground truth);
+* ``explain()`` acceptance: a fresh (prior-tier) dispatcher selects the
+  depthwise / grouped / pointwise kernels for the zoo CI shapes.
+"""
+import json
+
+import pytest
+
+from repro.core.blocking import TPU_V5E
+from repro.core.convspec import ConvSpec, as_dilation
+from repro.core.dispatch import (ConvDispatcher, DispatchKey, Impl,
+                                 candidates_for, default_table_path)
+from repro.core.layout import BlockedConvLayout, choose_pencil
+
+
+# ---------------------------------------------------------------------------
+# ConvSpec
+# ---------------------------------------------------------------------------
+
+def test_convspec_frozen_hashable_dict_key():
+    import dataclasses
+    a = ConvSpec.make(1, 12, 12, 8, 8, 3, 3, padding="SAME", groups=8)
+    b = ConvSpec.make(1, 12, 12, 8, 8, 3, 3, padding="SAME", groups=8)
+    assert a == b and hash(a) == hash(b)
+    assert {a: "x"}[b] == "x"
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.groups = 2
+
+
+def test_convspec_same_pads_use_dilated_extent():
+    s = ConvSpec.make(1, 12, 12, 4, 8, 3, 3, padding="SAME", dilation=2)
+    assert s.hf_eff == s.wf_eff == 5            # (3-1)*2 + 1
+    assert s.pads == ((2, 2), (2, 2))           # shape-preserving for d=2
+    assert (s.ho, s.wo) == (12, 12)
+    dense = ConvSpec.make(1, 12, 12, 4, 8, 3, 3, padding="SAME")
+    assert dense.pads == ((1, 1), (1, 1))
+
+
+def test_convspec_predicates():
+    dw = ConvSpec.make(1, 8, 8, 16, 16, 3, 3, groups=16)
+    assert dw.is_depthwise and dw.is_grouped and not dw.is_pointwise
+    assert dw.cig == 1 and dw.cog == 1
+    grp = ConvSpec.make(1, 8, 8, 8, 12, 3, 3, groups=4)
+    assert grp.is_grouped and not grp.is_depthwise
+    assert grp.cig == 2 and grp.cog == 3
+    pw = ConvSpec.make(1, 8, 8, 6, 8, 1, 1, padding="SAME")
+    assert pw.is_pointwise                       # SAME on 1x1 is zero pads
+    assert not ConvSpec.make(1, 8, 8, 6, 8, 1, 1, stride=2).is_pointwise
+    assert not ConvSpec.make(1, 8, 8, 6, 8, 3, 3).is_pointwise
+    # channel multiplier != 1 is grouped, not depthwise
+    assert not ConvSpec.make(1, 8, 8, 8, 16, 3, 3, groups=8).is_depthwise
+
+
+def test_convspec_validation_errors():
+    with pytest.raises(ValueError, match="groups"):
+        ConvSpec.make(1, 8, 8, 6, 8, 3, 3, groups=4)     # 4 !| 6
+    with pytest.raises(ValueError, match="groups"):
+        ConvSpec.make(1, 8, 8, 8, 8, 3, 3, groups=0)
+    with pytest.raises(ValueError, match="dilation"):
+        ConvSpec.make(1, 8, 8, 4, 8, 3, 3, dilation=0)
+    with pytest.raises(ValueError, match="dilation"):
+        as_dilation((1, -2))
+
+
+def test_convspec_direction_swap_and_flops():
+    s = ConvSpec.make(1, 8, 8, 8, 12, 3, 3, groups=4, dilation=2)
+    t = s.with_direction_swap()
+    assert (t.ci, t.co) == (s.co, s.ci)
+    assert t.groups == 4 and t.dilation == (2, 2)
+    # grouped MACs scale by cig: 1/groups of the dense contraction
+    dense = ConvSpec.make(1, 8, 8, 8, 12, 3, 3, dilation=2)
+    assert s.flops() * 4 == dense.flops()
+    assert s.weight_elems() * 4 == dense.weight_elems()
+
+
+# ---------------------------------------------------------------------------
+# per-group layout choosers
+# ---------------------------------------------------------------------------
+
+def test_choose_pencil_per_group_utilization(recwarn):
+    # per-group divisor: 8 channels / 2 groups -> pencil 4, and 4/4 lanes
+    # of the *achievable* width is full utilization — no warning
+    assert choose_pencil(8, 128, groups=2) == 4
+    assert not [w for w in recwarn if issubclass(w.category, UserWarning)]
+
+
+def test_choose_pencil_per_group_warns_on_degenerate():
+    with pytest.warns(UserWarning, match="lanes"):
+        assert choose_pencil(26, 8, groups=2) == 1       # 13 prime, 1/8
+    with pytest.raises(ValueError, match="groups"):
+        choose_pencil(9, 128, groups=2)
+
+
+def test_layout_depthwise_collapses_weight_pencil():
+    lay = BlockedConvLayout.choose(16, 16, lane=8, groups=16)
+    assert (lay.cb_in, lay.cb_out, lay.cb_weight) == (8, 8, 1)
+    grp = BlockedConvLayout.choose(8, 12, lane=128, groups=4)
+    assert (grp.cb_in, grp.cb_out, grp.cb_weight) == (2, 3, 2)
+
+
+# ---------------------------------------------------------------------------
+# candidate sets per geometry class
+# ---------------------------------------------------------------------------
+
+def _key(**kw):
+    kw.setdefault("padding", "SAME")
+    return DispatchKey.make(1, 12, 12, kw.pop("ci", 8), kw.pop("co", 8),
+                            kw.pop("hf", 3), kw.pop("wf", 3),
+                            kw.pop("stride", 1), kw.pop("padding"),
+                            direction=kw.pop("direction", "fwd"), **kw)
+
+
+def test_candidates_lead_with_specialized_impl():
+    assert candidates_for(_key(groups=8))[0] is Impl.DEPTHWISE
+    assert candidates_for(_key(groups=2))[0] is Impl.GROUPED
+    assert candidates_for(_key(hf=1, wf=1))[0] is Impl.POINTWISE
+    assert candidates_for(_key(dilation=2))[0] is Impl.WINDOW
+    # dense non-pointwise: the ISSUE-6 table verbatim (stream/im2col live)
+    dense = candidates_for(_key())
+    assert dense[0] is not Impl.DEPTHWISE and Impl.STREAM in dense
+    # non-dense backward sets keep only the always-feasible jnp reference
+    bwd = candidates_for(_key(groups=8, direction="dgrad"))
+    assert bwd == (Impl.DEPTHWISE, Impl.JNP)
+
+
+# ---------------------------------------------------------------------------
+# persistence: migration, unknown schema, checked-in coverage
+# ---------------------------------------------------------------------------
+
+def test_schema1_table_auto_migrates(tmp_path):
+    key = DispatchKey.make(1, 12, 12, 4, 8, 3, 3, 1, "SAME")
+    legacy_key = {k: v for k, v in key.to_json().items()
+                  if k not in ("groups", "dilation")}
+    p = tmp_path / "v1.json"
+    p.write_text(json.dumps({"schema": 1, "entries": {
+        "fwd|old-ident": {"key": legacy_key, "impl": "window",
+                          "source": "measured",
+                          "times_us": {"window": 1.0}}}}))
+    disp = ConvDispatcher.from_file(p)
+    assert "g1d1.1" in key.ident
+    entry = disp.table[key.ident]                # re-keyed by schema-2 ident
+    assert entry["key"]["groups"] == 1
+    assert entry["key"]["dilation"] == [1, 1]
+    assert entry["times_us"] == {"window": 1.0}  # evidence rides along
+
+
+def test_unknown_schema_fails_with_schema_named(tmp_path):
+    p = tmp_path / "v3.json"
+    p.write_text(json.dumps({"schema": 3, "entries": {}}))
+    with pytest.raises(ValueError, match="schema 3"):
+        ConvDispatcher.from_file(p)
+
+
+def test_checked_in_table_covers_ci_shapes():
+    import importlib
+    import os
+    import sys
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if repo not in sys.path:
+        sys.path.insert(0, repo)         # benchmarks/ is a namespace pkg
+    fig = importlib.import_module("benchmarks.fig_conv")
+    disp = ConvDispatcher.from_file(default_table_path(), missing_ok=False)
+    for s in fig.CI_SHAPES:
+        for direction in ("fwd", "dgrad", "wgrad"):
+            key = DispatchKey.from_shape(s, None, TPU_V5E, direction)
+            assert key.ident in disp.table, (s.name, direction)
+
+
+# ---------------------------------------------------------------------------
+# explain(): the prior tier routes the zoo (the ISSUE acceptance check)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw,impl", [
+    (dict(groups=8), Impl.DEPTHWISE),
+    (dict(groups=2), Impl.GROUPED),
+    (dict(hf=1, wf=1, co=16), Impl.POINTWISE),
+])
+def test_explain_prior_selects_specialized_impls(kw, impl):
+    disp = ConvDispatcher()                      # empty: prior tier only
+    for direction in ("fwd", "dgrad", "wgrad"):
+        rep = disp.explain(_key(direction=direction, **kw))
+        assert rep["impl"] == impl.value, (direction, rep["impl"])
+        assert rep["source"] == "prior"
+        assert impl.value in rep["candidates"]

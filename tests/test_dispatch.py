@@ -271,17 +271,13 @@ def test_reference_impls_agree(impl):
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 
-def test_use_pallas_alias_still_routes():
+def test_use_pallas_alias_removed():
+    # the deprecated boolean is gone for good: impl=/dispatch= are the only
+    # routing knobs (DESIGN.md §12) — a stale caller fails loudly, not
+    # silently-ignored-kwarg quietly
     layer, p, xb = _layer_and_operands()
-    # False pins the jnp oracle — bitwise the explicit impl="jnp" path
-    np.testing.assert_array_equal(
-        np.asarray(layer(p, xb, use_pallas=False)),
-        np.asarray(layer(p, xb, impl="jnp")))
-    # True restricts to the Pallas family — bitwise the forced-window path
-    # (window == stream bitwise, so whichever member wins, values match)
-    np.testing.assert_array_equal(
-        np.asarray(layer(p, xb, use_pallas=True)),
-        np.asarray(layer(p, xb, impl="window")))
+    with pytest.raises(TypeError):
+        layer(p, xb, use_pallas=True)
 
 
 def test_prior_order_prefers_direct():

@@ -27,7 +27,8 @@ def test_direct_conv2d_pallas_vs_oracle(case, dtype):
     rng = np.random.default_rng(hash(case) % 2**32)
     x = jnp.asarray(rng.normal(size=(2, hi, wi, ci)), dtype)
     w = jnp.asarray(rng.normal(size=(hf, wf, ci, co)), dtype)
-    got = ops.direct_conv2d(x, w, stride=stride, interpret=True)
+    got = ops.direct_conv2d(x, w, stride=stride, interpret=True,
+                            impl="window")
     want = conv_lax(x.astype(jnp.float32), w.astype(jnp.float32), stride)
     tol = 5e-5 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(np.asarray(got, np.float32),

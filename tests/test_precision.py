@@ -10,7 +10,7 @@
 * the custom VJP stores its residuals at the policy dtype;
 * dtype-aware blocking admits strictly-larger-or-equal tiles for bf16 on a
   tiny MachineModel (the halved VMEM inequality);
-* BlockedCNN trains end to end under TrainSettings(use_pallas=True,
+* BlockedCNN trains end to end under TrainSettings(impl="window",
   precision="bf16") — the PR's acceptance criterion;
 * memory_model.bytes_precision_split accounts the dtype split.
 """
@@ -133,10 +133,12 @@ def test_vjp_residuals_stored_at_policy_dtype():
     """The custom VJP's saved tensors ARE the policy's residual dtype — the
     halved training working set is real, not an accounting fiction."""
     from repro.core.blocking import TPU_V5E
+    from repro.core.convspec import ConvSpec
     from repro.kernels.direct_conv2d import _conv_fwd
 
     xb, wb = _blocked_inputs(3)
-    out, res = _conv_fwd(xb, wb, None, 1, ((1, 1), (1, 1)), "relu",
+    spec = ConvSpec.make(2, 10, 9, 4, 8, 3, 3, padding="SAME")
+    out, res = _conv_fwd(xb, wb, None, spec, "relu",
                          None, None, TPU_V5E, True, BF16, None, None)
     xp, wq, bias, z, x_token, w_token = res
     assert out.dtype == jnp.bfloat16
@@ -267,7 +269,7 @@ def test_default_train_settings_defer_to_layer_policy():
 
 
 def test_blocked_cnn_trains_bf16_through_pallas_vjp():
-    """The acceptance criterion: BlockedCNN + TrainSettings(use_pallas=True,
+    """The acceptance criterion: BlockedCNN + TrainSettings(impl="window",
     precision="bf16") takes optimizer steps through the Pallas custom VJP
     with bf16 operands and f32 master params, and the loss moves."""
     from repro.train.optimizer import AdamW
@@ -286,7 +288,7 @@ def test_blocked_cnn_trains_bf16_through_pallas_vjp():
     opt = AdamW(lr=lambda s: jnp.float32(1e-2), weight_decay=0.0)
     step = jax.jit(make_train_step(
         model, None, opt,
-        TrainSettings(use_pallas=True, precision="bf16")))
+        TrainSettings(impl="window", precision="bf16")))
     st = opt.init(p)
     losses = []
     for _ in range(3):
@@ -318,7 +320,7 @@ def test_bf16_grad_accum_matches_single_batch():
     for accum in (1, 2):
         step = make_train_step(
             model, None, opt,
-            TrainSettings(accum_steps=accum, use_pallas=True,
+            TrainSettings(accum_steps=accum, impl="window",
                           precision="bf16"))
         pp, _, _ = jax.jit(step)(p, opt.init(p), batch)
         outs[accum] = np.asarray(jax.tree.leaves(pp)[0])
