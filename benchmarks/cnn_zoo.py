@@ -21,7 +21,8 @@ from repro.core.blocking import (TPU_V5E, choose_blocking,
                                  choose_pointwise_blocking,
                                  depthwise_resident_bytes,
                                  pointwise_resident_bytes, resident_bytes)
-from repro.core.memory_model import (ConvShape, bytes_repack_boundary,
+from repro.core.memory_model import (ConvShape, bytes_epilogue_fusion,
+                                     bytes_repack_boundary,
                                      chain_repack_bytes)
 
 # AlexNet (Krizhevsky et al. 2012)
@@ -77,7 +78,14 @@ CHAINS = {"alexnet": ALEXNET, "vgg": VGG, "googlenet": GOOGLENET,
 def bench_chain_repack(chains=None, dtype_bytes: int = 4):
     """-> rows: per-boundary and per-chain pack/unpack bytes the blocked
     chain eliminates — upper bound for these sampled chains (see the module
-    docstring); exact only for genuinely adjacent conv pairs."""
+    docstring); exact only for genuinely adjacent conv pairs.
+
+    ``fusion_MiB`` sits alongside: the HBM round-trips the fused
+    epilogue/prologue removes for the producer layer of each boundary —
+    here the in-kernel ``act'(z)`` cotangent of a training step
+    (``act_bwd``, every zoo layer carries an activation) — and, on the
+    TOTAL row, additionally the fused GAP of the chain's last layer
+    (DESIGN.md §14)."""
     rows = []
     for name, chain in (chains or CHAINS).items():
         for prev, nxt in zip(chain, chain[1:]):
@@ -86,11 +94,19 @@ def bench_chain_repack(chains=None, dtype_bytes: int = 4):
                 "boundary": f"{prev.name} -> {nxt.name}",
                 "eliminated_MiB": bytes_repack_boundary(prev, nxt,
                                                         dtype_bytes) / 2**20,
+                "fusion_MiB": bytes_epilogue_fusion(
+                    prev, dtype_bytes, act_bwd=True) / 2**20,
             })
+        total_fusion = (sum(bytes_epilogue_fusion(s, dtype_bytes,
+                                                  act_bwd=True)
+                            for s in chain)
+                        + bytes_epilogue_fusion(chain[-1], dtype_bytes,
+                                                gap=True))
         rows.append({
             "chain": name,
             "boundary": "TOTAL",
             "eliminated_MiB": chain_repack_bytes(chain, dtype_bytes) / 2**20,
+            "fusion_MiB": total_fusion / 2**20,
         })
     return rows
 
@@ -190,10 +206,11 @@ def check_live_chain():
 
 
 if __name__ == "__main__":
-    print(f"{'chain':10s} {'boundary':42s} {'elim MiB (ub)':>14s}")
+    print(f"{'chain':10s} {'boundary':42s} {'elim MiB (ub)':>14s} "
+          f"{'fusion MiB':>11s}")
     for row in bench_chain_repack():
         print(f"{row['chain']:10s} {row['boundary']:42s} "
-              f"{row['eliminated_MiB']:14.2f}")
+              f"{row['eliminated_MiB']:14.2f} {row['fusion_MiB']:11.2f}")
 
     print(f"\n{'layer':20s} {'kind':>4s} {'cob':>4s} {'cib':>4s} "
           f"{'tile':>9s} {'out':>9s} {'res KiB':>9s} {'headroom':>9s}")

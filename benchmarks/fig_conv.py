@@ -20,6 +20,10 @@ timings through ``stream=True`` for the CI shapes AND a "pathological"
 deep-pinned-pencil shape on a tiny ``MachineModel`` — the configuration
 that hard-raised before ISSUE 5 — plus the per-shape halo-traffic delta
 (``memory_model.bytes_halo_refetch``, window tiles vs streamed bands).
+The ``fusion`` section (always on, DESIGN.md §14) times the fused
+epilogue/prologue against its two-pass reference on the ``smoke.res``/
+``smoke.gap`` shapes and carries the HBM bytes fusion saves
+(``memory_model.bytes_epilogue_fusion``).
 """
 from __future__ import annotations
 
@@ -33,7 +37,8 @@ from repro.core import layout as LAY
 from repro.core.blocking import (Blocking, MachineModel, TPU_V5E,
                                  VmemMisfitError, choose_blocking,
                                  choose_stream_blocking)
-from repro.core.memory_model import ConvShape, bytes_halo_refetch
+from repro.core.memory_model import (ConvShape, bytes_epilogue_fusion,
+                                     bytes_halo_refetch)
 from repro.kernels.direct_conv2d import direct_conv2d_blocked_pallas
 
 from .cnn_zoo import ZOO, ALEXNET
@@ -50,7 +55,17 @@ CI_SHAPES = [
     ConvShape("smoke.dw", 1, 12, 12, 8, 8, 3, 3, pad=1, groups=8),
     ConvShape("smoke.grp", 1, 12, 12, 8, 8, 3, 3, pad=1, groups=2),
     ConvShape("smoke.1x1", 1, 12, 12, 8, 16, 1, 1),
+    # the fused-epilogue rows (DESIGN.md §14): smoke.res is identity-shaped
+    # (ci == co, stride 1, SAME) so the residual-add fuses a skip tensor of
+    # the output geometry; smoke.gap drains its epilogue into the fused
+    # global-average-pool partial sums
+    ConvShape("smoke.res", 1, 12, 12, 8, 8, 3, 3, pad=1),
+    ConvShape("smoke.gap", 1, 12, 12, 8, 16, 3, 3, pad=1),
 ]
+
+# The fused-vs-unfused section's shapes: the two fusion smoke rows above.
+FUSION_SHAPES = [s for s in CI_SHAPES if s.name in ("smoke.res",
+                                                    "smoke.gap")]
 
 # The streamed section's machine for the pathological rows: pinned 32-deep
 # pencils against a 50 KB budget misfit the window inequality even at
@@ -248,6 +263,74 @@ def bench_stream(shapes=None, iters=3, dtype_name="f32"):
     return rows
 
 
+def bench_fusion(shapes=None, iters=3, dtype_name="f32"):
+    """Fused vs unfused epilogue step timings + the HBM bytes fusion saves.
+
+    One row per fusion smoke shape: ``smoke.res`` fuses the residual add
+    into the epilogue (vs. conv-then-add), ``smoke.gap`` fuses global
+    average pooling (vs. conv-then-pool).  Both fwd and fwd+bwd steps are
+    timed — the backward of the fused path forms ``dz = g * act'(z)`` on
+    tile load inside dgrad/wgrad (the prologue fusion) where the unfused
+    reference materializes dz between kernels.  Interpret-mode on CPU, so
+    the ``*_us`` trajectory tracks relative drift only; the authoritative
+    fused-vs-unfused comparison is ``fusion_saved_bytes``
+    (``memory_model.bytes_epilogue_fusion`` — the HBM round-trips the fused
+    epilogue/prologue provably removes), which must be > 0 for every row.
+    """
+    dtype = resolve_bench_dtype(dtype_name)
+    dtype_bytes = dtype.itemsize
+    rows = []
+    for s in shapes or FUSION_SHAPES:
+        xb, wb, lay = _blocked_operands(s)
+        gap = s.name.endswith(".gap")
+        rng = np.random.default_rng(1)
+        res = None if gap else jnp.asarray(
+            rng.normal(size=(s.n, s.co // lay.cb_out, s.ho, s.wo,
+                             lay.cb_out)), jnp.float32)
+
+        kw = dict(stride=s.stride, padding=s.pad, activation="relu",
+                  interpret=True, precision=dtype_name)
+
+        if gap:
+            def fused_fn(xb_, wb_):
+                return direct_conv2d_blocked_pallas(xb_, wb_, gap=True, **kw)
+
+            def unfused_fn(xb_, wb_):
+                y = direct_conv2d_blocked_pallas(xb_, wb_, **kw)
+                n, cblk, _, _, cb = y.shape
+                pooled = jnp.mean(y.astype(jnp.float32), axis=(2, 3))
+                return pooled.reshape(n, cblk * cb).astype(y.dtype)
+
+            args = (xb, wb)
+        else:
+            def fused_fn(xb_, wb_, r_):
+                return direct_conv2d_blocked_pallas(xb_, wb_, residual=r_,
+                                                    **kw)
+
+            def unfused_fn(xb_, wb_, r_):
+                y = direct_conv2d_blocked_pallas(xb_, wb_, **kw)
+                return (y.astype(jnp.float32)
+                        + r_.astype(jnp.float32)).astype(y.dtype)
+
+            args = (xb, wb, res)
+
+        row = {
+            "layer": s.name, "dtype": dtype_name,
+            "fused_fwd_us": time_fn(fused_fn, *args, iters=iters,
+                                    dtype=dtype) * 1e6,
+            "unfused_fwd_us": time_fn(unfused_fn, *args, iters=iters,
+                                      dtype=dtype) * 1e6,
+            "fused_fwdbwd_us": time_fn(fused_fn, *args, iters=iters,
+                                       backward=True, dtype=dtype) * 1e6,
+            "unfused_fwdbwd_us": time_fn(unfused_fn, *args, iters=iters,
+                                         backward=True, dtype=dtype) * 1e6,
+            "fusion_saved_bytes": bytes_epilogue_fusion(
+                s, dtype_bytes, residual=not gap, gap=gap, act_bwd=True),
+        }
+        rows.append(row)
+    return rows
+
+
 def dispatch_report(pairs=None, dtypes=("f32",)):
     """Which impl the dispatcher picks, and why, for every benched shape.
 
@@ -262,21 +345,28 @@ def dispatch_report(pairs=None, dtypes=("f32",)):
     from repro.core.dispatch import (DIRECTIONS, DispatchKey, get_dispatcher,
                                      register_machine)
     disp = get_dispatcher()
+    # fused-key variants for the fusion smoke shapes — same tags the table
+    # regeneration seeds (benchmarks.tune_dispatch.FUSION_TAGS)
+    fusion_tags = {"smoke.res": "res+dz", "smoke.gap": "gap+dz"}
     rows = []
     for s, machine in pairs or [(c, TPU_V5E) for c in CI_SHAPES]:
         register_machine(machine)
         lay = LAY.BlockedConvLayout.choose(s.ci, s.co, groups=s.groups)
         for dtype_name in dtypes:
             for direction in DIRECTIONS:
-                key = DispatchKey.from_shape(s, dtype_name, machine,
-                                             direction)
-                dec = disp.decide(key, cob=lay.cb_out, cib=lay.cb_in)
-                rows.append({
-                    "layer": s.name, "dtype": dtype_name,
-                    "machine": machine.name, "direction": direction,
-                    "impl": dec.impl.value, "source": dec.source,
-                    "key": key.ident,
-                })
+                fusions = [""]
+                if s.name in fusion_tags:
+                    fusions.append(fusion_tags[s.name])
+                for fusion in fusions:
+                    key = DispatchKey.from_shape(s, dtype_name, machine,
+                                                 direction, fusion=fusion)
+                    dec = disp.decide(key, cob=lay.cb_out, cib=lay.cb_in)
+                    rows.append({
+                        "layer": s.name, "dtype": dtype_name,
+                        "machine": machine.name, "direction": direction,
+                        "impl": dec.impl.value, "source": dec.source,
+                        "key": key.ident,
+                    })
     return rows
 
 
@@ -350,6 +440,13 @@ if __name__ == "__main__":
         report["stream"] = [
             row for d in dtypes
             for row in bench_stream(iters=iters, dtype_name=d)]
+
+    # the fused-vs-unfused epilogue section always rides along (two shapes,
+    # cheap) — its *_us fields gate in CI like every other timing row and
+    # its byte column is the fusion accounting (DESIGN.md §14)
+    report["fusion"] = [
+        row for d in dtypes
+        for row in bench_fusion(iters=iters, dtype_name=d)]
 
     # the routing record: which impl the dispatcher chose for every benched
     # (shape, machine) pair and why (table/tuned/prior) — DESIGN.md §12

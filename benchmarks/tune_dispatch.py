@@ -37,10 +37,16 @@ from repro.core.dispatch import (DIRECTIONS, ConvDispatcher, DispatchKey,
                                  default_table_path)
 
 from .cnn_zoo import ZOO
-from .fig_conv import CI_SHAPES, STREAM_SHAPES
+from .fig_conv import CI_SHAPES, FUSION_SHAPES, STREAM_SHAPES
 
 # The tuned tier's dtype sweep — matches the CI bench job's --dtype flags.
 CI_DTYPES = ("f32", "bf16")
+
+# Fused-key variants of the fusion smoke shapes (DESIGN.md §14): the fwd
+# key carries the epilogue fusion (res / gap) and the backward keys the
+# in-kernel act'(z) prologue, so the table distinguishes fused geometry
+# from unfused (the probes account the extra resident operands).
+FUSION_TAGS = {"smoke.res": "res+dz", "smoke.gap": "gap+dz"}
 
 
 def tuned_keys(dtypes=CI_DTYPES):
@@ -55,9 +61,18 @@ def tuned_keys(dtypes=CI_DTYPES):
 
 
 def prior_keys():
-    """The cnn_zoo layers: coverage without measurement (prior-seeded)."""
-    return [DispatchKey.from_shape(s, "f32", TPU_V5E, direction)
+    """The cnn_zoo layers — plus the fused-key variants of the fusion smoke
+    shapes: coverage without measurement (prior-seeded; the fused keys route
+    through ``probe_impl``'s fusion-aware choosers, which is exactly the
+    distinction the table must record)."""
+    keys = [DispatchKey.from_shape(s, "f32", TPU_V5E, direction)
             for s in ZOO for direction in DIRECTIONS]
+    keys += [DispatchKey.from_shape(s, d, TPU_V5E, direction,
+                                    fusion=FUSION_TAGS[s.name])
+             for s in FUSION_SHAPES
+             for d in CI_DTYPES
+             for direction in DIRECTIONS]
+    return keys
 
 
 def regenerate(iters: int = 3, verbose: bool = True) -> ConvDispatcher:

@@ -119,7 +119,9 @@ class Blocking:
 
 def resident_bytes(hob: int, wob: int, cob: int, cib: int, hf: int, wf: int,
                    stride: int = 1, in_dtype_bytes: int = 4,
-                   acc_dtype_bytes: int = 4, dilation=(1, 1)) -> int:
+                   acc_dtype_bytes: int = 4, dilation=(1, 1),
+                   fused_residual: bool = False, fused_gap: bool = False,
+                   fused_prologue: bool = False) -> int:
     """VMEM bytes one Pallas grid step holds resident (DESIGN.md §7):
     double-buffered halo'd input window, weight tile and output tile
     (Pallas pipelines all operand blocks), plus the persistent f32
@@ -127,7 +129,15 @@ def resident_bytes(hob: int, wob: int, cob: int, cib: int, hf: int, wf: int,
     ``choose_blocking`` fits against — benchmarks and tests must use this,
     not a copy.  ``dilation`` widens the halo: the window spans the
     *effective* filter extent ``(hf-1)*dh + 1`` while the weight tile stays
-    ``hf x wf`` taps."""
+    ``hf x wf`` taps.
+
+    The fused-epilogue/prologue riders (DESIGN.md §14) add their own
+    resident blocks, all zero when the flags are off: ``fused_residual``
+    pipelines one more out-tile-shaped operand (the skip branch),
+    ``fused_gap`` adds the pooled ``[1, cob]`` output block plus its f32
+    partial-sum scratch, and ``fused_prologue`` (backward only) pipelines
+    the saved pre-activation ``z`` alongside the cotangent — window-shaped,
+    because the dgrad kernel windows both identically."""
     dh, dw = as_dilation(dilation)
     hib = (hob - 1) * stride + (hf - 1) * dh + 1          # halo'd input rows
     wib = (wob - 1) * stride + (wf - 1) * dw + 1          # halo'd input cols
@@ -135,7 +145,14 @@ def resident_bytes(hob: int, wob: int, cob: int, cib: int, hf: int, wf: int,
     wgt = hf * wf * cib * cob * in_dtype_bytes
     out = hob * wob * cob * in_dtype_bytes                # output block
     acc = hob * wob * cob * acc_dtype_bytes               # scratch (single)
-    return 2 * (win + wgt + out) + acc
+    total = 2 * (win + wgt + out) + acc
+    if fused_residual:
+        total += 2 * out                                  # skip-branch tile
+    if fused_gap:
+        total += 2 * cob * in_dtype_bytes + cob * acc_dtype_bytes
+    if fused_prologue:
+        total += 2 * win                                  # z rides with g
+    return total
 
 
 def _shrink_to_fit(extent: int, cur: int, pinned: bool, fits) -> int:
@@ -160,6 +177,8 @@ def choose_blocking(
     cob: int | None = None, cib: int | None = None,
     hob: int | None = None, wob: int | None = None,
     precision=None, groups: int = 1, dilation=(1, 1),
+    fused_residual: bool = False, fused_gap: bool = False,
+    fused_prologue: bool = False,
 ) -> Blocking:
     """Pick (Cob, Cib, Hob, Wob) per the adapted Eq. 1/2 + VMEM budget.
 
@@ -251,7 +270,11 @@ def choose_blocking(
         def fits(cib_, hob_, wob_):
             return resident_bytes(hob_, wob_, cob, cib_, hf, wf, stride,
                                   in_dtype_bytes, acc_dtype_bytes,
-                                  dilation=dil) <= machine.vmem_bytes
+                                  dilation=dil,
+                                  fused_residual=fused_residual,
+                                  fused_gap=fused_gap,
+                                  fused_prologue=fused_prologue,
+                                  ) <= machine.vmem_bytes
 
         hob = _shrink_to_fit(ho, hob, hob_pinned,
                              lambda h: fits(cib, h, wob))
@@ -318,6 +341,7 @@ def choose_dgrad_blocking(
     cib: int | None = None, cob: int | None = None,
     hob: int | None = None, wob: int | None = None,
     precision=None, groups: int = 1, dilation=(1, 1),
+    fused_prologue: bool = False,
 ) -> Blocking:
     """Tile the transposed-window dgrad kernel (input gradient).
 
@@ -349,20 +373,27 @@ def choose_dgrad_blocking(
         machine=machine, in_dtype_bytes=in_dtype_bytes,
         acc_dtype_bytes=acc_dtype_bytes,
         cob=cib, cib=cob, hob=hob, wob=wob, precision=precision,
-        groups=groups, dilation=(dh, dw))
+        groups=groups, dilation=(dh, dw), fused_prologue=fused_prologue)
 
 
 def wgrad_resident_bytes(hob: int, wob: int, cob: int, cib: int,
                          hf: int, wf: int, stride: int = 1,
                          in_dtype_bytes: int = 4,
-                         acc_dtype_bytes: int = 4, dilation=(1, 1)) -> int:
+                         acc_dtype_bytes: int = 4, dilation=(1, 1),
+                         fused_prologue: bool = False,
+                         fused_bias: bool = False) -> int:
     """VMEM bytes one wgrad grid step holds resident (DESIGN.md §9).
 
     Same double-buffered operand accounting as :func:`resident_bytes`, but
     the output block is the full ``[Hf, Wf, Cib, Cob]`` weight-gradient tile
     and the persistent f32 accumulator matches it — ``Hf*Wf`` times larger
     than the forward's ``[hob*wob, Cob]`` scratch, which is what changes the
-    inequality."""
+    inequality.
+
+    ``fused_prologue`` pipelines the saved pre-activation ``z`` tile next to
+    the cotangent (the in-kernel ``dz = g * act'(z)``); ``fused_bias`` adds
+    the flush-once ``db`` pencil output plus its f32 scratch (DESIGN.md
+    §14).  Both are zero when off."""
     dh, dw = as_dilation(dilation)
     hib = (hob - 1) * stride + (hf - 1) * dh + 1
     wib = (wob - 1) * stride + (wf - 1) * dw + 1
@@ -370,7 +401,12 @@ def wgrad_resident_bytes(hob: int, wob: int, cob: int, cib: int,
     cot = hob * wob * cob * in_dtype_bytes                # cotangent tile
     wgt = hf * wf * cib * cob * in_dtype_bytes            # dw output block
     acc = hf * wf * cib * cob * acc_dtype_bytes           # scratch (single)
-    return 2 * (win + cot + wgt) + acc
+    total = 2 * (win + cot + wgt) + acc
+    if fused_prologue:
+        total += 2 * cot                                  # z rides with g
+    if fused_bias:
+        total += 2 * cob * acc_dtype_bytes + cob * acc_dtype_bytes
+    return total
 
 
 def choose_wgrad_blocking(
@@ -380,6 +416,7 @@ def choose_wgrad_blocking(
     in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
     hob: int | None = None, wob: int | None = None,
     precision=None, dilation=(1, 1),
+    fused_prologue: bool = False, fused_bias: bool = False,
 ) -> Blocking:
     """Tile the per-tile accumulating wgrad kernel (weight gradient).
 
@@ -414,7 +451,8 @@ def choose_wgrad_blocking(
             return wgrad_resident_bytes(
                 hob_, wob_, cob, cib, hf, wf, stride,
                 in_dtype_bytes, acc_dtype_bytes,
-                dilation=dilation) <= machine.vmem_bytes
+                dilation=dilation, fused_prologue=fused_prologue,
+                fused_bias=fused_bias) <= machine.vmem_bytes
 
         hob = _shrink_to_fit(ho, hob, hob_pinned, lambda h: fits(h, wob))
         wob = _shrink_to_fit(wo, wob, wob_pinned, lambda w: fits(hob, w))
@@ -463,7 +501,9 @@ class StreamBlocking:
 def stream_resident_bytes(hso: int, hob: int, wob: int, cob: int, cib: int,
                           hf: int, wf: int, stride: int = 1,
                           in_dtype_bytes: int = 4,
-                          acc_dtype_bytes: int = 4) -> int:
+                          acc_dtype_bytes: int = 4,
+                          fused_residual: bool = False,
+                          fused_gap: bool = False) -> int:
     """VMEM bytes one streamed fwd/dgrad grid step holds resident:
 
         weights   hf*wf*cib*cob       x1  (manual DMA into scratch — the
@@ -475,14 +515,24 @@ def stream_resident_bytes(hso: int, hob: int, wob: int, cob: int, cib: int,
         acc       hob*wob*cob             (persistent f32 scratch)
 
     The single source of the streamed inequality — the router, tests and
-    benchmarks must use this, not a copy."""
+    benchmarks must use this, not a copy.
+
+    ``fused_residual`` adds one more pipelined out-tile-shaped operand (the
+    skip branch rides the Pallas pipeline next to the output block, not the
+    manual ring — it is only touched at the flush); ``fused_gap`` adds the
+    pooled pencil output plus its f32 partial-sum scratch (DESIGN.md §14)."""
     hin = (hso - 1) * stride + hf
     wib = (wob - 1) * stride + wf
     wgt = hf * wf * cib * cob * in_dtype_bytes
     ring = 2 * hin * wib * cib * in_dtype_bytes
     out = 2 * hob * wob * cob * in_dtype_bytes
     acc = hob * wob * cob * acc_dtype_bytes
-    return wgt + ring + out + acc
+    total = wgt + ring + out + acc
+    if fused_residual:
+        total += 2 * hob * wob * cob * in_dtype_bytes
+    if fused_gap:
+        total += 2 * cob * in_dtype_bytes + cob * acc_dtype_bytes
+    return total
 
 
 def choose_stream_blocking(
@@ -493,6 +543,7 @@ def choose_stream_blocking(
     hob: int | None = None, wob: int | None = None,
     hso: int | None = None,
     precision=None,
+    fused_residual: bool = False, fused_gap: bool = False,
 ) -> StreamBlocking:
     """Tile the streamed forward kernel (and, transposed, its dgrad).
 
@@ -546,7 +597,9 @@ def choose_stream_blocking(
         def fits(hso_, hob_, wob_):
             return stream_resident_bytes(
                 hso_, hob_, wob_, cob, cib, hf, wf, stride,
-                in_dtype_bytes, acc_dtype_bytes) <= machine.vmem_bytes
+                in_dtype_bytes, acc_dtype_bytes,
+                fused_residual=fused_residual,
+                fused_gap=fused_gap) <= machine.vmem_bytes
 
         hso = _shrink_to_fit(hob, hso, hso_pinned,
                              lambda s: fits(s, hob, wob))
@@ -678,10 +731,14 @@ def choose_stream_wgrad_blocking(
 def depthwise_resident_bytes(hob: int, wob: int, cb: int, hf: int, wf: int,
                              stride: int = 1, in_dtype_bytes: int = 4,
                              acc_dtype_bytes: int = 4,
-                             dilation=(1, 1)) -> int:
+                             dilation=(1, 1),
+                             fused_residual: bool = False,
+                             fused_gap: bool = False,
+                             fused_prologue: bool = False) -> int:
     """VMEM bytes one depthwise grid step holds resident: double-buffered
     halo'd window, [Hf, Wf, Cb] tap stack and output tile, plus the f32
-    accumulator."""
+    accumulator.  The fused riders (residual tile / GAP pencil + scratch /
+    backward ``z`` window) follow :func:`resident_bytes`."""
     dh, dw = as_dilation(dilation)
     hib = (hob - 1) * stride + (hf - 1) * dh + 1
     wib = (wob - 1) * stride + (wf - 1) * dw + 1
@@ -689,7 +746,14 @@ def depthwise_resident_bytes(hob: int, wob: int, cb: int, hf: int, wf: int,
     wgt = hf * wf * cb * in_dtype_bytes
     out = hob * wob * cb * in_dtype_bytes
     acc = hob * wob * cb * acc_dtype_bytes
-    return 2 * (win + wgt + out) + acc
+    total = 2 * (win + wgt + out) + acc
+    if fused_residual:
+        total += 2 * out
+    if fused_gap:
+        total += 2 * cb * in_dtype_bytes + cb * acc_dtype_bytes
+    if fused_prologue:
+        total += 2 * win
+    return total
 
 
 def choose_depthwise_blocking(
@@ -698,6 +762,8 @@ def choose_depthwise_blocking(
     in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
     hob: int | None = None, wob: int | None = None,
     precision=None, dilation=(1, 1),
+    fused_residual: bool = False, fused_gap: bool = False,
+    fused_prologue: bool = False,
 ) -> Blocking:
     """Tile the depthwise forward kernel (and, over the padded cotangent at
     stride 1, its dgrad).  The channel pencil ``cb`` is pinned by the
@@ -727,7 +793,9 @@ def choose_depthwise_blocking(
         def fits(hob_, wob_):
             return depthwise_resident_bytes(
                 hob_, wob_, cb, hf, wf, stride, in_dtype_bytes,
-                acc_dtype_bytes, dilation=dil) <= machine.vmem_bytes
+                acc_dtype_bytes, dilation=dil,
+                fused_residual=fused_residual, fused_gap=fused_gap,
+                fused_prologue=fused_prologue) <= machine.vmem_bytes
 
         hob = _shrink_to_fit(ho, hob, hob_pinned, lambda h: fits(h, wob))
         wob = _shrink_to_fit(wo, wob, wob_pinned, lambda w: fits(hob, w))
@@ -743,9 +811,14 @@ def depthwise_wgrad_resident_bytes(hob: int, wob: int, cb: int,
                                    hf: int, wf: int, stride: int = 1,
                                    in_dtype_bytes: int = 4,
                                    acc_dtype_bytes: int = 4,
-                                   dilation=(1, 1)) -> int:
+                                   dilation=(1, 1),
+                                   fused_prologue: bool = False,
+                                   fused_bias: bool = False) -> int:
     """Depthwise wgrad residency: halo'd x window, cotangent tile, and the
-    per-channel [Hf*Wf, Cb] tap-gradient accumulator."""
+    per-channel [Hf*Wf, Cb] tap-gradient accumulator.  With ``fused_prologue``
+    the saved pre-activation ``z`` tile rides next to the cotangent; with
+    ``fused_bias`` a [1, Cb] db output block plus its f32 scratch stay
+    resident."""
     dh, dw = as_dilation(dilation)
     hib = (hob - 1) * stride + (hf - 1) * dh + 1
     wib = (wob - 1) * stride + (wf - 1) * dw + 1
@@ -753,7 +826,12 @@ def depthwise_wgrad_resident_bytes(hob: int, wob: int, cb: int,
     cot = hob * wob * cb * in_dtype_bytes
     wgt = hf * wf * cb * in_dtype_bytes
     acc = hf * wf * cb * acc_dtype_bytes
-    return 2 * (win + cot + wgt) + acc
+    total = 2 * (win + cot + wgt) + acc
+    if fused_prologue:
+        total += 2 * cot
+    if fused_bias:
+        total += 3 * cb * acc_dtype_bytes
+    return total
 
 
 def choose_depthwise_wgrad_blocking(
@@ -762,6 +840,7 @@ def choose_depthwise_wgrad_blocking(
     in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
     hob: int | None = None, wob: int | None = None,
     precision=None, dilation=(1, 1),
+    fused_prologue: bool = False, fused_bias: bool = False,
 ) -> Blocking:
     """Tile the depthwise wgrad kernel: the [Hf*Wf, Cb] accumulator is tiny,
     so this almost always returns the full map; the shrink loop exists for
@@ -784,7 +863,9 @@ def choose_depthwise_wgrad_blocking(
         def fits(hob_, wob_):
             return depthwise_wgrad_resident_bytes(
                 hob_, wob_, cb, hf, wf, stride, in_dtype_bytes,
-                acc_dtype_bytes, dilation=dilation) <= machine.vmem_bytes
+                acc_dtype_bytes, dilation=dilation,
+                fused_prologue=fused_prologue,
+                fused_bias=fused_bias) <= machine.vmem_bytes
 
         hob = _shrink_to_fit(ho, hob, hob_pinned, lambda h: fits(h, wob))
         wob = _shrink_to_fit(wo, wob, wob_pinned, lambda w: fits(hob, w))
@@ -804,15 +885,27 @@ def choose_depthwise_wgrad_blocking(
 
 def pointwise_resident_bytes(hob: int, wob: int, cob: int, cib: int,
                              in_dtype_bytes: int = 4,
-                             acc_dtype_bytes: int = 4) -> int:
+                             acc_dtype_bytes: int = 4,
+                             fused_residual: bool = False,
+                             fused_gap: bool = False,
+                             fused_prologue: bool = False) -> int:
     """VMEM bytes one pointwise grid step holds resident: double-buffered
     input tile, [Cib, Cob] weight matrix and output tile, plus the f32
-    accumulator."""
+    accumulator.  Fused riders follow :func:`resident_bytes`; for the dgrad
+    flavor ``fused_prologue`` adds the ``z`` tile pipelined next to the
+    incoming cotangent."""
     xin = hob * wob * cib * in_dtype_bytes
     wgt = cib * cob * in_dtype_bytes
     out = hob * wob * cob * in_dtype_bytes
     acc = hob * wob * cob * acc_dtype_bytes
-    return 2 * (xin + wgt + out) + acc
+    total = 2 * (xin + wgt + out) + acc
+    if fused_residual:
+        total += 2 * out
+    if fused_gap:
+        total += 2 * cob * in_dtype_bytes + cob * acc_dtype_bytes
+    if fused_prologue:
+        total += 2 * xin
+    return total
 
 
 def choose_pointwise_blocking(
@@ -822,6 +915,8 @@ def choose_pointwise_blocking(
     in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
     hob: int | None = None, wob: int | None = None,
     precision=None,
+    fused_residual: bool = False, fused_gap: bool = False,
+    fused_prologue: bool = False,
 ) -> Blocking:
     """Tile the 1x1-as-matmul kernel (forward, and dgrad with the channel
     pencils swapped by the caller).  Output extents equal input extents
@@ -850,7 +945,9 @@ def choose_pointwise_blocking(
         def fits(cib_, hob_, wob_):
             return pointwise_resident_bytes(
                 hob_, wob_, cob, cib_, in_dtype_bytes,
-                acc_dtype_bytes) <= machine.vmem_bytes
+                acc_dtype_bytes, fused_residual=fused_residual,
+                fused_gap=fused_gap,
+                fused_prologue=fused_prologue) <= machine.vmem_bytes
 
         hob = _shrink_to_fit(ho, hob, hob_pinned, lambda h: fits(cib, h, wob))
         wob = _shrink_to_fit(wo, wob, wob_pinned, lambda w: fits(cib, hob, w))
@@ -865,14 +962,23 @@ def choose_pointwise_blocking(
 
 def pointwise_wgrad_resident_bytes(hob: int, wob: int, cob: int, cib: int,
                                    in_dtype_bytes: int = 4,
-                                   acc_dtype_bytes: int = 4) -> int:
+                                   acc_dtype_bytes: int = 4,
+                                   fused_prologue: bool = False,
+                                   fused_bias: bool = False) -> int:
     """Pointwise wgrad residency: x tile, cotangent tile, and the [Cib, Cob]
-    weight-gradient block + matching f32 accumulator."""
+    weight-gradient block + matching f32 accumulator.  ``fused_prologue``
+    adds the saved ``z`` tile, ``fused_bias`` the [1, Cob] db block plus
+    its f32 scratch."""
     xin = hob * wob * cib * in_dtype_bytes
     cot = hob * wob * cob * in_dtype_bytes
     wgt = cib * cob * in_dtype_bytes
     acc = cib * cob * acc_dtype_bytes
-    return 2 * (xin + cot + wgt) + acc
+    total = 2 * (xin + cot + wgt) + acc
+    if fused_prologue:
+        total += 2 * cot
+    if fused_bias:
+        total += 3 * cob * acc_dtype_bytes
+    return total
 
 
 def choose_pointwise_wgrad_blocking(
@@ -881,6 +987,7 @@ def choose_pointwise_wgrad_blocking(
     in_dtype_bytes: int = 4, acc_dtype_bytes: int = 4,
     hob: int | None = None, wob: int | None = None,
     precision=None,
+    fused_prologue: bool = False, fused_bias: bool = False,
 ) -> Blocking:
     """Tile the pointwise wgrad kernel: pencils pinned by the operand
     layouts (the [Cib, Cob] accumulator is the output block), spatial tile
@@ -903,7 +1010,8 @@ def choose_pointwise_wgrad_blocking(
         def fits(hob_, wob_):
             return pointwise_wgrad_resident_bytes(
                 hob_, wob_, cob, cib, in_dtype_bytes,
-                acc_dtype_bytes) <= machine.vmem_bytes
+                acc_dtype_bytes, fused_prologue=fused_prologue,
+                fused_bias=fused_bias) <= machine.vmem_bytes
 
         hob = _shrink_to_fit(ho, hob, hob_pinned, lambda h: fits(h, wob))
         wob = _shrink_to_fit(wo, wob, wob_pinned, lambda w: fits(hob, w))

@@ -77,7 +77,9 @@ def direct_conv_blocked(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
                         hob: Optional[int] = None,
                         wob: Optional[int] = None,
                         precision=None, groups: int = 1,
-                        dilation: int | tuple = 1) -> jnp.ndarray:
+                        dilation: int | tuple = 1,
+                        residual: Optional[jnp.ndarray] = None,
+                        gap: bool = False) -> jnp.ndarray:
     """Direct convolution on blocked layouts, fused bias + activation.
 
     x: [N, Ci/Cib, Hi, Wi, Cib]      (paper input layout)
@@ -110,11 +112,19 @@ def direct_conv_blocked(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
     offsets.  The depthwise lane layout — full-channel pencils on the maps,
     ``Cib = 1`` on the weight — is recognized and served as a per-lane
     multiply, the same structure as the depthwise Pallas kernel.
+
+    ``residual``/``gap`` mirror the Pallas epilogue riders (DESIGN.md §14):
+    ``residual`` is an output-shaped blocked map added *after* the
+    activation in f32 with a single downcast; ``gap=True`` returns the
+    f32-mean global average pool as flat ``[N, Co]`` features instead of
+    the map.
     """
     if precision is not None:
         pol = resolve_precision(precision)
         x = x.astype(pol.op_dtype)
         w = w.astype(pol.op_dtype)
+        if residual is not None:
+            residual = residual.astype(pol.op_dtype)
     dil = dilation if isinstance(dilation, tuple) else (dilation, dilation)
     hi, wi = x.shape[2], x.shape[3]
     hf, wf = w.shape[2], w.shape[3]
@@ -128,17 +138,19 @@ def direct_conv_blocked(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
         if wob is not None and (wob < 1 or wo % wob):
             raise ValueError(f"wob={wob} must divide Wo={wo}")
     return _direct_conv_blocked_jit(x, w, stride, padding, bias, activation,
-                                    groups, dil)
+                                    groups, dil, residual, gap)
 
 
 @partial(jax.jit, static_argnames=("stride", "padding", "activation",
-                                   "groups", "dilation"))
+                                   "groups", "dilation", "gap"))
 def _direct_conv_blocked_jit(x: jnp.ndarray, w: jnp.ndarray, stride: int,
                              padding: Padding,
                              bias: Optional[jnp.ndarray],
                              activation: Optional[str],
                              groups: int = 1,
-                             dilation: tuple = (1, 1)) -> jnp.ndarray:
+                             dilation: tuple = (1, 1),
+                             residual: Optional[jnp.ndarray] = None,
+                             gap: bool = False) -> jnp.ndarray:
     n, ciblk, hi, wi, cib = x.shape
     coblk, cigblk, hf, wf, cibw, cob = w.shape
     dil_h, dil_w = dilation
@@ -183,7 +195,13 @@ def _direct_conv_blocked_jit(x: jnp.ndarray, w: jnp.ndarray, stride: int,
                 ).reshape(n, coblk, ho, wo, cob)
     if bias is not None:
         acc = acc + bias.astype(jnp.float32)[None, :, None, None, :]
-    return apply_activation(acc, activation).astype(x.dtype)
+    acc = apply_activation(acc, activation)
+    if residual is not None:
+        acc = acc + residual.astype(jnp.float32)
+    if gap:
+        pooled = jnp.mean(acc, axis=(2, 3))
+        return pooled.reshape(n, coblk * cob).astype(x.dtype)
+    return acc.astype(x.dtype)
 
 
 def bias_to_blocked(bias: jnp.ndarray, cb_out: int) -> jnp.ndarray:

@@ -46,11 +46,15 @@ around each kernel launch lives here now: feasibility is *probed* against
 the same blocking model the kernel will use (same pencil pins, same
 itemsize), so an infeasible candidate is never launched.
 
-Persistence is schema 2 (``SCHEMA_VERSION``): entries carry ``groups`` and
-``dilation``.  Schema-1 tables (dense-only keys) load through an automatic
-migration — every legacy entry *is* a dense conv, so ``groups=1`` /
-``dilation=(1,1)`` are filled in and idents re-derived; any other schema
-raises with the schema named (the CI gate's clear-failure contract).
+Persistence is schema 3 (``SCHEMA_VERSION``): entries carry ``groups``,
+``dilation`` and the key's ``fusion`` tag (which epilogue/prologue riders —
+residual / gap / in-kernel dz — the launch fuses; "" = unfused, and the
+ident only grows a suffix when the tag is non-empty, so unfused idents are
+schema-stable).  Older tables load through chained automatic migrations —
+schema-1 entries (dense-only keys) gain ``groups=1`` / ``dilation=(1,1)``,
+schema-2 entries gain ``fusion=""`` (every legacy entry is an unfused
+conv) — with idents re-derived; any other schema raises with the schema
+named (the CI gate's clear-failure contract).
 
 Numerics contract: WINDOW, STREAM and JNP are interchangeable bit for bit
 (the streamed/window bitwise property is test-pinned since ISSUE 5; the
@@ -90,12 +94,18 @@ __all__ = [
     "ConvDispatcher", "get_dispatcher", "set_dispatcher",
     "register_machine", "get_machine", "default_table_path",
     "stream_flag", "route_pallas", "run_conv_impl", "candidates_for",
+    "FUSION_TOKENS",
 ]
 
 Direction = str          # "fwd" | "dgrad" | "wgrad"
 DIRECTIONS: Tuple[Direction, ...] = ("fwd", "dgrad", "wgrad")
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
+
+# canonical order of the fusion-tag tokens (DispatchKey.fusion): "res" and
+# "gap" name forward epilogue riders, "dz" the backward in-kernel cotangent
+# prologue (which carries the fused db on wgrad).
+FUSION_TOKENS = ("res", "gap", "dz")
 
 
 class Impl(enum.Enum):
@@ -224,18 +234,28 @@ class DispatchKey:
     dtype: str                      # precision policy short name (f32/bf16)
     machine: str                    # MachineModel.name
     direction: Direction            # fwd | dgrad | wgrad
+    fusion: str = ""                # "+"-joined FUSION_TOKENS subset, "" =
+                                    # unfused (ident-stable with schema 2)
 
     def __post_init__(self):
         if self.direction not in DIRECTIONS:
             raise ValueError(f"direction must be one of {DIRECTIONS}, "
                              f"got {self.direction!r}")
+        toks = [t for t in self.fusion.split("+") if t] if self.fusion else []
+        bad = [t for t in toks if t not in FUSION_TOKENS]
+        if bad:
+            raise ValueError(f"unknown fusion token(s) {bad}; have "
+                             f"{list(FUSION_TOKENS)}")
+        canon = "+".join(t for t in FUSION_TOKENS if t in toks)
+        if canon != self.fusion:         # canonical order/dedup -> one ident
+            object.__setattr__(self, "fusion", canon)
 
     @classmethod
     def make(cls, n: int, hi: int, wi: int, ci: int, co: int, hf: int,
              wf: int, stride: int = 1, padding: Padding = "VALID",
              precision=None, machine: MachineModel = TPU_V5E,
              direction: Direction = "fwd", *, groups: int = 1,
-             dilation=1) -> "DispatchKey":
+             dilation=1, fusion: str = "") -> "DispatchKey":
         """Build a key from call-site vocabulary (padding normalized by
         ``ConvSpec.make``, so SAME/int/explicit pads all land on one
         canonical identity — SAME resolves against the *dilated* filter
@@ -247,16 +267,17 @@ class DispatchKey:
                              padding=padding, groups=groups,
                              dilation=dilation)
         return cls(spec=spec, dtype=resolve_precision(precision).name,
-                   machine=machine.name, direction=direction)
+                   machine=machine.name, direction=direction, fusion=fusion)
 
     @classmethod
     def from_shape(cls, s, precision=None, machine: MachineModel = TPU_V5E,
-                   direction: Direction = "fwd") -> "DispatchKey":
+                   direction: Direction = "fwd",
+                   fusion: str = "") -> "DispatchKey":
         """From a ``memory_model.ConvShape`` (the benchmark vocabulary)."""
         return cls.make(s.n, s.hi, s.wi, s.ci, s.co, s.hf, s.wf, s.stride,
                         s.pad, precision, machine, direction,
                         groups=getattr(s, "groups", 1),
-                        dilation=getattr(s, "dilation", 1))
+                        dilation=getattr(s, "dilation", 1), fusion=fusion)
 
     def with_direction(self, direction: Direction) -> "DispatchKey":
         return dataclasses.replace(self, direction=direction)
@@ -332,10 +353,12 @@ class DispatchKey:
         s = self.spec
         (ph0, ph1), (pw0, pw1) = s.pads
         dh, dw = s.dilation
-        return (f"{self.direction}|n{s.n}hi{s.hi}wi{s.wi}"
+        base = (f"{self.direction}|n{s.n}hi{s.hi}wi{s.wi}"
                 f"ci{s.ci}co{s.co}f{s.hf}x{s.wf}s{s.stride}"
                 f"p{ph0}.{ph1}.{pw0}.{pw1}g{s.groups}d{dh}.{dw}"
                 f"|{self.dtype}|{self.machine}")
+        # suffix only when fused: unfused idents stay schema-2-stable
+        return f"{base}|{self.fusion}" if self.fusion else base
 
     def to_json(self) -> dict:
         s = self.spec
@@ -347,12 +370,14 @@ class DispatchKey:
             "groups": s.groups, "dilation": list(s.dilation),
             "dtype": self.dtype, "machine": self.machine,
             "direction": self.direction,
+            **({"fusion": self.fusion} if self.fusion else {}),
         }
 
     @classmethod
     def from_json(cls, d: dict) -> "DispatchKey":
-        """Schema-2 entries carry groups/dilation; schema-1 entries (dense
-        convs by construction) default them — this is the migration."""
+        """Schema-3 entries carry fusion; schema-2 entries carry
+        groups/dilation; schema-1 entries (dense unfused convs by
+        construction) default everything — this is the migration."""
         spec = ConvSpec(
             n=d["n"], hi=d["hi"], wi=d["wi"], ci=d["ci"], co=d["co"],
             hf=d["hf"], wf=d["wf"], stride=d["stride"],
@@ -360,7 +385,7 @@ class DispatchKey:
             groups=d.get("groups", 1),
             dilation=as_dilation(tuple(d.get("dilation", (1, 1)))))
         return cls(spec=spec, dtype=d["dtype"], machine=d["machine"],
-                   direction=d["direction"])
+                   direction=d["direction"], fusion=d.get("fusion", ""))
 
 
 # ---------------------------------------------------------------------------
@@ -520,6 +545,12 @@ def probe_impl(key: DispatchKey, impl: Impl,
     spec = key.spec
     dil = spec.dilation
     common = dict(machine=machine, precision=pol)
+    # the fusion tag's per-direction reading: forward launches see the
+    # epilogue riders, backward launches the in-kernel cotangent prologue
+    # (wgrad's fused db always rides with dz — one flush, one flag)
+    toks = set(key.fusion.split("+")) if key.fusion else set()
+    f_res, f_gap = "res" in toks, "gap" in toks
+    f_dz = "dz" in toks
 
     if impl is Impl.DEPTHWISE:
         if key.direction == "fwd":
@@ -527,10 +558,12 @@ def probe_impl(key: DispatchKey, impl: Impl,
                 choose_depthwise_blocking,
                 lambda b, kw: depthwise_resident_bytes(
                     b.hob, b.wob, b.cob, key.hf, key.wf, key.stride,
-                    pol.operand_itemsize, pol.accum_itemsize, dil),
+                    pol.operand_itemsize, pol.accum_itemsize, dil,
+                    fused_residual=f_res, fused_gap=f_gap),
                 hi=key.padded_hi, wi=key.padded_wi, c=key.ci,
                 hf=key.hf, wf=key.wf, stride=key.stride, cb=cib,
-                hob=hob, wob=wob, dilation=dil, **common)
+                hob=hob, wob=wob, dilation=dil,
+                fused_residual=f_res, fused_gap=f_gap, **common)
         if key.direction == "dgrad":
             # the dgrad IS the forward kernel over the stride-dilated,
             # halo-padded cotangent at stride 1 (taps still dilated)
@@ -540,16 +573,20 @@ def probe_impl(key: DispatchKey, impl: Impl,
                 choose_depthwise_blocking,
                 lambda b, kw: depthwise_resident_bytes(
                     b.hob, b.wob, b.cob, key.hf, key.wf, 1,
-                    pol.operand_itemsize, pol.accum_itemsize, dil),
+                    pol.operand_itemsize, pol.accum_itemsize, dil,
+                    fused_prologue=f_dz),
                 hi=eh, wi=ew, c=key.ci, hf=key.hf, wf=key.wf, stride=1,
-                cb=cib, hob=hob, wob=wob, dilation=dil, **common)
+                cb=cib, hob=hob, wob=wob, dilation=dil,
+                fused_prologue=f_dz, **common)
         return _probe(
             choose_depthwise_wgrad_blocking,
             lambda b, kw: depthwise_wgrad_resident_bytes(
                 b.hob, b.wob, b.cob, key.hf, key.wf, key.stride,
-                pol.operand_itemsize, pol.accum_itemsize, dil),
+                pol.operand_itemsize, pol.accum_itemsize, dil,
+                fused_prologue=f_dz, fused_bias=f_dz),
             ho=key.ho, wo=key.wo, hf=key.hf, wf=key.wf, stride=key.stride,
-            cb=cib, hob=hob, wob=wob, dilation=dil, **common)
+            cb=cib, hob=hob, wob=wob, dilation=dil,
+            fused_prologue=f_dz, fused_bias=f_dz, **common)
 
     if impl is Impl.POINTWISE:
         if key.direction == "fwd":
@@ -557,25 +594,30 @@ def probe_impl(key: DispatchKey, impl: Impl,
                 choose_pointwise_blocking,
                 lambda b, kw: pointwise_resident_bytes(
                     b.hob, b.wob, b.cob, b.cib,
-                    pol.operand_itemsize, pol.accum_itemsize),
+                    pol.operand_itemsize, pol.accum_itemsize,
+                    fused_residual=f_res, fused_gap=f_gap),
                 hi=key.padded_hi, wi=key.padded_wi, ci=key.ci, co=key.co,
-                cob=cob, cib=cib, hob=hob, wob=wob, **common)
+                cob=cob, cib=cib, hob=hob, wob=wob,
+                fused_residual=f_res, fused_gap=f_gap, **common)
         if key.direction == "dgrad":
             # transposed channel matmul: pencils swap roles
             return _probe(
                 choose_pointwise_blocking,
                 lambda b, kw: pointwise_resident_bytes(
                     b.hob, b.wob, b.cob, b.cib,
-                    pol.operand_itemsize, pol.accum_itemsize),
+                    pol.operand_itemsize, pol.accum_itemsize,
+                    fused_prologue=f_dz),
                 hi=key.ho, wi=key.wo, ci=key.co, co=key.ci,
-                cob=cib, cib=cob, hob=hob, wob=wob, **common)
+                cob=cib, cib=cob, hob=hob, wob=wob,
+                fused_prologue=f_dz, **common)
         return _probe(
             choose_pointwise_wgrad_blocking,
             lambda b, kw: pointwise_wgrad_resident_bytes(
                 b.hob, b.wob, b.cob, b.cib,
-                pol.operand_itemsize, pol.accum_itemsize),
+                pol.operand_itemsize, pol.accum_itemsize,
+                fused_prologue=f_dz, fused_bias=f_dz),
             ho=key.ho, wo=key.wo, cob=cob, cib=cib, hob=hob, wob=wob,
-            **common)
+            fused_prologue=f_dz, fused_bias=f_dz, **common)
 
     groups = spec.groups                 # WINDOW (dense) / GROUPED / STREAM
     if key.direction == "fwd":
@@ -587,14 +629,17 @@ def probe_impl(key: DispatchKey, impl: Impl,
                 choose_blocking,
                 lambda b, kw: resident_bytes(
                     b.hob, b.wob, b.cob, b.cib, key.hf, key.wf, key.stride,
-                    pol.operand_itemsize, pol.accum_itemsize, dil),
-                groups=groups, dilation=dil, **args)
+                    pol.operand_itemsize, pol.accum_itemsize, dil,
+                    fused_residual=f_res, fused_gap=f_gap),
+                groups=groups, dilation=dil,
+                fused_residual=f_res, fused_gap=f_gap, **args)
         return _probe(
             choose_stream_blocking,
             lambda b, kw: stream_resident_bytes(
                 b.hso, b.hob, b.wob, b.cob, b.cib, key.hf, key.wf,
-                key.stride, pol.operand_itemsize, pol.accum_itemsize),
-            **args)
+                key.stride, pol.operand_itemsize, pol.accum_itemsize,
+                fused_residual=f_res, fused_gap=f_gap),
+            fused_residual=f_res, fused_gap=f_gap, **args)
 
     if key.direction == "dgrad":
         args = dict(ho=key.ho, wo=key.wo, ci=key.ci, co=key.co,
@@ -605,8 +650,11 @@ def probe_impl(key: DispatchKey, impl: Impl,
                 choose_dgrad_blocking,
                 lambda b, kw: resident_bytes(
                     b.hob, b.wob, b.cob, b.cib, key.hf, key.wf, 1,
-                    pol.operand_itemsize, pol.accum_itemsize, dil),
-                groups=groups, dilation=dil, **args)
+                    pol.operand_itemsize, pol.accum_itemsize, dil,
+                    fused_prologue=f_dz),
+                groups=groups, dilation=dil, fused_prologue=f_dz, **args)
+        # streamed backward stays unfused: the wrappers apply the cotangent
+        # prologue outside the ring, so the model is unchanged under dz
         return _probe(
             choose_stream_dgrad_blocking,
             lambda b, kw: stream_resident_bytes(
@@ -621,8 +669,10 @@ def probe_impl(key: DispatchKey, impl: Impl,
             choose_wgrad_blocking,
             lambda b, kw: wgrad_resident_bytes(
                 b.hob, b.wob, b.cob, b.cib, key.hf, key.wf, key.stride,
-                pol.operand_itemsize, pol.accum_itemsize, dil),
-            hob=hob, wob=wob, dilation=dil, **args)
+                pol.operand_itemsize, pol.accum_itemsize, dil,
+                fused_prologue=f_dz, fused_bias=f_dz),
+            hob=hob, wob=wob, dilation=dil,
+            fused_prologue=f_dz, fused_bias=f_dz, **args)
     return _probe(
         choose_stream_wgrad_blocking,
         lambda b, kw: stream_wgrad_resident_bytes(
@@ -719,6 +769,21 @@ def _migrate_v1(entries: Dict[str, dict]) -> Dict[str, dict]:
     return out
 
 
+def _migrate_v2(entries: Dict[str, dict]) -> Dict[str, dict]:
+    """Schema-2 -> schema-3 table migration.
+
+    Every schema-2 entry is an *unfused* conv by construction (the key had
+    no fusion field), so ``from_json`` defaults ``fusion=""`` — and since
+    unfused idents carry no fusion suffix, the re-derived idents are
+    byte-identical to the schema-2 ones.  The measured evidence rides along
+    untouched."""
+    out: Dict[str, dict] = {}
+    for entry in entries.values():
+        key = DispatchKey.from_json(entry["key"])
+        out[key.ident] = dict(entry, key=key.to_json())
+    return out
+
+
 class ConvDispatcher:
     """key -> impl, by override > table > analytical prior.
 
@@ -750,11 +815,13 @@ class ConvDispatcher:
         schema = doc.get("schema")
         entries = doc.get("entries", {})
         if schema == 1:
-            entries = _migrate_v1(entries)      # dense-only legacy table
+            entries = _migrate_v2(_migrate_v1(entries))  # dense-only legacy
+        elif schema == 2:
+            entries = _migrate_v2(entries)      # unfused-only legacy table
         elif schema != SCHEMA_VERSION:
             raise ValueError(
                 f"dispatch table {path} has schema {schema!r}, expected "
-                f"{SCHEMA_VERSION} (or 1, which auto-migrates); regenerate "
+                f"{SCHEMA_VERSION} (or 1/2, which auto-migrate); regenerate "
                 f"it with `python -m benchmarks.tune_dispatch`")
         return cls(table=entries, path=path)
 
@@ -980,7 +1047,8 @@ def run_conv_impl(impl: Impl, xb, wb, bias=None, *, stride: int = 1,
                   precision=None, machine: MachineModel = TPU_V5E,
                   interpret: Optional[bool] = None,
                   hob: Optional[int] = None, wob: Optional[int] = None,
-                  hso: Optional[int] = None, route=None, dilation=1):
+                  hso: Optional[int] = None, route=None, dilation=1,
+                  residual=None, gap: bool = False):
     """Execute one candidate on blocked operands, blocked output.
 
     All impls share this signature — blocked ``[N, Ci/Cib, H, W, Cib]``
@@ -993,7 +1061,14 @@ def run_conv_impl(impl: Impl, xb, wb, bias=None, *, stride: int = 1,
     (they are NHWC algorithms); that cost is *theirs to lose* in tune(),
     not hidden.  ``route`` (a :class:`KernelRoute`) rides into the
     window/stream wrappers' ``stream`` slot for per-direction backward
-    routing."""
+    routing.
+
+    ``residual``/``gap`` are the §14 epilogue riders, honored by *every*
+    impl with one semantics — residual added post-activation in f32, gap
+    returning flat f32-mean ``[N, Co]`` features: the Pallas families fuse
+    them in-kernel, the jnp oracle folds them into its epilogue, and the
+    NHWC baselines apply them on the blocked result after the layout
+    sandwich (so routing stays a pure performance decision)."""
     import jax.numpy as jnp
 
     impl = _as_impl(impl)
@@ -1013,27 +1088,29 @@ def run_conv_impl(impl: Impl, xb, wb, bias=None, *, stride: int = 1,
             xb, wb, bias, stride=stride, padding=padding,
             activation=activation, hob=hob, wob=wob, machine=machine,
             interpret=interpret, precision=pol, stream=stream, hso=hso,
-            groups=groups, dilation=dilation)
+            groups=groups, dilation=dilation, residual=residual, gap=gap)
     if impl is Impl.DEPTHWISE:
         from repro.kernels.conv2d_depthwise import (
             depthwise_conv2d_blocked_pallas)
         return depthwise_conv2d_blocked_pallas(
             xb, wb, bias, stride=stride, padding=padding,
             activation=activation, hob=hob, wob=wob, machine=machine,
-            interpret=interpret, precision=pol, dilation=dilation)
+            interpret=interpret, precision=pol, dilation=dilation,
+            residual=residual, gap=gap)
     if impl is Impl.POINTWISE:
         from repro.kernels.conv2d_pointwise import (
             pointwise_conv2d_blocked_pallas)
         return pointwise_conv2d_blocked_pallas(
             xb, wb, bias, stride=stride, padding=padding,
             activation=activation, hob=hob, wob=wob, machine=machine,
-            interpret=interpret, precision=pol)
+            interpret=interpret, precision=pol, residual=residual, gap=gap)
     if impl is Impl.JNP:
         from repro.core.direct_conv import direct_conv_blocked
         return direct_conv_blocked(xb, wb, stride, padding, bias,
                                    activation, hob=hob, wob=wob,
                                    precision=pol, groups=groups,
-                                   dilation=dilation)
+                                   dilation=dilation, residual=residual,
+                                   gap=gap)
     if impl is Impl.IM2COL and (groups > 1 or dilation != (1, 1)):
         raise ValueError("im2col baseline is dense-only (groups=1, "
                          "dilation=1); the dispatcher's geometry gate "
@@ -1054,7 +1131,16 @@ def run_conv_impl(impl: Impl, xb, wb, bias=None, *, stride: int = 1,
     if bias is not None:
         y = y + bias.reshape(-1).astype(jnp.float32)
     y = apply_activation(y, activation).astype(pol.op_dtype)
-    return L.nhwc_to_blocked(y, xb_out_pencil(wb))
+    yb = L.nhwc_to_blocked(y, xb_out_pencil(wb))
+    if residual is not None:
+        yb = (yb.astype(jnp.float32)
+              + residual.astype(jnp.float32)).astype(pol.op_dtype)
+    if gap:
+        n, coblk, _, _, cob = yb.shape
+        return jnp.mean(yb.astype(jnp.float32),
+                        axis=(2, 3)).reshape(n, coblk * cob
+                                             ).astype(pol.op_dtype)
+    return yb
 
 
 def xb_out_pencil(wb) -> int:

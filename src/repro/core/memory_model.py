@@ -20,7 +20,8 @@ from .precision import resolve_precision
 
 __all__ = ["ConvShape", "bytes_overhead", "bytes_channel_pad",
            "bytes_precision_split", "bytes_halo_refetch", "overhead_table",
-           "bytes_repack_boundary", "chain_repack_bytes"]
+           "bytes_repack_boundary", "chain_repack_bytes",
+           "bytes_epilogue_fusion"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,6 +231,45 @@ def chain_repack_bytes(shapes, dtype_bytes: int = 4) -> int:
     """Total eliminated pack/unpack bytes over a chain's interior boundaries."""
     return sum(bytes_repack_boundary(a, b, dtype_bytes)
                for a, b in zip(shapes, shapes[1:]))
+
+
+def bytes_epilogue_fusion(s: ConvShape, dtype_bytes: int = 4, *,
+                          residual: bool = False, gap: bool = False,
+                          act_bwd: bool = False) -> int:
+    """HBM bytes the fused epilogue/prologue eliminates for one layer.
+
+    Every term is some multiple of the layer's output map
+    ``m = N*Ho*Wo*Co*dtype_bytes`` — the tensor an unfused pipeline would
+    round-trip through HBM between the conv and the fused-away op:
+
+      residual   the unfused path writes ``act(z+b)`` then re-reads it AND
+                 the skip tensor for the elementwise add: 2m extra traffic
+                 (one read of y, one read of r) vs. the fused epilogue,
+                 which reads the skip tile alongside the output tile it is
+                 already writing — so the saving is 2m (y's write+read;
+                 the r read happens either way).
+      gap        the unfused path writes the full map then re-reads it to
+                 pool; fused, the map never exists in HBM: write m + read m
+                 saved, minus the (negligible) pooled vector.
+      act_bwd    the unfused backward materializes ``dz = g * act'(z)`` to
+                 HBM and re-reads it in dgrad *and* wgrad; fused, each
+                 kernel forms dz from (g, z) tiles on load: the dz write
+                 plus one of its two reads — 2m (g and z are read either
+                 way).
+
+    Flags compose additively — each names an independent HBM round-trip.
+    Zero when nothing is fused, mirroring the zero-overhead accounting
+    convention of this module (DESIGN.md §14).
+    """
+    m = s.n * s.ho * s.wo * s.co * dtype_bytes
+    saved = 0
+    if residual:
+        saved += 2 * m
+    if gap:
+        saved += 2 * m
+    if act_bwd:
+        saved += 2 * m
+    return saved
 
 
 def overhead_table(shapes, dtype_bytes: int = 4, lane: int = 128):

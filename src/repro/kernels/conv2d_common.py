@@ -22,8 +22,20 @@ that a kernel is only its contraction body:
   init-accumulator / flush-epilogue pattern (the output block's index map is
   constant along reduction axes, so Pallas revisits the same block).
 * ``epilogue_flush`` — the single down-cast store with the fused
-  bias + activation applied on the f32 accumulator (forward); dgrad reuses
-  it with no bias/activation.
+  bias + activation (+ residual skip-add) applied on the f32 accumulator
+  (forward); dgrad reuses it with no bias/activation.  It returns the
+  stored tile so callers can chain further fused consumers.
+* ``gap_update`` / ``gap_spec`` — the global-average-pool rider: each
+  flushed tile's spatial sum lands in a persistent f32 scratch pencil and
+  the pooled ``[1, Cb]`` output is written once after the last spatial
+  tile (DESIGN.md §14 — partial sums stay f32 for the same reason the
+  matmul accumulator does).
+* ``cotangent_prologue`` — the backward twin of the fused epilogue: the
+  dgrad/wgrad kernels take the *raw* incoming cotangent ``g`` plus the
+  saved pre-activation ``z`` and compute ``dz = g * act'(z)`` on tile
+  load, in f32, with the same cast discipline the unfused XLA pointwise
+  op used — so the fused backward is bit-identical while never
+  materializing ``dz`` in HBM.
 
 Every kernel is parameterized by the same ``core.blocking`` output
 (``Blocking`` for forward/dgrad, ``choose_wgrad_blocking`` for wgrad), which
@@ -45,7 +57,8 @@ from repro.core.direct_conv import apply_activation
 
 __all__ = [
     "halo_dims", "halo_window_spec", "weight_spec", "tile_spec", "bias_spec",
-    "tap_windows", "first_step", "last_step", "epilogue_flush",
+    "gap_spec", "tap_windows", "first_step", "last_step", "epilogue_flush",
+    "gap_update", "cotangent_prologue",
 ]
 
 # A map from the kernel's grid indices to the operand's leading block
@@ -111,12 +124,27 @@ def tile_spec(hob: int, wob: int, cb: int, pick: GridPick) -> pl.BlockSpec:
 
 
 def bias_spec(cob: int, pick: GridPick) -> pl.BlockSpec:
-    """One ``[1, Cob]`` bias pencil; ``pick`` -> (co_block,)."""
+    """One ``[1, Cob]`` bias pencil; ``pick`` -> (co_block,).  Also serves
+    the fused bias-*gradient* output (``db``): its ``[Co/Cob, Cob]`` layout
+    is the bias layout and its index map is constant along the wgrad
+    reduction axes, so the flush-once revisit discipline applies."""
     def index_map(*ids):
         (co,) = pick(*ids)
         return (co, 0)
 
     return pl.BlockSpec((1, cob), index_map)
+
+
+def gap_spec(cob: int, pick: GridPick) -> pl.BlockSpec:
+    """One ``[1, 1, Cob]`` pooled-feature pencil of the fused GAP output
+    ``[N, Co/Cob, Cob]``; ``pick`` -> (batch, co_block).  The index map is
+    constant along the spatial-tile and reduction axes — the pooled block
+    is revisited and written once by ``gap_update``'s last-tile guard."""
+    def index_map(*ids):
+        b, co = pick(*ids)
+        return (b, co, 0)
+
+    return pl.BlockSpec((1, 1, cob), index_map)
 
 
 def tap_windows(x: jnp.ndarray, hf: int, wf: int, hob: int, wob: int,
@@ -163,14 +191,25 @@ def last_step(axes: Sequence[int]):
 
 
 def epilogue_flush(o_ref, acc: jnp.ndarray, hob: int, wob: int,
-                   b_ref=None, activation: Optional[str] = None) -> None:
-    """The single output store: bias + activation on the f32 accumulator,
-    one down-cast write of the ``[hob, wob, cb]`` tile (DESIGN.md §5).
+                   b_ref=None, activation: Optional[str] = None,
+                   r_ref=None) -> jnp.ndarray:
+    """The single output store: bias + activation (+ residual skip-add) on
+    the f32 accumulator, one down-cast write of the ``[hob, wob, cb]`` tile
+    (DESIGN.md §5, §14).
 
     This is where the mixed-precision policy's accumulator guarantee is
     enforced: whatever the operand dtype (f32 or bf16), the tile arrives
     here as f32 partial sums and is cast to the output dtype exactly once —
     a bf16 run is never bf16-naive summation (DESIGN.md §10).
+
+    ``r_ref`` is the fused residual tile (``out = act(z + bias) +
+    residual``): the skip branch rides the flush, added in f32 *before* the
+    single down-cast, so the fused chain re-streams zero extra HBM bytes
+    and matches the two-pass reference exactly under the f32 policy.
+
+    Returns the stored ``[hob, wob, cb]`` tile (output dtype) so further
+    fused consumers — the GAP partial-sum rider — see exactly the values
+    that were written.
     """
     assert acc.dtype == jnp.float32, (
         f"epilogue got a {acc.dtype} accumulator; the kernel scratch must "
@@ -179,4 +218,59 @@ def epilogue_flush(o_ref, acc: jnp.ndarray, hob: int, wob: int,
     if b_ref is not None:
         out = out + b_ref[...].astype(jnp.float32)       # (1, Cob) broadcast
     out = apply_activation(out, activation)
-    o_ref[0, 0] = out.reshape(hob, wob, o_ref.shape[-1]).astype(o_ref.dtype)
+    cb = o_ref.shape[-1]
+    if r_ref is not None:
+        out = out.reshape(hob, wob, cb) + r_ref[0, 0].astype(jnp.float32)
+    tile = out.reshape(hob, wob, cb).astype(o_ref.dtype)
+    o_ref[0, 0] = tile
+    return tile
+
+
+def gap_update(g_ref, gacc_ref, tile: jnp.ndarray, hw: int,
+               is_first, is_last) -> None:
+    """Fold one flushed output tile into the fused global-average-pool.
+
+    ``tile`` is what ``epilogue_flush`` just stored (output dtype — the
+    pooled result must see the written values, like the two-pass reference
+    that re-reads the map); its spatial sum accumulates in the persistent
+    ``[1, cb]`` f32 scratch ``gacc_ref`` across the spatial tiles, and
+    after the last tile the pooled pencil is divided by the *full* spatial
+    extent ``hw`` and written once to ``g_ref``.  Partial sums stay f32
+    for the same reason the matmul accumulator does: per-tile rounding of
+    a bf16 running mean would accumulate across tiles (DESIGN.md §14).
+
+    ``is_first``/``is_last`` are the caller's spatial-tile-axis guards
+    (``first_step``/``last_step`` over the tile axes), passed in as values:
+    this helper runs inside the flush's ``pl.when`` and ``pl.program_id``
+    may not be issued inside a conditional body.
+    """
+    part = jnp.sum(tile.astype(jnp.float32).reshape(-1, tile.shape[-1]),
+                   axis=0, keepdims=True)                       # [1, cb]
+    gacc_ref[...] = jnp.where(is_first, part, gacc_ref[...] + part)
+
+    @pl.when(is_last)
+    def _pool():
+        g_ref[0] = (gacc_ref[...] / hw).astype(g_ref.dtype)
+
+
+def cotangent_prologue(g: jnp.ndarray, z, activation: Optional[str],
+                       ) -> jnp.ndarray:
+    """``dz = g * act'(z)`` on tile load — the backward twin of the fused
+    epilogue (DESIGN.md §14).
+
+    ``g`` is the raw incoming cotangent tile (operand dtype), ``z`` the
+    saved pre-activation tile (the policy's residual dtype).  The cast
+    discipline reproduces the unfused XLA pointwise op bit for bit: the
+    cotangent is taken at ``z``'s dtype, ``act'`` is evaluated in f32 via
+    the activation's own VJP (no hand-derived derivative to drift), and
+    the product is rounded back to ``z``'s dtype before returning at
+    ``g``'s dtype — elementwise, so computing it per halo'd patch inside
+    the kernel commutes with windowing, and the stride-dilated zero rows
+    of a dgrad cotangent stay exactly zero (``0 * act'(0) = 0``).
+    """
+    if z is None or activation in (None, "linear"):
+        return g
+    zf = z.astype(jnp.float32)
+    gf = g.astype(z.dtype).astype(jnp.float32)
+    dz = jax.vjp(lambda t: apply_activation(t, activation), zf)[1](gf)[0]
+    return dz.astype(z.dtype).astype(g.dtype)

@@ -56,7 +56,8 @@ from repro.core.conv_baselines import Padding
 from repro.core.convspec import ConvSpec
 from repro.core.direct_conv import apply_activation, pad_blocked
 from repro.core.precision import F32, Precision, resolve_precision
-from .conv2d_common import (bias_spec, epilogue_flush, first_step, halo_dims,
+from .conv2d_common import (bias_spec, cotangent_prologue, epilogue_flush,
+                            first_step, gap_spec, gap_update, halo_dims,
                             halo_window_spec, last_step, tap_windows,
                             tile_spec, weight_spec)
 
@@ -69,31 +70,74 @@ __all__ = ["depthwise_conv2d_blocked_pallas", "depthwise_dgrad_pallas",
 # ---------------------------------------------------------------------------
 
 def _dw_fwd_kernel(x_ref, w_ref, *rest, hf, wf, hob, wob, stride, dilation,
-                   activation, has_bias):
-    if has_bias:
-        b_ref, (o_ref,) = rest[0], rest[1:]
-    else:
-        b_ref, (o_ref,) = None, rest
+                   activation, has_bias, has_z=False, prologue_activation=None,
+                   has_residual=False, has_gap=False, hw=1):
+    """Forward shift-multiply-accumulate; also the dgrad body (flipped taps
+    over the dilated cotangent), in which case ``has_z`` rides the saved
+    pre-activation through a second halo window and the cotangent prologue
+    ``dz = g * act'(z)`` (``prologue_activation`` — the *forward*'s
+    activation, distinct from the epilogue's) is applied to the whole patch
+    before the taps slide."""
+    rest = list(rest)
+    z_ref = rest.pop(0) if has_z else None
+    b_ref = rest.pop(0) if has_bias else None
+    r_ref = rest.pop(0) if has_residual else None
+    o_ref = rest.pop(0)
+    g_ref = rest.pop(0) if has_gap else None
+    gacc_ref = rest.pop(0) if has_gap else None
+
+    patch = x_ref[0, 0]
+    if z_ref is not None:
+        patch = cotangent_prologue(patch, z_ref[0, 0], prologue_activation)
 
     # no reduction axis: the accumulator is born and flushed in one step
     acc = jnp.zeros((hob * wob, x_ref.shape[-1]), jnp.float32)
-    for (dh, dw), win in tap_windows(x_ref[0, 0], hf, wf, hob, wob, stride,
+    for (dh, dw), win in tap_windows(patch, hf, wf, hob, wob, stride,
                                      dilation):
         wtap = w_ref[0, 0, dh, dw, 0]                    # [Cb] — own lane only
         acc = acc + win.astype(jnp.float32) * wtap.astype(jnp.float32)[None, :]
-    epilogue_flush(o_ref, acc, hob, wob, b_ref, activation)
+    tile = epilogue_flush(o_ref, acc, hob, wob, b_ref, activation, r_ref)
+    if has_gap:
+        gap_update(g_ref, gacc_ref, tile, hw,
+                   first_step((2, 3)), last_step((2, 3)))
 
 
-def _dw_wgrad_kernel(x_ref, dy_ref, o_ref, acc_ref, *, hf, wf, hob, wob,
-                     stride, dilation):
+def _dw_wgrad_kernel(x_ref, dy_ref, *rest, hf, wf, hob, wob,
+                     stride, dilation, has_z, activation, with_db):
     """Per-channel tap gradients: each tap's window, elementwise against the
     cotangent tile, summed over spatial positions — a [Hf*Wf, Cb] resident
-    accumulator instead of the dense kernel's [Hf, Wf, Cib, Cob]."""
+    accumulator instead of the dense kernel's [Hf, Wf, Cib, Cob].
+
+    ``has_z`` forms ``dz = g * act'(z)`` on tile load; ``with_db``
+    accumulates ``db = Σ dz`` every step (all three non-channel axes are
+    the reduction — there is no ci pass to gate on) into a [1, Cb] f32
+    scratch, flushed once per channel block."""
+    rest = list(rest)
+    z_ref = rest.pop(0) if has_z else None
+    o_ref = rest.pop(0)
+    db_ref = rest.pop(0) if with_db else None
+    acc_ref = rest.pop(0)
+    dbacc_ref = rest.pop(0) if with_db else None
+
     @pl.when(first_step((1, 2, 3)))
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    dy = dy_ref[0, 0].reshape(hob * wob, dy_ref.shape[-1]).astype(jnp.float32)
+    dy = dy_ref[0, 0].reshape(hob * wob, dy_ref.shape[-1])
+    if z_ref is not None:
+        z = z_ref[0, 0].reshape(hob * wob, dy_ref.shape[-1])
+        dy = cotangent_prologue(dy, z, activation)
+    dy = dy.astype(jnp.float32)
+
+    if with_db:
+        part = jnp.sum(dy, axis=0, keepdims=True)
+        dbacc_ref[...] = jnp.where(first_step((1, 2, 3)), part,
+                                   dbacc_ref[...] + part)
+
+        @pl.when(last_step((1, 2, 3)))
+        def _db_flush():
+            db_ref[0] = dbacc_ref[0].astype(db_ref.dtype)
+
     for (dh, dw), win in tap_windows(x_ref[0, 0], hf, wf, hob, wob, stride,
                                      dilation):
         acc_ref[dh * wf + dw] = acc_ref[dh * wf + dw] + jnp.sum(
@@ -111,7 +155,8 @@ def _dw_wgrad_kernel(x_ref, dy_ref, o_ref, acc_ref, *, hf, wf, hob, wob,
 
 def _dw_forward(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
                 activation, hob, wob, machine: MachineModel,
-                interpret: bool, dilation=(1, 1)) -> jnp.ndarray:
+                interpret: bool, dilation=(1, 1), residual=None, gap=False,
+                z=None, prologue_activation=None):
     n, cblk, hi, wi, cb = xp.shape
     cblk2, one, hf, wf, one2, cb2 = w.shape
     assert (cblk, cb) == (cblk2, cb2) and one == one2 == 1, \
@@ -123,11 +168,15 @@ def _dw_forward(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
     blk = choose_depthwise_blocking(hi, wi, cblk * cb, hf, wf, stride,
                                     machine=machine, cb=cb, hob=hob, wob=wob,
                                     in_dtype_bytes=xp.dtype.itemsize,
-                                    dilation=dilation)
+                                    dilation=dilation,
+                                    fused_residual=residual is not None,
+                                    fused_gap=gap,
+                                    fused_prologue=z is not None)
     hob, wob = blk.hob, blk.wob
     hib, wib = halo_dims(hob, wob, hf, wf, stride, dilation)
 
     has_bias = bias is not None
+    has_z = z is not None
     operands = [xp, w]
     in_specs = [
         halo_window_spec(hib, wib, cb, hob * stride, wob * stride,
@@ -137,32 +186,57 @@ def _dw_forward(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
         pl.BlockSpec((1, 1, hf, wf, 1, cb),
                      lambda b, c, th, tw: (c, 0, 0, 0, 0, 0)),
     ]
+    if has_z:
+        assert z.shape == xp.shape, (z.shape, xp.shape)
+        operands.append(z)
+        in_specs.append(
+            halo_window_spec(hib, wib, cb, hob * stride, wob * stride,
+                             lambda b, c, th, tw: (b, c, th, tw)))
     if has_bias:
         operands.append(bias)
         in_specs.append(bias_spec(cb, lambda b, c, th, tw: (c,)))
+    if residual is not None:
+        assert residual.shape == (n, cblk, ho, wo, cb), \
+            (residual.shape, (n, cblk, ho, wo, cb))
+        operands.append(residual)
+        in_specs.append(tile_spec(hob, wob, cb,
+                                  lambda b, c, th, tw: (b, c, th, tw)))
+
+    out_specs = tile_spec(hob, wob, cb, lambda b, c, th, tw: (b, c, th, tw))
+    out_shape = jax.ShapeDtypeStruct((n, cblk, ho, wo, cb), xp.dtype)
+    scratch = []
+    if gap:
+        out_specs = [out_specs, gap_spec(cb, lambda b, c, th, tw: (b, c))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((n, cblk, cb), xp.dtype)]
+        scratch.append(pltpu.VMEM((1, cb), jnp.float32))
 
     grid = (n, cblk, ho // hob, wo // wob)
     return pl.pallas_call(
         partial(_dw_fwd_kernel, hf=hf, wf=wf, hob=hob, wob=wob,
                 stride=stride, dilation=dilation, activation=activation,
-                has_bias=has_bias),
+                has_bias=has_bias, has_z=has_z,
+                prologue_activation=prologue_activation,
+                has_residual=residual is not None, has_gap=gap, hw=ho * wo),
         grid=grid,
         in_specs=in_specs,
-        out_specs=tile_spec(hob, wob, cb,
-                            lambda b, c, th, tw: (b, c, th, tw)),
-        out_shape=jax.ShapeDtypeStruct((n, cblk, ho, wo, cb), xp.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         interpret=interpret,
     )(*operands)
 
 
 @partial(jax.jit, static_argnames=("stride", "hob", "wob", "machine",
-                                   "interpret", "dilation"))
+                                   "interpret", "dilation", "activation"))
 def depthwise_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
                            hob: Optional[int] = None,
                            wob: Optional[int] = None,
                            machine: MachineModel = TPU_V5E,
                            interpret: bool = False,
-                           dilation=(1, 1)) -> jnp.ndarray:
+                           dilation=(1, 1),
+                           z: Optional[jnp.ndarray] = None,
+                           activation: Optional[str] = None) -> jnp.ndarray:
     """Input gradient of the VALID blocked depthwise conv.
 
     The transposed depthwise conv is itself a depthwise conv: stride-dilate
@@ -170,26 +244,37 @@ def depthwise_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
     stack spatially, and run the forward kernel at stride 1 (forward filter
     dilation still strides the taps).  Returns the gradient w.r.t. the
     padded input, truncated at the touched extents
-    (``blocking.dgrad_extents``)."""
+    (``blocking.dgrad_extents``).
+
+    ``z``/``activation`` fuse the activation prologue: ``z`` is the saved
+    pre-activation map (same shape as ``dy``), dilated and padded alongside
+    the cotangent so the kernel forms ``dz = g * act'(z)`` on tile load —
+    the dilation zeros stay zero because the prologue is elementwise."""
     n, cblk, ho, wo, cb = dy.shape
     _, _, hf, wf, _, _ = w.shape
     dil_h, dil_w = dilation
-    if stride > 1:
-        dyd = jnp.zeros((n, cblk, (ho - 1) * stride + 1,
-                         (wo - 1) * stride + 1, cb), dy.dtype)
-        dyd = dyd.at[:, :, ::stride, ::stride, :].set(dy)
-    else:
-        dyd = dy
-    dyp = pad_blocked(dyd, ((hf - 1) * dil_h, (hf - 1) * dil_h),
-                      ((wf - 1) * dil_w, (wf - 1) * dil_w))
+
+    def _dilate_pad(t):
+        if stride > 1:
+            td = jnp.zeros((n, cblk, (ho - 1) * stride + 1,
+                            (wo - 1) * stride + 1, cb), t.dtype)
+            td = td.at[:, :, ::stride, ::stride, :].set(t)
+        else:
+            td = t
+        return pad_blocked(td, ((hf - 1) * dil_h, (hf - 1) * dil_h),
+                           ((wf - 1) * dil_w, (wf - 1) * dil_w))
+
+    dyp = _dilate_pad(dy)
+    zp = None if z is None else _dilate_pad(z)
     wf_flip = w[:, :, ::-1, ::-1, :, :]
     return _dw_forward(dyp, wf_flip, None, 1, None, hob, wob, machine,
-                       interpret, dilation)
+                       interpret, dilation, z=zp,
+                       prologue_activation=activation)
 
 
 @partial(jax.jit, static_argnames=("hf", "wf", "stride", "hob", "wob",
                                    "machine", "interpret", "out_dtype",
-                                   "dilation"))
+                                   "dilation", "activation", "with_db"))
 def depthwise_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
                            hf: int, wf: int, stride: int = 1,
                            hob: Optional[int] = None,
@@ -197,58 +282,93 @@ def depthwise_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
                            machine: MachineModel = TPU_V5E,
                            interpret: bool = False,
                            out_dtype=None,
-                           dilation=(1, 1)) -> jnp.ndarray:
+                           dilation=(1, 1),
+                           z: Optional[jnp.ndarray] = None,
+                           activation: Optional[str] = None,
+                           with_db: bool = False):
     """Weight gradient of the VALID blocked depthwise conv.
 
     xp: [N, C/Cb, Hi, Wi, Cb] the forward's *padded* input;
     dy: [N, C/Cb, Ho, Wo, Cb] cotangent
     -> [C/Cb, 1, Hf, Wf, 1, Cb] in the grouped-HWIO blocked layout.
     (N, Ho/Hob, Wo/Wob) are the reduction axes; the [Hf*Wf, Cb] accumulator
-    stays resident per channel block."""
+    stays resident per channel block.
+
+    ``z``/``activation`` fuse ``dz = g * act'(z)`` on tile load (``z`` has
+    ``dy``'s shape — the saved pre-activation).  ``with_db`` additionally
+    returns ``(dw, db)`` with ``db = Σ dz`` accumulated f32 in-kernel,
+    shape ``[C/Cb, Cb]``."""
     n, cblk, hi, wi, cb = xp.shape
     n2, cblk2, ho, wo, cb2 = dy.shape
     assert (n, cblk, cb) == (n2, cblk2, cb2), (xp.shape, dy.shape)
 
     blk = choose_depthwise_wgrad_blocking(
         ho, wo, hf, wf, stride, machine=machine, cb=cb, hob=hob, wob=wob,
-        in_dtype_bytes=xp.dtype.itemsize, dilation=dilation)
+        in_dtype_bytes=xp.dtype.itemsize, dilation=dilation,
+        fused_prologue=z is not None, fused_bias=with_db)
     hob, wob = blk.hob, blk.wob
     hib, wib = halo_dims(hob, wob, hf, wf, stride, dilation)
+
+    has_z = z is not None
+    operands = [xp, dy]
+    in_specs = [
+        halo_window_spec(hib, wib, cb, hob * stride, wob * stride,
+                         lambda c, b, th, tw: (b, c, th, tw)),
+        tile_spec(hob, wob, cb, lambda c, b, th, tw: (b, c, th, tw)),
+    ]
+    if has_z:
+        assert z.shape == dy.shape, (z.shape, dy.shape)
+        operands.append(z)
+        in_specs.append(tile_spec(hob, wob, cb,
+                                  lambda c, b, th, tw: (b, c, th, tw)))
+
+    out_specs = pl.BlockSpec((1, 1, hf, wf, 1, cb),
+                             lambda c, b, th, tw: (c, 0, 0, 0, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((cblk, 1, hf, wf, 1, cb),
+                                     out_dtype or xp.dtype)
+    scratch = [pltpu.VMEM((hf * wf, cb), jnp.float32)]
+    if with_db:
+        out_specs = [out_specs, bias_spec(cb, lambda c, b, th, tw: (c,))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((cblk, cb), jnp.float32)]
+        scratch.append(pltpu.VMEM((1, cb), jnp.float32))
 
     grid = (cblk, n, ho // hob, wo // wob)
     return pl.pallas_call(
         partial(_dw_wgrad_kernel, hf=hf, wf=wf, hob=hob, wob=wob,
-                stride=stride, dilation=dilation),
+                stride=stride, dilation=dilation, has_z=has_z,
+                activation=activation, with_db=with_db),
         grid=grid,
-        in_specs=[
-            halo_window_spec(hib, wib, cb, hob * stride, wob * stride,
-                             lambda c, b, th, tw: (b, c, th, tw)),
-            tile_spec(hob, wob, cb, lambda c, b, th, tw: (b, c, th, tw)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, hf, wf, 1, cb),
-                               lambda c, b, th, tw: (c, 0, 0, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((cblk, 1, hf, wf, 1, cb),
-                                       out_dtype or xp.dtype),
-        scratch_shapes=[pltpu.VMEM((hf * wf, cb), jnp.float32)],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(xp, dy)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
 # custom VJP + public entry point
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
-def _dwconv(x, w, bias, spec, activation, hob, wob, machine, interpret,
-            precision):
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11))
+def _dwconv(x, w, bias, residual, spec, activation, hob, wob, machine,
+            interpret, precision, gap):
     op = precision.op_dtype
     xp = pad_blocked(x.astype(op), *spec.pads)
-    return _dw_forward(xp, w.astype(op), bias, spec.stride, activation,
-                       hob, wob, machine, interpret, spec.dilation)
+    r = None if residual is None else residual.astype(op)
+    out = _dw_forward(xp, w.astype(op), bias, spec.stride, activation,
+                      hob, wob, machine, interpret, spec.dilation,
+                      residual=r, gap=gap)
+    if gap:
+        _, pooled = out
+        n, cblk, cb = pooled.shape
+        return pooled.reshape(n, cblk * cb)
+    return out
 
 
-def _dwconv_fwd(x, w, bias, spec, activation, hob, wob, machine, interpret,
-                precision):
+def _dwconv_fwd(x, w, bias, residual, spec, activation, hob, wob, machine,
+                interpret, precision, gap):
     op = precision.op_dtype
     xp = pad_blocked(x.astype(op), *spec.pads)
     wq = w.astype(op)
@@ -257,44 +377,64 @@ def _dwconv_fwd(x, w, bias, spec, activation, hob, wob, machine, interpret,
     linear = activation in (None, "linear")
     out = z if linear else apply_activation(
         z.astype(jnp.float32), activation).astype(z.dtype)
+    if residual is not None:
+        out = (out.astype(jnp.float32)
+               + residual.astype(jnp.float32)).astype(z.dtype)
+    if gap:
+        n, cblk, _, _, cb = z.shape
+        out = jnp.mean(out.astype(jnp.float32),
+                       axis=(2, 3)).reshape(n, cblk * cb).astype(z.dtype)
     res = (xp, wq, bias,
            None if linear else z.astype(precision.residual_dtype),
+           None if residual is None else jnp.zeros((0,), residual.dtype),
            jnp.zeros((0,), x.dtype), jnp.zeros((0,), w.dtype))
     return out, res
 
 
 def _dwconv_bwd(spec, activation, hob, wob, machine, interpret, precision,
-                res, g):
-    xp, wq, bias, z, x_token, w_token = res
+                gap, res, g):
+    xp, wq, bias, z, r_token, x_token, w_token = res
     hf, wf = wq.shape[2], wq.shape[3]
     stride, dilation = spec.stride, spec.dilation
+    dil_h, dil_w = dilation
 
-    if z is None:
-        dz = g
-    else:
-        def act(t):
-            return apply_activation(t.astype(jnp.float32),
-                                    activation).astype(t.dtype)
-        dz = jax.vjp(act, z)[1](g.astype(z.dtype))[0]
-    dz = dz.astype(precision.op_dtype)
-
-    db = (None if bias is None else
-          dz.astype(jnp.float32).sum(axis=(0, 2, 3)).astype(bias.dtype))
+    if gap:
+        hi_p0, wi_p0 = xp.shape[2], xp.shape[3]
+        ho = (hi_p0 - ((hf - 1) * dil_h + 1)) // stride + 1
+        wo = (wi_p0 - ((wf - 1) * dil_w + 1)) // stride + 1
+        n = xp.shape[0]
+        cblk, cb = wq.shape[0], wq.shape[-1]
+        gm = g.reshape(n, cblk, 1, 1, cb).astype(jnp.float32) / (ho * wo)
+        g = jnp.broadcast_to(gm, (n, cblk, ho, wo, cb))
+    g = g.astype(precision.op_dtype)
+    dres = None if r_token is None else g.astype(r_token.dtype)
+    zs = None if z is None else z.astype(g.dtype)
 
     (ph_lo, ph_hi), (pw_lo, pw_hi) = spec.pads
     hi_p, wi_p = xp.shape[2], xp.shape[3]
     hi, wi = hi_p - ph_lo - ph_hi, wi_p - pw_lo - pw_hi
-    dxp = depthwise_dgrad_pallas(dz, wq, stride=stride, machine=machine,
-                                 interpret=interpret, dilation=dilation)
+    dxp = depthwise_dgrad_pallas(g, wq, stride=stride, machine=machine,
+                                 interpret=interpret, dilation=dilation,
+                                 z=zs, activation=activation)
     eh, ew = dxp.shape[2], dxp.shape[3]
     dxp = jnp.pad(dxp, ((0, 0), (0, 0), (0, hi_p - eh), (0, wi_p - ew),
                         (0, 0)))
     dx = dxp[:, :, ph_lo:ph_lo + hi, pw_lo:pw_lo + wi, :].astype(x_token.dtype)
 
-    dw = depthwise_wgrad_pallas(
-        xp, dz, hf, wf, stride=stride, machine=machine, interpret=interpret,
-        out_dtype=jnp.float32, dilation=dilation).astype(w_token.dtype)
-    return dx, dw, db
+    if bias is not None:
+        dw, db32 = depthwise_wgrad_pallas(
+            xp, g, hf, wf, stride=stride, machine=machine,
+            interpret=interpret, out_dtype=jnp.float32, dilation=dilation,
+            z=zs, activation=activation, with_db=True)
+        db = db32.astype(bias.dtype)
+    else:
+        dw = depthwise_wgrad_pallas(
+            xp, g, hf, wf, stride=stride, machine=machine,
+            interpret=interpret, out_dtype=jnp.float32, dilation=dilation,
+            z=zs, activation=activation)
+        db = None
+    dw = dw.astype(w_token.dtype)
+    return dx, dw, db, dres
 
 
 _dwconv.defvjp(_dwconv_fwd, _dwconv_bwd)
@@ -302,7 +442,8 @@ _dwconv.defvjp(_dwconv_fwd, _dwconv_bwd)
 
 @partial(jax.jit,
          static_argnames=("stride", "padding", "activation", "hob", "wob",
-                          "machine", "interpret", "precision", "dilation"))
+                          "machine", "interpret", "precision", "dilation",
+                          "gap"))
 def depthwise_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
                                     bias: Optional[jnp.ndarray] = None,
                                     stride: int = 1,
@@ -314,7 +455,8 @@ def depthwise_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
                                     interpret: bool = False,
                                     precision: Precision | str = F32,
                                     dilation: int | tuple = 1,
-                                    ) -> jnp.ndarray:
+                                    residual: Optional[jnp.ndarray] = None,
+                                    gap: bool = False):
     """Tiled + fused blocked depthwise convolution, differentiable end to
     end through its own Pallas dgrad/wgrad kernels.
 
@@ -322,14 +464,18 @@ def depthwise_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
     blocked at Cig=1); bias: [C/Cb, Cb] or None
     -> [N, C/Cb, Ho, Wo, Cb] in the policy's operand dtype.
 
-    Same padding/precision contracts as ``direct_conv2d_blocked_pallas``;
-    no ``stream`` knob — the depthwise working set (no weight matrix, no
-    reduction) fits VMEM wherever the dense window kernel's does.
+    Same padding/precision contracts as ``direct_conv2d_blocked_pallas``,
+    and the same §14 fusion riders: ``residual`` (post-activation add of an
+    output-shaped map, f32 on the accumulator, one downcast) and ``gap``
+    (per-tile f32 partial-sum global average pool — returns the flat
+    ``[N, C]`` pooled features instead of the map).  No ``stream`` knob —
+    the depthwise working set (no weight matrix, no reduction) fits VMEM
+    wherever the dense window kernel's does.
     """
     n, cblk, hi, wi, cb = x.shape
     c = cblk * cb
     spec = ConvSpec.make(n, hi, wi, c, c, w.shape[2], w.shape[3],
                          stride=stride, padding=padding, groups=c,
                          dilation=dilation)
-    return _dwconv(x, w, bias, spec, activation, hob, wob, machine,
-                   interpret, resolve_precision(precision))
+    return _dwconv(x, w, bias, residual, spec, activation, hob, wob, machine,
+                   interpret, resolve_precision(precision), gap)

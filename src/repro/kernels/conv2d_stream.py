@@ -56,8 +56,8 @@ from repro.core.blocking import (MachineModel, choose_stream_blocking,
                                  choose_stream_dgrad_blocking,
                                  choose_stream_wgrad_blocking, dgrad_extents)
 from repro.core.direct_conv import pad_blocked
-from .conv2d_common import (bias_spec, epilogue_flush, first_step, last_step,
-                            tap_windows, tile_spec)
+from .conv2d_common import (bias_spec, epilogue_flush, first_step, gap_spec,
+                            gap_update, last_step, tap_windows, tile_spec)
 
 __all__ = ["stream_forward", "stream_dgrad", "stream_wgrad"]
 
@@ -75,17 +75,27 @@ def _strip_geometry(hso: int, wob: int, hf: int, wf: int, stride: int):
 # ---------------------------------------------------------------------------
 
 def _stream_conv_kernel(x_any, w_any, *rest, hf, wf, hob, wob, hso, stride,
-                        activation, has_bias, transpose):
+                        activation, has_bias, has_residual, has_gap, hw,
+                        transpose):
     """One grid step: DMA the weight tile once, stream the input band as
     ``hob/hso`` ring strips (copy strip k+1 while contracting strip k), and
     accumulate into the persistent f32 scratch; flush on the last reduction
     step.  ``transpose`` flips the kernel into its dgrad form: weight block
     indexed ``(red, cout)`` instead of ``(cout, red)``, taps mirrored, the
-    matmul contracting lanes instead of the pencil depth."""
-    if has_bias:
-        b_ref, o_ref, wgt, ring, acc_ref, sem = rest
-    else:
-        b_ref, (o_ref, wgt, ring, acc_ref, sem) = None, rest
+    matmul contracting lanes instead of the pencil depth.
+
+    The fused epilogue riders (residual tile, GAP partial-sum) are
+    forward-only: they ride the *Pallas* pipeline next to the bias pencil
+    and output block — only touched at the flush, so they never interact
+    with the manual strip ring."""
+    rest = list(rest)
+    b_ref = rest.pop(0) if has_bias else None
+    r_ref = rest.pop(0) if has_residual else None
+    o_ref = rest.pop(0)
+    g_ref = rest.pop(0) if has_gap else None
+    wgt, ring, acc_ref = rest[0], rest[1], rest[2]
+    gacc_ref = rest[3] if has_gap else None
+    sem = rest[-1]
 
     b = pl.program_id(0)
     cout = pl.program_id(1)      # output channel-block axis (Ci for dgrad)
@@ -144,9 +154,15 @@ def _stream_conv_kernel(x_any, w_any, *rest, hf, wf, hob, wob, hso, stride,
                                     preferred_element_type=jnp.float32)
         acc_ref[k * hso * wob:(k + 1) * hso * wob] = acc
 
+    gap_first = first_step((2, 3)) if has_gap else None
+    gap_last = last_step((2, 3)) if has_gap else None
+
     @pl.when(last_step((4,)))
     def _flush():
-        epilogue_flush(o_ref, acc_ref[...], hob, wob, b_ref, activation)
+        tile = epilogue_flush(o_ref, acc_ref[...], hob, wob, b_ref,
+                              activation, r_ref)
+        if has_gap:
+            gap_update(g_ref, gacc_ref, tile, hw, gap_first, gap_last)
 
 
 def _any_spec() -> pl.BlockSpec:
@@ -156,7 +172,8 @@ def _any_spec() -> pl.BlockSpec:
 
 def stream_forward(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
                    activation, hob, wob, hso,
-                   machine: MachineModel, interpret: bool) -> jnp.ndarray:
+                   machine: MachineModel, interpret: bool,
+                   residual=None, gap: bool = False):
     """Streamed forward on an already-padded blocked input (always VALID).
 
     Same contract as the window path's ``_forward_impl`` — identical grid,
@@ -165,6 +182,12 @@ def stream_forward(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
     is the same; strips only partition rows, which are independent
     accumulators).  Tiles come from ``choose_stream_blocking`` with the
     pencils pinned to the operand layouts.
+
+    ``residual``/``gap`` ride the Pallas pipeline (the residual tile as a
+    Blocked operand next to the bias pencil, the pooled pencil + f32
+    scratch next to the output block) — both are flush-time only, so the
+    manual DMA ring is untouched.  With ``gap`` the return is the
+    ``(map, pooled)`` pair, matching ``_forward_windowed``.
     """
     n, ciblk, hi, wi_, cib = xp.shape
     coblk, ciblk2, hf, wf, cib2, cob = w.shape
@@ -175,31 +198,51 @@ def stream_forward(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
     blk = choose_stream_blocking(hi, wi_, ciblk * cib, coblk * cob, hf, wf,
                                  stride, machine=machine, cob=cob, cib=cib,
                                  hob=hob, wob=wob, hso=hso,
-                                 in_dtype_bytes=xp.dtype.itemsize)
+                                 in_dtype_bytes=xp.dtype.itemsize,
+                                 fused_residual=residual is not None,
+                                 fused_gap=gap)
     hob, wob, hso = blk.hob, blk.wob, blk.hso
     hin, wib, _ = _strip_geometry(hso, wob, hf, wf, stride)
 
     has_bias = bias is not None
+    has_residual = residual is not None
     operands = [xp, w]
     in_specs = [_any_spec(), _any_spec()]
     if has_bias:
         operands.append(bias)
         in_specs.append(bias_spec(cob, lambda b, co, th, tw, ci: (co,)))
+    if has_residual:
+        assert residual.shape == (n, coblk, ho, wo, cob), \
+            (residual.shape, (n, coblk, ho, wo, cob))
+        operands.append(residual)
+        in_specs.append(tile_spec(hob, wob, cob,
+                                  lambda b, co, th, tw, ci: (b, co, th, tw)))
+
+    out_specs = tile_spec(hob, wob, cob,
+                          lambda b, co, th, tw, ci: (b, co, th, tw))
+    out_shape = jax.ShapeDtypeStruct((n, coblk, ho, wo, cob), xp.dtype)
+    scratch = [pltpu.VMEM((hf, wf, cib, cob), xp.dtype),
+               pltpu.VMEM((2, hin, wib, cib), xp.dtype),
+               pltpu.VMEM((hob * wob, cob), jnp.float32)]
+    if gap:
+        out_specs = [out_specs,
+                     gap_spec(cob, lambda b, co, th, tw, ci: (b, co))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((n, coblk, cob), xp.dtype)]
+        scratch.append(pltpu.VMEM((1, cob), jnp.float32))
+    scratch.append(pltpu.SemaphoreType.DMA((3,)))
 
     grid = (n, coblk, ho // hob, wo // wob, ciblk)
     return pl.pallas_call(
         partial(_stream_conv_kernel, hf=hf, wf=wf, hob=hob, wob=wob, hso=hso,
                 stride=stride, activation=activation, has_bias=has_bias,
+                has_residual=has_residual, has_gap=gap, hw=ho * wo,
                 transpose=False),
         grid=grid,
         in_specs=in_specs,
-        out_specs=tile_spec(hob, wob, cob,
-                            lambda b, co, th, tw, ci: (b, co, th, tw)),
-        out_shape=jax.ShapeDtypeStruct((n, coblk, ho, wo, cob), xp.dtype),
-        scratch_shapes=[pltpu.VMEM((hf, wf, cib, cob), xp.dtype),
-                        pltpu.VMEM((2, hin, wib, cib), xp.dtype),
-                        pltpu.VMEM((hob * wob, cob), jnp.float32),
-                        pltpu.SemaphoreType.DMA((3,))],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         interpret=interpret,
     )(*operands)
 
@@ -237,7 +280,9 @@ def stream_dgrad(dy: jnp.ndarray, w: jnp.ndarray, stride: int,
     grid = (n, ciblk, eh // hob, ew // wob, coblk)
     return pl.pallas_call(
         partial(_stream_conv_kernel, hf=hf, wf=wf, hob=hob, wob=wob, hso=hso,
-                stride=1, activation=None, has_bias=False, transpose=True),
+                stride=1, activation=None, has_bias=False,
+                has_residual=False, has_gap=False, hw=eh * ew,
+                transpose=True),
         grid=grid,
         in_specs=[_any_spec(), _any_spec()],
         out_specs=tile_spec(hob, wob, cib,

@@ -83,7 +83,8 @@ from repro.core.convspec import ConvSpec
 from repro.core.dispatch import KernelRoute, route_pallas, stream_flag
 from repro.core.direct_conv import apply_activation, pad_blocked
 from repro.core.precision import F32, Precision, resolve_precision
-from .conv2d_common import (bias_spec, epilogue_flush, first_step, halo_dims,
+from .conv2d_common import (bias_spec, cotangent_prologue, epilogue_flush,
+                            first_step, gap_spec, gap_update, halo_dims,
                             halo_window_spec, last_step, tap_windows,
                             tile_spec, weight_spec)
 from .conv2d_stream import stream_dgrad, stream_forward, stream_wgrad
@@ -98,11 +99,14 @@ __all__ = ["direct_conv2d_blocked_pallas", "direct_conv2d_dgrad_pallas",
 # ---------------------------------------------------------------------------
 
 def _fwd_kernel(x_ref, w_ref, *rest, hf, wf, hob, wob, stride, activation,
-                has_bias, dilation=(1, 1)):
-    if has_bias:
-        b_ref, o_ref, acc_ref = rest
-    else:
-        b_ref, (o_ref, acc_ref) = None, rest
+                has_bias, has_residual, has_gap, hw, dilation=(1, 1)):
+    rest = list(rest)
+    b_ref = rest.pop(0) if has_bias else None
+    r_ref = rest.pop(0) if has_residual else None
+    o_ref = rest.pop(0)
+    g_ref = rest.pop(0) if has_gap else None
+    acc_ref = rest.pop(0)
+    gacc_ref = rest.pop(0) if has_gap else None
 
     @pl.when(first_step((4,)))
     def _init():
@@ -115,23 +119,46 @@ def _fwd_kernel(x_ref, w_ref, *rest, hf, wf, hob, wob, stride, activation,
                             preferred_element_type=jnp.float32)
     acc_ref[...] = acc
 
+    # GAP guards hoisted out of the flush conditional (program_id may not be
+    # issued inside a pl.when body)
+    gap_first = first_step((2, 3)) if has_gap else None
+    gap_last = last_step((2, 3)) if has_gap else None
+
     @pl.when(last_step((4,)))
     def _flush():
-        epilogue_flush(o_ref, acc, hob, wob, b_ref, activation)
+        tile = epilogue_flush(o_ref, acc, hob, wob, b_ref, activation, r_ref)
+        # GAP rider: the spatial-tile axes (2, 3) sequence all flushes of one
+        # (n, co) pair, so the f32 partial-sum scratch re-inits on the first
+        # tile and the pooled pencil is written exactly once, on the last.
+        if has_gap:
+            gap_update(g_ref, gacc_ref, tile, hw, gap_first, gap_last)
 
 
-def _dgrad_kernel(dy_ref, w_ref, o_ref, acc_ref, *, hf, wf, hob, wob,
+def _dgrad_kernel(dy_ref, *rest, hf, wf, hob, wob, has_z, activation,
                   dilation=(1, 1)):
     """Transposed-window input gradient: mirrored taps over the (already
     stride-dilated + halo-padded) cotangent, contracting the Cob pencil.
     Windows slide by 1 — the forward stride lives in the cotangent's
-    dilation; a forward *filter* dilation keeps striding the taps."""
+    dilation; a forward *filter* dilation keeps striding the taps.
+
+    With ``has_z`` the saved pre-activation rides a second halo window
+    (dilated/padded identically to the cotangent) and the activation
+    cotangent ``dz = g * act'(z)`` is formed on the whole patch before the
+    taps slide — elementwise, so it commutes with the windowing, and the
+    dilation's structural zeros stay zero (``0 * act'`` is 0)."""
+    rest = list(rest)
+    z_ref = rest.pop(0) if has_z else None
+    w_ref, o_ref, acc_ref = rest
+
     @pl.when(first_step((4,)))
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    patch = dy_ref[0, 0]
+    if z_ref is not None:
+        patch = cotangent_prologue(patch, z_ref[0, 0], activation)
     acc = acc_ref[...]
-    for (dh, dw), win in tap_windows(dy_ref[0, 0], hf, wf, hob, wob, 1,
+    for (dh, dw), win in tap_windows(patch, hf, wf, hob, wob, 1,
                                      dilation):
         # [Hob*Wob, Cob] x [Cib, Cob] -> [Hob*Wob, Cib]  (contract lanes)
         acc = acc + jax.lax.dot_general(
@@ -144,16 +171,47 @@ def _dgrad_kernel(dy_ref, w_ref, o_ref, acc_ref, *, hf, wf, hob, wob,
         epilogue_flush(o_ref, acc, hob, wob)
 
 
-def _wgrad_kernel(x_ref, dy_ref, o_ref, acc_ref, *, hf, wf, hob, wob,
-                  stride, dilation=(1, 1)):
+def _wgrad_kernel(x_ref, dy_ref, *rest, hf, wf, hob, wob, stride, has_z,
+                  activation, with_db, dilation=(1, 1)):
     """Per-tile accumulating weight gradient: the whole [Hf, Wf, Cib, Cob]
     block stays resident while the (N, Ho/Hob, Wo/Wob) reduction axes walk;
-    each step contracts the Hob*Wob spatial positions."""
+    each step contracts the Hob*Wob spatial positions.
+
+    With ``has_z`` the cotangent tile is replaced by ``dz = g * act'(z)`` on
+    load; with ``with_db`` the bias cotangent ``db = Σ dz`` accumulates in a
+    [1, Cob] f32 scratch — only on the ``ci == 0`` pass (every (n, th, tw)
+    tile appears once per ci, summing each pass would overcount) — and is
+    flushed once per Co block."""
+    rest = list(rest)
+    z_ref = rest.pop(0) if has_z else None
+    o_ref = rest.pop(0)
+    db_ref = rest.pop(0) if with_db else None
+    acc_ref = rest.pop(0)
+    dbacc_ref = rest.pop(0) if with_db else None
+
     @pl.when(first_step((2, 3, 4)))
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     dy = dy_ref[0, 0].reshape(hob * wob, dy_ref.shape[-1])
+    if z_ref is not None:
+        z = z_ref[0, 0].reshape(hob * wob, dy_ref.shape[-1])
+        dy = cotangent_prologue(dy, z, activation)
+
+    if with_db:
+        # guard hoisted: program_id may not be issued inside a pl.when body
+        db_first = first_step((2, 3, 4))
+
+        @pl.when(pl.program_id(1) == 0)
+        def _db_accum():
+            part = jnp.sum(dy.astype(jnp.float32), axis=0, keepdims=True)
+            dbacc_ref[...] = jnp.where(db_first, part,
+                                       dbacc_ref[...] + part)
+
+        @pl.when(last_step((1, 2, 3, 4)))
+        def _db_flush():
+            db_ref[0] = dbacc_ref[0].astype(db_ref.dtype)
+
     for (dh, dw), win in tap_windows(x_ref[0, 0], hf, wf, hob, wob, stride,
                                      dilation):
         # [Hob*Wob, Cib] x [Hob*Wob, Cob] -> [Cib, Cob]  (contract positions)
@@ -189,7 +247,7 @@ def _forward_impl(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
                   activation, hob, wob, machine: MachineModel,
                   interpret: bool, stream=None,
                   hso: Optional[int] = None, groups: int = 1,
-                  dilation=(1, 1)) -> jnp.ndarray:
+                  dilation=(1, 1), residual=None, gap: bool = False):
     """Route one forward launch.  An explicit flag (``stream`` bool, a
     ``KernelRoute.fwd``, or ``hso``) pins the variant — a forced path's
     misfit propagates; with ``None`` the dispatch probe
@@ -216,15 +274,17 @@ def _forward_impl(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
                                 cib=cib, hob=hob, wob=wob)
     if flag:
         return stream_forward(xp, w, bias, stride, activation, hob, wob,
-                              hso, machine, interpret)
+                              hso, machine, interpret, residual=residual,
+                              gap=gap)
     return _forward_windowed(xp, w, bias, stride, activation, hob, wob,
-                             machine, interpret, groups, dilation)
+                             machine, interpret, groups, dilation,
+                             residual, gap)
 
 
 def _forward_windowed(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
                       activation, hob, wob, machine: MachineModel,
                       interpret: bool, groups: int = 1,
-                      dilation=(1, 1)) -> jnp.ndarray:
+                      dilation=(1, 1), residual=None, gap: bool = False):
     n, ciblk, hi, wi, cib = xp.shape
     coblk, cigblk, hf, wf, cib2, cob = w.shape
     # grouped-HWIO weights: the blocked input extent is the *per-group*
@@ -244,12 +304,15 @@ def _forward_windowed(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
                           stride, machine=machine, cob=cob, cib=cib,
                           hob=hob, wob=wob,
                           in_dtype_bytes=xp.dtype.itemsize,
-                          groups=groups, dilation=dilation)
+                          groups=groups, dilation=dilation,
+                          fused_residual=residual is not None,
+                          fused_gap=gap)
     hob, wob = blk.hob, blk.wob
     hib, wib = halo_dims(hob, wob, hf, wf, stride, dilation)
     cogblk = coblk // groups
 
     has_bias = bias is not None
+    has_residual = residual is not None
     operands = [xp, w]
     in_specs = [
         # block-diagonal reach into x: output block `co` belongs to group
@@ -264,17 +327,35 @@ def _forward_windowed(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
     if has_bias:
         operands.append(bias)
         in_specs.append(bias_spec(cob, lambda b, co, th, tw, ci: (co,)))
+    if has_residual:
+        assert residual.shape == (n, coblk, ho, wo, cob), \
+            (residual.shape, (n, coblk, ho, wo, cob))
+        operands.append(residual)
+        in_specs.append(tile_spec(hob, wob, cob,
+                                  lambda b, co, th, tw, ci: (b, co, th, tw)))
+
+    out_specs = tile_spec(hob, wob, cob,
+                          lambda b, co, th, tw, ci: (b, co, th, tw))
+    out_shape = jax.ShapeDtypeStruct((n, coblk, ho, wo, cob), xp.dtype)
+    scratch = [pltpu.VMEM((hob * wob, cob), jnp.float32)]
+    if gap:
+        out_specs = [out_specs,
+                     gap_spec(cob, lambda b, co, th, tw, ci: (b, co))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((n, coblk, cob), xp.dtype)]
+        scratch.append(pltpu.VMEM((1, cob), jnp.float32))
 
     grid = (n, coblk, ho // hob, wo // wob, cigblk)
     return pl.pallas_call(
         partial(_fwd_kernel, hf=hf, wf=wf, hob=hob, wob=wob, stride=stride,
-                activation=activation, has_bias=has_bias, dilation=dilation),
+                activation=activation, has_bias=has_bias,
+                has_residual=has_residual, has_gap=gap, hw=ho * wo,
+                dilation=dilation),
         grid=grid,
         in_specs=in_specs,
-        out_specs=tile_spec(hob, wob, cob,
-                            lambda b, co, th, tw, ci: (b, co, th, tw)),
-        out_shape=jax.ShapeDtypeStruct((n, coblk, ho, wo, cob), xp.dtype),
-        scratch_shapes=[pltpu.VMEM((hob * wob, cob), jnp.float32)],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         interpret=interpret,
     )(*operands)
 
@@ -285,7 +366,7 @@ def _forward_windowed(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
 
 @partial(jax.jit, static_argnames=("stride", "hob", "wob", "machine",
                                    "interpret", "stream", "hso", "groups",
-                                   "dilation"))
+                                   "dilation", "activation"))
 def direct_conv2d_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray,
                                stride: int = 1,
                                hob: Optional[int] = None,
@@ -295,7 +376,10 @@ def direct_conv2d_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray,
                                stream: Optional[bool] = None,
                                hso: Optional[int] = None,
                                groups: int = 1,
-                               dilation=(1, 1)) -> jnp.ndarray:
+                               dilation=(1, 1),
+                               z: Optional[jnp.ndarray] = None,
+                               activation: Optional[str] = None
+                               ) -> jnp.ndarray:
     """Input gradient of the VALID blocked conv, as a direct convolution.
 
     dy: [N, Co/Cob, Ho, Wo, Cob] cotangent; w: the forward's blocked weights
@@ -317,6 +401,12 @@ def direct_conv2d_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray,
     path (its misfit propagates), and a ``KernelRoute`` contributes its
     ``dgrad`` field.  Grouped/dilated geometry pins the window path (the
     streamed family is dense-only).
+
+    ``z``/``activation`` fuse the activation cotangent as a prologue: ``dy``
+    is the *raw* incoming cotangent and the kernel forms ``dz = dy *
+    act'(z)`` on tile load (``z`` is the saved pre-activation, ``dy``'s
+    shape).  The streamed route stays unfused — the prologue is applied
+    outside before the ring launch.
     """
     flag = _resolve_stream(stream, hso, "dgrad")
     dense = groups == 1 and tuple(dilation) == (1, 1)
@@ -336,15 +426,18 @@ def direct_conv2d_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray,
                                 machine=machine, dtype=dy.dtype, cob=cob,
                                 cib=cib, hob=hob, wob=wob)
     if flag:
+        if z is not None:
+            dy = cotangent_prologue(dy, z, activation)
         return stream_dgrad(dy, w, stride, hob, wob, hso, machine, interpret)
     return _dgrad_windowed(dy, w, stride, hob, wob, machine, interpret,
-                           groups, dilation)
+                           groups, dilation, z, activation)
 
 
 def _dgrad_windowed(dy: jnp.ndarray, w: jnp.ndarray, stride: int,
                     hob: Optional[int], wob: Optional[int],
                     machine: MachineModel, interpret: bool,
-                    groups: int = 1, dilation=(1, 1)) -> jnp.ndarray:
+                    groups: int = 1, dilation=(1, 1),
+                    z=None, activation=None) -> jnp.ndarray:
     n, coblk, ho, wo, cob = dy.shape
     coblk2, cigblk, hf, wf, cib, cob2 = w.shape
     assert (coblk, cob) == (coblk2, cob2), (dy.shape, w.shape)
@@ -353,54 +446,70 @@ def _dgrad_windowed(dy: jnp.ndarray, w: jnp.ndarray, stride: int,
     ciblk = cigblk * groups
     cogblk = coblk // groups
 
-    if stride > 1:
-        dyd = jnp.zeros((n, coblk, (ho - 1) * stride + 1,
-                         (wo - 1) * stride + 1, cob), dy.dtype)
-        dyd = dyd.at[:, :, ::stride, ::stride, :].set(dy)
-    else:
-        dyd = dy
-    # the full-conv halo pad spans the *effective* (dilated) filter reach
-    dyp = pad_blocked(dyd, ((hf - 1) * dil_h, (hf - 1) * dil_h),
-                      ((wf - 1) * dil_w, (wf - 1) * dil_w))
+    def _dilate_pad(t):
+        if stride > 1:
+            td = jnp.zeros((n, coblk, (ho - 1) * stride + 1,
+                            (wo - 1) * stride + 1, cob), t.dtype)
+            td = td.at[:, :, ::stride, ::stride, :].set(t)
+        else:
+            td = t
+        # the full-conv halo pad spans the *effective* (dilated) filter reach
+        return pad_blocked(td, ((hf - 1) * dil_h, (hf - 1) * dil_h),
+                           ((wf - 1) * dil_w, (wf - 1) * dil_w))
+
+    dyp = _dilate_pad(dy)
+    # z rides a second identically-dilated window — the prologue is
+    # elementwise, so dilating before it only multiplies act'(z) by the
+    # structural zeros already in the dilated cotangent
+    zp = None if z is None else _dilate_pad(z)
 
     eh, ew = dgrad_extents(ho, wo, hf, wf, stride, dilation)
     blk = choose_dgrad_blocking(ho, wo, ciblk * cib, coblk * cob, hf, wf,
                                 stride, machine=machine, cib=cib, cob=cob,
                                 hob=hob, wob=wob,
                                 in_dtype_bytes=dy.dtype.itemsize,
-                                groups=groups, dilation=dilation)
+                                groups=groups, dilation=dilation,
+                                fused_prologue=z is not None)
     hob, wob = blk.hob, blk.wob
     # windows slide by 1 (stride lives in the cotangent's dilation); filter
     # dilation still strides the taps
     hib, wib = halo_dims(hob, wob, hf, wf, 1, dilation)
 
+    # input block `ci` belongs to group ci // cigblk; its group's
+    # cotangent blocks start at (ci // cigblk) * cogblk and the
+    # matching weight block row is the same offset + the reduction id
+    cot_window = lambda: halo_window_spec(
+        hib, wib, cob, hob, wob,
+        lambda b, ci, th, tw, co: (b, (ci // cigblk) * cogblk + co, th, tw))
+    operands = [dyp]
+    in_specs = [cot_window()]
+    if zp is not None:
+        operands.append(zp)
+        in_specs.append(cot_window())
+    operands.append(w)
+    in_specs.append(weight_spec(hf, wf, cib, cob,
+                                lambda b, ci, th, tw, co:
+                                ((ci // cigblk) * cogblk + co, ci % cigblk)))
+
     grid = (n, ciblk, eh // hob, ew // wob, cogblk)
     return pl.pallas_call(
         partial(_dgrad_kernel, hf=hf, wf=wf, hob=hob, wob=wob,
+                has_z=zp is not None, activation=activation,
                 dilation=dilation),
         grid=grid,
-        in_specs=[
-            # input block `ci` belongs to group ci // cigblk; its group's
-            # cotangent blocks start at (ci // cigblk) * cogblk and the
-            # matching weight block row is the same offset + the reduction id
-            halo_window_spec(hib, wib, cob, hob, wob,
-                             lambda b, ci, th, tw, co:
-                             (b, (ci // cigblk) * cogblk + co, th, tw)),
-            weight_spec(hf, wf, cib, cob,
-                        lambda b, ci, th, tw, co:
-                        ((ci // cigblk) * cogblk + co, ci % cigblk)),
-        ],
+        in_specs=in_specs,
         out_specs=tile_spec(hob, wob, cib,
                             lambda b, ci, th, tw, co: (b, ci, th, tw)),
         out_shape=jax.ShapeDtypeStruct((n, ciblk, eh, ew, cib), dy.dtype),
         scratch_shapes=[pltpu.VMEM((hob * wob, cib), jnp.float32)],
         interpret=interpret,
-    )(dyp, w)
+    )(*operands)
 
 
 @partial(jax.jit, static_argnames=("hf", "wf", "stride", "hob", "wob",
                                    "machine", "interpret", "out_dtype",
-                                   "stream", "hso", "groups", "dilation"))
+                                   "stream", "hso", "groups", "dilation",
+                                   "activation", "with_db"))
 def direct_conv2d_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
                                hf: int, wf: int, stride: int = 1,
                                hob: Optional[int] = None,
@@ -411,7 +520,10 @@ def direct_conv2d_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
                                stream: Optional[bool] = None,
                                hso: Optional[int] = None,
                                groups: int = 1,
-                               dilation=(1, 1)) -> jnp.ndarray:
+                               dilation=(1, 1),
+                               z: Optional[jnp.ndarray] = None,
+                               activation: Optional[str] = None,
+                               with_db: bool = False):
     """Weight gradient of the VALID blocked conv, accumulated per tile.
 
     xp: [N, Ci/Cib, Hi, Wi, Cib] the forward's *padded* input;
@@ -427,6 +539,13 @@ def direct_conv2d_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
     ringed, the accumulator flushed by manual DMA) when it misfits, True
     forces it, False pins the window path, and a ``KernelRoute``
     contributes its ``wgrad`` field.
+
+    ``z``/``activation`` fuse the activation cotangent on tile load (``dy``
+    then being the *raw* cotangent, ``z`` the saved pre-activation, same
+    shape); ``with_db`` additionally accumulates ``db = Σ dz`` in a
+    flush-once f32 scratch and makes the return a ``(dw, db)`` pair with
+    ``db`` in f32 ``[Co/Cob, Cob]`` pencils.  The streamed route stays
+    unfused: dz is formed outside and db summed by XLA.
     """
     flag = _resolve_stream(stream, hso, "wgrad")
     dense = groups == 1 and tuple(dilation) == (1, 1)
@@ -446,17 +565,25 @@ def direct_conv2d_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
                                 machine=machine, dtype=xp.dtype, cob=cob,
                                 cib=cib, hob=hob, wob=wob)
     if flag:
-        return stream_wgrad(xp, dy, hf, wf, stride, wob, hso, machine,
-                            interpret, out_dtype)
+        if z is not None:
+            dy = cotangent_prologue(dy, z, activation)
+        dw = stream_wgrad(xp, dy, hf, wf, stride, wob, hso, machine,
+                          interpret, out_dtype)
+        if with_db:
+            db = dy.astype(jnp.float32).sum(axis=(0, 2, 3))
+            return dw, db
+        return dw
     return _wgrad_windowed(xp, dy, hf, wf, stride, hob, wob, machine,
-                           interpret, out_dtype, groups, dilation)
+                           interpret, out_dtype, groups, dilation,
+                           z, activation, with_db)
 
 
 def _wgrad_windowed(xp: jnp.ndarray, dy: jnp.ndarray, hf: int, wf: int,
                     stride: int, hob: Optional[int], wob: Optional[int],
                     machine: MachineModel, interpret: bool,
                     out_dtype, groups: int = 1,
-                    dilation=(1, 1)) -> jnp.ndarray:
+                    dilation=(1, 1), z=None, activation=None,
+                    with_db: bool = False):
     n, ciblk, hi, wi, cib = xp.shape
     n2, coblk, ho, wo, cob = dy.shape
     assert n == n2, (xp.shape, dy.shape)
@@ -468,9 +595,36 @@ def _wgrad_windowed(xp: jnp.ndarray, dy: jnp.ndarray, hf: int, wf: int,
     blk = choose_wgrad_blocking(ho, wo, hf, wf, stride, machine=machine,
                                 cob=cob, cib=cib, hob=hob, wob=wob,
                                 in_dtype_bytes=xp.dtype.itemsize,
-                                dilation=dilation)
+                                dilation=dilation,
+                                fused_prologue=z is not None,
+                                fused_bias=with_db)
     hob, wob = blk.hob, blk.wob
     hib, wib = halo_dims(hob, wob, hf, wf, stride, dilation)
+
+    operands = [xp, dy]
+    in_specs = [
+        halo_window_spec(hib, wib, cib, hob * stride, wob * stride,
+                         lambda co, ci, b, th, tw:
+                         (b, (co // cogblk) * cigblk + ci, th, tw)),
+        tile_spec(hob, wob, cob,
+                  lambda co, ci, b, th, tw: (b, co, th, tw)),
+    ]
+    if z is not None:
+        operands.append(z)
+        in_specs.append(tile_spec(hob, wob, cob,
+                                  lambda co, ci, b, th, tw: (b, co, th, tw)))
+
+    out_specs = weight_spec(hf, wf, cib, cob,
+                            lambda co, ci, b, th, tw: (co, ci))
+    out_shape = jax.ShapeDtypeStruct((coblk, cigblk, hf, wf, cib, cob),
+                                     out_dtype or xp.dtype)
+    scratch = [pltpu.VMEM((hf, wf, cib, cob), jnp.float32)]
+    if with_db:
+        out_specs = [out_specs,
+                     bias_spec(cob, lambda co, ci, b, th, tw: (co,))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((coblk, cob), jnp.float32)]
+        scratch = [scratch[0], pltpu.VMEM((1, cob), jnp.float32)]
 
     # the weight-gradient block walk is per group: only the cigblk input
     # blocks of output block co's own group are contracted (the other
@@ -479,56 +633,60 @@ def _wgrad_windowed(xp: jnp.ndarray, dy: jnp.ndarray, hf: int, wf: int,
     grid = (coblk, cigblk, n, ho // hob, wo // wob)
     return pl.pallas_call(
         partial(_wgrad_kernel, hf=hf, wf=wf, hob=hob, wob=wob,
-                stride=stride, dilation=dilation),
+                stride=stride, has_z=z is not None, activation=activation,
+                with_db=with_db, dilation=dilation),
         grid=grid,
-        in_specs=[
-            halo_window_spec(hib, wib, cib, hob * stride, wob * stride,
-                             lambda co, ci, b, th, tw:
-                             (b, (co // cogblk) * cigblk + ci, th, tw)),
-            tile_spec(hob, wob, cob,
-                      lambda co, ci, b, th, tw: (b, co, th, tw)),
-        ],
-        out_specs=weight_spec(hf, wf, cib, cob,
-                              lambda co, ci, b, th, tw: (co, ci)),
-        out_shape=jax.ShapeDtypeStruct((coblk, cigblk, hf, wf, cib, cob),
-                                       out_dtype or xp.dtype),
-        scratch_shapes=[pltpu.VMEM((hf, wf, cib, cob), jnp.float32)],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(xp, dy)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
 # custom VJP: jax.grad flows through the kernel family
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11))
-def _conv(x, w, bias, spec, activation, hob, wob, machine,
-          interpret, precision, stream, hso):
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11, 12, 13))
+def _conv(x, w, bias, residual, spec, activation, hob, wob, machine,
+          interpret, precision, stream, hso, gap):
     """Primal: the fully fused forward kernel (inference takes this path —
-    bias + activation inside the epilogue, output written once).  The
-    geometry — stride, normalized pads, groups, dilation — rides as one
-    frozen ``ConvSpec`` (hashable, so it is a valid nondiff/static arg).
-    Operands are cast to the policy dtype here — the one down-cast of the
-    forward; bias stays in its master dtype (the epilogue adds it on the
-    f32 accumulator anyway)."""
+    bias + activation + residual skip-add inside the epilogue, the GAP
+    partial-sum riding the flush; output written once).  The geometry —
+    stride, normalized pads, groups, dilation — rides as one frozen
+    ``ConvSpec`` (hashable, so it is a valid nondiff/static arg).  Operands
+    are cast to the policy dtype here — the one down-cast of the forward;
+    bias stays in its master dtype (the epilogue adds it on the f32
+    accumulator anyway).  With ``gap`` the return is the pooled ``[N, Co]``
+    features — the map is written but never re-read."""
     op = precision.op_dtype
     xp = pad_blocked(x.astype(op), *spec.pads)
-    return _forward_impl(xp, w.astype(op), bias, spec.stride, activation,
-                         hob, wob, machine, interpret, stream, hso,
-                         spec.groups, spec.dilation)
+    r = None if residual is None else residual.astype(op)
+    out = _forward_impl(xp, w.astype(op), bias, spec.stride, activation,
+                        hob, wob, machine, interpret, stream, hso,
+                        spec.groups, spec.dilation, residual=r, gap=gap)
+    if gap:
+        _, pooled = out
+        n, coblk, cob = pooled.shape
+        return pooled.reshape(n, coblk * cob)
+    return out
 
 
-def _conv_fwd(x, w, bias, spec, activation, hob, wob, machine,
-              interpret, precision, stream, hso):
+def _conv_fwd(x, w, bias, residual, spec, activation, hob, wob, machine,
+              interpret, precision, stream, hso, gap):
     """VJP forward: the same kernel computes the *pre-activation* tile z (the
     epilogue residual the backward needs — relu/gelu cotangents are functions
-    of z, not of the activated output); the activation is applied outside.
-    For linear epilogues z IS the output and no extra residual is kept.
+    of z, not of the activated output); the activation, skip-add and pool are
+    applied outside, each in f32 with one down-cast — training pays one extra
+    pass the inference primal fuses away, because z must exist in HBM as a
+    backward residual either way.  For linear epilogues z IS the
+    pre-residual output and no extra residual is kept.
 
     Residuals are stored at the policy dtypes (operand-cast xp/w, z at
-    ``policy.residual`` — the halved training working set); two zero-size
-    dtype tokens remember the primal x/w dtypes so the backward can up-cast
-    its cotangents exactly once, at the very end.
+    ``policy.residual`` — the halved training working set); zero-size dtype
+    tokens remember the primal x/w/residual dtypes so the backward can
+    up-cast its cotangents exactly once, at the very end.
     """
     op = precision.op_dtype
     xp = pad_blocked(x.astype(op), *spec.pads)
@@ -538,46 +696,66 @@ def _conv_fwd(x, w, bias, spec, activation, hob, wob, machine,
     linear = activation in (None, "linear")
     out = z if linear else apply_activation(
         z.astype(jnp.float32), activation).astype(z.dtype)
+    if residual is not None:
+        out = (out.astype(jnp.float32)
+               + residual.astype(jnp.float32)).astype(z.dtype)
+    if gap:
+        n, coblk, _, _, cob = out.shape
+        out = jnp.mean(out.astype(jnp.float32),
+                       axis=(2, 3)).reshape(n, coblk * cob).astype(z.dtype)
     res = (xp, wq, bias,
            None if linear else z.astype(precision.residual_dtype),
+           None if residual is None else jnp.zeros((0,), residual.dtype),
            jnp.zeros((0,), x.dtype), jnp.zeros((0,), w.dtype))
     return out, res
 
 
 def _conv_bwd(spec, activation, hob, wob, machine, interpret,
-              precision, stream, hso, res, g):
+              precision, stream, hso, gap, res, g):
     """The backward kernels inherit the ``stream`` routing (an explicit
     override forces all three kernels onto one path; None lets each kernel
     fall back only where its own window inequality misfits).  Strip heights
-    are per-kernel model choices — the forward's ``hso`` is not theirs."""
-    xp, wq, bias, z, x_token, w_token = res
+    are per-kernel model choices — the forward's ``hso`` is not theirs.
+
+    The activation cotangent is *not* materialized here: the raw map
+    cotangent ``g`` and the saved pre-activation ``z`` go to both backward
+    kernels, which form ``dz = g * act'(z)`` on tile load
+    (``cotangent_prologue``) and — when a bias exists — accumulate
+    ``db = Σ dz`` in the wgrad kernel's flush-once scratch.  Only a
+    stream-routed direction falls back to the XLA pointwise op."""
+    xp, wq, bias, z, r_token, x_token, w_token = res
     hf, wf = wq.shape[2], wq.shape[3]
     stride, pads = spec.stride, spec.pads
     groups, dilation = spec.groups, spec.dilation
+    op = precision.op_dtype
 
-    # activation cotangent from the epilogue residual (act' evaluated in f32)
-    if z is None:
-        dz = g
-    else:
-        def act(t):
-            return apply_activation(t.astype(jnp.float32),
-                                    activation).astype(t.dtype)
-        dz = jax.vjp(act, z)[1](g.astype(z.dtype))[0]
-    dz = dz.astype(precision.op_dtype)       # the backward kernels' operand
+    if gap:
+        # un-pool: the mean's cotangent is the pooled cotangent spread
+        # uniformly over the map (computed in f32, one down-cast)
+        n = xp.shape[0]
+        coblk, cob = wq.shape[0], wq.shape[5]
+        hi_p, wi_p = xp.shape[2], xp.shape[3]
+        dil_h, dil_w = dilation
+        ho = (hi_p - ((hf - 1) * dil_h + 1)) // stride + 1
+        wo = (wi_p - ((wf - 1) * dil_w + 1)) // stride + 1
+        gm = g.reshape(n, coblk, 1, 1, cob).astype(jnp.float32) / (ho * wo)
+        g = jnp.broadcast_to(gm, (n, coblk, ho, wo, cob))
+    g = g.astype(op)                         # the backward kernels' operand
 
-    # bias cotangent: the epilogue's broadcast, transposed (pencil sums,
-    # accumulated in f32, cast to the master bias dtype once)
-    db = (None if bias is None else
-          dz.astype(jnp.float32).sum(axis=(0, 2, 3)).astype(bias.dtype))
+    # residual cotangent: the skip branch is additive after the activation,
+    # so its cotangent is the map cotangent itself (up-cast once)
+    dres = None if r_token is None else g.astype(r_token.dtype)
 
     # input gradient w.r.t. the padded input, then strip the pads (rows the
-    # forward never touched — beyond the dgrad extents — stay zero)
+    # forward never touched — beyond the dgrad extents — stay zero); the
+    # activation prologue rides inside the kernel
     (ph_lo, ph_hi), (pw_lo, pw_hi) = pads
     hi_p, wi_p = xp.shape[2], xp.shape[3]
     hi, wi = hi_p - ph_lo - ph_hi, wi_p - pw_lo - pw_hi
-    dxp = direct_conv2d_dgrad_pallas(dz, wq, stride=stride, machine=machine,
+    dxp = direct_conv2d_dgrad_pallas(g, wq, stride=stride, machine=machine,
                                      interpret=interpret, stream=stream,
-                                     groups=groups, dilation=dilation)
+                                     groups=groups, dilation=dilation,
+                                     z=z, activation=activation)
     eh, ew = dxp.shape[2], dxp.shape[3]
     dxp = jnp.pad(dxp, ((0, 0), (0, 0), (0, hi_p - eh), (0, wi_p - ew),
                         (0, 0)))
@@ -585,12 +763,24 @@ def _conv_bwd(spec, activation, hob, wob, machine, interpret,
     dx = dxp[:, :, ph_lo:ph_lo + hi, pw_lo:pw_lo + wi, :].astype(x_token.dtype)
 
     # dw leaves the wgrad kernel in f32 and reaches the (f32 master) weight
-    # dtype directly — never round-tripped through the operand dtype
-    dw = direct_conv2d_wgrad_pallas(
-        xp, dz, hf, wf, stride=stride, machine=machine, interpret=interpret,
-        out_dtype=jnp.float32, stream=stream, groups=groups,
-        dilation=dilation).astype(w_token.dtype)
-    return dx, dw, db
+    # dtype directly — never round-tripped through the operand dtype; db
+    # (the epilogue broadcast transposed — pencil sums in f32, cast to the
+    # master bias dtype once) flushes from the same kernel's scratch
+    if bias is not None:
+        dw, db32 = direct_conv2d_wgrad_pallas(
+            xp, g, hf, wf, stride=stride, machine=machine,
+            interpret=interpret, out_dtype=jnp.float32, stream=stream,
+            groups=groups, dilation=dilation, z=z, activation=activation,
+            with_db=True)
+        db = db32.astype(bias.dtype)
+    else:
+        dw = direct_conv2d_wgrad_pallas(
+            xp, g, hf, wf, stride=stride, machine=machine,
+            interpret=interpret, out_dtype=jnp.float32, stream=stream,
+            groups=groups, dilation=dilation, z=z, activation=activation)
+        db = None
+    dw = dw.astype(w_token.dtype)
+    return dx, dw, db, dres
 
 
 _conv.defvjp(_conv_fwd, _conv_bwd)
@@ -603,7 +793,7 @@ _conv.defvjp(_conv_fwd, _conv_bwd)
 @partial(jax.jit,
          static_argnames=("stride", "padding", "activation", "hob", "wob",
                           "machine", "interpret", "precision", "stream",
-                          "hso", "groups", "dilation"))
+                          "hso", "groups", "dilation", "gap"))
 def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
                                  bias: Optional[jnp.ndarray] = None,
                                  stride: int = 1,
@@ -618,6 +808,8 @@ def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
                                  hso: Optional[int] = None,
                                  groups: int = 1,
                                  dilation: int | tuple = 1,
+                                 residual: Optional[jnp.ndarray] = None,
+                                 gap: bool = False,
                                  ) -> jnp.ndarray:
     """Tiled + fused direct convolution on the paper's blocked layouts,
     differentiable end to end (custom VJP -> the dgrad/wgrad kernels).
@@ -657,11 +849,20 @@ def direct_conv2d_blocked_pallas(x: jnp.ndarray, w: jnp.ndarray,
     the effective extent.  Both ride the custom VJP (block-diagonal dgrad/
     wgrad).  The streamed variant stays dense — grouped/dilated launches
     pin the window path.
+
+    ``residual``/``gap`` are the fused epilogue riders (DESIGN.md §14):
+    ``residual`` is an output-shaped blocked map skip-added *after* the
+    activation on the f32 accumulator (``out = act(z + bias) + r``, one
+    down-cast); ``gap=True`` accumulates each flushed tile into a fused
+    global-average-pool and returns the pooled ``[N, Co]`` features
+    instead of the map.  Both are differentiable — the residual's
+    cotangent is the map cotangent itself, and the backward kernels fuse
+    ``dz = g * act'(z)`` (plus ``db``) in-kernel.
     """
     n, ciblk_x, hi, wi, cib_x = x.shape
     coblk, _, hf, wf, _, cob = w.shape
     spec = ConvSpec.make(n, hi, wi, ciblk_x * cib_x, coblk * cob, hf, wf,
                          stride=stride, padding=padding, groups=groups,
                          dilation=dilation)
-    return _conv(x, w, bias, spec, activation, hob, wob, machine,
-                 interpret, resolve_precision(precision), stream, hso)
+    return _conv(x, w, bias, residual, spec, activation, hob, wob, machine,
+                 interpret, resolve_precision(precision), stream, hso, gap)

@@ -1,4 +1,5 @@
 """Pure-JAX neural substrate: module system, layers, attention, MoE, SSM."""
 from .module import ParamSpec, Parallelism, init_tree, axes_tree, count_params  # noqa: F401
 from .models import LM, EncDec, build_model  # noqa: F401
-from .conv import BlockedConv2D, BlockedCNN, blocked_global_avg_pool  # noqa: F401
+from .conv import (BlockedConv2D, BlockedCNN, ResidualBlock,  # noqa: F401
+                   blocked_global_avg_pool)

@@ -47,19 +47,27 @@ from repro.core.layout import BlockedConvLayout, nhwc_to_blocked
 from repro.core.precision import Precision, resolve_precision
 from .module import ParamSpec
 
-__all__ = ["BlockedConv2D", "DepthwiseSeparableBlock", "BlockedCNN",
-           "blocked_global_avg_pool"]
+__all__ = ["BlockedConv2D", "ResidualBlock", "DepthwiseSeparableBlock",
+           "BlockedCNN", "blocked_global_avg_pool"]
 
 
-def blocked_global_avg_pool(xb: jnp.ndarray) -> jnp.ndarray:
+def blocked_global_avg_pool(xb: jnp.ndarray,
+                            precision: Union[str, Precision, None] = None
+                            ) -> jnp.ndarray:
     """GAP on the blocked layout: [N, C/Cb, H, W, Cb] -> [N, C].
 
-    Reduces spatial dims in f32 and flattens the (block, pencil) pair back to
-    the channel axis — a reshape, not a layout round-trip (the spatial dims
-    are already gone, so there is nothing left to "unpack").
+    Reduces spatial dims in the precision policy's *accumulation* dtype —
+    not a hardwired up-cast — and flattens the (block, pencil) pair back to
+    the channel axis: a reshape, not a layout round-trip (the spatial dims
+    are already gone, so there is nothing left to "unpack").  Every shipped
+    policy pins accumulation to f32 (DESIGN.md §10), so the default is
+    numerically what the old unconditional f32 mean computed, but the
+    reduction dtype now follows the policy like every other accumulation
+    in the stack.
     """
     n, cblk, _, _, cb = xb.shape
-    pooled = jnp.mean(xb.astype(jnp.float32), axis=(2, 3))   # [N, C/Cb, Cb]
+    acc = resolve_precision(precision).accum_dtype
+    pooled = jnp.mean(xb.astype(acc), axis=(2, 3))           # [N, C/Cb, Cb]
     return pooled.reshape(n, cblk * cb).astype(xb.dtype)
 
 
@@ -138,7 +146,9 @@ class BlockedConv2D:
                  impl: Union[Impl, str, None] = None,
                  interpret: Optional[bool] = None,
                  precision: Union[str, Precision, None] = None,
-                 stream: Optional[bool] = None) -> jnp.ndarray:
+                 stream: Optional[bool] = None,
+                 residual: Optional[jnp.ndarray] = None,
+                 gap: bool = False) -> jnp.ndarray:
         """Run this layer through the conv dispatch subsystem.
 
         ``dispatch`` supplies the :class:`ConvDispatcher` (default: the
@@ -155,11 +165,22 @@ class BlockedConv2D:
         masters either way — the cast to the operand dtype happens inside
         the conv, and its transpose up-casts the weight cotangent back to
         f32.
+
+        ``residual`` fuses a blocked skip tensor (the layer's output shape)
+        into the epilogue — ``act(z + b) + residual`` in one pass, no
+        post-conv HBM round-trip; ``gap=True`` fuses global average pooling
+        into the epilogue and returns ``[N, Co]`` instead of the blocked
+        map (DESIGN.md §14).  Both ride the dispatch key's ``fusion`` tag
+        so the measured table distinguishes fused from unfused geometry.
         """
         pol = resolve_precision(
             self.precision if precision is None else precision)
         bias = p["b"] if self.use_bias else None
         stream = self.stream if stream is None else stream
+        toks = [t for t, on in (
+            ("res", residual is not None), ("gap", gap),
+            ("dz", self.activation not in (None, "linear"))) if on]
+        fusion = "+".join(toks)
 
         decision_impl, route = Impl.JNP, None
         if impl is not None and Impl(impl) is Impl.JNP:
@@ -171,7 +192,7 @@ class BlockedConv2D:
             key = DispatchKey.make(
                 n, hi, wi, self.ci, self.co, self.hf, self.wf, self.stride,
                 self.padding, pol, self.machine, "fwd",
-                groups=self.groups, dilation=self.dilation)
+                groups=self.groups, dilation=self.dilation, fusion=fusion)
             dec = disp.decide(key, override=impl,
                               cob=lay.cb_out, cib=lay.cb_in,
                               hob=self.hob, wob=self.wob)
@@ -197,7 +218,8 @@ class BlockedConv2D:
                                        bias, self.activation,
                                        hob=self.hob, wob=self.wob,
                                        precision=pol, groups=self.groups,
-                                       dilation=self.dilation)
+                                       dilation=self.dilation,
+                                       residual=residual, gap=gap)
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         return run_conv_impl(decision_impl, xb, p["w"], bias,
@@ -205,7 +227,55 @@ class BlockedConv2D:
                              activation=self.activation, precision=pol,
                              machine=self.machine, interpret=interpret,
                              hob=self.hob, wob=self.wob, route=route,
-                             dilation=as_dilation(self.dilation))
+                             dilation=as_dilation(self.dilation),
+                             residual=residual, gap=gap)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidualBlock:
+    """Identity-skip block: ``out = act(conv(x) + b) + x``, fused.
+
+    The skip add rides the conv's fused epilogue (DESIGN.md §14) — the
+    pre-activation never round-trips to HBM just to be re-read for the add.
+    Identity skips need the conv to preserve geometry: ``ci == co``,
+    ``stride == 1`` and shape-preserving padding, checked at construction.
+    The residual is added *after* the activation in the accumulation dtype
+    with one final downcast — the convention the fused epilogue implements
+    for every kernel family.
+    """
+
+    conv: BlockedConv2D
+
+    def __post_init__(self):
+        c = self.conv
+        if c.ci != c.co or c.stride != 1:
+            raise ValueError(
+                "ResidualBlock needs an identity-shaped conv: "
+                f"ci={c.ci} co={c.co} stride={c.stride}")
+
+    @property
+    def in_pencil(self) -> int:
+        return self.conv.in_pencil
+
+    @property
+    def out_pencil(self) -> int:
+        return self.conv.out_pencil
+
+    @property
+    def ci(self) -> int:
+        return self.conv.ci
+
+    @property
+    def co(self) -> int:
+        return self.conv.co
+
+    def specs(self):
+        return self.conv.specs()
+
+    def __call__(self, p, xb: jnp.ndarray, **kw) -> jnp.ndarray:
+        if kw.pop("residual", None) is not None:
+            raise ValueError("ResidualBlock supplies its own skip tensor")
+        return self.conv(p, xb, residual=xb, **kw)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -266,13 +336,16 @@ class DepthwiseSeparableBlock:
                  impl: Union[Impl, str, None] = None,
                  interpret: Optional[bool] = None,
                  precision: Union[str, Precision, None] = None,
-                 stream: Optional[bool] = None) -> jnp.ndarray:
+                 stream: Optional[bool] = None,
+                 residual: Optional[jnp.ndarray] = None,
+                 gap: bool = False) -> jnp.ndarray:
         h = self.depthwise(p["dw"], xb, dispatch=dispatch, impl=impl,
                            interpret=interpret, precision=precision,
                            stream=stream)
+        # fused operands land on the channel-mixing leg — the block's output
         return self.pointwise(p["pw"], h, dispatch=dispatch, impl=impl,
                               interpret=interpret, precision=precision,
-                              stream=stream)
+                              stream=stream, residual=residual, gap=gap)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -318,11 +391,18 @@ class BlockedCNN:
         pools in f32, and the head matmul casts its f32 master to the
         feature dtype; logits come back in the compute dtype and the loss
         up-casts them once.  ``stream`` (if given) overrides every conv's
-        routing the same way."""
+        routing the same way.
+
+        The final conv flows straight into GAP: its fused epilogue
+        accumulates the pooled partial sums in f32 scratch and emits
+        ``[N, C]`` directly (DESIGN.md §14), so the full feature map of the
+        last layer never materializes in HBM."""
         # the single layout transform of the whole forward pass
         h = nhwc_to_blocked(x_nhwc, self.convs[0].in_pencil)
+        last = len(self.convs) - 1
         for i, conv in enumerate(self.convs):
             h = conv(p[f"conv{i}"], h, dispatch=dispatch, impl=impl,
-                     interpret=interpret, precision=precision, stream=stream)
-        feat = blocked_global_avg_pool(h)
+                     interpret=interpret, precision=precision, stream=stream,
+                     gap=(i == last))
+        feat = h                      # [N, C] — pooled in the conv epilogue
         return feat @ p["head"].astype(feat.dtype)

@@ -1,0 +1,412 @@
+"""Cross-layer epilogue/prologue fusion (ISSUE 8, DESIGN.md §14).
+
+* fused forward == two-pass reference: the residual skip-add and the GAP
+  partial-sum ride the epilogue of every kernel family (dense window,
+  streamed, depthwise, pointwise) and match conv-then-add / conv-then-pool;
+* fused backward == the lax oracle: dgrad/wgrad take the raw cotangent g
+  plus the saved pre-activation z and form ``dz = g * act'(z)`` on tile
+  load, across stride x activation x precision, including forced multi-tile
+  backward grids on a tiny ``MachineModel``;
+* the bias cotangent folds into the wgrad flush (db == oracle db with no
+  separate reduction pass);
+* ``memory_model.bytes_epilogue_fusion`` accounts the saved HBM round-trips
+  (> 0 for every chained zoo shape, additive across flags);
+* ``DispatchKey`` carries the fusion tag: token canonicalization, ident
+  stability for unfused keys, schema-2 -> 3 auto-migration;
+* layer API: ``ResidualBlock`` fuses its own skip, ``BlockedCNN`` drains
+  its last conv into the fused GAP, ``blocked_global_avg_pool`` follows the
+  precision policy's accumulation rule (the up-cast is policy, not
+  hard-coded).
+"""
+import json
+import zlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import direct_conv as D
+from repro.core import layout as L
+from repro.core.blocking import MachineModel
+from repro.core.dispatch import ConvDispatcher, DispatchKey
+from repro.core.memory_model import ConvShape, bytes_epilogue_fusion
+from repro.kernels.conv2d_depthwise import depthwise_conv2d_blocked_pallas
+from repro.kernels.conv2d_pointwise import pointwise_conv2d_blocked_pallas
+from repro.kernels.direct_conv2d import direct_conv2d_blocked_pallas
+from repro.nn.conv import (BlockedCNN, BlockedConv2D, ResidualBlock,
+                           blocked_global_avg_pool)
+from repro.nn.module import init_tree
+
+# Forces multi-tile forward AND backward grids (same budget as
+# test_conv_vjp's backward-pressure tests).
+TINY = MachineModel(name="tiny-bwd", n_vec=8, n_fma=1, l_fma=8, n_reg=64,
+                    vmem_bytes=10000)
+
+
+def _oracle(x, w, stride, padding, bias, activation):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if bias is not None:
+        y = y + bias
+    return D.apply_activation(y, activation)
+
+
+def _blocked(x, w, bias, lane):
+    ci, co = w.shape[2], w.shape[3]
+    lay = L.BlockedConvLayout.choose(ci, co, lane=lane)
+    xb = L.nhwc_to_blocked(x, lay.cb_in)
+    wb = L.hwio_to_blocked(w, lay.cb_in, lay.cb_out)
+    bb = None if bias is None else bias.reshape(co // lay.cb_out, lay.cb_out)
+    return xb, wb, bb
+
+
+def _pool_ref(yb):
+    n, cblk, _, _, cb = yb.shape
+    pooled = jnp.mean(yb.astype(jnp.float32), axis=(2, 3))
+    return pooled.reshape(n, cblk * cb).astype(yb.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused forward == two-pass reference, across the kernel families
+# ---------------------------------------------------------------------------
+
+def _family_call(family, xb, wb, bb, **kw):
+    if family == "depthwise":
+        return depthwise_conv2d_blocked_pallas(xb, wb, bb, **kw)
+    if family == "pointwise":
+        kw.pop("padding", None)
+        return pointwise_conv2d_blocked_pallas(xb, wb, bb, **kw)
+    stream = family == "stream"
+    return direct_conv2d_blocked_pallas(xb, wb, bb, stream=stream, **kw)
+
+
+def _family_operands(family, rng):
+    if family == "depthwise":
+        x = jnp.asarray(rng.normal(size=(2, 1, 10, 10, 8)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(1, 1, 3, 3, 1, 8)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(1, 8)), jnp.float32)
+        kw = dict(padding="SAME")
+    elif family == "pointwise":
+        x = jnp.asarray(rng.normal(size=(2, 1, 10, 10, 8)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(2, 1, 1, 1, 8, 8)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(2, 8)), jnp.float32)
+        kw = {}
+    else:
+        x = jnp.asarray(rng.normal(size=(2, 1, 10, 10, 4)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(2, 1, 3, 3, 4, 4)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(2, 4)), jnp.float32)
+        kw = dict(padding="SAME")
+    return x, w, b, kw
+
+
+@pytest.mark.parametrize("family", ["window", "stream", "depthwise",
+                                    "pointwise"])
+def test_fused_residual_forward_equals_two_pass(family):
+    rng = np.random.default_rng(zlib.crc32(family.encode()))
+    xb, wb, bb, kw = _family_operands(family, rng)
+    base = _family_call(family, xb, wb, bb, activation="relu",
+                        interpret=True, **kw)
+    res = jnp.asarray(rng.normal(size=base.shape), jnp.float32)
+    fused = _family_call(family, xb, wb, bb, activation="relu",
+                         interpret=True, residual=res, **kw)
+    np.testing.assert_array_equal(np.asarray(fused),
+                                  np.asarray(base + res))
+
+
+@pytest.mark.parametrize("family", ["window", "stream", "depthwise",
+                                    "pointwise"])
+@pytest.mark.parametrize("machine", [None, TINY],
+                         ids=["default", "tiny-multitile"])
+def test_fused_gap_forward_equals_two_pass(family, machine):
+    rng = np.random.default_rng(zlib.crc32(family.encode()) + 1)
+    xb, wb, bb, kw = _family_operands(family, rng)
+    if machine is not None:
+        kw["machine"] = machine
+    base = _family_call(family, xb, wb, bb, activation="relu",
+                        interpret=True, **kw)
+    pooled = _family_call(family, xb, wb, bb, activation="relu",
+                          interpret=True, gap=True, **kw)
+    assert pooled.ndim == 2                        # [N, C], not the map
+    np.testing.assert_allclose(np.asarray(pooled),
+                               np.asarray(_pool_ref(base)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_fused_residual_plus_gap_compose():
+    """Both epilogue extensions at once: pool(act(z + b) + r)."""
+    rng = np.random.default_rng(7)
+    xb, wb, bb, kw = _family_operands("window", rng)
+    base = direct_conv2d_blocked_pallas(xb, wb, bb, activation="relu",
+                                        interpret=True, **kw)
+    res = jnp.asarray(rng.normal(size=base.shape), jnp.float32)
+    both = direct_conv2d_blocked_pallas(xb, wb, bb, activation="relu",
+                                        interpret=True, residual=res,
+                                        gap=True, **kw)
+    np.testing.assert_allclose(np.asarray(both),
+                               np.asarray(_pool_ref(base + res)),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused backward (dz in-kernel) == the lax oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("activation", ["relu", "gelu", None])
+@pytest.mark.parametrize("precision", ["f32", "bf16"])
+def test_fused_vjp_grads_match_lax(stride, activation, precision):
+    """Residual-fused training step vs the oracle: dx, dw, db AND dres.
+    The backward forms dz = g * act'(z) inside dgrad/wgrad (no dz tensor
+    between kernels) and folds db into the wgrad flush."""
+    if precision == "bf16" and activation == "relu":
+        # relu's mask can legitimately flip where bf16 quantization crosses
+        # z = 0 — a subgradient artifact, not an accuracy property (same
+        # exclusion as test_precision's bf16 VJP sweep)
+        pytest.skip("relu subgradient under bf16 quantization")
+    rng = np.random.default_rng(
+        zlib.crc32(repr((stride, activation, precision)).encode()))
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    xb, wb, bb = _blocked(x, w, b, 4)
+    out = direct_conv2d_blocked_pallas(
+        xb, wb, bb, stride=stride, padding="SAME", activation=activation,
+        interpret=True, precision=precision)
+    res = jnp.asarray(rng.normal(size=out.shape).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=out.shape).astype(np.float32))
+    rn = L.blocked_to_nhwc(r)
+    resn = L.blocked_to_nhwc(res)
+
+    def loss_pallas(xb_, wb_, bb_, res_):
+        y = direct_conv2d_blocked_pallas(
+            xb_, wb_, bb_, stride=stride, padding="SAME",
+            activation=activation, interpret=True, precision=precision,
+            residual=res_)
+        return jnp.sum(y.astype(jnp.float32) * r)
+
+    def loss_lax(x_, w_, b_, res_):
+        y = _oracle(x_, w_, stride, "SAME", b_, activation)
+        if precision == "bf16":
+            y = y.astype(jnp.bfloat16)
+        return jnp.sum((y.astype(jnp.float32) + res_) * rn)
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2, 3))(xb, wb, bb, res)
+    go = jax.grad(loss_lax, argnums=(0, 1, 2, 3))(x, w, b, resn)
+
+    tol = dict(rtol=2e-4, atol=2e-4) if precision == "f32" else \
+        dict(rtol=0.1, atol=0.15)
+    scale = max(float(jnp.abs(go[1]).max()), 1.0)
+    np.testing.assert_allclose(
+        np.asarray(L.blocked_to_nhwc(gp[0].astype(jnp.float32))),
+        np.asarray(go[0]), err_msg="dx", **tol)
+    np.testing.assert_allclose(
+        np.asarray(L.blocked_to_hwio(gp[1].astype(jnp.float32))) / scale,
+        np.asarray(go[1]) / scale, err_msg="dw", **tol)
+    np.testing.assert_allclose(
+        np.asarray(gp[2]).reshape(-1), np.asarray(go[2]),
+        err_msg="db", **tol)
+    # the skip cotangent is the map cotangent itself
+    np.testing.assert_allclose(
+        np.asarray(L.blocked_to_nhwc(gp[3].astype(jnp.float32))),
+        np.asarray(rn), err_msg="dres", **tol)
+
+
+@pytest.mark.parametrize("family", ["window", "depthwise", "pointwise"])
+def test_fused_gap_vjp_on_tiny_machine(family):
+    """GAP-fused training step under forced multi-tile backward grids:
+    the un-pooled cotangent spreads uniformly and the fused-prologue
+    dgrad/wgrad still match the naive jnp formulation."""
+    rng = np.random.default_rng(zlib.crc32(family.encode()) + 2)
+    xb, wb, bb, kw = _family_operands(family, rng)
+    kw["machine"] = TINY
+    rg_shape = _family_call(family, xb, wb, bb, activation="gelu",
+                            interpret=True, gap=True, **kw).shape
+    rg = jnp.asarray(rng.normal(size=rg_shape), jnp.float32)
+
+    def loss_fused(xb_, wb_, bb_):
+        out = _family_call(family, xb_, wb_, bb_, activation="gelu",
+                           interpret=True, gap=True, **kw)
+        return jnp.sum(out * rg)
+
+    def loss_two_pass(xb_, wb_, bb_):
+        out = _family_call(family, xb_, wb_, bb_, activation="gelu",
+                           interpret=True, **kw)
+        return jnp.sum(_pool_ref(out) * rg)
+
+    gf = jax.grad(loss_fused, argnums=(0, 1, 2))(xb, wb, bb)
+    gt = jax.grad(loss_two_pass, argnums=(0, 1, 2))(xb, wb, bb)
+    for name, a, b in zip("dx dw db".split(), gf, gt):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4, err_msg=name)
+
+
+def test_wgrad_fused_bias_cotangent():
+    """db comes out of the wgrad kernel's flush-once scratch — equal to the
+    separate sum-reduction it replaced, for a multi-tile grid."""
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.normal(size=(2, 12, 12, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 8, 8)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    xb, wb, bb = _blocked(x, w, b, 8)
+
+    def loss(xb_, wb_, bb_):
+        y = direct_conv2d_blocked_pallas(
+            xb_, wb_, bb_, stride=1, padding="SAME", activation="gelu",
+            machine=TINY, interpret=True)
+        return jnp.sum(y ** 2)
+
+    db = jax.grad(loss, argnums=2)(xb, wb, bb)
+    # reference: the same cotangent reduced outside the kernel
+    y, vjp = jax.vjp(lambda a, c, d: direct_conv2d_blocked_pallas(
+        a, c, d, stride=1, padding="SAME", activation="gelu",
+        interpret=True), xb, wb, bb)
+    db_ref = vjp(2 * y)[2]
+    np.testing.assert_allclose(np.asarray(db), np.asarray(db_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# byte accounting
+# ---------------------------------------------------------------------------
+
+def test_bytes_epilogue_fusion_positive_for_chained_shapes():
+    from benchmarks.cnn_zoo import CHAINS
+    for chain in CHAINS.values():
+        for s in chain:
+            assert bytes_epilogue_fusion(s, 4, act_bwd=True) > 0
+        assert bytes_epilogue_fusion(chain[-1], 4, gap=True) > 0
+
+
+def test_bytes_epilogue_fusion_additive_and_zero_when_unfused():
+    s = ConvShape("t", 2, 8, 8, 4, 8, 3, 3, pad=1)
+    assert bytes_epilogue_fusion(s, 4) == 0
+    m = 2 * 8 * 8 * 8 * 4
+    assert bytes_epilogue_fusion(s, 4, residual=True) == 2 * m
+    assert bytes_epilogue_fusion(s, 4, gap=True) == 2 * m
+    assert bytes_epilogue_fusion(s, 4, act_bwd=True) == 2 * m
+    assert bytes_epilogue_fusion(
+        s, 4, residual=True, gap=True, act_bwd=True) == 6 * m
+    # scales with the operand itemsize (bf16 halves the saved traffic)
+    assert bytes_epilogue_fusion(s, 2, residual=True) == m
+
+
+# ---------------------------------------------------------------------------
+# dispatch: the fusion tag
+# ---------------------------------------------------------------------------
+
+def test_dispatch_key_fusion_tokens_canonicalize():
+    k1 = DispatchKey.make(1, 8, 8, 4, 8, 3, 3, fusion="gap+res")
+    k2 = DispatchKey.make(1, 8, 8, 4, 8, 3, 3, fusion="res+gap")
+    assert k1.fusion == k2.fusion == "res+gap"
+    assert k1.ident == k2.ident
+    assert k1.ident.endswith("|res+gap")
+    with pytest.raises(ValueError):
+        DispatchKey.make(1, 8, 8, 4, 8, 3, 3, fusion="bogus")
+
+
+def test_dispatch_key_unfused_ident_is_schema2_stable():
+    """No trailing fusion field on unfused idents — the schema-2 entries'
+    idents survive migration byte for byte."""
+    k = DispatchKey.make(1, 8, 8, 4, 8, 3, 3)
+    assert k.fusion == ""
+    assert not k.ident.endswith("|")
+    assert "|res" not in k.ident and "|gap" not in k.ident
+    # round-trips through JSON without a fusion field
+    d = k.to_json()
+    assert "fusion" not in d
+    assert DispatchKey.from_json(d) == k
+
+
+def test_schema2_table_auto_migrates_to_3(tmp_path):
+    key = DispatchKey.make(1, 12, 12, 4, 8, 3, 3, 1, "SAME")
+    p = tmp_path / "v2.json"
+    p.write_text(json.dumps({"schema": 2, "entries": {
+        key.ident: {"key": key.to_json(), "impl": "window",
+                    "source": "measured", "times_us": {"window": 1.0}}}}))
+    disp = ConvDispatcher.from_file(p)
+    entry = disp.table[key.ident]            # ident unchanged by migration
+    assert entry["impl"] == "window"
+    assert entry["times_us"] == {"window": 1.0}
+
+
+def test_fused_and_unfused_keys_decide_independently(tmp_path):
+    """A fused key is a distinct table row: pinning the unfused entry does
+    not shadow the fused one (and explain() shows both idents apart)."""
+    disp = ConvDispatcher(path=tmp_path / "t.json")
+    k = DispatchKey.make(1, 12, 12, 8, 8, 3, 3, 1, "SAME")
+    kf = DispatchKey.make(1, 12, 12, 8, 8, 3, 3, 1, "SAME",
+                          fusion="res+dz")
+    assert k.ident != kf.ident
+    disp.table[k.ident] = {"key": k.to_json(), "impl": "jnp",
+                           "source": "tuned", "times_us": {"jnp": 1.0}}
+    d_unfused = disp.decide(k, cob=8, cib=8)
+    d_fused = disp.decide(kf, cob=8, cib=8)
+    assert d_unfused.source in ("table", "tuned")
+    assert d_fused.source.startswith("prior")   # the entry did not leak over
+    assert disp.explain(kf)["key"] == kf.ident
+
+
+def test_checked_in_table_carries_fused_keys():
+    disp = ConvDispatcher.from_file(missing_ok=False)
+    fused = [i for i in disp.table if "|res" in i or "|gap" in i]
+    assert fused, "regenerated table must carry the fused smoke keys"
+
+
+# ---------------------------------------------------------------------------
+# layer API
+# ---------------------------------------------------------------------------
+
+def test_residual_block_fuses_identity_skip():
+    conv = BlockedConv2D(ci=8, co=8, lane=8)
+    blk = ResidualBlock(conv)
+    p = init_tree(blk.specs(), jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 1, 6, 6, 8)),
+                    jnp.float32)
+    got = blk(p, x, impl="jnp")
+    want = conv(p, x, impl="jnp") + x
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    with pytest.raises(ValueError):
+        ResidualBlock(BlockedConv2D(ci=8, co=16, lane=8))   # not identity
+    with pytest.raises(ValueError):
+        blk(p, x, impl="jnp", residual=x)       # skip is the block's own
+
+
+def test_blocked_cnn_final_conv_flows_into_fused_gap():
+    cnn = BlockedCNN(convs=(BlockedConv2D(ci=8, co=8, lane=8),
+                            BlockedConv2D(ci=8, co=16, lane=8)),
+                     n_classes=3)
+    p = init_tree(cnn.specs(), jax.random.PRNGKey(1))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, 6, 6, 8)),
+                    jnp.float32)
+    logits = cnn(p, x, impl="jnp")
+    # two-pass reference: convs then the standalone pool
+    h = L.nhwc_to_blocked(x, 8)
+    h = cnn.convs[0](p["conv0"], h, impl="jnp")
+    h = cnn.convs[1](p["conv1"], h, impl="jnp")
+    want = blocked_global_avg_pool(h) @ p["head"]
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("precision,want", [("f32", jnp.float32),
+                                            ("bf16", jnp.float32),
+                                            (None, jnp.float32)])
+def test_blocked_global_avg_pool_accum_follows_policy(precision, want):
+    """The pool's reduction dtype is the policy's accumulation rule (every
+    shipped policy pins f32) — not an unconditional up-cast; output stays
+    in the input dtype."""
+    from repro.core.precision import resolve_precision
+    pol = resolve_precision(precision)
+    assert pol.accum_dtype == want            # the rule the pool must follow
+    x16 = jnp.asarray(np.random.default_rng(2).normal(size=(2, 1, 4, 4, 8)),
+                      jnp.bfloat16)
+    out = blocked_global_avg_pool(x16, precision)
+    assert out.dtype == jnp.bfloat16
+    # pin the numerics: bf16 inputs pooled through an f32 accumulator, one
+    # final down-cast — NOT a bf16 running mean
+    want_val = jnp.mean(x16.astype(jnp.float32),
+                        axis=(2, 3)).reshape(2, 8).astype(jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(out, dtype=np.float32),
+                                  np.asarray(want_val, dtype=np.float32))

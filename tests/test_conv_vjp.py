@@ -211,6 +211,32 @@ def test_blocked_conv2d_layer_trains_through_pallas():
                                    rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("fused", ["residual", "gap"])
+def test_blocked_conv2d_layer_trains_through_fused_epilogue(fused):
+    """jax.grad through BlockedConv2D with a fused operand (skip-add / GAP,
+    DESIGN.md §14) — the Pallas path with its dz-in-kernel backward equals
+    the jnp path, params AND the skip tensor."""
+    conv = BlockedConv2D(ci=4, co=8, stride=1, padding="SAME",
+                         activation="gelu", lane=4)
+    p = init_tree(conv.specs(), jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    xb = L.nhwc_to_blocked(
+        jnp.asarray(rng.normal(size=(2, 8, 8, 4)).astype(np.float32)), 4)
+    res = (jnp.asarray(rng.normal(size=(2, 2, 8, 8, 4)).astype(np.float32))
+           if fused == "residual" else None)
+
+    def loss(p, res, impl):
+        out = conv(p, xb, impl=impl, interpret=True, residual=res,
+                   gap=fused == "gap")
+        return jnp.sum(out * out)
+
+    gp = jax.grad(loss, argnums=(0, 1))(p, res, "window")
+    gj = jax.grad(loss, argnums=(0, 1))(p, res, "jnp")
+    for a, b in zip(jax.tree.leaves(gp), jax.tree.leaves(gj)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
 # hi, wi, ci, co, hf, wf, groups, dilation, lane — the kernel-zoo geometry
 # axes (mirrors ZOO_SWEEP in test_blocked_conv_fused.py, backward side)
 ZOO_VJP = [

@@ -159,9 +159,9 @@ def test_schema1_table_auto_migrates(tmp_path):
 
 
 def test_unknown_schema_fails_with_schema_named(tmp_path):
-    p = tmp_path / "v3.json"
-    p.write_text(json.dumps({"schema": 3, "entries": {}}))
-    with pytest.raises(ValueError, match="schema 3"):
+    p = tmp_path / "v99.json"
+    p.write_text(json.dumps({"schema": 99, "entries": {}}))
+    with pytest.raises(ValueError, match="schema 99"):
         ConvDispatcher.from_file(p)
 
 

@@ -138,9 +138,9 @@ def test_vjp_residuals_stored_at_policy_dtype():
 
     xb, wb = _blocked_inputs(3)
     spec = ConvSpec.make(2, 10, 9, 4, 8, 3, 3, padding="SAME")
-    out, res = _conv_fwd(xb, wb, None, spec, "relu",
-                         None, None, TPU_V5E, True, BF16, None, None)
-    xp, wq, bias, z, x_token, w_token = res
+    out, res = _conv_fwd(xb, wb, None, None, spec, "relu",
+                         None, None, TPU_V5E, True, BF16, None, None, False)
+    xp, wq, bias, z, r_token, x_token, w_token = res
     assert out.dtype == jnp.bfloat16
     assert xp.dtype == jnp.bfloat16          # operand-cast padded input
     assert wq.dtype == jnp.bfloat16          # operand-cast weights
