@@ -15,7 +15,7 @@ import jax
 from repro.configs.base import ModelConfig
 from repro.nn.models import build_model
 from repro.nn.module import Parallelism
-from repro.serve.scheduler import ContinuousBatcher, Request
+from repro.serve import ContinuousBatcher, Request
 
 
 def main():

@@ -154,3 +154,28 @@ class ConvSpec:
     def with_direction_swap(self) -> "ConvSpec":
         """The dgrad geometry: channel pencils swapped, per group."""
         return dataclasses.replace(self, ci=self.co, co=self.ci)
+
+    def shard(self, data: int = 1, model: int = 1) -> "ConvSpec":
+        """The per-shard geometry on a (data x model) mesh (DESIGN.md §15).
+
+        The batch shards over ``data`` and the *output-channel* dim over
+        ``model`` — the paper's §3.2 observation that Co/Cob blocks are
+        embarrassingly parallel, lifted to a mesh axis.  Input channels are
+        untouched (every shard consumes the full Ci), so the per-shard
+        program is the unmodified blocked kernel over a smaller Co.  Model
+        sharding is dense-only: a grouped conv's block-diagonal weight would
+        split *groups*, a different (unimplemented) partitioning.
+        """
+        if data < 1 or model < 1:
+            raise ValueError(f"axis widths must be >= 1, got "
+                             f"data={data} model={model}")
+        if self.n % data:
+            raise ValueError(f"data axis {data} must divide n={self.n}")
+        if model > 1 and self.groups > 1:
+            raise ValueError(
+                "model-axis (Co) sharding is dense-only; grouped/depthwise "
+                f"convs (groups={self.groups}) shard over data only")
+        if self.co % model:
+            raise ValueError(f"model axis {model} must divide co={self.co}")
+        return dataclasses.replace(self, n=self.n // data,
+                                   co=self.co // model)

@@ -282,6 +282,13 @@ class DispatchKey:
     def with_direction(self, direction: Direction) -> "DispatchKey":
         return dataclasses.replace(self, direction=direction)
 
+    def shard(self, data: int = 1, model: int = 1) -> "DispatchKey":
+        """The key a single shard of a (data x model) mesh resolves: batch
+        over ``data``, output channels over ``model`` (``ConvSpec.shard``).
+        The serving tier tunes and benches *these* keys — the per-shard
+        geometry is what the kernel actually runs."""
+        return dataclasses.replace(self, spec=self.spec.shard(data, model))
+
     # --- geometry delegation (the probes' vocabulary is the spec's) ---
 
     @property

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import layout as L
 from repro.core.blocking import TPU_V5E
+from repro.core.context import ConvContext, resolve_context
 from repro.core.conv_baselines import (Padding, conv_im2col, conv_lax)
 from repro.core.direct_conv import (apply_activation, bias_to_blocked,
                                     direct_conv_nhwc,
@@ -41,6 +42,7 @@ def direct_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
                   padding: Padding = "VALID", *,
                   bias: Optional[jnp.ndarray] = None,
                   activation: Optional[str] = None,
+                  context: Optional[ConvContext] = None,
                   interpret: Optional[bool] = None,
                   dispatch=None, impl=None) -> jnp.ndarray:
     """Direct convolution, NHWC/HWIO interface, zero memory overhead inside.
@@ -51,18 +53,24 @@ def direct_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
     into the kernel epilogue (applied once, on the final Ci block's flush).
     Differentiable on every path (the Pallas kernels carry a custom VJP).
 
-    ``dispatch``/``impl`` route through the dispatch subsystem: ``impl``
-    forces one candidate ("window"/"stream"/"im2col"/"lax"/"jnp"), otherwise
-    the dispatcher resolves the key through its table and prior.
+    ``context`` (a :class:`ConvContext`) routes through the dispatch
+    subsystem: a forced ``impl`` pins one candidate ("window"/"stream"/
+    "im2col"/"lax"/"jnp"), otherwise the dispatcher resolves the key
+    through its table and prior.  The loose ``dispatch=``/``impl=``/
+    ``interpret=`` kwargs are the deprecated spelling of the same fields.
     """
+    ctx = resolve_context(context, dispatch=dispatch, impl=impl,
+                          interpret=interpret)
+    impl, interpret = ctx.impl, ctx.interpret
     if impl is not None and Impl(impl) is Impl.JNP:
         return direct_conv_nhwc(x, w, stride, padding, bias, activation)
 
     n, hi, wi, ci = x.shape
     co = w.shape[3]
-    disp = dispatch if dispatch is not None else get_dispatcher()
+    machine = ctx.machine if ctx.machine is not None else TPU_V5E
+    disp = ctx.dispatch if ctx.dispatch is not None else get_dispatcher()
     key = DispatchKey.make(n, hi, wi, ci, co, w.shape[0], w.shape[1],
-                           stride, padding, None, TPU_V5E, "fwd")
+                           stride, padding, ctx.precision, machine, "fwd")
     lay = L.BlockedConvLayout.choose(ci, co)
     dec = disp.decide(key, override=impl,
                       cob=lay.cb_out, cib=lay.cb_in)

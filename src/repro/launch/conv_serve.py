@@ -1,77 +1,280 @@
-"""Data-parallel blocked-CNN inference: shard the batch, keep every shard in
-the paper's blocked layout end to end.
+"""The conv serving tier: 2-D (data x model) sharded blocked-CNN inference
+behind a continuous-batching front door (DESIGN.md §15).
 
-The paper's §3.2 observation — output channels (and, trivially, batch
-entries) are embarrassingly parallel for direct convolution — means serving
-sharding is pure data parallelism: each device blocks its own sub-batch once
-at entry (``nhwc_to_blocked`` inside the model), chains every layer in
-``[n/D, C/Cb, H, W, Cb]`` with zero repacks, and emits its logits shard.  No
-collective appears anywhere in the forward pass (``benchmarks/fig5_scaling``
-verifies zero collective bytes for the batch-sharded direct conv).
+Two mesh axes, two paper facts:
+
+  * ``data`` — batch entries are trivially parallel: each device blocks its
+    own sub-batch once at entry and chains every layer in
+    ``[n/D, C/Cb, H, W, Cb]`` with zero repacks and zero collectives.
+  * ``model`` — the paper's §3.2 observation that output channels partition
+    into independent ``Co/Cob`` blocks *is* a model axis: shard the stored
+    weight's leading ``Co/Cob`` dim, run the **unmodified** blocked kernel
+    per shard over ``co / M`` output channels, and ``all_gather`` the
+    blocked channel dim once per layer boundary (the next layer consumes
+    full Ci).  Each shard computes its channels with the identical
+    reduction order as the single-device kernel, so the sharded forward is
+    bit-identical — the property ``tests/test_conv_serve_tier.py`` pins.
 
 ``shard_map`` (via the version-compat shim) rather than jit-with-shardings:
 the per-shard program is *exactly* the single-device program, so the Pallas
 kernel runs per shard with per-shard blocked layouts — no global-view
-resharding can be introduced behind the kernel's back.
+resharding can be introduced behind the kernel's back, and each shard's
+convs resolve their *per-shard* dispatch key (``DispatchKey.shard``: batch
+over data, Co over model) through the measured table.
+
+``ConvServer`` fronts the mesh for ragged traffic: requests carry arbitrary
+image sizes, a ``SpatialBucketer`` groups them onto a small set of
+dispatch-table-tuned ``(H, W)`` buckets (pad on entry, one compiled
+executable per bucket), a per-bucket ``SlotPool`` does continuous-batching
+admission, and the server reports per-request latency plus achieved batch
+occupancy (``benchmarks/bench_serve.py`` drives it under synthetic load).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+import time
+from typing import Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core.context import ConvContext, resolve_context
+from repro.core.layout import nhwc_to_blocked
+from repro.nn.conv import BlockedConv2D
+from repro.serve.scheduler import ConvRequest, SlotPool, SpatialBucketer
 from repro.utils.compat import shard_map
 
-__all__ = ["make_sharded_cnn_forward", "sharded_cnn_predict"]
+__all__ = ["make_sharded_cnn_forward", "sharded_cnn_predict",
+           "co_shard_convs", "ConvServer"]
+
+
+def co_shard_convs(model, m: int):
+    """Per-shard layers for Co-block sharding of width ``m`` — or raise.
+
+    The per-shard program must be the unmodified blocked kernel, which
+    holds only when every layer keeps its *pencils* under the shard: the
+    weight is sharded on its leading ``Co/Cob`` dim in whole blocks, so the
+    shard's layout choice for ``co / m`` channels must reproduce the full
+    model's ``cb_out`` (counterexample: ``co=24, lane=8, m=2`` — the full
+    layout picks an 8-pencil but 12 channels pick 6, so shard block
+    boundaries would not be weight block boundaries).  Dense-only: a
+    grouped conv's block-diagonal weight shards over *groups*, a different
+    partitioning this tier does not implement.
+    """
+    shards = []
+    for i, conv in enumerate(model.convs):
+        if not isinstance(conv, BlockedConv2D) or conv.groups != 1:
+            raise ValueError(
+                f"conv{i}: model-axis (Co) sharding is dense-only; "
+                "grouped/depthwise layers shard over data only")
+        if conv.co % m:
+            raise ValueError(
+                f"conv{i}: model axis {m} must divide co={conv.co}")
+        shard = dataclasses.replace(conv, co=conv.co // m)
+        if shard.out_pencil != conv.out_pencil:
+            raise ValueError(
+                f"conv{i}: co={conv.co} over model={m} changes the output "
+                f"pencil ({conv.out_pencil} -> {shard.out_pencil}); shard "
+                "boundaries must fall on whole Co blocks — pick co, lane "
+                "and mesh so cb_out divides co/m")
+        if shard.in_pencil != conv.in_pencil:
+            raise ValueError(
+                f"conv{i}: sharding changes the input pencil "
+                f"({conv.in_pencil} -> {shard.in_pencil})")
+        shards.append(shard)
+    return tuple(shards)
+
+
+def make_sharded_cnn_forward(model, mesh, axis: str = "data", *,
+                             model_axis: Optional[str] = None,
+                             context: Optional[ConvContext] = None,
+                             interpret: Optional[bool] = None,
+                             dispatch=None, impl=None):
+    """-> jitted ``f(params, x_nhwc) -> logits`` over a 1- or 2-axis mesh.
+
+    ``axis`` shards the batch (params replicated along it); ``model_axis``
+    additionally Co-shards every conv's weight + bias on their leading
+    ``Co/Cob`` block dim, with one tiled ``all_gather`` of the blocked
+    channel dim per layer boundary (the next layer needs full Ci; the head
+    needs the full pooled feature).  The batch dim must be divisible by the
+    data width (use :func:`sharded_cnn_predict` for ragged batches) and
+    every ``co`` by the model width in whole output blocks
+    (:func:`co_shard_convs` validates).
+
+    Inside a shard the forward is the unmodified single-device program, so
+    layouts, tiling and the fused epilogue are per-shard — and so is conv
+    routing: each shard's convs resolve their *per-shard* geometry
+    (``DispatchKey.shard``) through the dispatch subsystem.  Routing
+    happens at trace time, so the decision is baked into the compiled
+    executable — re-tune, re-make to pick up new winners.
+
+    ``context`` is the one execution-context object (``ConvContext``); the
+    loose ``dispatch=``/``impl=``/``interpret=`` kwargs are the deprecated
+    spelling and fold into it before the cache, so both spellings of the
+    same context share one jitted function.  Memoized on
+    ``(model, mesh, axis, model_axis, context)`` — all frozen/hashable (a
+    ``ConvDispatcher`` hashes by identity) — so a serving loop calling
+    this per batch reuses one jitted function and hits the compile cache
+    instead of retracing every request.
+    """
+    ctx = resolve_context(context, dispatch=dispatch, impl=impl,
+                          interpret=interpret)
+    return _make_sharded_cnn_forward(model, mesh, axis, model_axis, ctx)
 
 
 @functools.lru_cache(maxsize=None)
-def make_sharded_cnn_forward(model, mesh, axis: str = "data", *,
-                             interpret: Optional[bool] = None,
-                             dispatch=None, impl=None):
-    """-> jitted ``f(params, x_nhwc) -> logits`` sharding the batch over
-    ``axis`` of ``mesh`` (e.g. ``launch.mesh.make_test_mesh()``'s "data").
+def _make_sharded_cnn_forward(model, mesh, axis: str,
+                              model_axis: Optional[str],
+                              ctx: ConvContext):
+    if model_axis is None:
+        def fwd(p, x):
+            return model(p, x, context=ctx)
 
-    Params are replicated (``P()``); the batch dim must be divisible by the
-    axis size (use :func:`sharded_cnn_predict` for ragged batches).  Inside
-    the shard the forward pass is the unmodified single-device ``BlockedCNN``
-    call, so layouts, tiling and the fused epilogue are per-shard — and so is
-    conv routing: each shard's convs resolve their *per-shard* batch size
-    through the dispatch subsystem (``dispatch`` pins a ``ConvDispatcher``,
-    ``impl`` forces one candidate; DESIGN.md §12).  Routing happens at trace time, so the decision is baked
-    into the compiled executable — re-tune, re-make to pick up new winners.
+        sharded = shard_map(fwd, mesh, in_specs=(P(), P(axis)),
+                            out_specs=P(axis))
+        return jax.jit(sharded)
 
-    Memoized on ``(model, mesh, axis, ...)`` — ``BlockedCNN`` and ``Mesh``
-    are hashable (a ``ConvDispatcher`` hashes by identity) — so a serving
-    loop calling this (or :func:`sharded_cnn_predict`) per batch reuses one
-    jitted function and hits the compile cache instead of retracing every
-    request.
-    """
+    m = mesh.shape[model_axis]
+    shard_convs = co_shard_convs(model, m)
+    last = len(shard_convs) - 1
+
     def fwd(p, x):
-        return model(p, x, dispatch=dispatch, impl=impl,
-                     interpret=interpret)
+        # the single layout transform, then per-shard blocked layers; the
+        # gather re-concatenates Co blocks in shard order = blocked channel
+        # order (shard k holds the contiguous block range [k*B/m, (k+1)*B/m))
+        h = nhwc_to_blocked(x, shard_convs[0].in_pencil)
+        for i, conv in enumerate(shard_convs):
+            h = conv(p[f"conv{i}"], h, context=ctx, gap=(i == last))
+            # non-last layers gather the blocked dim [N, C/Cb, H, W, Cb];
+            # the last layer's fused GAP emitted [N, co/m], gathered to the
+            # full pooled feature — axis 1 is the channel dim either way
+            h = jax.lax.all_gather(h, model_axis, axis=1, tiled=True)
+        return h @ p["head"].astype(h.dtype)
 
-    sharded = shard_map(fwd, mesh, in_specs=(P(), P(axis)),
+    pspecs = {f"conv{i}": P(model_axis) for i in range(len(shard_convs))}
+    pspecs["head"] = P()
+    sharded = shard_map(fwd, mesh, in_specs=(pspecs, P(axis)),
                         out_specs=P(axis))
     return jax.jit(sharded)
 
 
 def sharded_cnn_predict(model, params, x_nhwc, mesh, axis: str = "data", *,
+                        model_axis: Optional[str] = None,
+                        context: Optional[ConvContext] = None,
                         interpret: Optional[bool] = None,
                         dispatch=None, impl=None):
     """Serve one (possibly ragged) batch: pad N up to a multiple of the data
-    axis, run the sharded forward, slice the padding back off."""
+    axis, run the sharded forward, slice the padding back off.  Degenerate
+    tiny batches — where the zero padding would outnumber the real rows
+    (``pad >= n``) — route to the single-device forward instead of burning
+    most of the mesh on computing zeros."""
+    ctx = resolve_context(context, dispatch=dispatch, impl=impl,
+                          interpret=interpret)
     n = x_nhwc.shape[0]
     width = mesh.shape[axis]
     pad = (-n) % width
+    if pad >= n:
+        return model(params, x_nhwc, context=ctx)
     if pad:
-        import jax.numpy as jnp
         x_nhwc = jnp.concatenate(
             [x_nhwc, jnp.zeros((pad,) + x_nhwc.shape[1:], x_nhwc.dtype)])
-    f = make_sharded_cnn_forward(model, mesh, axis,
-                                 interpret=interpret, dispatch=dispatch,
-                                 impl=impl)
+    f = make_sharded_cnn_forward(model, mesh, axis, model_axis=model_axis,
+                                 context=ctx)
     logits = f(params, x_nhwc)
     return logits[:n]
+
+
+class ConvServer:
+    """Continuous-batching front door over the (data x model) mesh.
+
+    One compiled executable per ``(H, W)`` bucket (batch dim fixed at
+    ``batch``); arbitrary-size requests pad up to their bucket on admission
+    and run whenever their bucket has filled slots — a partially-filled
+    step pads the batch with zero rows rather than waiting (latency over
+    occupancy; the occupancy number reports the cost of that choice).
+
+    ``clock`` is injectable: the bench passes wall time
+    (``time.monotonic``) so p50/p99 are real latencies; tests pass a
+    deterministic counter so the slot/occupancy accounting is exact.
+    """
+
+    def __init__(self, model, params, mesh,
+                 buckets: Sequence[Tuple[int, int]], batch: int, *,
+                 axis: str = "data", model_axis: Optional[str] = None,
+                 context: Optional[ConvContext] = None,
+                 clock=time.monotonic):
+        if batch % mesh.shape[axis]:
+            raise ValueError(
+                f"server batch {batch} must be divisible by the data axis "
+                f"width {mesh.shape[axis]}")
+        self.model, self.params, self.mesh = model, params, mesh
+        self.axis, self.model_axis = axis, model_axis
+        self.context = context if context is not None else ConvContext()
+        self.batch = int(batch)
+        self.bucketer = SpatialBucketer(buckets)
+        self.pool = SlotPool(self.bucketer.buckets, self.batch)
+        self.clock = clock
+        self.completed: list = []
+        self._fwd = make_sharded_cnn_forward(
+            model, mesh, axis, model_axis=model_axis, context=self.context)
+
+    def warmup(self):
+        """Trace + compile every bucket's executable on zero batches, so the
+        first real request's latency is service time, not compile time (the
+        bench calls this before starting its trace)."""
+        ci = self.model.convs[0].ci
+        for bh, bw in self.bucketer.buckets:
+            x = np.zeros((self.batch, bh, bw, ci), np.float32)
+            jax.block_until_ready(self._fwd(self.params, x))
+
+    # -- queue management --------------------------------------------------
+    def submit(self, req: ConvRequest):
+        h, w = req.image.shape[:2]
+        req.bucket = self.bucketer.bucket_for(h, w)
+        req.t_submit = self.clock()
+        self.pool.enqueue(req)
+
+    # -- one engine step ---------------------------------------------------
+    def step(self) -> bool:
+        """Admit queued requests into free slots, then run one batched
+        forward for every bucket with filled slots.  -> ran anything."""
+        self.pool.admit()
+        ran = False
+        for bucket in self.bucketer.buckets:
+            reqs = self.pool.drain(bucket)
+            if not reqs:
+                continue
+            ran = True
+            imgs = np.stack([self.bucketer.pad(r.image, bucket)
+                             for r in reqs])
+            if len(reqs) < self.batch:      # zero rows up to the executable
+                fill = np.zeros((self.batch - len(reqs),) + imgs.shape[1:],
+                                imgs.dtype)
+                imgs = np.concatenate([imgs, fill])
+            logits = np.asarray(
+                jax.block_until_ready(self._fwd(self.params, imgs)))
+            t = self.clock()
+            for i, r in enumerate(reqs):    # batch-level exit slice
+                r.logits, r.t_done, r.done = logits[i], t, True
+                self.completed.append(r)
+        return ran
+
+    def run(self, max_steps: int = 10 ** 6):
+        steps = 0
+        while self.pool.pending and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.completed
+
+    # -- reporting ---------------------------------------------------------
+    def occupancy(self, bucket: Optional[Tuple[int, int]] = None) -> float:
+        return self.pool.occupancy(bucket)
+
+    def latencies(self, bucket: Optional[Tuple[int, int]] = None
+                  ) -> np.ndarray:
+        return np.array([r.latency for r in self.completed
+                         if bucket is None or r.bucket == bucket],
+                        np.float64)

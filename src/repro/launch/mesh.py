@@ -12,9 +12,12 @@ dry-run driver must set XLA_FLAGS before any jax import).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
-__all__ = ["make_mesh_auto", "make_production_mesh", "make_test_mesh"]
+__all__ = ["make_mesh_auto", "make_production_mesh", "make_serve_mesh",
+           "make_test_mesh"]
 
 
 def make_mesh_auto(shape, axes):
@@ -42,4 +45,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_test_mesh(data: int = 2, model: int = 4):
     """Small mesh for CI-grade sharding tests (8 host-platform devices)."""
+    return make_mesh_auto((data, model), ("data", "model"))
+
+
+def make_serve_mesh(model: int = 1, data: Optional[int] = None):
+    """The serving tier's (data x model) mesh over the visible devices.
+
+    ``model`` is the Co-shard width (1 = pure data parallelism — every
+    ``ConvServer`` works on any dense model); ``data`` defaults to
+    ``device_count // model`` so the mesh always covers the whole slice.
+    The batch shards over ``data`` and every conv's ``Co/Cob`` blocks over
+    ``model`` (DESIGN.md §15).
+    """
+    n = jax.device_count()
+    if n % model:
+        raise ValueError(f"model={model} must divide device count {n}")
+    if data is None:
+        data = n // model
     return make_mesh_auto((data, model), ("data", "model"))

@@ -23,7 +23,7 @@ def main():
     from repro.configs.registry import get_config
     from repro.nn.models import build_model
     from repro.nn.module import Parallelism
-    from repro.serve.scheduler import ContinuousBatcher, Request
+    from repro.serve import ContinuousBatcher, Request
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if cfg.family == "audio":

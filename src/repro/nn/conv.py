@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.blocking import MachineModel, TPU_V5E
+from repro.core.context import ConvContext, resolve_context
 from repro.core.conv_baselines import Padding
 from repro.core.convspec import as_dilation
 from repro.core.direct_conv import direct_conv_blocked
@@ -142,6 +143,7 @@ class BlockedConv2D:
         return s
 
     def __call__(self, p, xb: jnp.ndarray, *,
+                 context: Optional[ConvContext] = None,
                  dispatch: Optional[ConvDispatcher] = None,
                  impl: Union[Impl, str, None] = None,
                  interpret: Optional[bool] = None,
@@ -151,14 +153,22 @@ class BlockedConv2D:
                  gap: bool = False) -> jnp.ndarray:
         """Run this layer through the conv dispatch subsystem.
 
-        ``dispatch`` supplies the :class:`ConvDispatcher` (default: the
-        process-wide one over the checked-in table); ``impl`` is the
-        per-call override that beats every table entry (tests and forced
-        paths — ``impl="jnp"`` pins the oracle, ``impl="window"`` a Pallas
-        family, and so on).  ``stream`` (or the layer field) forces
-        window-vs-stream inside the dense Pallas family.  Every candidate
-        is differentiable — the Pallas impls through their custom VJPs,
-        whose dgrad/wgrad directions the dispatcher routes independently.
+        ``context`` is the one execution-context object (DESIGN.md §15):
+        a frozen :class:`ConvContext` bundling the dispatcher, the forced
+        impl, interpret mode, machine model, window-vs-stream and the
+        precision policy.  Every field it leaves ``None`` defers to the
+        layer's own field or the process default.  The loose kwargs
+        (``dispatch=``/``impl=``/``interpret=``/``precision=``/``stream=``)
+        are the deprecated spelling — they fill only fields the context
+        leaves open and disappear next release.
+
+        ``impl`` forces one candidate and beats every table entry (tests
+        and forced paths — ``impl="jnp"`` pins the oracle, ``impl="window"``
+        a Pallas family, and so on).  ``stream`` (or the layer field)
+        forces window-vs-stream inside the dense Pallas family.  Every
+        candidate is differentiable — the Pallas impls through their custom
+        VJPs, whose dgrad/wgrad directions the dispatcher routes
+        independently.
 
         ``precision`` overrides the layer's policy for this call (the
         ``BlockedCNN``/``TrainSettings`` pass-down); params stay f32
@@ -173,10 +183,14 @@ class BlockedConv2D:
         map (DESIGN.md §14).  Both ride the dispatch key's ``fusion`` tag
         so the measured table distinguishes fused from unfused geometry.
         """
-        pol = resolve_precision(
-            self.precision if precision is None else precision)
+        ctx = resolve_context(context, dispatch=dispatch, impl=impl,
+                              interpret=interpret, precision=precision,
+                              stream=stream)
+        pol = ctx.resolve_precision_for(self.precision)
+        machine = ctx.resolve_machine_for(self.machine)
+        impl, dispatch, interpret = ctx.impl, ctx.dispatch, ctx.interpret
         bias = p["b"] if self.use_bias else None
-        stream = self.stream if stream is None else stream
+        stream = ctx.resolve_stream_for(self.stream)
         toks = [t for t, on in (
             ("res", residual is not None), ("gap", gap),
             ("dz", self.activation not in (None, "linear"))) if on]
@@ -191,7 +205,7 @@ class BlockedConv2D:
             lay = self.layout
             key = DispatchKey.make(
                 n, hi, wi, self.ci, self.co, self.hf, self.wf, self.stride,
-                self.padding, pol, self.machine, "fwd",
+                self.padding, pol, machine, "fwd",
                 groups=self.groups, dilation=self.dilation, fusion=fusion)
             dec = disp.decide(key, override=impl,
                               cob=lay.cb_out, cib=lay.cb_in,
@@ -202,7 +216,9 @@ class BlockedConv2D:
                 # rides the custom VJP (an explicit stream bool forces all
                 # three; otherwise the forward leg is pinned to this
                 # decision and dgrad/wgrad resolve independently)
-                if stream is not None:
+                if isinstance(stream, KernelRoute):
+                    route = stream
+                elif stream is not None:
                     route = KernelRoute(fwd=stream, dgrad=stream,
                                         wgrad=stream)
                 else:
@@ -225,7 +241,7 @@ class BlockedConv2D:
         return run_conv_impl(decision_impl, xb, p["w"], bias,
                              stride=self.stride, padding=self.padding,
                              activation=self.activation, precision=pol,
-                             machine=self.machine, interpret=interpret,
+                             machine=machine, interpret=interpret,
                              hob=self.hob, wob=self.wob, route=route,
                              dilation=as_dilation(self.dilation),
                              residual=residual, gap=gap)
@@ -332,6 +348,7 @@ class DepthwiseSeparableBlock:
         return {"dw": self.depthwise.specs(), "pw": self.pointwise.specs()}
 
     def __call__(self, p, xb: jnp.ndarray, *,
+                 context: Optional[ConvContext] = None,
                  dispatch: Optional[ConvDispatcher] = None,
                  impl: Union[Impl, str, None] = None,
                  interpret: Optional[bool] = None,
@@ -339,13 +356,13 @@ class DepthwiseSeparableBlock:
                  stream: Optional[bool] = None,
                  residual: Optional[jnp.ndarray] = None,
                  gap: bool = False) -> jnp.ndarray:
-        h = self.depthwise(p["dw"], xb, dispatch=dispatch, impl=impl,
-                           interpret=interpret, precision=precision,
-                           stream=stream)
-        # fused operands land on the channel-mixing leg — the block's output
-        return self.pointwise(p["pw"], h, dispatch=dispatch, impl=impl,
+        ctx = resolve_context(context, dispatch=dispatch, impl=impl,
                               interpret=interpret, precision=precision,
-                              stream=stream, residual=residual, gap=gap)
+                              stream=stream)
+        h = self.depthwise(p["dw"], xb, context=ctx)
+        # fused operands land on the channel-mixing leg — the block's output
+        return self.pointwise(p["pw"], h, context=ctx,
+                              residual=residual, gap=gap)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -378,31 +395,34 @@ class BlockedCNN:
         return s
 
     def __call__(self, p, x_nhwc: jnp.ndarray, *,
+                 context: Optional[ConvContext] = None,
                  dispatch: Optional[ConvDispatcher] = None,
                  impl: Union[Impl, str, None] = None,
                  interpret: Optional[bool] = None,
                  precision: Union[str, Precision, None] = None,
                  stream: Optional[bool] = None) -> jnp.ndarray:
-        """``dispatch``/``impl`` ride down to every conv (each layer still
-        resolves its *own* key — shapes shrink through the chain, so the
-        winning impl may differ per layer).  ``precision`` (if given)
-        overrides every conv's policy for this forward — under bf16 the
-        layers *chain in bf16* (each conv emits its operand dtype), GAP
-        pools in f32, and the head matmul casts its f32 master to the
-        feature dtype; logits come back in the compute dtype and the loss
-        up-casts them once.  ``stream`` (if given) overrides every conv's
-        routing the same way.
+        """``context`` (one :class:`ConvContext`; the loose kwargs are the
+        deprecated spelling) rides down to every conv (each layer still
+        resolves its *own* dispatch key — shapes shrink through the chain,
+        so the winning impl may differ per layer).  A ``precision`` it
+        carries overrides every conv's policy for this forward — under
+        bf16 the layers *chain in bf16* (each conv emits its operand
+        dtype), GAP pools in f32, and the head matmul casts its f32 master
+        to the feature dtype; logits come back in the compute dtype and
+        the loss up-casts them once.  A ``stream`` it carries overrides
+        every conv's routing the same way.
 
         The final conv flows straight into GAP: its fused epilogue
         accumulates the pooled partial sums in f32 scratch and emits
         ``[N, C]`` directly (DESIGN.md §14), so the full feature map of the
         last layer never materializes in HBM."""
+        ctx = resolve_context(context, dispatch=dispatch, impl=impl,
+                              interpret=interpret, precision=precision,
+                              stream=stream)
         # the single layout transform of the whole forward pass
         h = nhwc_to_blocked(x_nhwc, self.convs[0].in_pencil)
         last = len(self.convs) - 1
         for i, conv in enumerate(self.convs):
-            h = conv(p[f"conv{i}"], h, dispatch=dispatch, impl=impl,
-                     interpret=interpret, precision=precision, stream=stream,
-                     gap=(i == last))
+            h = conv(p[f"conv{i}"], h, context=ctx, gap=(i == last))
         feat = h                      # [N, C] — pooled in the conv epilogue
         return feat @ p["head"].astype(feat.dtype)

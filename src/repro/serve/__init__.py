@@ -1,3 +1,27 @@
-"""Serving substrate: decode steps, KV caches, continuous batching."""
+"""Serving substrate — the one public facade (DESIGN.md §15).
+
+Callers import everything servable from here: LM decode
+(``make_serve_step``/``make_prefill``/samplers), continuous batching
+(``Request``/``ContinuousBatcher``), and the conv serving tier
+(``ConvRequest``/``SpatialBucketer``/``SlotPool``/``ConvServer``) — not
+from the private ``serve.decode``/``serve.scheduler``/``launch.conv_serve``
+modules, whose layout is free to change behind this surface.
+
+``ConvServer`` resolves lazily (PEP 562): it lives in
+``repro.launch.conv_serve`` — which itself imports this package's scheduler
+— so an eager import here would be circular; everything else is eager.
+"""
 from .decode import make_serve_step, make_prefill, greedy, sample_topk  # noqa: F401
-from .scheduler import ContinuousBatcher, Request  # noqa: F401
+from .scheduler import (ContinuousBatcher, ConvRequest, Request,  # noqa: F401
+                        SlotPool, SpatialBucketer)
+
+__all__ = ["make_serve_step", "make_prefill", "greedy", "sample_topk",
+           "ContinuousBatcher", "Request", "ConvRequest", "SpatialBucketer",
+           "SlotPool", "ConvServer"]
+
+
+def __getattr__(name):
+    if name == "ConvServer":
+        from repro.launch.conv_serve import ConvServer
+        return ConvServer
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

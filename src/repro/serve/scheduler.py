@@ -7,18 +7,29 @@ tracking lets sequences of different lengths share one batched serve_step.
 Single-token-at-a-time slot prefill keeps the implementation exact w.r.t.
 the decode path; a chunked prefill (throughput mode) is a documented
 extension point.
+
+The conv serving tier (DESIGN.md §15) reuses the same slot vocabulary for
+image requests: :class:`ConvRequest` carries an arbitrary-size image,
+:class:`SpatialBucketer` maps it onto one of a small set of
+dispatch-table-tuned ``(H, W)`` buckets (pad on entry, slice on exit), and
+:class:`SlotPool` does the per-bucket slot acquire/release + occupancy
+accounting that ``launch.conv_serve.ConvServer`` drives.  Conv inference is
+single-shot (no iterative decode), so a slot's lifetime is one batch step —
+the "continuous" part is that admission refills freed slots from the queue
+every step instead of waiting for a full batch.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Request", "ContinuousBatcher"]
+__all__ = ["Request", "ContinuousBatcher", "ConvRequest", "SpatialBucketer",
+           "SlotPool"]
 
 
 @dataclasses.dataclass
@@ -109,6 +120,132 @@ class ContinuousBatcher:
             self.step()
             steps += 1
         return self.completed
+
+
+# ---------------------------------------------------------------------------
+# Conv serving: ragged image requests onto bucketed blocked-layout batches
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ConvRequest:
+    """One image-classification request through the conv serving tier.
+
+    ``image`` is host-side NHWC-without-N (``[H, W, C]``) of arbitrary
+    spatial size; the bucketer pads it up to its bucket on admission.  The
+    server stamps ``t_submit``/``t_done`` with its injected clock (tests
+    pass a deterministic counter; the bench passes ``time.monotonic``), so
+    ``latency`` is queue wait + batched service time.
+    """
+
+    rid: int
+    image: np.ndarray                    # [H, W, C] float
+    t_submit: float = 0.0                # stamped by ConvServer.submit
+    t_done: float = 0.0                  # stamped on completion
+    bucket: Optional[Tuple[int, int]] = None
+    logits: Optional[np.ndarray] = None  # [n_classes] on completion
+    done: bool = False
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class SpatialBucketer:
+    """Map arbitrary ``(H, W)`` requests onto a small tuned bucket set.
+
+    Buckets are the ``(H, W)`` shapes the dispatch table was tuned for —
+    one compiled executable and one measured routing decision per bucket,
+    instead of a fresh trace per distinct request shape.  ``bucket_for``
+    picks the smallest bucket (by padded area) that contains the image;
+    ``pad``/``crop`` are the exact inverse pair the round-trip test pins:
+    zero-pad bottom/right on entry, slice the same extents off on exit.
+    (For the classifier models the exit slice is at the *batch* level —
+    GAP + head already collapsed the spatial dims — but feature-map
+    serving crops spatially, so the inverse lives here.)
+    """
+
+    def __init__(self, buckets: Sequence[Tuple[int, int]]):
+        if not buckets:
+            raise ValueError("need at least one (H, W) bucket")
+        self.buckets = tuple(sorted((int(h), int(w)) for h, w in buckets))
+
+    def bucket_for(self, h: int, w: int) -> Tuple[int, int]:
+        fits = [(bh * bw, (bh, bw)) for bh, bw in self.buckets
+                if bh >= h and bw >= w]
+        if not fits:
+            raise ValueError(f"image ({h}, {w}) exceeds every bucket "
+                             f"{list(self.buckets)}")
+        return min(fits)[1]
+
+    def pad(self, image: np.ndarray,
+            bucket: Optional[Tuple[int, int]] = None) -> np.ndarray:
+        """Zero-pad ``[H, W, C]`` bottom/right up to its bucket."""
+        h, w = image.shape[:2]
+        bh, bw = bucket if bucket is not None else self.bucket_for(h, w)
+        pad = [(0, bh - h), (0, bw - w)] + [(0, 0)] * (image.ndim - 2)
+        return np.pad(image, pad)
+
+    @staticmethod
+    def crop(padded: np.ndarray, h: int, w: int) -> np.ndarray:
+        """The inverse of :meth:`pad`: slice the original extents back."""
+        return padded[:h, :w]
+
+
+class SlotPool:
+    """Per-bucket slot accounting + achieved-occupancy bookkeeping.
+
+    Each bucket owns ``batch`` slots (the compiled executable's batch dim).
+    ``admit`` moves queued requests into free slots; ``drain`` empties the
+    filled slots for one batch step and records ``filled / batch`` — the
+    occupancy sample the bench reports (mean over executed steps; padding
+    rows the data axis needs are *not* occupancy, which is the point of
+    measuring it).
+    """
+
+    def __init__(self, buckets: Sequence[Tuple[int, int]], batch: int):
+        self.batch = int(batch)
+        self.queues: Dict[Tuple[int, int], deque] = {
+            b: deque() for b in buckets}
+        self.slots: Dict[Tuple[int, int], List[ConvRequest]] = {
+            b: [] for b in buckets}
+        self._occ_samples: Dict[Tuple[int, int], List[float]] = {
+            b: [] for b in buckets}
+
+    def enqueue(self, req: ConvRequest):
+        self.queues[req.bucket].append(req)
+
+    def admit(self) -> int:
+        """Fill free slots from each bucket's queue; -> requests admitted."""
+        moved = 0
+        for b, q in self.queues.items():
+            free = self.batch - len(self.slots[b])
+            for _ in range(min(free, len(q))):
+                self.slots[b].append(q.popleft())
+                moved += 1
+        return moved
+
+    def drain(self, bucket: Tuple[int, int]) -> List[ConvRequest]:
+        """Take the bucket's filled slots for one step (slots free here —
+        conv inference completes in one step) and record occupancy."""
+        batch = self.slots[bucket]
+        if batch:
+            self._occ_samples[bucket].append(len(batch) / self.batch)
+        self.slots[bucket] = []
+        return batch
+
+    @property
+    def pending(self) -> int:
+        return (sum(len(q) for q in self.queues.values())
+                + sum(len(s) for s in self.slots.values()))
+
+    def occupancy(self, bucket: Optional[Tuple[int, int]] = None) -> float:
+        """Mean achieved batch occupancy over executed steps (0 if none) —
+        pooled over every bucket, or for one bucket when given."""
+        samples = (self._occ_samples[bucket] if bucket is not None else
+                   [s for ss in self._occ_samples.values() for s in ss])
+        if not samples:
+            return 0.0
+        return float(np.mean(samples))
 
 
 def _zero_slot(cache, b: int):

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.context import ConvContext, resolve_context
 from repro.nn.conv import BlockedCNN
 from repro.nn.models import EncDec
 from .losses import cross_entropy
@@ -43,19 +44,33 @@ class TrainSettings:
                                      # to each layer's own policy field; a
                                      # concrete value overrides every layer
                                      # for the whole run
+    context: Optional[ConvContext] = None
+                                     # conv models: the unified execution
+                                     # context (core/context.py).  When set
+                                     # it wins field-by-field over the loose
+                                     # dispatch/impl/precision fields above,
+                                     # which are the deprecated spelling and
+                                     # fold into it via resolve_context
+
+    def conv_context(self) -> ConvContext:
+        """The settings' conv execution context: ``context`` merged with the
+        legacy loose fields (the one reader for the deprecation shim)."""
+        return resolve_context(self.context, dispatch=self.dispatch,
+                               impl=self.impl, precision=self.precision)
 
 
 def forward(model, params, batch: Dict[str, Any], *, train=True,
             remat="full", chunk=2048, unroll=False, return_hidden=False,
-            precision=None, dispatch=None, impl=None):
+            precision=None, dispatch=None, impl=None, context=None):
     """Uniform forward over model families."""
     if isinstance(model, BlockedCNN):
         # blocked-layout image classifier: NHWC batch in, class logits out;
-        # every conv (fwd AND bwd) routes through the dispatch subsystem
-        # (dispatch/impl pass straight down, DESIGN.md §12); precision sets
-        # the operand/residual dtypes (params stay f32)
-        return (model(params, batch["images"], dispatch=dispatch, impl=impl,
-                      precision=precision),
+        # every conv (fwd AND bwd) routes through the dispatch subsystem as
+        # one ConvContext (DESIGN.md §12/§15); the loose dispatch/impl/
+        # precision kwargs are the deprecated spelling and fold into it
+        ctx = resolve_context(context, dispatch=dispatch, impl=impl,
+                              precision=precision)
+        return (model(params, batch["images"], context=ctx),
                 jnp.zeros((), jnp.float32))
     if isinstance(model, EncDec):
         return model(params, batch["tokens"], batch["frames"], train=train,
@@ -73,9 +88,7 @@ def make_loss_fn(model, cfg: Optional[ModelConfig], settings: TrainSettings):
         # the model); cross_entropy over a singleton "sequence" axis
         def conv_loss_fn(params, batch):
             logits, aux = forward(model, params, batch, train=True,
-                                  precision=settings.precision,
-                                  dispatch=settings.dispatch,
-                                  impl=settings.impl)
+                                  context=settings.conv_context())
             # the single up-cast of the compute dtype: CE runs in f32
             logits = logits.astype(jnp.float32)
             loss, metrics = cross_entropy(
