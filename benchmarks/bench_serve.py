@@ -18,7 +18,20 @@ kernel actually resolves at trace time.  ``check_regression
 --dispatch-table`` cross-references these rows for coverage, so a serve
 bucket whose routing silently degraded is visible in the gate.
 
+``--faults`` runs the seeded chaos trace instead (DESIGN.md §16): a
+deterministic ``FaultPlan`` injects transient kernel-launch failures into a
+fixed fraction of serve steps (plus occasional admission faults), every
+k-th request carries an already-expired deadline, and the queue bound is
+tightened so bursts shed.  Because the injection draws are stateless hashes
+and the queue evolution never reads the wall clock, the outcome counters
+(completed / shed / timed-out / retries / degraded steps) are bit-stable
+across machines — the ``faults`` section's ``*_count``/``*_rate`` fields
+gate *exactly* in ``check_regression``, while its degraded-mode p50/p99
+gate like any other ``*_us`` field.
+
 Runnable:  PYTHONPATH=src python -m benchmarks.bench_serve --smoke \
+               [--json BENCH_ci.json]
+           PYTHONPATH=src python -m benchmarks.bench_serve --smoke --faults \
                [--json BENCH_ci.json]
 (``--json`` merges into an existing report file — the CI job appends the
 serve section to fig_conv's output; the module sets the 8-host-device flag
@@ -52,6 +65,19 @@ def parse_args(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None,
                     help="write/merge the report into this JSON file")
+    ap.add_argument("--faults", action="store_true",
+                    help="run the seeded chaos trace: deterministic "
+                         "transient-fault injection + deadlines + a tight "
+                         "queue bound; emits the `faults` gate section")
+    ap.add_argument("--fault-rate", type=float, default=0.15,
+                    help="fraction of serve steps that draw a transient "
+                         "kernel-launch failure (chaos mode)")
+    ap.add_argument("--max-queue", type=int, default=6,
+                    help="per-bucket queue bound in chaos mode (tight, so "
+                         "bursts shed deterministically)")
+    ap.add_argument("--deadline-every", type=int, default=7,
+                    help="every k-th request carries an already-expired "
+                         "deadline (deterministic TIMED_OUT)")
     return ap.parse_args(argv)
 
 
@@ -102,6 +128,53 @@ def run_load(server, images, rng, burst: int):
             i += 1
         server.step()
     return server.completed
+
+
+def run_chaos_load(server, images, rng, burst: int, deadline_every: int):
+    """The chaos variant of :func:`run_load`: same burst admission, but
+    every ``deadline_every``-th request is submitted with an already-expired
+    deadline (``timeout=-1``) — it deterministically sweeps out TIMED_OUT on
+    the next step, independent of machine speed."""
+    from repro.serve import ConvRequest
+    i = 0
+    while i < len(images) or server.pool.pending:
+        k = int(rng.integers(1, 2 * burst)) if i < len(images) else 0
+        for img in images[i:i + k]:
+            timeout = -1.0 if i % deadline_every == deadline_every - 1 \
+                else None
+            server.submit(ConvRequest(rid=i, image=img), timeout=timeout)
+            i += 1
+        server.step()
+    return server.completed
+
+
+def faults_rows(server, n_requests: int, dtype_name: str = "f32"):
+    """-> the one ``faults`` gate row: degraded-mode latency + the
+    deterministic outcome counters.  ``*_count``/``*_rate`` fields gate
+    exactly (the chaos trace is bit-stable); ``*_us`` fields gate like any
+    other timing."""
+    import numpy as np
+    h = server.health()
+    # the acceptance invariant: every submission terminated in the lattice
+    assert h["ok"] + h["shed"] + h["timed_out"] == n_requests, h
+    assert h["pending"] == 0, h
+    lat = server.latencies() * 1e6
+    return [{
+        "layer": "serve.chaos",
+        "dtype": dtype_name,
+        "p50_us": float(np.percentile(lat, 50)),
+        "p99_us": float(np.percentile(lat, 99)),
+        "completed": h["ok"],
+        "shed_count": h["shed"],
+        "timed_out_count": h["timed_out"],
+        "retry_count": h["retries"],
+        "transient_fault_count": h["transient_faults"],
+        "degraded_step_count": h["degraded_steps"],
+        "admit_fault_count": h["admit_faults"],
+        "shed_rate": h["shed_rate"],
+        "steps": h["steps"],
+        "breakers": h["breakers"],
+    }]
 
 
 def serve_rows(server, dtype_name: str = "f32"):
@@ -162,19 +235,21 @@ def shard_dispatch_rows(model, mesh, buckets, batch: int, axis: str,
     return rows
 
 
-def merge_report(path: str, serve, dispatch):
-    """Write the serve section into ``path``, merging with an existing
-    report (the CI job appends to fig_conv's file): ``serve`` replaces,
-    serve ``dispatch`` rows append (fig_conv's own rows are keyed by
-    different layers, so the union is disjoint)."""
+def merge_report(path: str, sections: dict, dispatch=None):
+    """Write this bench's sections into ``path``, merging with an existing
+    report (the CI job appends to fig_conv's file): each named section
+    (``serve``, ``faults``) replaces its previous value; serve ``dispatch``
+    rows append (fig_conv's own rows are keyed by different layers, so the
+    union is disjoint)."""
     report = {}
     if os.path.exists(path):
         with open(path) as f:
             report = json.load(f)
-    report["serve"] = serve
-    existing = [r for r in report.get("dispatch", [])
-                if not r.get("layer", "").startswith("serve.")]
-    report["dispatch"] = existing + dispatch
+    report.update(sections)
+    if dispatch is not None:
+        existing = [r for r in report.get("dispatch", [])
+                    if not r.get("layer", "").startswith("serve.")]
+        report["dispatch"] = existing + dispatch
     with open(path, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {path}")
@@ -200,6 +275,37 @@ def main(argv=None) -> int:
     model_axis = "model" if m > 1 else None
 
     params = init_tree(model.specs(), jax.random.PRNGKey(0))
+
+    if args.faults:
+        from repro.core.errors import KernelLaunchError, TransientError
+        from repro.utils.faults import FaultPlan, FaultRule, fault_plan
+        server = ConvServer(model, params, mesh, CI_BUCKETS, batch,
+                            model_axis=model_axis, clock=time.monotonic,
+                            max_queue=args.max_queue, max_retries=2,
+                            backoff=0.0)
+        server.warmup()               # compiles outside the armed plan
+        plan = FaultPlan((
+            FaultRule(site="serve.step", error=KernelLaunchError,
+                      rate=args.fault_rate),
+            FaultRule(site="slots.admit", error=TransientError, rate=0.05),
+        ), seed=args.seed)
+        rng = np.random.default_rng(args.seed)
+        images = synth_trace(rng, args.requests, CI_BUCKETS,
+                             ci=model.convs[0].ci)
+        with fault_plan(plan):
+            run_chaos_load(server, images, rng, args.burst,
+                           args.deadline_every)
+        faults = faults_rows(server, args.requests)
+        print(f"== faults ==  mesh={dict(mesh.shape)} batch={batch} "
+              f"rate={args.fault_rate} seed={args.seed}")
+        for row in faults:
+            print("  " + " ".join(
+                f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in row.items()))
+        if args.json:
+            merge_report(args.json, {"faults": faults})
+        return 0
+
     server = ConvServer(model, params, mesh, CI_BUCKETS, batch,
                         model_axis=model_axis, clock=time.monotonic)
     server.warmup()
@@ -221,7 +327,7 @@ def main(argv=None) -> int:
     for row in dispatch:
         print("  " + " ".join(f"{k}={v}" for k, v in row.items()))
     if args.json:
-        merge_report(args.json, serve, dispatch)
+        merge_report(args.json, {"serve": serve}, dispatch)
     return 0
 
 

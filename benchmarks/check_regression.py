@@ -6,9 +6,13 @@ set, uploads the JSON as an artifact (the perf trajectory), and gates on
 this script: every timing in the candidate must stay within ``--threshold``
 (default 2x) of the checked-in ``BENCH_baseline.json``.
 
-Rows are keyed by ``(section, layer, dtype)``; only ``*_us`` wall-clock
-fields gate (ratio fields like ``direct_bwd_over_fwd`` are derived and
-noisy-by-division).  A baseline row missing from the candidate fails —
+Rows are keyed by ``(section, layer, dtype)``; ``*_us`` wall-clock fields
+gate by ratio+atol (ratio fields like ``direct_bwd_over_fwd`` are derived
+and noisy-by-division).  ``*_count``/``*_rate`` fields — the ``faults``
+section's chaos outcome counters — gate *exactly*: the fault-injection
+trace is seeded and wall-clock-independent, so any increase in shed /
+timed-out / degraded counts is a real behavior change, not runner noise.
+A baseline row missing from the candidate fails —
 silently dropping a shape from the bench would otherwise read as "no
 regressions".  Candidate-only rows are reported but don't gate (new shapes
 start accumulating trajectory before they have a baseline).
@@ -56,11 +60,23 @@ def compare(baseline: dict, candidate: dict, threshold: float,
             failures.append(f"{key}: row missing from candidate")
             continue
         for field, bval in brow.items():
-            if not field.endswith("_us") or not isinstance(bval, (int, float)):
+            if not isinstance(bval, (int, float)) \
+                    or isinstance(bval, bool):
+                continue
+            exact = field.endswith("_count") or field.endswith("_rate")
+            if not field.endswith("_us") and not exact:
                 continue
             cval = crow.get(field)
             if cval is None:
                 failures.append(f"{key}.{field}: missing from candidate")
+                continue
+            if exact:
+                # deterministic chaos counters: any increase is real
+                line = f"{key}.{field}: {bval:g} -> {cval:g}"
+                if cval > bval + 1e-9:
+                    failures.append(line + " (deterministic counter rose)")
+                elif cval < bval - 1e-9:
+                    notes.append(line + " (improved — reseed the baseline)")
                 continue
             ratio = cval / max(bval, 1e-9)
             line = (f"{key}.{field}: {bval:.1f}us -> {cval:.1f}us "
@@ -104,7 +120,9 @@ def check_dispatch_coverage(candidate: dict, entries: dict):
     covered = {(r.get("layer"), r.get("dtype", "f32"))
                for r in dispatch_rows}
     for section, rows in candidate.items():
-        if section == "dispatch":
+        # `faults` replays the serve buckets' routing under chaos — its
+        # synthetic `serve.chaos` layer carries no dispatch keys of its own
+        if section in ("dispatch", "faults"):
             continue
         for row in rows:
             pair = (row.get("layer"), row.get("dtype", "f32"))

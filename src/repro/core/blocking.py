@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 
 from .convspec import as_dilation
+from .errors import TransientError
 from .layout import choose_pencil, divisors, largest_divisor_leq
 from .precision import resolve_precision
 
@@ -44,12 +45,15 @@ __all__ = [
 ]
 
 
-class VmemMisfitError(ValueError):
+class VmemMisfitError(TransientError, ValueError):
     """A blocking model could not satisfy its VMEM inequality at the smallest
     admissible tile.  A distinct type (still a ``ValueError`` — existing
     callers and tests keep working) so the kernel router can tell a genuine
     capacity misfit — which the streamed halo-DMA variant may still serve —
-    from an invalid-argument error, which must always propagate."""
+    from an invalid-argument error, which must always propagate.  It also
+    sits in the ``core.errors`` transient branch (DESIGN.md §16): a misfit
+    is a capacity condition with a bit-identical degrade path, not a bug.
+    """
 
 
 def _policy_itemsizes(precision, in_dtype_bytes: int,

@@ -19,11 +19,12 @@ hashable it rides ``functools.lru_cache`` (the sharded-serving forward
 caches on the single context object), ``jax.jit`` static arguments and
 dict keys without unpacking.
 
-The legacy kwargs (``dispatch=``, ``impl=``, ``interpret=``, ``stream=``,
-``precision=``) survive one more PR as deprecation shims:
-:func:`resolve_context` merges them into a context — an explicit
-``context=`` wins field-by-field — so existing call sites keep working
-while new code passes one object.
+The legacy loose kwargs (``dispatch=``, ``impl=``, ``interpret=``,
+``stream=``, ``precision=``) got exactly one release of deprecation shim
+(the ISSUE 9 contract) and are now gone: every conv entry point takes
+``context=`` and nothing else, and a stale call site fails with a
+``TypeError`` that names :class:`ConvContext` and shows the migration
+(:func:`reject_legacy_kwargs` is the shared raiser).
 """
 from __future__ import annotations
 
@@ -34,7 +35,7 @@ from .blocking import MachineModel
 from .dispatch import ConvDispatcher, Impl, KernelRoute
 from .precision import Precision, resolve_precision
 
-__all__ = ["ConvContext", "resolve_context"]
+__all__ = ["ConvContext", "as_context", "reject_legacy_kwargs"]
 
 # stream accepts the legacy bool knob or a resolved per-direction route
 Stream = Union[bool, KernelRoute, None]
@@ -106,32 +107,37 @@ class ConvContext:
 
 
 # the do-nothing context every defaulted call site resolves to (one shared
-# instance so `resolve_context()` with no arguments allocates nothing)
+# instance so `as_context(None)` allocates nothing)
 _EMPTY = ConvContext()
 
 
-def resolve_context(context: Optional[ConvContext] = None, *,
-                    dispatch: Optional[ConvDispatcher] = None,
-                    impl: Union[Impl, str, None] = None,
-                    interpret: Optional[bool] = None,
-                    machine: Optional[MachineModel] = None,
-                    stream: Stream = None,
-                    precision: Union[Precision, str, None] = None
-                    ) -> ConvContext:
-    """Merge an explicit ``context=`` with the legacy loose kwargs.
+def as_context(context: Optional[ConvContext]) -> ConvContext:
+    """``None`` -> the shared do-nothing context; a context passes through.
 
-    The migration shim (deprecated spelling, removed next PR): legacy
-    kwargs fill only the fields the context leaves ``None``, so
-    ``context=`` wins field-by-field and a call passing *only* legacy
-    kwargs builds the equivalent context — the two spellings are
-    interchangeable for one release.
+    The one defaulting rule for every conv entry point — a non-context
+    value (say a stray string) fails here, close to the call site, instead
+    of deep inside a kernel wrapper.
     """
     if context is None:
-        context = _EMPTY
-    return context.override(
-        dispatch=dispatch if context.dispatch is None else None,
-        impl=impl if context.impl is None else None,
-        interpret=interpret if context.interpret is None else None,
-        machine=machine if context.machine is None else None,
-        stream=stream if context.stream is None else None,
-        precision=precision if context.precision is None else None)
+        return _EMPTY
+    if not isinstance(context, ConvContext):
+        raise TypeError(
+            f"context= expects a ConvContext, got {type(context).__name__}")
+    return context
+
+
+def reject_legacy_kwargs(where: str, kwargs: dict) -> None:
+    """Raise the one migration ``TypeError`` for removed loose conv kwargs.
+
+    Entry points accept ``**legacy`` and route it here, so a pre-ISSUE-10
+    call site (``impl=``/``dispatch=``/``interpret=``/``precision=``/
+    ``stream=``) fails with the fix in the message rather than a bare
+    "unexpected keyword argument".
+    """
+    if kwargs:
+        names = ", ".join(sorted(kwargs))
+        raise TypeError(
+            f"{where}: the loose conv kwargs are gone ({names}); pass the "
+            f"one execution-context object instead — "
+            f"context=ConvContext({names.replace(', ', '=..., ')}=...) "
+            "(repro.core.context.ConvContext)")

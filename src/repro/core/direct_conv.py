@@ -199,7 +199,15 @@ def _direct_conv_blocked_jit(x: jnp.ndarray, w: jnp.ndarray, stride: int,
     if residual is not None:
         acc = acc + residual.astype(jnp.float32)
     if gap:
-        pooled = jnp.mean(acc, axis=(2, 3))
+        # mirror the fused kernel's pooling semantics exactly (gap_update):
+        # pool the *written* values (downcast to the output dtype first,
+        # like the kernel re-reading what epilogue_flush stored), sum flat
+        # per channel pencil in f32, divide by the full spatial extent at
+        # the end — this is what keeps jnp in EXACT_IMPLS for gap-fused
+        # convs, which the serving tier's degraded path relies on
+        out = acc.astype(x.dtype)
+        flat = out.astype(jnp.float32).reshape(n, coblk, ho * wo, cob)
+        pooled = jnp.sum(flat, axis=2) / (ho * wo)
         return pooled.reshape(n, coblk * cob).astype(x.dtype)
     return acc.astype(x.dtype)
 

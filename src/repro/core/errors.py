@@ -1,0 +1,80 @@
+"""Error taxonomy for the conv stack (DESIGN.md §16).
+
+One root, two branches, one question: *is retrying sane?*
+
+  ``ConvError``
+  ├── ``TransientError``      retry / degrade — the condition can clear
+  │   ├── ``KernelLaunchError``      a Pallas launch failed (or a fault
+  │   │                              plan said it did); the jnp path is a
+  │   │                              bit-identical escape hatch
+  │   ├── ``DispatchTableError``     the checked-in table was corrupt or
+  │   │                              truncated; the analytical prior still
+  │   │                              routes every shape
+  │   ├── ``DeadlineExceededError``  a request or step blew its deadline;
+  │   │                              the work itself is fine
+  │   └── ``VmemMisfitError``        (defined in ``core.blocking``; joins
+  │                                  the branch via multiple inheritance
+  │                                  so existing ``except ValueError``
+  │                                  callers keep working)
+  └── ``FatalError``           crash loudly — wrong shapes, wrong schema,
+                               programmer error; retrying repeats the bug
+
+Before this module every layer decided retry-vs-crash ad hoc (the kernel
+wrappers probed ``VmemMisfitError``, the dispatcher raised bare
+``ValueError``, the serving loop died on any exception).  Now the serving
+tier asks :func:`is_transient` and nothing else.
+
+This module imports nothing from the repo (``blocking`` imports *it*), so
+it is safe at the very bottom of the dependency graph.
+"""
+from __future__ import annotations
+
+__all__ = ["ConvError", "TransientError", "FatalError", "KernelLaunchError",
+           "DispatchTableError", "DeadlineExceededError", "classify",
+           "is_transient"]
+
+
+class ConvError(Exception):
+    """Root of the conv-stack taxonomy."""
+
+
+class TransientError(ConvError):
+    """The condition can clear: retry with backoff, or degrade to a
+    bit-identical fallback (the jnp path), but do not crash the loop."""
+
+
+class FatalError(ConvError):
+    """Programmer/config error: retrying repeats the bug — crash loudly."""
+
+
+class KernelLaunchError(TransientError):
+    """A Pallas kernel launch failed (site ``kernel.launch``)."""
+
+
+class DispatchTableError(TransientError):
+    """The measured dispatch table could not be loaded/parsed; routing
+    degrades to the analytical prior (site ``dispatch.resolve``)."""
+
+
+class DeadlineExceededError(TransientError):
+    """A per-request deadline or a rolling step deadline was breached."""
+
+
+def classify(exc: BaseException) -> type:
+    """-> the taxonomy branch for an arbitrary exception.
+
+    Taxonomy members classify as themselves; everything else — including
+    the bare ``ValueError``/``TypeError`` the lower layers raise for
+    genuinely wrong inputs — is :class:`FatalError`.  (``VmemMisfitError``
+    lands in the transient branch because it inherits ``TransientError``.)
+    """
+    if isinstance(exc, TransientError):
+        return TransientError
+    if isinstance(exc, ConvError):
+        return FatalError
+    return FatalError
+
+
+def is_transient(exc: BaseException) -> bool:
+    """True iff retrying/degrading is the sane response to ``exc``."""
+    return isinstance(exc, TransientError)

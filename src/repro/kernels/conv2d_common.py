@@ -51,6 +51,7 @@ from typing import Callable, Iterator, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.direct_conv import apply_activation
@@ -58,7 +59,7 @@ from repro.core.direct_conv import apply_activation
 __all__ = [
     "halo_dims", "halo_window_spec", "weight_spec", "tile_spec", "bias_spec",
     "gap_spec", "tap_windows", "first_step", "last_step", "epilogue_flush",
-    "gap_update", "cotangent_prologue",
+    "gap_update", "tree_sum", "cotangent_prologue",
 ]
 
 # A map from the kernel's grid indices to the operand's leading block
@@ -226,6 +227,35 @@ def epilogue_flush(o_ref, acc: jnp.ndarray, hob: int, wob: int,
     return tile
 
 
+def tree_sum(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Balanced-tree sum along ``axis`` with a *fixed* association.
+
+    ``jnp.sum`` lowers to an XLA reduce whose association is a codegen
+    choice: the same reduce over the same values rounds differently
+    depending on the fusion context around it (measured: the fused-gap
+    kernel's in-body reduce vs the identical expression jitted standalone
+    differ by 1 ulp).  This helper spends that freedom up front — an
+    explicit halving tree of elementwise adds, each exact-rounded IEEE —
+    so the result bits are a function of the values alone, in any program.
+    ``gap_update`` sums tiles with it and the jnp impl replays the same
+    tree (``nn.conv``), which is what keeps gap-fused convs inside
+    ``EXACT_IMPLS`` (the serving tier's degraded path owes bit-identical
+    logits — DESIGN.md §16).  Odd extents carry a zero pad; ``x + 0.0``
+    is bit-exact for every finite value (only ``-0.0`` renormalizes).
+    """
+    while x.shape[axis] > 1:
+        m = x.shape[axis]
+        if m % 2:
+            pad = [(0, 0)] * x.ndim
+            pad[axis] = (0, 1)
+            x = jnp.pad(x, pad)
+            m += 1
+        lo = jax.lax.slice_in_dim(x, 0, m // 2, axis=axis)
+        hi = jax.lax.slice_in_dim(x, m // 2, m, axis=axis)
+        x = lo + hi
+    return jnp.squeeze(x, axis=axis)
+
+
 def gap_update(g_ref, gacc_ref, tile: jnp.ndarray, hw: int,
                is_first, is_last) -> None:
     """Fold one flushed output tile into the fused global-average-pool.
@@ -234,23 +264,33 @@ def gap_update(g_ref, gacc_ref, tile: jnp.ndarray, hw: int,
     pooled result must see the written values, like the two-pass reference
     that re-reads the map); its spatial sum accumulates in the persistent
     ``[1, cb]`` f32 scratch ``gacc_ref`` across the spatial tiles, and
-    after the last tile the pooled pencil is divided by the *full* spatial
+    after the last tile the pooled pencil is scaled by the *full* spatial
     extent ``hw`` and written once to ``g_ref``.  Partial sums stay f32
     for the same reason the matmul accumulator does: per-tile rounding of
     a bf16 running mean would accumulate across tiles (DESIGN.md §14).
+
+    The mean multiplies by a trace-time f32 reciprocal instead of
+    dividing: a literal ``/ hw`` is rewritten to a reciprocal-multiply in
+    some fusion contexts but kept a true divide in others (measured 1-ulp
+    splits between the fused kernel and the identical expression jitted
+    standalone), while an explicit multiply survives codegen bit-exactly —
+    same reasoning as ``tree_sum``, and the jnp impl replays the same
+    constant (``EXACT_IMPLS``, DESIGN.md §16).
 
     ``is_first``/``is_last`` are the caller's spatial-tile-axis guards
     (``first_step``/``last_step`` over the tile axes), passed in as values:
     this helper runs inside the flush's ``pl.when`` and ``pl.program_id``
     may not be issued inside a conditional body.
     """
-    part = jnp.sum(tile.astype(jnp.float32).reshape(-1, tile.shape[-1]),
-                   axis=0, keepdims=True)                       # [1, cb]
+    part = tree_sum(tile.astype(jnp.float32).reshape(-1, tile.shape[-1]),
+                    axis=0)[None, :]                            # [1, cb]
     gacc_ref[...] = jnp.where(is_first, part, gacc_ref[...] + part)
+
+    inv_hw = np.float32(1.0) / np.float32(hw)
 
     @pl.when(is_last)
     def _pool():
-        g_ref[0] = (gacc_ref[...] / hw).astype(g_ref.dtype)
+        g_ref[0] = (gacc_ref[...] * inv_hw).astype(g_ref.dtype)
 
 
 def cotangent_prologue(g: jnp.ndarray, z, activation: Optional[str],

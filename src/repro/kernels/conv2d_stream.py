@@ -56,6 +56,7 @@ from repro.core.blocking import (MachineModel, choose_stream_blocking,
                                  choose_stream_dgrad_blocking,
                                  choose_stream_wgrad_blocking, dgrad_extents)
 from repro.core.direct_conv import pad_blocked
+from repro.utils.faults import inject as _inject_fault
 from .conv2d_common import (bias_spec, epilogue_flush, first_step, gap_spec,
                             gap_update, last_step, tap_windows, tile_spec)
 
@@ -189,6 +190,7 @@ def stream_forward(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
     manual DMA ring is untouched.  With ``gap`` the return is the
     ``(map, pooled)`` pair, matching ``_forward_windowed``.
     """
+    _inject_fault("kernel.launch")      # fires at trace time (jit caller)
     n, ciblk, hi, wi_, cib = xp.shape
     coblk, ciblk2, hf, wf, cib2, cob = w.shape
     assert (ciblk, cib) == (ciblk2, cib2), (xp.shape, w.shape)
@@ -256,6 +258,7 @@ def stream_dgrad(dy: jnp.ndarray, w: jnp.ndarray, stride: int,
     Returns the gradient w.r.t. the padded input at the touched extents
     ``E = (out-1)*stride + filter``; the custom VJP pads/crops.
     """
+    _inject_fault("kernel.launch")
     n, coblk, ho, wo, cob = dy.shape
     coblk2, ciblk, hf, wf, cib, cob2 = w.shape
     assert (coblk, cob) == (coblk2, cob2), (dy.shape, w.shape)
@@ -365,6 +368,7 @@ def stream_wgrad(xp: jnp.ndarray, dy: jnp.ndarray, hf: int, wf: int,
     round-trip anyway); the requested ``out_dtype`` is applied outside the
     kernel, costing zero VMEM.
     """
+    _inject_fault("kernel.launch")
     n, ciblk, hi, wi_, cib = xp.shape
     n2, coblk, ho, wo, cob = dy.shape
     assert n == n2, (xp.shape, dy.shape)

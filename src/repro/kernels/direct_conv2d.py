@@ -83,6 +83,7 @@ from repro.core.convspec import ConvSpec
 from repro.core.dispatch import KernelRoute, route_pallas, stream_flag
 from repro.core.direct_conv import apply_activation, pad_blocked
 from repro.core.precision import F32, Precision, resolve_precision
+from repro.utils.faults import inject as _inject_fault
 from .conv2d_common import (bias_spec, cotangent_prologue, epilogue_flush,
                             first_step, gap_spec, gap_update, halo_dims,
                             halo_window_spec, last_step, tap_windows,
@@ -256,6 +257,7 @@ def _forward_impl(xp: jnp.ndarray, w: jnp.ndarray, bias, stride: int,
     hard-raise, served.  The streamed family is dense-only: grouped or
     dilated geometry pins the window path (and rejects a forced
     ``stream=True``)."""
+    _inject_fault("kernel.launch")      # fires at trace time (jit caller)
     flag = _resolve_stream(stream, hso, "fwd")
     dense = groups == 1 and tuple(dilation) == (1, 1)
     if flag and not dense:
@@ -408,6 +410,7 @@ def direct_conv2d_dgrad_pallas(dy: jnp.ndarray, w: jnp.ndarray,
     shape).  The streamed route stays unfused — the prologue is applied
     outside before the ring launch.
     """
+    _inject_fault("kernel.launch")
     flag = _resolve_stream(stream, hso, "dgrad")
     dense = groups == 1 and tuple(dilation) == (1, 1)
     if flag and not dense:
@@ -547,6 +550,7 @@ def direct_conv2d_wgrad_pallas(xp: jnp.ndarray, dy: jnp.ndarray,
     ``db`` in f32 ``[Co/Cob, Cob]`` pencils.  The streamed route stays
     unfused: dz is formed outside and db summed by XLA.
     """
+    _inject_fault("kernel.launch")
     flag = _resolve_stream(stream, hso, "wgrad")
     dense = groups == 1 and tuple(dilation) == (1, 1)
     if flag and not dense:

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import layout as L
 from repro.core.blocking import TPU_V5E
-from repro.core.context import ConvContext, resolve_context
+from repro.core.context import ConvContext, as_context, reject_legacy_kwargs
 from repro.core.conv_baselines import (Padding, conv_im2col, conv_lax)
 from repro.core.direct_conv import (apply_activation, bias_to_blocked,
                                     direct_conv_nhwc,
@@ -43,8 +43,7 @@ def direct_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
                   bias: Optional[jnp.ndarray] = None,
                   activation: Optional[str] = None,
                   context: Optional[ConvContext] = None,
-                  interpret: Optional[bool] = None,
-                  dispatch=None, impl=None) -> jnp.ndarray:
+                  **legacy) -> jnp.ndarray:
     """Direct convolution, NHWC/HWIO interface, zero memory overhead inside.
 
     x: [N, Hi, Wi, Ci]; w: [Hf, Wf, Ci, Co]; bias: [Co] -> [N, Ho, Wo, Co]
@@ -54,13 +53,13 @@ def direct_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
     Differentiable on every path (the Pallas kernels carry a custom VJP).
 
     ``context`` (a :class:`ConvContext`) routes through the dispatch
-    subsystem: a forced ``impl`` pins one candidate ("window"/"stream"/
-    "im2col"/"lax"/"jnp"), otherwise the dispatcher resolves the key
-    through its table and prior.  The loose ``dispatch=``/``impl=``/
-    ``interpret=`` kwargs are the deprecated spelling of the same fields.
+    subsystem: a forced ``context.impl`` pins one candidate ("window"/
+    "stream"/"im2col"/"lax"/"jnp"), otherwise the dispatcher resolves the
+    key through its table and prior.  (The loose kwargs are gone; stale
+    call sites raise the migration ``TypeError`` naming ``ConvContext``.)
     """
-    ctx = resolve_context(context, dispatch=dispatch, impl=impl,
-                          interpret=interpret)
+    reject_legacy_kwargs("direct_conv2d", legacy)
+    ctx = as_context(context)
     impl, interpret = ctx.impl, ctx.interpret
     if impl is not None and Impl(impl) is Impl.JNP:
         return direct_conv_nhwc(x, w, stride, padding, bias, activation)

@@ -32,6 +32,7 @@ occupancy (``benchmarks/bench_serve.py`` drives it under synthetic load).
 from __future__ import annotations
 
 import dataclasses
+import enum
 import functools
 import time
 from typing import Optional, Sequence, Tuple
@@ -41,14 +42,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.context import ConvContext, resolve_context
+from repro.core.context import ConvContext, as_context, reject_legacy_kwargs
+from repro.core.errors import TransientError
 from repro.core.layout import nhwc_to_blocked
 from repro.nn.conv import BlockedConv2D
-from repro.serve.scheduler import ConvRequest, SlotPool, SpatialBucketer
+from repro.serve.scheduler import (ConvRequest, Outcome, SlotPool,
+                                   SpatialBucketer)
 from repro.utils.compat import shard_map
+from repro.utils.faults import inject as _inject_fault
 
 __all__ = ["make_sharded_cnn_forward", "sharded_cnn_predict",
-           "co_shard_convs", "ConvServer"]
+           "co_shard_convs", "BreakerState", "ConvServer"]
 
 
 def co_shard_convs(model, m: int):
@@ -91,8 +95,7 @@ def co_shard_convs(model, m: int):
 def make_sharded_cnn_forward(model, mesh, axis: str = "data", *,
                              model_axis: Optional[str] = None,
                              context: Optional[ConvContext] = None,
-                             interpret: Optional[bool] = None,
-                             dispatch=None, impl=None):
+                             **legacy):
     """-> jitted ``f(params, x_nhwc) -> logits`` over a 1- or 2-axis mesh.
 
     ``axis`` shards the batch (params replicated along it); ``model_axis``
@@ -111,17 +114,15 @@ def make_sharded_cnn_forward(model, mesh, axis: str = "data", *,
     happens at trace time, so the decision is baked into the compiled
     executable — re-tune, re-make to pick up new winners.
 
-    ``context`` is the one execution-context object (``ConvContext``); the
-    loose ``dispatch=``/``impl=``/``interpret=`` kwargs are the deprecated
-    spelling and fold into it before the cache, so both spellings of the
-    same context share one jitted function.  Memoized on
-    ``(model, mesh, axis, model_axis, context)`` — all frozen/hashable (a
-    ``ConvDispatcher`` hashes by identity) — so a serving loop calling
-    this per batch reuses one jitted function and hits the compile cache
-    instead of retracing every request.
+    ``context`` is the one execution-context object (``ConvContext``) —
+    the only spelling; the old loose kwargs raise the migration TypeError.
+    Memoized on ``(model, mesh, axis, model_axis, context)`` — all
+    frozen/hashable (a ``ConvDispatcher`` hashes by identity) — so a
+    serving loop calling this per batch reuses one jitted function and
+    hits the compile cache instead of retracing every request.
     """
-    ctx = resolve_context(context, dispatch=dispatch, impl=impl,
-                          interpret=interpret)
+    reject_legacy_kwargs("make_sharded_cnn_forward", legacy)
+    ctx = as_context(context)
     return _make_sharded_cnn_forward(model, mesh, axis, model_axis, ctx)
 
 
@@ -164,15 +165,14 @@ def _make_sharded_cnn_forward(model, mesh, axis: str,
 def sharded_cnn_predict(model, params, x_nhwc, mesh, axis: str = "data", *,
                         model_axis: Optional[str] = None,
                         context: Optional[ConvContext] = None,
-                        interpret: Optional[bool] = None,
-                        dispatch=None, impl=None):
+                        **legacy):
     """Serve one (possibly ragged) batch: pad N up to a multiple of the data
     axis, run the sharded forward, slice the padding back off.  Degenerate
     tiny batches — where the zero padding would outnumber the real rows
     (``pad >= n``) — route to the single-device forward instead of burning
     most of the mesh on computing zeros."""
-    ctx = resolve_context(context, dispatch=dispatch, impl=impl,
-                          interpret=interpret)
+    reject_legacy_kwargs("sharded_cnn_predict", legacy)
+    ctx = as_context(context)
     n = x_nhwc.shape[0]
     width = mesh.shape[axis]
     pad = (-n) % width
@@ -187,6 +187,51 @@ def sharded_cnn_predict(model, params, x_nhwc, mesh, axis: str = "data", *,
     return logits[:n]
 
 
+class BreakerState(str, enum.Enum):
+    """Per-bucket circuit-breaker states (DESIGN.md §16).
+
+    CLOSED -> primary (Pallas-routed) executable; OPEN -> the bucket is
+    demoted to the jnp executable (bit-identical — ``EXACT_IMPLS``);
+    HALF_OPEN -> the cooldown elapsed and the next step re-probes the
+    primary once (success closes, failure re-opens).
+    """
+
+    CLOSED = "closed"
+    OPEN = "open"
+    HALF_OPEN = "half_open"
+
+
+class _Breaker:
+    """One bucket's breaker: counts *consecutive exhausted steps* (a step
+    whose primary attempt burned every retry), opens at ``threshold``,
+    re-probes after ``cooldown`` engine steps."""
+
+    def __init__(self, threshold: int, cooldown: int):
+        self.threshold, self.cooldown = int(threshold), int(cooldown)
+        self.state = BreakerState.CLOSED
+        self.failures = 0                # consecutive exhausted steps
+        self.opened_at = -1              # step index of the last open
+
+    def allow_primary(self, step_idx: int) -> bool:
+        if self.state is BreakerState.CLOSED:
+            return True
+        if (self.state is BreakerState.OPEN
+                and step_idx - self.opened_at >= self.cooldown):
+            self.state = BreakerState.HALF_OPEN
+        return self.state is BreakerState.HALF_OPEN
+
+    def record_success(self):
+        self.state = BreakerState.CLOSED
+        self.failures = 0
+
+    def record_exhausted(self, step_idx: int):
+        self.failures += 1
+        if (self.state is BreakerState.HALF_OPEN
+                or self.failures >= self.threshold):
+            self.state = BreakerState.OPEN
+            self.opened_at = step_idx
+
+
 class ConvServer:
     """Continuous-batching front door over the (data x model) mesh.
 
@@ -199,49 +244,160 @@ class ConvServer:
     ``clock`` is injectable: the bench passes wall time
     (``time.monotonic``) so p50/p99 are real latencies; tests pass a
     deterministic counter so the slot/occupancy accounting is exact.
+
+    Fault tolerance (DESIGN.md §16) — every submitted request terminates
+    in the :class:`~repro.serve.scheduler.Outcome` lattice:
+
+      * **deadlines** — ``submit(req, timeout=...)`` stamps an absolute
+        deadline on the injected clock; each step sweeps expired *queued*
+        requests out as ``TIMED_OUT`` before admission, so a stale request
+        never occupies a slot.
+      * **backpressure** — ``max_queue`` bounds each bucket's queue;
+        a full queue sheds the submission as ``REJECTED`` immediately
+        (the caller learns synchronously, no silent buildup).
+      * **retries** — a ``TransientError`` from a step (fault injection,
+        ``VmemMisfitError``, a real launch failure) retries up to
+        ``max_retries`` times with capped exponential backoff on the
+        injectable ``sleep``.
+      * **degradation** — a step that exhausts its retries runs the jnp
+        executable instead: same context with ``impl="jnp"``, which is in
+        ``EXACT_IMPLS`` — bit-identical logits, never injected (the
+        escape hatch must not fault).  A per-bucket circuit breaker counts
+        consecutive exhausted steps, opens at ``breaker_threshold`` (the
+        bucket then skips the primary entirely), and half-opens after
+        ``breaker_cooldown`` steps to re-probe.
+      * **observability** — :meth:`health` snapshots queue depth, shed
+        rate, outcome counters, retries, per-bucket occupancy and breaker
+        state.
+
+    ``FatalError``s (and any non-transient exception) still propagate:
+    retrying a programmer error repeats it.
     """
 
     def __init__(self, model, params, mesh,
                  buckets: Sequence[Tuple[int, int]], batch: int, *,
                  axis: str = "data", model_axis: Optional[str] = None,
                  context: Optional[ConvContext] = None,
-                 clock=time.monotonic):
+                 clock=time.monotonic,
+                 max_queue: Optional[int] = None,
+                 max_retries: int = 2,
+                 backoff: float = 0.0, max_backoff: float = 0.05,
+                 breaker_threshold: int = 3, breaker_cooldown: int = 8,
+                 sleep=time.sleep):
         if batch % mesh.shape[axis]:
             raise ValueError(
                 f"server batch {batch} must be divisible by the data axis "
                 f"width {mesh.shape[axis]}")
         self.model, self.params, self.mesh = model, params, mesh
         self.axis, self.model_axis = axis, model_axis
-        self.context = context if context is not None else ConvContext()
+        self.context = as_context(context)
         self.batch = int(batch)
         self.bucketer = SpatialBucketer(buckets)
-        self.pool = SlotPool(self.bucketer.buckets, self.batch)
+        self.pool = SlotPool(self.bucketer.buckets, self.batch,
+                             max_queue=max_queue)
         self.clock = clock
         self.completed: list = []
+        self.max_retries = int(max_retries)
+        self.backoff, self.max_backoff = float(backoff), float(max_backoff)
+        self._sleep = sleep
+        self._step_idx = 0
+        self._breakers = {b: _Breaker(breaker_threshold, breaker_cooldown)
+                          for b in self.bucketer.buckets}
+        self._counters = {
+            "submitted": 0, "ok": 0, "shed": 0, "timed_out": 0,
+            "retries": 0, "transient_faults": 0, "degraded_steps": 0,
+            "admit_faults": 0,
+        }
         self._fwd = make_sharded_cnn_forward(
             model, mesh, axis, model_axis=model_axis, context=self.context)
+        # the degraded executable: identical context demoted to the jnp
+        # impl — EXACT_IMPLS membership makes it bit-identical to the
+        # Pallas routes, which is what licenses silent demotion
+        self._fwd_jnp = make_sharded_cnn_forward(
+            model, mesh, axis, model_axis=model_axis,
+            context=dataclasses.replace(self.context, impl="jnp"))
 
     def warmup(self):
         """Trace + compile every bucket's executable on zero batches, so the
         first real request's latency is service time, not compile time (the
-        bench calls this before starting its trace)."""
+        bench calls this before starting its trace).  Warms the degraded
+        (jnp) executable too — a breaker trip must not pay a compile."""
         ci = self.model.convs[0].ci
         for bh, bw in self.bucketer.buckets:
             x = np.zeros((self.batch, bh, bw, ci), np.float32)
             jax.block_until_ready(self._fwd(self.params, x))
+            jax.block_until_ready(self._fwd_jnp(self.params, x))
 
     # -- queue management --------------------------------------------------
-    def submit(self, req: ConvRequest):
+    def submit(self, req: ConvRequest, *,
+               timeout: Optional[float] = None) -> "Outcome":
+        """Queue one request; -> its outcome so far (PENDING, or REJECTED
+        when its bucket's bounded queue is full — synchronous shed).
+        ``timeout`` (seconds on the server clock) derives ``req.deadline``
+        from the submit stamp; a pre-set absolute ``req.deadline`` rides
+        through untouched."""
         h, w = req.image.shape[:2]
         req.bucket = self.bucketer.bucket_for(h, w)
         req.t_submit = self.clock()
-        self.pool.enqueue(req)
+        if timeout is not None:
+            req.deadline = req.t_submit + timeout
+        self._counters["submitted"] += 1
+        if not self.pool.enqueue(req):
+            req.outcome, req.done, req.t_done = (
+                Outcome.REJECTED, True, req.t_submit)
+            self._counters["shed"] += 1
+            self.completed.append(req)
+        return req.outcome
+
+    def _expire(self):
+        """Sweep queued requests past deadline out as TIMED_OUT — they
+        complete without ever occupying a slot."""
+        t = self.clock()
+        for r in self.pool.sweep(
+                lambda r: r.deadline is not None and r.deadline <= t):
+            r.outcome, r.done, r.t_done = Outcome.TIMED_OUT, True, t
+            r.logits = None
+            self._counters["timed_out"] += 1
+            self.completed.append(r)
 
     # -- one engine step ---------------------------------------------------
+    def _execute(self, bucket, imgs):
+        """One batched forward with the full degradation ladder: primary
+        (retry transient failures with capped backoff, breaker permitting)
+        then the bit-identical jnp executable.  Always returns logits —
+        only a ``FatalError``/foreign exception escapes."""
+        br = self._breakers[bucket]
+        if br.allow_primary(self._step_idx):
+            for attempt in range(self.max_retries + 1):
+                try:
+                    _inject_fault("serve.step")
+                    out = np.asarray(jax.block_until_ready(
+                        self._fwd(self.params, imgs)))
+                    br.record_success()
+                    return out
+                except TransientError:
+                    self._counters["transient_faults"] += 1
+                    if attempt < self.max_retries:
+                        self._counters["retries"] += 1
+                        if self.backoff > 0.0:
+                            self._sleep(min(self.backoff * 2 ** attempt,
+                                            self.max_backoff))
+            br.record_exhausted(self._step_idx)
+        self._counters["degraded_steps"] += 1
+        return np.asarray(jax.block_until_ready(
+            self._fwd_jnp(self.params, imgs)))
+
     def step(self) -> bool:
-        """Admit queued requests into free slots, then run one batched
-        forward for every bucket with filled slots.  -> ran anything."""
-        self.pool.admit()
+        """One engine step: expire stale queued requests, admit into free
+        slots, then run one batched forward per non-empty bucket through
+        the degradation ladder.  -> ran anything."""
+        self._expire()
+        try:
+            self.pool.admit()
+        except TransientError:
+            # queues are untouched on an admission fault — the requests
+            # simply wait one step and admission retries
+            self._counters["admit_faults"] += 1
         ran = False
         for bucket in self.bucketer.buckets:
             reqs = self.pool.drain(bucket)
@@ -254,12 +410,14 @@ class ConvServer:
                 fill = np.zeros((self.batch - len(reqs),) + imgs.shape[1:],
                                 imgs.dtype)
                 imgs = np.concatenate([imgs, fill])
-            logits = np.asarray(
-                jax.block_until_ready(self._fwd(self.params, imgs)))
+            logits = self._execute(bucket, imgs)
             t = self.clock()
             for i, r in enumerate(reqs):    # batch-level exit slice
                 r.logits, r.t_done, r.done = logits[i], t, True
+                r.outcome = Outcome.OK
+                self._counters["ok"] += 1
                 self.completed.append(r)
+        self._step_idx += 1
         return ran
 
     def run(self, max_steps: int = 10 ** 6):
@@ -267,6 +425,8 @@ class ConvServer:
         while self.pool.pending and steps < max_steps:
             self.step()
             steps += 1
+        if self.pool.pending:               # expired stragglers at the cap
+            self._expire()
         return self.completed
 
     # -- reporting ---------------------------------------------------------
@@ -275,6 +435,28 @@ class ConvServer:
 
     def latencies(self, bucket: Optional[Tuple[int, int]] = None
                   ) -> np.ndarray:
+        """Latencies of *served* requests (outcome OK) — shed/timed-out
+        requests report through :meth:`health`, not the latency tail."""
         return np.array([r.latency for r in self.completed
-                         if bucket is None or r.bucket == bucket],
+                         if r.outcome is Outcome.OK
+                         and (bucket is None or r.bucket == bucket)],
                         np.float64)
+
+    def health(self) -> dict:
+        """One observability snapshot: queue/outcome/fault counters plus
+        per-bucket occupancy and breaker state (the dict the bench's
+        ``faults`` section and the ops dashboard both read)."""
+        c = dict(self._counters)
+        sub = max(c["submitted"], 1)
+        return {
+            **c,
+            "steps": self._step_idx,
+            "queue_depth": self.pool.queue_depth,
+            "pending": self.pool.pending,
+            "shed_rate": c["shed"] / sub,
+            "timeout_rate": c["timed_out"] / sub,
+            "occupancy": {f"{h}x{w}": self.pool.occupancy((h, w))
+                          for h, w in self.bucketer.buckets},
+            "breakers": {f"{h}x{w}": self._breakers[(h, w)].state.value
+                         for h, w in self.bucketer.buckets},
+        }

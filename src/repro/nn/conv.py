@@ -35,10 +35,11 @@ from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.blocking import MachineModel, TPU_V5E
-from repro.core.context import ConvContext, resolve_context
-from repro.core.conv_baselines import Padding
+from repro.core.blocking import MachineModel, TPU_V5E, choose_blocking
+from repro.core.context import ConvContext, as_context, reject_legacy_kwargs
+from repro.core.conv_baselines import Padding, normalize_padding
 from repro.core.convspec import as_dilation
 from repro.core.direct_conv import direct_conv_blocked
 from repro.core.dispatch import (ConvDispatcher, DispatchKey, Impl,
@@ -46,6 +47,7 @@ from repro.core.dispatch import (ConvDispatcher, DispatchKey, Impl,
                                  run_conv_impl)
 from repro.core.layout import BlockedConvLayout, nhwc_to_blocked
 from repro.core.precision import Precision, resolve_precision
+from repro.kernels.conv2d_common import tree_sum
 from .module import ParamSpec
 
 __all__ = ["BlockedConv2D", "ResidualBlock", "DepthwiseSeparableBlock",
@@ -70,6 +72,63 @@ def blocked_global_avg_pool(xb: jnp.ndarray,
     acc = resolve_precision(precision).accum_dtype
     pooled = jnp.mean(xb.astype(acc), axis=(2, 3))           # [N, C/Cb, Cb]
     return pooled.reshape(n, cblk * cb).astype(xb.dtype)
+
+
+def _gap_like_window_kernel(y: jnp.ndarray, *, hi: int, wi: int, ci: int,
+                            cib: int, hf: int, wf: int, stride: int,
+                            padding: Padding, dilation, groups: int,
+                            fused_residual: bool, hob, wob,
+                            machine: MachineModel,
+                            op_bytes: int) -> jnp.ndarray:
+    """Pool a blocked conv output the way the fused window kernel does.
+
+    The kernel's ``gap_update`` accumulates one f32 partial sum per spatial
+    tile — of the *stored* (already downcast) tile values, reduced by the
+    association-fixed ``tree_sum`` — sequentially in grid order (row tiles
+    outer, column tiles inner) and divides by the full ``Ho*Wo`` once at
+    flush.  Floating-point addition is not associative, so matching the
+    fused result bit for bit means replaying that exact grouping: same
+    tile sizes (the kernel's own ``choose_blocking`` call), same visit
+    order, same per-tile tree reduction.  This is what keeps the jnp impl
+    inside ``EXACT_IMPLS`` for gap-fused convs — the serving tier's
+    degraded path (DESIGN.md §16) swaps it in for a tripped bucket and
+    still owes bit-identical logits.
+
+    Unlike the conv itself (tile-agnostic by design), the pooling program
+    necessarily depends on the tile choice — exactly as the kernel's does.
+    Geometry the window blocking model cannot fit falls back to one flat
+    tile (such shapes route to the streamed family anyway, whose gap is
+    tolerance-pinned, not bitwise).
+    """
+    n, coblk, ho, wo, cob = y.shape
+    dil = as_dilation(dilation)
+    hf_eff, wf_eff = (hf - 1) * dil[0] + 1, (wf - 1) * dil[1] + 1
+    ph, pw = normalize_padding(padding, hf_eff, wf_eff, stride, hi, wi)
+    try:
+        blk = choose_blocking(hi + ph[0] + ph[1], wi + pw[0] + pw[1],
+                              ci, coblk * cob, hf, wf, stride,
+                              machine=machine, cob=cob, cib=cib,
+                              hob=hob, wob=wob, in_dtype_bytes=op_bytes,
+                              groups=groups, dilation=dil,
+                              fused_residual=fused_residual, fused_gap=True)
+        thob, twob = blk.hob, blk.wob
+    except ValueError:
+        thob, twob = ho, wo
+    f = y.astype(jnp.float32)
+    parts = [
+        tree_sum(f[:, :, th * thob:(th + 1) * thob,
+                   tw * twob:(tw + 1) * twob, :]
+                 .reshape(n, coblk, thob * twob, cob), axis=2)
+        for th in range(ho // thob) for tw in range(wo // twob)
+    ]
+    acc = parts[0]
+    for part in parts[1:]:
+        acc = acc + part
+    # same trace-time f32 reciprocal as gap_update: a literal divide can be
+    # rewritten to a reciprocal-multiply inside some fusion contexts (1-ulp
+    # splits); an explicit multiply survives codegen bit-exactly
+    inv_hw = np.float32(1.0) / np.float32(ho * wo)
+    return (acc * inv_hw).astype(y.dtype).reshape(n, coblk * cob)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,34 +203,28 @@ class BlockedConv2D:
 
     def __call__(self, p, xb: jnp.ndarray, *,
                  context: Optional[ConvContext] = None,
-                 dispatch: Optional[ConvDispatcher] = None,
-                 impl: Union[Impl, str, None] = None,
-                 interpret: Optional[bool] = None,
-                 precision: Union[str, Precision, None] = None,
-                 stream: Optional[bool] = None,
                  residual: Optional[jnp.ndarray] = None,
-                 gap: bool = False) -> jnp.ndarray:
+                 gap: bool = False, **legacy) -> jnp.ndarray:
         """Run this layer through the conv dispatch subsystem.
 
         ``context`` is the one execution-context object (DESIGN.md §15):
         a frozen :class:`ConvContext` bundling the dispatcher, the forced
         impl, interpret mode, machine model, window-vs-stream and the
         precision policy.  Every field it leaves ``None`` defers to the
-        layer's own field or the process default.  The loose kwargs
-        (``dispatch=``/``impl=``/``interpret=``/``precision=``/``stream=``)
-        are the deprecated spelling — they fill only fields the context
-        leaves open and disappear next release.
+        layer's own field or the process default.  (The pre-ISSUE-10 loose
+        kwargs are gone; a stale ``impl=``/``dispatch=``/... call raises
+        the migration ``TypeError`` naming :class:`ConvContext`.)
 
-        ``impl`` forces one candidate and beats every table entry (tests
-        and forced paths — ``impl="jnp"`` pins the oracle, ``impl="window"``
-        a Pallas family, and so on).  ``stream`` (or the layer field)
-        forces window-vs-stream inside the dense Pallas family.  Every
-        candidate is differentiable — the Pallas impls through their custom
-        VJPs, whose dgrad/wgrad directions the dispatcher routes
-        independently.
+        ``context.impl`` forces one candidate and beats every table entry
+        (tests and forced paths — ``impl="jnp"`` pins the oracle,
+        ``impl="window"`` a Pallas family, and so on).  ``context.stream``
+        (or the layer field) forces window-vs-stream inside the dense
+        Pallas family.  Every candidate is differentiable — the Pallas
+        impls through their custom VJPs, whose dgrad/wgrad directions the
+        dispatcher routes independently.
 
-        ``precision`` overrides the layer's policy for this call (the
-        ``BlockedCNN``/``TrainSettings`` pass-down); params stay f32
+        ``context.precision`` overrides the layer's policy for this call
+        (the ``BlockedCNN``/``TrainSettings`` pass-down); params stay f32
         masters either way — the cast to the operand dtype happens inside
         the conv, and its transpose up-casts the weight cotangent back to
         f32.
@@ -183,9 +236,8 @@ class BlockedConv2D:
         map (DESIGN.md §14).  Both ride the dispatch key's ``fusion`` tag
         so the measured table distinguishes fused from unfused geometry.
         """
-        ctx = resolve_context(context, dispatch=dispatch, impl=impl,
-                              interpret=interpret, precision=precision,
-                              stream=stream)
+        reject_legacy_kwargs("BlockedConv2D", legacy)
+        ctx = as_context(context)
         pol = ctx.resolve_precision_for(self.precision)
         machine = ctx.resolve_machine_for(self.machine)
         impl, dispatch, interpret = ctx.impl, ctx.dispatch, ctx.interpret
@@ -230,12 +282,25 @@ class BlockedConv2D:
                         dgrad=kr.dgrad, wgrad=kr.wgrad)
 
         if decision_impl is Impl.JNP:
-            return direct_conv_blocked(xb, p["w"], self.stride, self.padding,
-                                       bias, self.activation,
-                                       hob=self.hob, wob=self.wob,
-                                       precision=pol, groups=self.groups,
-                                       dilation=self.dilation,
-                                       residual=residual, gap=gap)
+            y = direct_conv_blocked(xb, p["w"], self.stride, self.padding,
+                                    bias, self.activation,
+                                    hob=self.hob, wob=self.wob,
+                                    precision=pol, groups=self.groups,
+                                    dilation=self.dilation,
+                                    residual=residual, gap=False)
+            if not gap:
+                return y
+            # gap-fused: pool the map with the window kernel's exact tile
+            # grouping so jnp stays bitwise-exchangeable with the Pallas
+            # primary (EXACT_IMPLS) — the breaker demotion relies on it
+            return _gap_like_window_kernel(
+                y, hi=xb.shape[2], wi=xb.shape[3], ci=self.ci,
+                cib=xb.shape[-1], hf=self.hf, wf=self.wf,
+                stride=self.stride, padding=self.padding,
+                dilation=self.dilation, groups=self.groups,
+                fused_residual=residual is not None,
+                hob=self.hob, wob=self.wob, machine=machine,
+                op_bytes=pol.op_dtype.itemsize)
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         return run_conv_impl(decision_impl, xb, p["w"], bias,
@@ -349,16 +414,10 @@ class DepthwiseSeparableBlock:
 
     def __call__(self, p, xb: jnp.ndarray, *,
                  context: Optional[ConvContext] = None,
-                 dispatch: Optional[ConvDispatcher] = None,
-                 impl: Union[Impl, str, None] = None,
-                 interpret: Optional[bool] = None,
-                 precision: Union[str, Precision, None] = None,
-                 stream: Optional[bool] = None,
                  residual: Optional[jnp.ndarray] = None,
-                 gap: bool = False) -> jnp.ndarray:
-        ctx = resolve_context(context, dispatch=dispatch, impl=impl,
-                              interpret=interpret, precision=precision,
-                              stream=stream)
+                 gap: bool = False, **legacy) -> jnp.ndarray:
+        reject_legacy_kwargs("DepthwiseSeparableBlock", legacy)
+        ctx = as_context(context)
         h = self.depthwise(p["dw"], xb, context=ctx)
         # fused operands land on the channel-mixing leg — the block's output
         return self.pointwise(p["pw"], h, context=ctx,
@@ -396,13 +455,10 @@ class BlockedCNN:
 
     def __call__(self, p, x_nhwc: jnp.ndarray, *,
                  context: Optional[ConvContext] = None,
-                 dispatch: Optional[ConvDispatcher] = None,
-                 impl: Union[Impl, str, None] = None,
-                 interpret: Optional[bool] = None,
-                 precision: Union[str, Precision, None] = None,
-                 stream: Optional[bool] = None) -> jnp.ndarray:
-        """``context`` (one :class:`ConvContext`; the loose kwargs are the
-        deprecated spelling) rides down to every conv (each layer still
+                 **legacy) -> jnp.ndarray:
+        """``context`` (one :class:`ConvContext` — the only spelling; the
+        old loose kwargs raise the migration ``TypeError``) rides down to
+        every conv (each layer still
         resolves its *own* dispatch key — shapes shrink through the chain,
         so the winning impl may differ per layer).  A ``precision`` it
         carries overrides every conv's policy for this forward — under
@@ -416,9 +472,8 @@ class BlockedCNN:
         accumulates the pooled partial sums in f32 scratch and emits
         ``[N, C]`` directly (DESIGN.md §14), so the full feature map of the
         last layer never materializes in HBM."""
-        ctx = resolve_context(context, dispatch=dispatch, impl=impl,
-                              interpret=interpret, precision=precision,
-                              stream=stream)
+        reject_legacy_kwargs("BlockedCNN", legacy)
+        ctx = as_context(context)
         # the single layout transform of the whole forward pass
         h = nhwc_to_blocked(x_nhwc, self.convs[0].in_pencil)
         last = len(self.convs) - 1

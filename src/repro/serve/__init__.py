@@ -12,12 +12,12 @@ modules, whose layout is free to change behind this surface.
 — so an eager import here would be circular; everything else is eager.
 """
 from .decode import make_serve_step, make_prefill, greedy, sample_topk  # noqa: F401
-from .scheduler import (ContinuousBatcher, ConvRequest, Request,  # noqa: F401
-                        SlotPool, SpatialBucketer)
+from .scheduler import (ContinuousBatcher, ConvRequest, Outcome,  # noqa: F401
+                        Request, SlotPool, SpatialBucketer)
 
 __all__ = ["make_serve_step", "make_prefill", "greedy", "sample_topk",
-           "ContinuousBatcher", "Request", "ConvRequest", "SpatialBucketer",
-           "SlotPool", "ConvServer"]
+           "ContinuousBatcher", "Request", "ConvRequest", "Outcome",
+           "SpatialBucketer", "SlotPool", "ConvServer"]
 
 
 def __getattr__(name):

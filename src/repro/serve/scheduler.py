@@ -21,6 +21,7 @@ every step instead of waiting for a full batch.
 from __future__ import annotations
 
 import dataclasses
+import enum
 from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -28,8 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Request", "ContinuousBatcher", "ConvRequest", "SpatialBucketer",
-           "SlotPool"]
+from repro.utils.faults import inject as _inject_fault
+
+__all__ = ["Request", "ContinuousBatcher", "ConvRequest", "Outcome",
+           "SpatialBucketer", "SlotPool"]
 
 
 @dataclasses.dataclass
@@ -126,6 +129,22 @@ class ContinuousBatcher:
 # Conv serving: ragged image requests onto bucketed blocked-layout batches
 # ---------------------------------------------------------------------------
 
+class Outcome(enum.Enum):
+    """The request outcome lattice (DESIGN.md §16): every submitted request
+    terminates in exactly one of the three bottom states.
+
+      PENDING    in flight (queued or slotted)
+      OK         served — ``logits`` holds the answer
+      TIMED_OUT  deadline passed before a slot; completed without running
+      REJECTED   shed at admission — the bounded queue was full
+    """
+
+    PENDING = "pending"
+    OK = "ok"
+    TIMED_OUT = "timed_out"
+    REJECTED = "rejected"
+
+
 @dataclasses.dataclass
 class ConvRequest:
     """One image-classification request through the conv serving tier.
@@ -135,6 +154,12 @@ class ConvRequest:
     server stamps ``t_submit``/``t_done`` with its injected clock (tests
     pass a deterministic counter; the bench passes ``time.monotonic``), so
     ``latency`` is queue wait + batched service time.
+
+    ``deadline`` is absolute on the server's clock (``submit(timeout=...)``
+    derives it from t_submit); a queued request past its deadline completes
+    as ``TIMED_OUT`` without ever occupying a slot.  ``outcome`` is the
+    :class:`Outcome` lattice state; ``done`` means "terminated" (any
+    non-PENDING outcome), not "served".
     """
 
     rid: int
@@ -142,8 +167,10 @@ class ConvRequest:
     t_submit: float = 0.0                # stamped by ConvServer.submit
     t_done: float = 0.0                  # stamped on completion
     bucket: Optional[Tuple[int, int]] = None
-    logits: Optional[np.ndarray] = None  # [n_classes] on completion
+    logits: Optional[np.ndarray] = None  # [n_classes] when outcome is OK
     done: bool = False
+    deadline: Optional[float] = None     # absolute, server-clock seconds
+    outcome: Outcome = Outcome.PENDING
 
     @property
     def latency(self) -> float:
@@ -200,10 +227,18 @@ class SlotPool:
     occupancy sample the bench reports (mean over executed steps; padding
     rows the data axis needs are *not* occupancy, which is the point of
     measuring it).
+
+    ``max_queue`` bounds each bucket's pending queue: a full queue makes
+    ``enqueue`` return False (the server sheds the request as REJECTED)
+    instead of growing without limit under overload — backpressure at the
+    front door, not an OOM in the engine loop.  None keeps the historical
+    unbounded behavior.
     """
 
-    def __init__(self, buckets: Sequence[Tuple[int, int]], batch: int):
+    def __init__(self, buckets: Sequence[Tuple[int, int]], batch: int,
+                 max_queue: Optional[int] = None):
         self.batch = int(batch)
+        self.max_queue = None if max_queue is None else int(max_queue)
         self.queues: Dict[Tuple[int, int], deque] = {
             b: deque() for b in buckets}
         self.slots: Dict[Tuple[int, int], List[ConvRequest]] = {
@@ -211,11 +246,23 @@ class SlotPool:
         self._occ_samples: Dict[Tuple[int, int], List[float]] = {
             b: [] for b in buckets}
 
-    def enqueue(self, req: ConvRequest):
-        self.queues[req.bucket].append(req)
+    def enqueue(self, req: ConvRequest) -> bool:
+        """Queue for admission; -> False (untouched queue) when the
+        bucket's bounded queue is full — the caller owns the shed."""
+        q = self.queues[req.bucket]
+        if self.max_queue is not None and len(q) >= self.max_queue:
+            return False
+        q.append(req)
+        return True
 
     def admit(self) -> int:
-        """Fill free slots from each bucket's queue; -> requests admitted."""
+        """Fill free slots from each bucket's queue; -> requests admitted.
+
+        ``slots.admit`` is an injection seam (DESIGN.md §16): a transient
+        fault here leaves every queue intact — admission simply retries
+        next step — which the server counts rather than crashes on.
+        """
+        _inject_fault("slots.admit")
         moved = 0
         for b, q in self.queues.items():
             free = self.batch - len(self.slots[b])
@@ -223,6 +270,24 @@ class SlotPool:
                 self.slots[b].append(q.popleft())
                 moved += 1
         return moved
+
+    def sweep(self, predicate) -> List[ConvRequest]:
+        """Remove and return every *queued* request matching ``predicate``
+        (slotted requests are already committed to the next batch).  The
+        server's deadline pass: expired requests leave through here and
+        never occupy a slot."""
+        removed: List[ConvRequest] = []
+        for b, q in self.queues.items():
+            kept: deque = deque()
+            for r in q:
+                (removed if predicate(r) else kept).append(r)
+            self.queues[b] = kept
+        return removed
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests waiting for a slot (excludes slotted ones)."""
+        return sum(len(q) for q in self.queues.values())
 
     def drain(self, bucket: Tuple[int, int]) -> List[ConvRequest]:
         """Take the bucket's filled slots for one step (slots free here —

@@ -8,10 +8,14 @@ Production posture (DESIGN.md §5):
     standard preemption contract on TPU fleets;
   * straggler/hang mitigation: SPMD steps are collective-synchronous, so a
     straggling host shows up as a slow step — we track a rolling deadline
-    (`step_timeout_factor` × median) and log breaches; on a real fleet this
-    signal feeds the coordinator, which evicts the slow host and the job
-    restarts from the last checkpoint onto the surviving mesh
-    (restore() reshards automatically — see tests/test_checkpoint.py).
+    (`step_timeout_factor` × median) and classify breaches as
+    ``DeadlineExceededError`` events in the ``core.errors`` taxonomy
+    (DESIGN.md §16): counted in the result (``straggler_breaches``), logged
+    with the taxonomy name, never raised — the loop itself must not die to
+    a transient.  On a real fleet this signal feeds the coordinator, which
+    evicts the slow host and the job restarts from the last checkpoint onto
+    the surviving mesh (restore() reshards automatically — see
+    tests/test_checkpoint.py).
 """
 from __future__ import annotations
 
@@ -23,6 +27,7 @@ from typing import Any, Callable, Dict
 import jax
 import numpy as np
 
+from repro.core.errors import DeadlineExceededError
 from .checkpoint import Checkpointer, latest_step, restore
 
 __all__ = ["TrainLoopConfig", "run_training"]
@@ -70,6 +75,7 @@ def run_training(train_step: Callable, params, opt_state, data,
 
     durations = []
     metrics = {}
+    breaches = 0
     try:
         for step in range(start, cfg.total_steps):
             batch = data.batch_at(step)
@@ -80,8 +86,15 @@ def run_training(train_step: Callable, params, opt_state, data,
             durations.append(dt)
             med = float(np.median(durations[-32:]))
             if len(durations) > 4 and dt > cfg.step_timeout_factor * med:
-                log(f"[runtime] STRAGGLER step {step}: {dt:.2f}s vs median "
-                    f"{med:.2f}s — would evict/restart on a fleet")
+                # classified, countable, survivable: the breach is a
+                # DeadlineExceededError *event* (transient branch), not a
+                # raise — the fleet coordinator owns the eviction
+                breach = DeadlineExceededError(
+                    f"step {step}: {dt:.2f}s vs rolling median {med:.2f}s "
+                    f"(factor {cfg.step_timeout_factor})")
+                breaches += 1
+                log(f"[runtime] STRAGGLER ({type(breach).__name__}) "
+                    f"{breach} — would evict/restart on a fleet")
             if (step + 1) % cfg.log_every == 0:
                 log(f"[runtime] step {step + 1} loss={float(metrics['nll']):.4f} "
                     f"gnorm={float(metrics['grad_norm']):.3f} {dt * 1e3:.0f}ms")
@@ -96,4 +109,4 @@ def run_training(train_step: Callable, params, opt_state, data,
             signal.signal(sig, h)
 
     return {"params": params, "opt_state": opt_state, "metrics": metrics,
-            "stopped_early": stop["flag"]}
+            "stopped_early": stop["flag"], "straggler_breaches": breaches}

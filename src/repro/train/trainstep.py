@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.context import ConvContext, resolve_context
+from repro.core.context import ConvContext, as_context, reject_legacy_kwargs
 from repro.nn.conv import BlockedCNN
 from repro.nn.models import EncDec
 from .losses import cross_entropy
@@ -26,50 +26,47 @@ class TrainSettings:
     unroll: bool = False             # unroll the layer scan (cost extraction)
     fused_loss: bool = False         # chunked CE: never materialize logits
     loss_chunks: int = 8
-    dispatch: Optional[Any] = None   # conv models: the ConvDispatcher to
-                                     # route every conv through (None ->
-                                     # the process-wide one over the
-                                     # checked-in table); per-run impl
-                                     # override via ``impl``
-    impl: Optional[str] = None       # conv models: force one Impl for every
-                                     # conv ("window"/"stream"/"depthwise"/
-                                     # "grouped"/"pointwise"/"im2col"/"lax"/
-                                     # "jnp") — beats table and prior;
-                                     # "jnp" pins the XLA-scheduled oracle
-                                     # (the legacy default path)
-    precision: Optional[str] = None  # conv models: mixed-precision policy
-                                     # ("f32" | "bf16") — bf16 operands/
-                                     # residuals, f32 accumulators + master
-                                     # params (DESIGN.md §10).  None defers
-                                     # to each layer's own policy field; a
-                                     # concrete value overrides every layer
-                                     # for the whole run
     context: Optional[ConvContext] = None
-                                     # conv models: the unified execution
-                                     # context (core/context.py).  When set
-                                     # it wins field-by-field over the loose
-                                     # dispatch/impl/precision fields above,
-                                     # which are the deprecated spelling and
-                                     # fold into it via resolve_context
+                                     # conv models: the one execution
+                                     # context (core/context.py) — which
+                                     # dispatcher, forced impl, precision
+                                     # policy, interpret mode — for every
+                                     # conv of the run.  The loose
+                                     # dispatch/impl/precision fields are
+                                     # gone (ISSUE 10); constructing with
+                                     # one raises the migration TypeError
 
     def conv_context(self) -> ConvContext:
-        """The settings' conv execution context: ``context`` merged with the
-        legacy loose fields (the one reader for the deprecation shim)."""
-        return resolve_context(self.context, dispatch=self.dispatch,
-                               impl=self.impl, precision=self.precision)
+        """The settings' conv execution context (empty when unset)."""
+        return as_context(self.context)
+
+
+# The removed loose fields fail with the migration TypeError (naming
+# ConvContext) instead of dataclass's bare "unexpected keyword argument" —
+# same contract as the conv entry points' **legacy rejection.
+_TRAINSETTINGS_INIT = TrainSettings.__init__
+
+
+def _trainsettings_guarded_init(self, *args, **kwargs):
+    removed = {k: kwargs[k] for k in ("dispatch", "impl", "precision")
+               if k in kwargs}
+    reject_legacy_kwargs("TrainSettings", removed)
+    _TRAINSETTINGS_INIT(self, *args, **kwargs)
+
+
+TrainSettings.__init__ = _trainsettings_guarded_init
 
 
 def forward(model, params, batch: Dict[str, Any], *, train=True,
             remat="full", chunk=2048, unroll=False, return_hidden=False,
-            precision=None, dispatch=None, impl=None, context=None):
+            context=None, **legacy):
     """Uniform forward over model families."""
+    reject_legacy_kwargs("forward", legacy)
     if isinstance(model, BlockedCNN):
         # blocked-layout image classifier: NHWC batch in, class logits out;
         # every conv (fwd AND bwd) routes through the dispatch subsystem as
-        # one ConvContext (DESIGN.md §12/§15); the loose dispatch/impl/
-        # precision kwargs are the deprecated spelling and fold into it
-        ctx = resolve_context(context, dispatch=dispatch, impl=impl,
-                              precision=precision)
+        # one ConvContext (DESIGN.md §12/§15) — the only spelling
+        ctx = as_context(context)
         return (model(params, batch["images"], context=ctx),
                 jnp.zeros((), jnp.float32))
     if isinstance(model, EncDec):
@@ -139,8 +136,8 @@ def make_train_step(model, cfg: Optional[ModelConfig], optimizer: AdamW,
 
     Works for LM/EncDec token models and for ``BlockedCNN`` image
     classifiers (``cfg`` may be None there; batches carry ``images`` +
-    ``targets``, and every conv routes through the dispatch subsystem —
-    ``settings.dispatch``/``impl``, DESIGN.md §12 — so training through the
+    ``targets``, and every conv routes through the dispatch subsystem via
+    ``settings.context``, DESIGN.md §12/§15 — so training through the
     Pallas custom-VJP kernel families includes gradient accumulation).
     """
     loss_fn = make_loss_fn(model, cfg, settings)

@@ -1,0 +1,168 @@
+"""Deterministic fault injection for the serving stack (DESIGN.md §16).
+
+A :class:`FaultPlan` is a seeded, fully deterministic schedule of failures:
+each :class:`FaultRule` names an injection *site*, an error class from the
+``core.errors`` taxonomy, and a predicate over that site's visit index
+(either an explicit visit set or a seeded rate).  The named seams call
+:func:`inject`:
+
+  ``dispatch.resolve``   top of ``ConvDispatcher.decide``
+  ``kernel.launch``      the Pallas wrapper launch paths
+                         (``direct_conv2d`` / ``conv2d_stream``) — note
+                         these run at *trace* time under jit, so per-step
+                         chaos targets ``serve.step`` instead
+  ``serve.step``         ``ConvServer``'s per-(step, bucket) execute
+  ``slots.admit``        ``SlotPool.admit``
+
+**Zero cost when disabled:** with no plan armed, :func:`inject` is a
+module-global ``None`` check and an immediate return — no hashing, no
+counter bump, nothing allocated.  The serve bench's no-fault p99 gate in
+CI holds the hooks to that contract.
+
+**Determinism:** whether visit ``i`` of site ``s`` faults is a pure
+function of ``(seed, s, i)`` — a sha256 draw, never Python's salted
+``hash()`` — so the injection sequence is identical across processes,
+across runs, and independent of the interleaving of *other* sites'
+visits.  Same seed, same chaos; that is what makes the bit-identity
+acceptance sweep (``tests/test_serve_faults.py``) meaningful.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Type
+
+from repro.core.errors import TransientError
+
+__all__ = ["SITES", "FaultRule", "FaultPlan", "inject", "active_plan",
+           "fault_plan"]
+
+# The named seams.  A rule naming anything else is a typo'd experiment that
+# would silently never fire — FaultPlan rejects it at construction.
+SITES = ("dispatch.resolve", "kernel.launch", "serve.step", "slots.admit")
+
+
+def _draw(seed: int, site: str, visit: int) -> float:
+    """Uniform [0, 1) from (seed, site, visit) — stateless and process-
+    stable (sha256, not the salted builtin hash)."""
+    h = hashlib.sha256(f"{seed}|{site}|{visit}".encode()).digest()
+    return int.from_bytes(h[:8], "big") / 2.0 ** 64
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultRule:
+    """Fault ``site`` on a subset of its visits with ``error``.
+
+    ``rate`` draws each visit independently at the given probability
+    (seeded — the same visits fault every run); ``visits`` pins an explicit
+    visit-index set instead (rate ignored).  ``max_faults`` caps the total
+    fires so a chaos trace can guarantee an eventual success for
+    retry-then-succeed scenarios.
+    """
+
+    site: str
+    error: Type[Exception] = TransientError
+    rate: float = 0.0
+    visits: Optional[Tuple[int, ...]] = None
+    max_faults: Optional[int] = None
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(
+                f"unknown injection site {self.site!r}; known sites: "
+                f"{list(SITES)}")
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {self.rate}")
+        if self.visits is not None:
+            object.__setattr__(self, "visits",
+                               tuple(sorted(int(v) for v in self.visits)))
+
+
+class FaultPlan:
+    """A seeded set of rules plus the per-site visit counters.
+
+    The plan is the only stateful object: :func:`inject` asks it whether
+    the current visit of a site should fault.  Counters advance on every
+    visit while the plan is armed (fault or not), so the visit index *is*
+    the deterministic coordinate.
+    """
+
+    def __init__(self, rules: Sequence[FaultRule], seed: int = 0):
+        self.rules: Tuple[FaultRule, ...] = tuple(rules)
+        self.seed = int(seed)
+        self._visits: Dict[str, int] = {}
+        self._fired: Dict[int, int] = {i: 0 for i in range(len(self.rules))}
+
+    def visit(self, site: str) -> Optional[Exception]:
+        """Advance ``site``'s counter; -> the error to raise, or None."""
+        i = self._visits.get(site, 0)
+        self._visits[site] = i + 1
+        for ri, rule in enumerate(self.rules):
+            if rule.site != site:
+                continue
+            if (rule.max_faults is not None
+                    and self._fired[ri] >= rule.max_faults):
+                continue
+            if rule.visits is not None:
+                hit = i in rule.visits
+            else:
+                hit = _draw(self.seed, site, i) < rule.rate
+            if hit:
+                self._fired[ri] += 1
+                return rule.error(
+                    f"injected fault at {site} (visit {i}, "
+                    f"seed {self.seed})")
+        return None
+
+    def visits(self, site: str) -> int:
+        """How many times ``site`` has been visited under this plan."""
+        return self._visits.get(site, 0)
+
+    def fired(self) -> int:
+        """Total faults fired across all rules."""
+        return sum(self._fired.values())
+
+    def reset(self):
+        """Rewind counters — replaying the same trace refaults the same
+        visits (the determinism unit test uses this)."""
+        self._visits.clear()
+        self._fired = {i: 0 for i in range(len(self.rules))}
+
+
+# The armed plan.  None (the overwhelmingly common state) makes inject()
+# a single attribute load + comparison — the zero-cost contract.
+_PLAN: Optional[FaultPlan] = None
+
+
+def inject(site: str) -> None:
+    """Injection hook — call at a named seam; raises the planned error on
+    a faulting visit, otherwise returns (and is free when no plan armed).
+    """
+    if _PLAN is None:
+        return
+    err = _PLAN.visit(site)
+    if err is not None:
+        raise err
+
+
+def active_plan() -> Optional[FaultPlan]:
+    return _PLAN
+
+
+@contextmanager
+def fault_plan(plan: Optional[FaultPlan]):
+    """Arm ``plan`` for the duration of the block (None = explicit quiet).
+
+    Not reentrant with a different plan — nested arming is a test bug the
+    guard below surfaces instead of silently shadowing.
+    """
+    global _PLAN
+    if plan is not None and _PLAN is not None:
+        raise RuntimeError("a FaultPlan is already armed")
+    prev = _PLAN
+    _PLAN = plan
+    try:
+        yield plan
+    finally:
+        _PLAN = prev

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import layout as L
+from repro.core.context import ConvContext
 from repro.core.blocking import choose_blocking
 from repro.core.direct_conv import direct_conv_blocked
 from repro.kernels.direct_conv2d import direct_conv2d_blocked_pallas
@@ -134,7 +135,8 @@ def test_kernel_zoo_vs_lax(case, stride, padding):
         spec_impl = "pointwise"           # 1x1 pads are 0 under SAME too
     else:
         spec_impl = "window"              # dense (incl. dilated taps)
-    got2 = layer({"w": wb}, xb, impl=spec_impl, interpret=True)
+    got2 = layer({"w": wb}, xb,
+                 context=ConvContext(impl=spec_impl, interpret=True))
     np.testing.assert_allclose(np.asarray(L.blocked_to_nhwc(got2, co)),
                                want, rtol=2e-4, atol=2e-4)
 
@@ -210,8 +212,8 @@ def test_blocked_cnn_pallas_path_matches_jax_path():
     p = init_tree(model.specs(), jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(2, 9, 9, 4)).astype(np.float32))
-    a = model(p, x, impl="jnp")
-    b = model(p, x, impl="window", interpret=True)
+    a = model(p, x, context=ConvContext(impl="jnp"))
+    b = model(p, x, context=ConvContext(impl="window", interpret=True))
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                rtol=1e-5, atol=1e-5)
 

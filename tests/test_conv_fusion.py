@@ -29,6 +29,7 @@ import pytest
 from repro.core import direct_conv as D
 from repro.core import layout as L
 from repro.core.blocking import MachineModel
+from repro.core.context import ConvContext
 from repro.core.dispatch import ConvDispatcher, DispatchKey
 from repro.core.memory_model import ConvShape, bytes_epilogue_fusion
 from repro.kernels.conv2d_depthwise import depthwise_conv2d_blocked_pallas
@@ -37,6 +38,8 @@ from repro.kernels.direct_conv2d import direct_conv2d_blocked_pallas
 from repro.nn.conv import (BlockedCNN, BlockedConv2D, ResidualBlock,
                            blocked_global_avg_pool)
 from repro.nn.module import init_tree
+
+JNP_CTX = ConvContext(impl="jnp")
 
 # Forces multi-tile forward AND backward grids (same budget as
 # test_conv_vjp's backward-pressure tests).
@@ -364,13 +367,13 @@ def test_residual_block_fuses_identity_skip():
     p = init_tree(blk.specs(), jax.random.PRNGKey(0))
     x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 1, 6, 6, 8)),
                     jnp.float32)
-    got = blk(p, x, impl="jnp")
-    want = conv(p, x, impl="jnp") + x
+    got = blk(p, x, context=JNP_CTX)
+    want = conv(p, x, context=JNP_CTX) + x
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
     with pytest.raises(ValueError):
         ResidualBlock(BlockedConv2D(ci=8, co=16, lane=8))   # not identity
     with pytest.raises(ValueError):
-        blk(p, x, impl="jnp", residual=x)       # skip is the block's own
+        blk(p, x, context=JNP_CTX, residual=x)  # skip is the block's own
 
 
 def test_blocked_cnn_final_conv_flows_into_fused_gap():
@@ -380,11 +383,11 @@ def test_blocked_cnn_final_conv_flows_into_fused_gap():
     p = init_tree(cnn.specs(), jax.random.PRNGKey(1))
     x = jnp.asarray(np.random.default_rng(1).normal(size=(2, 6, 6, 8)),
                     jnp.float32)
-    logits = cnn(p, x, impl="jnp")
+    logits = cnn(p, x, context=JNP_CTX)
     # two-pass reference: convs then the standalone pool
     h = L.nhwc_to_blocked(x, 8)
-    h = cnn.convs[0](p["conv0"], h, impl="jnp")
-    h = cnn.convs[1](p["conv1"], h, impl="jnp")
+    h = cnn.convs[0](p["conv0"], h, context=JNP_CTX)
+    h = cnn.convs[1](p["conv1"], h, context=JNP_CTX)
     want = blocked_global_avg_pool(h) @ p["head"]
     np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
                                rtol=1e-6, atol=1e-6)

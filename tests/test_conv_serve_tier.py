@@ -86,10 +86,12 @@ print("OK")
 
 def test_co_sharded_pallas_path_bit_identical():
     run_probe("""
+from repro.core.context import ConvContext
+ctx = ConvContext(impl="window", interpret=True)
 f = make_sharded_cnn_forward(model, mesh, "data", model_axis="model",
-                             impl="window", interpret=True)
+                             context=ctx)
 got = np.asarray(f(p, x))
-want = np.asarray(model(p, x, impl="window", interpret=True))
+want = np.asarray(model(p, x, context=ctx))
 np.testing.assert_array_equal(got, want)
 print("OK")
 """)
@@ -282,25 +284,38 @@ def test_conv_context_normalizes_and_hashes_equal():
     assert ConvContext().resolve_precision_for("f32").name == "f32"
 
 
-def test_resolve_context_legacy_kwargs_fold_in():
-    """The deprecation shim: loose kwargs build the equivalent context,
-    and an explicit context= wins field-by-field over them."""
-    from repro.core.context import ConvContext, resolve_context
-
-    assert resolve_context(None, impl="jnp") == ConvContext(impl="jnp")
-    ctx = ConvContext(impl="window")
-    merged = resolve_context(ctx, impl="jnp", interpret=True)
-    assert merged.impl.value == "window"      # context wins
-    assert merged.interpret is True           # open field fills from kwarg
-    assert resolve_context(ctx) is ctx        # no-op merge allocates nothing
-
-
-def test_context_and_legacy_kwargs_same_result():
-    """One layer call, three spellings, one answer (and for the cached
-    serving forward: one cache entry)."""
+def test_legacy_kwargs_rejected_by_name():
+    """The deprecation shim is gone (ISSUE 10): every conv entry point
+    rejects the loose kwargs with a TypeError that names ConvContext."""
     import jax
 
+    from repro.kernels import ops
+    from repro.nn.conv import BlockedCNN, BlockedConv2D
+    from repro.nn.module import init_tree
+    from repro.train.trainstep import TrainSettings
+
+    assert not hasattr(__import__("repro.core.context", fromlist=["x"]),
+                       "resolve_context")
+    model = BlockedCNN(convs=(BlockedConv2D(ci=8, co=16, lane=8),),
+                       n_classes=3)
+    p = init_tree(model.specs(), jax.random.PRNGKey(0))
+    x = np.zeros((2, 8, 8, 8), np.float32)
+    w = np.zeros((3, 3, 8, 16), np.float32)
+    for call in (lambda: model(p, x, impl="jnp"),
+                 lambda: ops.direct_conv2d(x, w, impl="jnp", interpret=True),
+                 lambda: TrainSettings(impl="window"),
+                 lambda: TrainSettings(dispatch=None, precision="bf16")):
+        with pytest.raises(TypeError, match="ConvContext"):
+            call()
+
+
+def test_context_spelling_matches_direct_math():
+    """The one context spelling reproduces the reference math exactly."""
+    import jax
+    import jax.numpy as jnp
+
     from repro.core.context import ConvContext
+    from repro.core.direct_conv import direct_conv_nhwc
     from repro.nn.conv import BlockedCNN, BlockedConv2D
     from repro.nn.module import init_tree
 
@@ -310,10 +325,11 @@ def test_context_and_legacy_kwargs_same_result():
     rng = np.random.default_rng(0)
     x = rng.normal(size=(2, 8, 8, 8)).astype(np.float32)
 
-    want = np.asarray(model(p, x, impl="jnp", precision="bf16"))
-    via_ctx = np.asarray(
+    got = np.asarray(
         model(p, x, context=ConvContext(impl="jnp", precision="bf16")))
-    np.testing.assert_array_equal(via_ctx, want)
+    want = np.asarray(model(p, x, context=ConvContext(impl="jnp")))
+    assert str(got.dtype) == "bfloat16" and got.shape == (2, 3)
+    np.testing.assert_allclose(np.float32(got), want, rtol=0, atol=5e-2)
 
 
 def test_sharded_forward_cache_keys_on_context():
@@ -321,10 +337,12 @@ def test_sharded_forward_cache_keys_on_context():
 from repro.core.context import ConvContext
 f1 = make_sharded_cnn_forward(model, mesh, "data",
                               context=ConvContext(impl="jnp"))
-f2 = make_sharded_cnn_forward(model, mesh, "data", impl="jnp")
-assert f1 is f2, "legacy kwargs and context= must share one cache entry"
-f3 = make_sharded_cnn_forward(model, mesh, "data", impl="window",
-                              interpret=True)
+f2 = make_sharded_cnn_forward(model, mesh, "data",
+                              context=ConvContext(impl="jnp"))
+assert f1 is f2, "equal contexts must share one cache entry"
+f3 = make_sharded_cnn_forward(model, mesh, "data",
+                              context=ConvContext(impl="window",
+                                                  interpret=True))
 assert f3 is not f1
 print("OK")
 """)

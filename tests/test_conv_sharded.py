@@ -53,10 +53,11 @@ def test_sharded_cnn_matches_single_device_pallas_path():
     """The Pallas kernel runs inside each shard with per-shard blocked
     layouts (interpret mode on CPU), including an explicit hob/wob layer."""
     run_probe("""
-f = make_sharded_cnn_forward(model, mesh, "data", impl="window",
-                             interpret=True)
+from repro.core.context import ConvContext
+ctx = ConvContext(impl="window", interpret=True)
+f = make_sharded_cnn_forward(model, mesh, "data", context=ctx)
 got = np.asarray(f(p, x))
-want = np.asarray(model(p, x, impl="window", interpret=True))
+want = np.asarray(model(p, x, context=ctx))
 np.testing.assert_array_equal(got, want)
 print("OK")
 """)
@@ -84,7 +85,8 @@ sep = BlockedCNN(convs=(
     DepthwiseSeparableBlock(ci=8, co=16, lane=8),
     DepthwiseSeparableBlock(ci=16, co=32, stride=2, lane=8)), n_classes=5)
 ps = init_tree(sep.specs(), jax.random.PRNGKey(1))
-want = np.asarray(sep(ps, x, impl="jnp"))
+from repro.core.context import ConvContext
+want = np.asarray(sep(ps, x, context=ConvContext(impl="jnp")))
 
 calls = {"pack": 0, "unpack": 0}
 orig_pack = LL.nhwc_to_blocked
@@ -101,8 +103,8 @@ LL.blocked_to_nhwc = counting_unpack
 # empty (prior-tier) dispatcher: the geometry-aware prior routes the
 # depthwise legs to the depthwise kernel and the 1x1 legs to the
 # pointwise kernel, even in interpret mode on CPU
-f = make_sharded_cnn_forward(sep, mesh, "data",
-                             dispatch=ConvDispatcher(), interpret=True)
+f = make_sharded_cnn_forward(sep, mesh, "data", context=ConvContext(
+    dispatch=ConvDispatcher(), interpret=True))
 got = np.asarray(f(ps, x))
 np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 assert calls["pack"] == 1, calls       # traced once, blocked once per trace

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import layout as L
+from repro.core.context import ConvContext
 from repro.core.blocking import (Blocking, MachineModel, StreamBlocking,
                                  VmemMisfitError, choose_blocking,
                                  choose_stream_blocking,
@@ -215,7 +216,8 @@ def test_deep_pencil_cnn_train_step_through_fallback():
     for pallas in (False, True):
         step = make_train_step(
             model, None, opt,
-            TrainSettings(impl="stream" if pallas else "jnp"))
+            TrainSettings(context=ConvContext(
+                impl="stream" if pallas else "jnp")))
         pp, _, _ = jax.jit(step)(params, opt.init(params), batch)
         outs[pallas] = np.asarray(jax.tree.leaves(pp)[0])
     np.testing.assert_allclose(outs[True], outs[False], rtol=2e-4, atol=1e-5)

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import direct_conv as D
+from repro.core.context import ConvContext
 from repro.core import layout as L
 from repro.core.blocking import (MachineModel, choose_dgrad_blocking,
                                  choose_wgrad_blocking, dgrad_extents,
@@ -201,7 +202,7 @@ def test_blocked_conv2d_layer_trains_through_pallas():
         jnp.asarray(rng.normal(size=(2, 9, 9, 4)).astype(np.float32)), 4)
 
     def loss(p, impl):
-        out = conv(p, xb, impl=impl, interpret=True)
+        out = conv(p, xb, context=ConvContext(impl=impl, interpret=True))
         return jnp.sum(out * out)
 
     gp = jax.grad(loss)(p, "window")
@@ -226,8 +227,8 @@ def test_blocked_conv2d_layer_trains_through_fused_epilogue(fused):
            if fused == "residual" else None)
 
     def loss(p, res, impl):
-        out = conv(p, xb, impl=impl, interpret=True, residual=res,
-                   gap=fused == "gap")
+        out = conv(p, xb, context=ConvContext(impl=impl, interpret=True),
+                   residual=res, gap=fused == "gap")
         return jnp.sum(out * out)
 
     gp = jax.grad(loss, argnums=(0, 1))(p, res, "window")
@@ -277,7 +278,8 @@ def test_zoo_grads_match_jnp_path(case, stride):
         conv.layout.cb_in)
 
     def loss(p_, xb_, impl_):
-        out = conv(p_, xb_, impl=impl_, interpret=True)
+        out = conv(p_, xb_, context=ConvContext(impl=impl_,
+                                                 interpret=True))
         return jnp.sum(out * out)
 
     gp = jax.grad(loss, argnums=(0, 1))(p, xb, impl)
@@ -309,7 +311,8 @@ def test_zoo_backward_tiles_under_vmem_pressure(case_impl):
         conv.layout.cb_in)
 
     def loss(p_, xb_, impl_):
-        out = conv(p_, xb_, impl=impl_, interpret=True)
+        out = conv(p_, xb_, context=ConvContext(impl=impl_,
+                                                 interpret=True))
         return jnp.sum(out * out)
 
     gp = jax.grad(loss, argnums=(0, 1))(p, xb, impl)
@@ -341,8 +344,8 @@ def test_train_step_grad_accum_through_pallas():
         for accum in (1, 2):
             step = make_train_step(
                 model, None, opt,
-                TrainSettings(accum_steps=accum,
-                              impl="window" if pallas else "jnp"))
+                TrainSettings(accum_steps=accum, context=ConvContext(
+                    impl="window" if pallas else "jnp")))
             pp, _, _ = jax.jit(step)(p, opt.init(p), batch)
             outs[(pallas, accum)] = np.asarray(jax.tree.leaves(pp)[0])
     np.testing.assert_allclose(outs[(True, 2)], outs[(True, 1)],
@@ -368,7 +371,8 @@ def test_short_training_same_loss_both_paths():
         st = opt.init(p)
         step = jax.jit(make_train_step(
             model, None, opt,
-            TrainSettings(impl="window" if pallas else "jnp")))
+            TrainSettings(context=ConvContext(
+                impl="window" if pallas else "jnp"))))
         rng = np.random.default_rng(1)          # same batches for both
         ls = []
         for _ in range(3):

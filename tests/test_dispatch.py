@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core.blocking import MachineModel, TPU_V5E, VmemMisfitError
+from repro.core.context import ConvContext
 from repro.core.dispatch import (CANDIDATES, ConvDispatcher, DispatchKey,
                                  Impl, KernelRoute, PALLAS_IMPLS,
                                  probe_impl, prior_order, route_pallas,
@@ -249,16 +250,16 @@ def _layer_and_operands():
 
 def test_routing_source_never_changes_numerics():
     layer, p, xb = _layer_and_operands()
-    y_override = layer(p, xb, impl="window")
+    y_override = layer(p, xb, context=ConvContext(impl="window"))
     # same impl arrived at through a table entry: bitwise identical
     key = DispatchKey.make(2, 10, 10, 4, 8, 3, 3, 1, "SAME", "f32",
                            TPU_V5E, "fwd")
     disp = ConvDispatcher(table={key.ident: _entry(key, "window")})
-    y_table = layer(p, xb, dispatch=disp)
+    y_table = layer(p, xb, context=ConvContext(dispatch=disp))
     np.testing.assert_array_equal(np.asarray(y_override),
                                   np.asarray(y_table))
     # §11 guarantee, now a routing property: window == stream bit for bit
-    y_stream = layer(p, xb, impl="stream")
+    y_stream = layer(p, xb, context=ConvContext(impl="stream"))
     np.testing.assert_array_equal(np.asarray(y_override),
                                   np.asarray(y_stream))
 
@@ -266,8 +267,8 @@ def test_routing_source_never_changes_numerics():
 @pytest.mark.parametrize("impl", ["jnp", "im2col", "lax"])
 def test_reference_impls_agree(impl):
     layer, p, xb = _layer_and_operands()
-    want = np.asarray(layer(p, xb, impl="window"))
-    got = np.asarray(layer(p, xb, impl=impl))
+    want = np.asarray(layer(p, xb, context=ConvContext(impl="window")))
+    got = np.asarray(layer(p, xb, context=ConvContext(impl=impl)))
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 

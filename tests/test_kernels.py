@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import layout as L
+from repro.core.context import ConvContext
 from repro.core.conv_baselines import conv_lax
 from repro.kernels import ops, ref
 from repro.kernels.direct_conv2d import direct_conv2d_blocked_pallas
@@ -27,8 +28,9 @@ def test_direct_conv2d_pallas_vs_oracle(case, dtype):
     rng = np.random.default_rng(hash(case) % 2**32)
     x = jnp.asarray(rng.normal(size=(2, hi, wi, ci)), dtype)
     w = jnp.asarray(rng.normal(size=(hf, wf, ci, co)), dtype)
-    got = ops.direct_conv2d(x, w, stride=stride, interpret=True,
-                            impl="window")
+    got = ops.direct_conv2d(
+        x, w, stride=stride,
+        context=ConvContext(impl="window", interpret=True))
     want = conv_lax(x.astype(jnp.float32), w.astype(jnp.float32), stride)
     tol = 5e-5 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(np.asarray(got, np.float32),

@@ -10,8 +10,9 @@
 * the custom VJP stores its residuals at the policy dtype;
 * dtype-aware blocking admits strictly-larger-or-equal tiles for bf16 on a
   tiny MachineModel (the halved VMEM inequality);
-* BlockedCNN trains end to end under TrainSettings(impl="window",
-  precision="bf16") — the PR's acceptance criterion;
+* BlockedCNN trains end to end under TrainSettings(context=
+  ConvContext(impl="window", precision="bf16")) — the PR's acceptance
+  criterion;
 * memory_model.bytes_precision_split accounts the dtype split.
 """
 import numpy as np
@@ -20,6 +21,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import layout as L
+from repro.core.context import ConvContext
 from repro.core.blocking import (MachineModel, choose_blocking,
                                  choose_wgrad_blocking, resident_bytes,
                                  wgrad_resident_bytes)
@@ -260,17 +262,18 @@ def test_default_train_settings_defer_to_layer_policy():
     batch = {"images": jnp.asarray(
         rng.normal(size=(2, 8, 8, 4)).astype(np.float32))}
     settings = TrainSettings()
-    assert settings.precision is None
-    logits, _ = forward(model, p, batch, precision=settings.precision)
+    assert settings.context is None          # empty context defers to layers
+    logits, _ = forward(model, p, batch, context=settings.conv_context())
     assert logits.dtype == jnp.bfloat16
-    # and a concrete settings value still overrides every layer
-    logits, _ = forward(model, p, batch, precision="f32")
+    # and a concrete context policy still overrides every layer
+    logits, _ = forward(model, p, batch,
+                        context=ConvContext(precision="f32"))
     assert logits.dtype == jnp.float32
 
 
 def test_blocked_cnn_trains_bf16_through_pallas_vjp():
-    """The acceptance criterion: BlockedCNN + TrainSettings(impl="window",
-    precision="bf16") takes optimizer steps through the Pallas custom VJP
+    """The acceptance criterion: BlockedCNN + TrainSettings(context=
+    ConvContext(impl="window", precision="bf16")) steps through the VJP
     with bf16 operands and f32 master params, and the loss moves."""
     from repro.train.optimizer import AdamW
     from repro.train.trainstep import TrainSettings, make_train_step
@@ -288,7 +291,8 @@ def test_blocked_cnn_trains_bf16_through_pallas_vjp():
     opt = AdamW(lr=lambda s: jnp.float32(1e-2), weight_decay=0.0)
     step = jax.jit(make_train_step(
         model, None, opt,
-        TrainSettings(impl="window", precision="bf16")))
+        TrainSettings(context=ConvContext(impl="window",
+                                          precision="bf16"))))
     st = opt.init(p)
     losses = []
     for _ in range(3):
@@ -320,8 +324,8 @@ def test_bf16_grad_accum_matches_single_batch():
     for accum in (1, 2):
         step = make_train_step(
             model, None, opt,
-            TrainSettings(accum_steps=accum, impl="window",
-                          precision="bf16"))
+            TrainSettings(accum_steps=accum, context=ConvContext(
+                impl="window", precision="bf16")))
         pp, _, _ = jax.jit(step)(p, opt.init(p), batch)
         outs[accum] = np.asarray(jax.tree.leaves(pp)[0])
     np.testing.assert_allclose(outs[2], outs[1], rtol=2e-3, atol=1e-4)
